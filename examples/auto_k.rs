@@ -1,0 +1,66 @@
+//! Model selection + adaptive ensembles — the "no ground truth" workflow.
+//!
+//! The paper's evaluation fixes k to the true class count (§4.2). In
+//! deployment k is unknown; this example shows the two extensions that
+//! close the loop:
+//!
+//!   1. `estimate_k`: probe the transfer-cut spectrum once and read k off
+//!      the relative eigengap.
+//!   2. `usenc_adaptive`: grow the U-SPEC ensemble only until the
+//!      consensus stabilizes, instead of a fixed m = 20.
+//!
+//!     cargo run --release --example auto_k
+
+use uspec::affinity::NativeBackend;
+use uspec::data::synthetic::{concentric_circles, smiling_face, two_moons};
+use uspec::metrics::nmi;
+use uspec::usenc::adaptive::{usenc_adaptive, AdaptiveParams};
+use uspec::usenc::UsencParams;
+use uspec::uspec::estimate::estimate_k;
+use uspec::uspec::UspecParams;
+
+fn main() {
+    let datasets = [
+        ("two moons", two_moons(3000, 0.05, 7), 2usize),
+        ("concentric circles", concentric_circles(3000, 9), 3),
+        ("smiling face", smiling_face(3000, 5), 4),
+    ];
+
+    for (name, ds, true_k) in datasets {
+        // --- 1. estimate k from the eigengap (no labels used) ------------
+        let base = UspecParams { p: 400.min(ds.n() / 4), ..Default::default() };
+        let est = estimate_k(&ds.x, &base, 2, 10, 11, &NativeBackend)
+            .expect("estimate_k");
+        println!(
+            "{name}: true k = {true_k}, eigengap estimate = {} (gap {:.2e})",
+            est.k, est.gap
+        );
+
+        // --- 2. cluster at the estimated k with an adaptive ensemble -----
+        let params = UsencParams {
+            k: est.k,
+            m: 40, // ceiling only; the adaptive loop stops early
+            k_min: 8,
+            k_max: 20,
+            base,
+        };
+        let t0 = std::time::Instant::now();
+        let res = usenc_adaptive(
+            &ds.x,
+            &params,
+            &AdaptiveParams::default(),
+            42,
+            &NativeBackend,
+        )
+        .expect("usenc_adaptive");
+        println!(
+            "  adaptive U-SENC: m = {} ({}), NMI vs truth = {:.4}, {:.2}s",
+            res.ensemble.m(),
+            if res.converged { "converged" } else { "hit ceiling" },
+            nmi(&res.labels, &ds.y),
+            t0.elapsed().as_secs_f64(),
+        );
+        println!("  consensus stability trace: {:?}",
+            res.stability_trace.iter().map(|v| (v * 1000.0).round() / 1000.0).collect::<Vec<_>>());
+    }
+}

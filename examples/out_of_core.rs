@@ -1,0 +1,69 @@
+//! Out-of-core clustering: the dataset lives ON DISK and never fits in
+//! memory at once. `stream_uspec` runs the paper's whole pipeline in two
+//! sequential passes with a bounded resident set:
+//!
+//!   pass 1  reservoir-sample p′ candidates → k-means → p representatives
+//!   pass 2  chunked approximate-KNR → sparse B (O(N·K)) → transfer cut
+//!
+//! The resident peak is O(N·K + chunk·d) — independent of N·d. For the
+//! paper's MNIST shape (d=784, K=5) that is ~40× smaller than the data.
+//!
+//!     cargo run --release --example out_of_core
+
+use uspec::affinity::NativeBackend;
+use uspec::data::Benchmark;
+use uspec::metrics::{ca, nmi};
+use uspec::streaming::{stream_uspec, BinDataset, StreamParams};
+use uspec::uspec::UspecParams;
+
+fn main() {
+    // Generate CG (circles + gaussians) at 50k points and spill it to disk
+    // as the flat USPECB01 format — stand-in for a dataset produced by an
+    // external ETL job.
+    let ds = Benchmark::Cg10m.generate(0.005, 7);
+    let dir = std::env::temp_dir().join("uspec_out_of_core");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cg.bin");
+    let bin = BinDataset::write_mat(&path, &ds.x).expect("spill to disk");
+    let file_bytes = std::fs::metadata(&path).unwrap().len();
+    println!(
+        "on-disk dataset: n={} d={} ({:.1} MB at {})",
+        bin.n(),
+        bin.d(),
+        file_bytes as f64 / 1e6,
+        path.display()
+    );
+
+    // Cluster it without ever materializing the full matrix: 4096-row
+    // chunks stream through the fitted representative graph.
+    let params = StreamParams {
+        chunk: 4096,
+        base: UspecParams { k: ds.k, p: 1000, ..Default::default() },
+    };
+    let t0 = std::time::Instant::now();
+    let res = stream_uspec(&bin, &params, 42, &NativeBackend).expect("stream_uspec");
+    let secs = t0.elapsed().as_secs_f64();
+
+    println!("streamed U-SPEC: k={}", ds.k);
+    println!("  NMI  = {:.4}", nmi(&res.labels, &ds.y));
+    println!("  CA   = {:.4}", ca(&res.labels, &ds.y));
+    println!("  time = {secs:.2}s  ({})", res.timer.summary());
+    println!(
+        "  resident model = {:.1} MB ({:.2}× the raw data; chunk={} rows)",
+        res.peak_bytes as f64 / 1e6,
+        res.peak_bytes as f64 / file_bytes as f64,
+        params.chunk,
+    );
+    // At the paper's MNIST shape (d=784) the same resident model is
+    // dominated by O(N·K) ≪ N·d — the scaling that lets a 64 GB PC hold
+    // the pipeline for a dataset it cannot hold densely.
+    let (n, d, _) = Benchmark::Mnist.paper_shape();
+    let resident = (n * 5) as f64 * 20.0 + 4096.0 * d as f64 * 4.0;
+    let dense = (n * d) as f64 * 4.0;
+    println!(
+        "  at MNIST shape (d=784): resident/dense ≈ {:.3} (model)",
+        resident / dense
+    );
+
+    let _ = std::fs::remove_file(&path);
+}

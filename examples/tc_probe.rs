@@ -1,0 +1,19 @@
+// perf probe: where does transfer_cut spend time at p=1000?
+use uspec::affinity::{build_affinity, knr::KnrIndex, select, NativeBackend, SelectStrategy};
+use uspec::bipartite::{transfer_cut, EigSolver};
+use uspec::data::Benchmark;
+
+fn main() {
+    let ds = Benchmark::Cg10m.generate(0.01, 7); // 100k
+    let t0 = std::time::Instant::now();
+    let reps = select(&ds.x, SelectStrategy::Hybrid { candidate_factor: 10 }, 1000, 100, 1).unwrap();
+    println!("select: {:.2}s", t0.elapsed().as_secs_f64());
+    let index = KnrIndex::build(&reps, 50, 30, &NativeBackend).unwrap();
+    let knr = index.approx_knr(&ds.x, 5, &NativeBackend);
+    let aff = build_affinity(ds.n(), index.p(), knr.k, &knr);
+    for solver in [EigSolver::Auto, EigSolver::Dense] {
+        let t0 = std::time::Instant::now();
+        let tc = transfer_cut(&aff.b, 11, solver, 3).unwrap();
+        println!("{:?}: {:.3}s  lambdas={:?}", solver, t0.elapsed().as_secs_f64(), &tc.lambdas[..4]);
+    }
+}

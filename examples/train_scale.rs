@@ -1,0 +1,91 @@
+//! End-to-end scale driver (EXPERIMENTS.md §End-to-end): runs the full
+//! three-layer system — rust coordinator, PJRT kernel pool serving the
+//! AOT-compiled Pallas distance kernel, U-SPEC and U-SENC — on a real
+//! workload: the paper's CG (circles+gaussians) shape at 100k–200k
+//! objects, reporting the headline metrics (NMI/CA, objects/s, kernel
+//! dispatch stats) per stage.
+//!
+//!     cargo run --release --example train_scale [scale]
+//!
+//! `scale` is the fraction of CG-10M to generate (default 0.01 → 100k).
+
+use uspec::coordinator::usenc_coordinated;
+use uspec::data::Benchmark;
+use uspec::metrics::{ca, nmi};
+use uspec::runtime::{default_artifact_dir, KernelPool, PjrtBackend};
+use uspec::usenc::UsencParams;
+use uspec::uspec::{uspec_with_backend, UspecParams};
+
+fn main() {
+    let scale: f64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0.01);
+    let ds = Benchmark::Cg10m.generate(scale, 7);
+    println!(
+        "workload: {} at scale {scale} -> n={} d={} k={}",
+        ds.name,
+        ds.n(),
+        ds.d(),
+        ds.k
+    );
+
+    // Kernel pool over the AOT artifacts (falls back to native when absent).
+    let art = default_artifact_dir();
+    let (backend, pool): (Box<dyn uspec::affinity::DistanceBackend>, _) =
+        if art.join("manifest.json").exists() {
+            let pool = KernelPool::start(&art).expect("kernel pool");
+            (Box::new(PjrtBackend::new(pool.clone())), Some(pool))
+        } else {
+            eprintln!("NOTE: artifacts/ missing — run `make artifacts` for the PJRT path");
+            (Box::new(uspec::affinity::NativeBackend), None)
+        };
+
+    // ---- Stage 1: single U-SPEC clusterer --------------------------------
+    let params = UspecParams { k: ds.k, p: 1000.min(ds.n() / 2), ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let res = uspec_with_backend(&ds.x, &params, 42, backend.as_ref()).expect("u-spec");
+    let t_uspec = t0.elapsed().as_secs_f64();
+    println!(
+        "\nU-SPEC : NMI={:.4} CA={:.4}  {:.2}s ({:.0} objects/s)",
+        nmi(&res.labels, &ds.y),
+        ca(&res.labels, &ds.y),
+        t_uspec,
+        ds.n() as f64 / t_uspec
+    );
+    println!("  phases: {}", res.timer.summary());
+
+    // ---- Stage 2: U-SENC ensemble through the coordinator ----------------
+    let usenc_params = UsencParams {
+        k: ds.k,
+        m: 8,
+        k_min: 20.min(ds.n() / 4),
+        k_max: 40.min(ds.n() / 2),
+        base: params.clone(),
+    };
+    let t0 = std::time::Instant::now();
+    let ens = usenc_coordinated(
+        &ds.x,
+        &usenc_params,
+        42,
+        backend.as_ref(),
+        uspec::util::par::num_threads(),
+        Some(&|done, total| eprintln!("  base clusterer {done}/{total} done")),
+    )
+    .expect("u-senc");
+    let t_usenc = t0.elapsed().as_secs_f64();
+    println!(
+        "U-SENC : NMI={:.4} CA={:.4}  {:.2}s ({:.0} objects/s, m={})",
+        nmi(&ens.labels, &ds.y),
+        ca(&ens.labels, &ds.y),
+        t_usenc,
+        ds.n() as f64 / t_usenc,
+        usenc_params.m
+    );
+    println!("  phases: {}", ens.timer.summary());
+
+    if let Some(pool) = pool {
+        let (dispatched, rows) = pool.stats();
+        println!(
+            "\nkernel pool: {dispatched} dispatches, {rows} rows through the Pallas pdist artifact, {} coalesced",
+            pool.coalesced.load(std::sync::atomic::Ordering::Relaxed)
+        );
+    }
+}

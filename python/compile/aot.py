@@ -1,0 +1,128 @@
+"""AOT compile path: lower every L2 graph variant to HLO *text* under
+``artifacts/`` plus a ``manifest.json`` the rust runtime loads at startup.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Variant grid (see DESIGN.md):
+  * ``pdist``      B=2048, C in {64, 256}, d in {2, 16, 64, 256, 784}
+  * ``dist_top1``  B=2048, C=64, same d grid
+  * ``dist_topk``  B=2048, C=64, K=5, same d grid
+The rust side pads (B rows, C rows via the validity mask, d columns with
+zeros — zero-padding the feature dimension leaves distances unchanged) and
+picks the smallest variant that fits.
+
+Usage: python -m compile.aot --out ../artifacts
+Python runs ONLY here; the rust binary never shells out to it.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+BATCH = 2048
+DIMS = [2, 16, 64, 256, 784]
+PDIST_CENTERS = [64, 256]
+TOPK_K = 5
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def variants():
+    for d in DIMS:
+        for c in PDIST_CENTERS:
+            yield ("pdist", BATCH, c, d, None)
+        yield ("dist_top1", BATCH, 64, d, None)
+        yield ("dist_topk", BATCH, 64, d, TOPK_K)
+
+
+def variant_name(graph, b, c, d, k):
+    suffix = f"_k{k}" if k is not None else ""
+    return f"{graph}_b{b}_c{c}_d{d}{suffix}"
+
+
+def input_fingerprint() -> str:
+    """Hash of the compile-path sources — the Makefile-level no-op check."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    h.update(jax.__version__.encode())
+    return h.hexdigest()[:16]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--force", action="store_true", help="rebuild even if fresh")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest_path = os.path.join(args.out, "manifest.json")
+    fp = input_fingerprint()
+
+    if not args.force and os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                old = json.load(f)
+            if old.get("fingerprint") == fp and all(
+                os.path.exists(os.path.join(args.out, a["file"])) for a in old["artifacts"]
+            ):
+                print(f"artifacts fresh (fingerprint {fp}); nothing to do")
+                return 0
+        except (json.JSONDecodeError, KeyError):
+            pass
+
+    arts = []
+    for graph, b, c, d, k in variants():
+        name = variant_name(graph, b, c, d, k)
+        lowered, inputs = model.lower_variant(graph, b, c, d, k)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        n_outputs = {"pdist": 1, "dist_top1": 2, "dist_topk": 2}[graph]
+        arts.append(
+            {
+                "name": name,
+                "graph": graph,
+                "file": fname,
+                "b": b,
+                "c": c,
+                "d": d,
+                "k": k,
+                "inputs": inputs,
+                "outputs": n_outputs,
+            }
+        )
+        print(f"lowered {name}: {len(text)} chars")
+
+    with open(manifest_path, "w") as f:
+        json.dump(
+            {"fingerprint": fp, "batch": BATCH, "artifacts": arts},
+            f,
+            indent=1,
+        )
+    print(f"wrote {len(arts)} artifacts + manifest to {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,97 @@
+"""L1 — Pallas kernel: tiled pairwise squared Euclidean distance.
+
+The paper's single dominant cost is the blocked evaluation of
+``D2[i, j] = ||x_i - c_j||^2`` between object batches and small center sets
+(rep-cluster centers, rep-cluster members, K'-neighborhoods, k-means
+centers): U-SPEC's O(N * p^0.5 * d) affinity phase is a stream of such
+blocks (paper §3.1.2, "batch processing manner" §3.1.4).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): we expand
+``||x - c||^2 = ||x||^2 + ||c||^2 - 2 x·c^T`` so the dominant term is a
+(B×d)·(d×C) matmul that lands on the MXU systolic array. BlockSpec tiles
+the object batch along the grid (BM rows per program) while the center
+block — small by construction (C ≤ a few hundred) — stays VMEM-resident
+across the whole grid. The norm terms ride along as rank-1 corrections
+fused into the same kernel, so the HBM traffic is exactly one pass over X.
+
+NOTE: lowered with ``interpret=True`` everywhere — the CPU PJRT plugin
+cannot execute Mosaic custom-calls; on a real TPU the same kernel lowers
+natively. VMEM/MXU estimates live in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows of X processed per grid step. 128 matches the MXU tile edge; on CPU
+# interpret mode it is simply the block length.
+DEFAULT_BLOCK_M = 128
+
+
+def _pdist2_kernel(x_ref, c_ref, o_ref):
+    """One grid step: distances of a BM×d X-tile against all C centers.
+
+    o[i, j] = ||x_i||^2 + ||c_j||^2 - 2 <x_i, c_j>
+    """
+    x = x_ref[...]  # (bm, d)
+    c = c_ref[...]  # (cn, d)
+    # MXU term: (bm, d) @ (d, cn). f32 accumulation (preferred_element_type)
+    # keeps parity with the rust-native backend.
+    g = jax.lax.dot_general(
+        x,
+        c,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    xn = jnp.sum(x * x, axis=1, keepdims=True)  # (bm, 1)
+    cn = jnp.sum(c * c, axis=1, keepdims=True).T  # (1, cn)
+    o_ref[...] = jnp.maximum(xn + cn - 2.0 * g, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def pdist2(x, c, *, block_m=DEFAULT_BLOCK_M):
+    """Pairwise squared distances via the Pallas kernel.
+
+    Args:
+      x: (n, d) float32 object batch; n must be a multiple of block_m
+         (the AOT wrapper pads).
+      c: (cn, d) float32 center block (VMEM-resident across the grid).
+    Returns:
+      (n, cn) float32 squared distances, clamped at 0.
+    """
+    n, d = x.shape
+    cn = c.shape[0]
+    assert n % block_m == 0, f"n={n} must be a multiple of block_m={block_m}"
+    grid = (n // block_m,)
+    return pl.pallas_call(
+        _pdist2_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),  # stream X tiles
+            pl.BlockSpec((cn, d), lambda i: (0, 0)),  # pin centers in VMEM
+        ],
+        out_specs=pl.BlockSpec((block_m, cn), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, cn), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, c)
+
+
+def vmem_bytes(block_m: int, cn: int, d: int) -> int:
+    """Static VMEM footprint estimate of one grid step (f32)."""
+    x_tile = block_m * d * 4
+    c_tile = cn * d * 4
+    out_tile = block_m * cn * 4
+    return x_tile + c_tile + out_tile
+
+
+def mxu_utilization(block_m: int, cn: int, d: int) -> float:
+    """Fraction of 128×128×8-lane MXU work that is useful (non-padding)."""
+
+    def ceil_to(v, q):
+        return -(-v // q) * q
+
+    useful = block_m * cn * d
+    padded = ceil_to(block_m, 128) * ceil_to(cn, 128) * ceil_to(d, 8)
+    return useful / padded

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the L1 Pallas kernel and the L2 graphs.
+
+These are the correctness ground truth: pytest asserts allclose between
+each compiled path and these references over hypothesis-driven shape/value
+sweeps.
+"""
+
+import jax.numpy as jnp
+
+
+def pdist2_ref(x, c):
+    """Reference pairwise squared distances, O(n*cn*d) direct evaluation."""
+    diff = x[:, None, :] - c[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def dist_top1_ref(x, c):
+    """Nearest center per row: (labels, squared distance)."""
+    d2 = pdist2_ref(x, c)
+    idx = jnp.argmin(d2, axis=1)
+    return idx.astype(jnp.int32), jnp.min(d2, axis=1)
+
+
+def dist_topk_ref(x, c, k):
+    """K nearest centers per row (ascending): (idx, d2)."""
+    d2 = pdist2_ref(x, c)
+    order = jnp.argsort(d2, axis=1)[:, :k]
+    vals = jnp.take_along_axis(d2, order, axis=1)
+    return order.astype(jnp.int32), vals
+
+
+def kmeans_assign_ref(x, c, valid):
+    """Nearest *valid* center per row; invalid centers are masked to +inf.
+
+    valid: (cn,) float32 mask, 1.0 = real center, 0.0 = padding row.
+    """
+    d2 = pdist2_ref(x, c)
+    big = jnp.float32(3.4e38)
+    masked = jnp.where(valid[None, :] > 0.5, d2, big)
+    idx = jnp.argmin(masked, axis=1)
+    return idx.astype(jnp.int32), jnp.min(masked, axis=1)

@@ -1,0 +1,69 @@
+"""L2 — JAX compute graphs served to the rust coordinator.
+
+Each graph wraps the L1 Pallas kernel (`kernels.pdist.pdist2`) with the
+fixed-shape pre/post-processing the coordinator's hot loops need. All
+shapes are static — the AOT step compiles one artifact per (B, C, d)
+variant and the rust side pads batches to fit (padding rows of X are
+ignored by the caller; padding rows of C are masked by `valid`).
+
+Graphs:
+  * ``pdist``         — raw squared-distance block (B×C). The workhorse of
+                        the approximate-KNR three-step search.
+  * ``dist_top1``     — fused nearest-center: labels + min distance, with a
+                        validity mask over centers (k-means assign / KNR
+                        step 1 & 2).
+  * ``dist_topk``     — fused top-K nearest centers (KNR step 3).
+
+Every graph returns a tuple (lowered with return_tuple=True) — the rust
+loader unwraps with ``to_tuple1``/``to_tupleN``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.pdist import pdist2
+
+
+def pdist_graph(x, c):
+    """(B, d) × (C, d) → ((B, C) squared distances,)."""
+    return (pdist2(x, c),)
+
+
+def dist_top1_graph(x, c, valid):
+    """Nearest valid center: ((B,) int32 labels, (B,) f32 min-distance)."""
+    d2 = pdist2(x, c)
+    big = jnp.float32(3.4e38)
+    masked = jnp.where(valid[None, :] > 0.5, d2, big)
+    idx = jnp.argmin(masked, axis=1).astype(jnp.int32)
+    dist = jnp.min(masked, axis=1)
+    return (idx, dist)
+
+
+def dist_topk_graph(x, c, valid, *, k):
+    """K nearest valid centers: ((B, k) int32 idx, (B, k) f32 d2)."""
+    d2 = pdist2(x, c)
+    big = jnp.float32(3.4e38)
+    masked = jnp.where(valid[None, :] > 0.5, d2, big)
+    neg_vals, idx = jax.lax.top_k(-masked, k)
+    return (idx.astype(jnp.int32), -neg_vals)
+
+
+def lower_variant(name, b, c, d, k=None):
+    """Lower one graph variant to a jax Lowered object.
+
+    Returns (lowered, arg_spec_summary).
+    """
+    xs = jax.ShapeDtypeStruct((b, d), jnp.float32)
+    cs = jax.ShapeDtypeStruct((c, d), jnp.float32)
+    vs = jax.ShapeDtypeStruct((c,), jnp.float32)
+    if name == "pdist":
+        fn = jax.jit(pdist_graph)
+        return fn.lower(xs, cs), ["x", "c"]
+    if name == "dist_top1":
+        fn = jax.jit(dist_top1_graph)
+        return fn.lower(xs, cs, vs), ["x", "c", "valid"]
+    if name == "dist_topk":
+        assert k is not None and k >= 1
+        fn = jax.jit(lambda x, cc, v: dist_topk_graph(x, cc, v, k=k))
+        return fn.lower(xs, cs, vs), ["x", "c", "valid"]
+    raise ValueError(f"unknown graph {name}")

@@ -1,0 +1,70 @@
+"""L1 correctness: the Pallas pdist kernel against the pure-jnp oracle,
+swept over shapes and value ranges with hypothesis."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.pdist import pdist2, vmem_bytes, mxu_utilization, DEFAULT_BLOCK_M
+from compile.kernels.ref import pdist2_ref
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape, scale=scale).astype(np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bm=st.sampled_from([8, 32, 128]),
+    nblocks=st.integers(1, 3),
+    cn=st.integers(1, 70),
+    d=st.sampled_from([1, 2, 3, 16, 33]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pdist2_matches_ref(bm, nblocks, cn, d, seed):
+    n = bm * nblocks
+    x = rand((n, d), seed)
+    c = rand((cn, d), seed + 1)
+    got = pdist2(x, c, block_m=bm)
+    want = pdist2_ref(x, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(scale=st.sampled_from([1e-3, 1.0, 1e3]), seed=st.integers(0, 2**31 - 1))
+def test_pdist2_value_ranges(scale, seed):
+    x = rand((128, 8), seed, scale)
+    c = rand((16, 8), seed + 1, scale)
+    got = np.asarray(pdist2(x, c))
+    want = np.asarray(pdist2_ref(x, c))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3 * scale * scale)
+    assert (got >= 0).all(), "distances must be clamped at 0"
+
+
+def test_pdist2_identity_rows_zero():
+    x = rand((128, 5), 7)
+    d2 = np.asarray(pdist2(x, x[:32]))
+    # diagonal of the first 32 rows ≈ 0
+    for i in range(32):
+        assert d2[i, i] < 1e-4
+
+
+def test_pdist2_rejects_ragged_batch():
+    x = rand((100, 4), 3)  # not a multiple of block_m
+    c = rand((8, 4), 4)
+    with pytest.raises(AssertionError):
+        pdist2(x, c, block_m=DEFAULT_BLOCK_M)
+
+
+def test_vmem_estimate_within_budget():
+    # The largest compiled variant must fit the 16 MB/core VMEM budget.
+    assert vmem_bytes(128, 256, 784) < 16 * 1024 * 1024
+
+
+def test_mxu_utilization_reasonable():
+    # d=784, C=256 tiles densely; d=2 wastes lanes (documented in DESIGN.md)
+    assert mxu_utilization(128, 256, 784) > 0.9
+    assert mxu_utilization(128, 64, 2) < 0.3

@@ -1,0 +1,70 @@
+"""L2 correctness: the fused graphs (dist_top1 / dist_topk) against the
+pure-jnp oracles, including the center validity mask used for padding."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    cn=st.integers(2, 64),
+    valid_n=st.integers(1, 64),
+    d=st.sampled_from([2, 7, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dist_top1_masks_padding(cn, valid_n, d, seed):
+    valid_n = min(valid_n, cn)
+    x = rand((128, d), seed)
+    c = rand((cn, d), seed + 1)
+    valid = jnp.asarray((np.arange(cn) < valid_n).astype(np.float32))
+    idx, dist = model.dist_top1_graph(x, c, valid)
+    ridx, rdist = ref.kmeans_assign_ref(x, c, valid)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    np.testing.assert_allclose(np.asarray(dist), np.asarray(rdist), rtol=2e-4, atol=2e-4)
+    assert (np.asarray(idx) < valid_n).all(), "winner must be a valid center"
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.integers(1, 6),
+    cn=st.integers(8, 64),
+    d=st.sampled_from([2, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dist_topk_matches_ref(k, cn, d, seed):
+    x = rand((128, d), seed)
+    c = rand((cn, d), seed + 1)
+    valid = jnp.ones((cn,), jnp.float32)
+    idx, d2 = model.dist_topk_graph(x, c, valid, k=k)
+    ridx, rd2 = ref.dist_topk_ref(x, c, k)
+    # distances must match exactly as sets (ties can permute indices)
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(rd2), rtol=2e-4, atol=2e-4)
+    # ascending
+    d2 = np.asarray(d2)
+    assert (np.diff(d2, axis=1) >= -1e-5).all()
+
+
+def test_topk_excludes_masked_centers():
+    x = rand((128, 4), 1)
+    c = rand((16, 4), 2)
+    valid = jnp.asarray(([1.0] * 8 + [0.0] * 8), dtype=jnp.float32)
+    idx, _ = model.dist_topk_graph(x, c, valid, k=5)
+    assert (np.asarray(idx) < 8).all()
+
+
+def test_lower_variant_shapes():
+    for name, k in [("pdist", None), ("dist_top1", None), ("dist_topk", 5)]:
+        lowered, inputs = model.lower_variant(name, 256, 64, 16, k)
+        text = lowered.as_text()
+        assert len(text) > 0
+        assert inputs[0] == "x"

@@ -1,0 +1,9 @@
+//! Regenerates the design-choice ablation tables (DESIGN.md §Ablations):
+//! consensus function, reduced-problem eigensolver, similarity kernel,
+//! and out-of-core streaming parity.
+fn main() {
+    uspec::bench::tables::bench_main(
+        &["ablation-consensus", "ablation-eig", "ablation-kernels", "ablation-streaming"],
+        "ablations",
+    );
+}

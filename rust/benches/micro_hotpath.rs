@@ -1,0 +1,131 @@
+//! Hot-path microbenchmarks (the §Perf instrumentation): native vs PJRT
+//! pdist throughput, kernel-pool dispatch overhead and coalescing, and the
+//! approximate-KNR pipeline throughput. Prints GFLOP/s and rows/s; saved
+//! to results/micro_hotpath.txt.
+
+use std::sync::Arc;
+use uspec::affinity::{knr::KnrIndex, select, NativeBackend, SelectStrategy};
+use uspec::bench::time_median;
+use uspec::data::Benchmark;
+use uspec::linalg::Mat;
+use uspec::runtime::{default_artifact_dir, KernelPool, PjrtBackend, Runtime};
+use uspec::util::rng::Rng;
+
+fn randmat(r: usize, c: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_vec(r, c, (0..r * c).map(|_| rng.normal() as f32).collect())
+}
+
+fn gflops(n: usize, c: usize, d: usize, secs: f64) -> f64 {
+    // ‖x‖²+‖c‖²−2xc: 2ncd flops dominate
+    (2.0 * n as f64 * c as f64 * d as f64) / secs / 1e9
+}
+
+fn main() {
+    let mut out = String::new();
+    let mut emit = |s: String| {
+        println!("{s}");
+        out.push_str(&s);
+        out.push('\n');
+    };
+
+    emit("== pdist throughput (native vs PJRT artifact) ==".into());
+    let shapes = [(8192usize, 64usize, 2usize), (8192, 64, 16), (8192, 256, 64), (4096, 256, 784)];
+    let have_artifacts = default_artifact_dir().join("manifest.json").exists();
+    let mut rt = if have_artifacts { Runtime::load(default_artifact_dir()).ok() } else { None };
+    for (n, c, d) in shapes {
+        let x = randmat(n, d, 1);
+        let cm = randmat(c, d, 2);
+        let t_native = time_median(1, 3, || {
+            std::hint::black_box(x.sq_dists(&cm));
+        });
+        emit(format!(
+            "native  n={n:5} c={c:3} d={d:3}: {:8.2} ms  {:6.2} GFLOP/s",
+            t_native * 1e3,
+            gflops(n, c, d, t_native)
+        ));
+        if let Some(rt) = rt.as_mut() {
+            let t_pjrt = time_median(1, 3, || {
+                std::hint::black_box(rt.pdist(&x, &cm).unwrap());
+            });
+            emit(format!(
+                "pjrt    n={n:5} c={c:3} d={d:3}: {:8.2} ms  {:6.2} GFLOP/s  ({:.1}x native time)",
+                t_pjrt * 1e3,
+                gflops(n, c, d, t_pjrt),
+                t_pjrt / t_native
+            ));
+        }
+    }
+
+    if have_artifacts {
+        emit("\n== kernel pool dispatch overhead ==".into());
+        let pool = KernelPool::start(default_artifact_dir()).unwrap();
+        let c = Arc::new(randmat(64, 16, 3));
+        for rows in [64usize, 512, 2048] {
+            let x = randmat(rows, 16, 4);
+            let t = time_median(2, 5, || {
+                std::hint::black_box(pool.pdist(x.clone(), c.clone()).unwrap());
+            });
+            emit(format!(
+                "pool pdist rows={rows:5}: {:8.3} ms ({:.0} rows/ms)",
+                t * 1e3,
+                rows as f64 / (t * 1e3)
+            ));
+        }
+        let backend = PjrtBackend::new(pool);
+        let ds = Benchmark::Tb1m.generate(0.01, 5); // 10k points
+        let reps =
+            select(&ds.x, SelectStrategy::Hybrid { candidate_factor: 10 }, 1000, 20, 7).unwrap();
+        let t_knr = time_median(0, 2, || {
+            let index = KnrIndex::build(&reps, 50, 20, &backend).unwrap();
+            std::hint::black_box(index.approx_knr(&ds.x, 5, &backend));
+        });
+        emit(format!(
+            "approx-KNR (pjrt)   n=10000 p=1000: {:7.1} ms ({:.0} objects/s)",
+            t_knr * 1e3,
+            10_000.0 / t_knr
+        ));
+    }
+
+    emit("\n== approx-KNR pipeline throughput (native) ==".into());
+    for scale in [0.01f64, 0.05] {
+        let ds = Benchmark::Tb1m.generate(scale, 5);
+        let p = 1000.min(ds.n() / 2);
+        let reps = select(&ds.x, SelectStrategy::Hybrid { candidate_factor: 10 }, p, 20, 7).unwrap();
+        let index = KnrIndex::build(&reps, 50, 20, &NativeBackend).unwrap();
+        let t_a = time_median(0, 3, || {
+            std::hint::black_box(index.approx_knr(&ds.x, 5, &NativeBackend));
+        });
+        let t_e = time_median(0, 3, || {
+            std::hint::black_box(index.exact_knr(&ds.x, 5, &NativeBackend));
+        });
+        emit(format!(
+            "n={:6} p={p:4}: approx {:7.1} ms ({:9.0} obj/s)  exact {:7.1} ms  speedup {:.1}x",
+            ds.n(),
+            t_a * 1e3,
+            ds.n() as f64 / t_a,
+            t_e * 1e3,
+            t_e / t_a
+        ));
+    }
+
+    emit("\n== U-SPEC end-to-end (native) ==".into());
+    for scale in [0.01f64, 0.1] {
+        let ds = Benchmark::Tb1m.generate(scale, 9);
+        let params =
+            uspec::uspec::UspecParams { k: 2, p: 1000.min(ds.n() / 2), ..Default::default() };
+        let t = time_median(0, 1, || {
+            std::hint::black_box(uspec::uspec::uspec(&ds.x, &params, 3).unwrap());
+        });
+        emit(format!(
+            "U-SPEC n={:7}: {:8.2} s  ({:9.0} objects/s)",
+            ds.n(),
+            t,
+            ds.n() as f64 / t
+        ));
+    }
+
+    let _ = std::fs::create_dir_all("results");
+    let _ = std::fs::write("results/micro_hotpath.txt", out);
+    eprintln!("[saved results/micro_hotpath.txt]");
+}

@@ -1,0 +1,5 @@
+//! Regenerates Table 10: quality/time vs the number of representatives p
+//! for Nyström, LSC-K/R, U-SPEC, U-SENC on the §4.5 datasets.
+fn main() {
+    uspec::bench::tables::bench_main(&["t10"], "t10_sweep_p");
+}

@@ -1,0 +1,5 @@
+//! Regenerates Table 11: quality/time vs the number of nearest
+//! representatives K.
+fn main() {
+    uspec::bench::tables::bench_main(&["t11"], "t11_sweep_k");
+}

@@ -1,0 +1,5 @@
+//! Regenerates Table 12: quality/time vs ensemble size m for the ensemble
+//! methods.
+fn main() {
+    uspec::bench::tables::bench_main(&["t12"], "t12_sweep_m");
+}

@@ -1,0 +1,5 @@
+//! Regenerates Tables 13–14: hybrid vs random vs k-means representative
+//! selection for U-SPEC and U-SENC (plus Fig. 1's quantization summary).
+fn main() {
+    uspec::bench::tables::bench_main(&["fig1", "t13-14"], "t13_t14_selection");
+}

@@ -1,0 +1,5 @@
+//! Regenerates Tables 15–16: approximate vs exact K-nearest
+//! representatives for U-SPEC and U-SENC (plus Fig. 3's recall sweep).
+fn main() {
+    uspec::bench::tables::bench_main(&["fig3", "t15-16"], "t15_t16_knr");
+}

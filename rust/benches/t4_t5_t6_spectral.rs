@@ -1,0 +1,6 @@
+//! Regenerates Tables 4–6: NMI / CA / time for all ten spectral-track
+//! methods across the ten benchmark datasets. Env: USPEC_SCALE (default
+//! 0.002 of paper sizes), USPEC_RUNS, USPEC_BACKEND=native|pjrt.
+fn main() {
+    uspec::bench::tables::bench_main(&["t4-6", "fig5"], "t4_t5_t6_spectral");
+}

@@ -1,0 +1,5 @@
+//! Regenerates Tables 7–9: NMI / CA / time for the ensemble-clustering
+//! methods (EAC/WCT/KCC/PTGP/ECC/SEC/LWGP/U-SENC) across the benchmarks.
+fn main() {
+    uspec::bench::tables::bench_main(&["t7-9"], "t7_t8_t9_ensemble");
+}

@@ -1,0 +1,286 @@
+//! Pluggable similarity kernels for the sparse cross-affinity `B`.
+//!
+//! The paper fixes the Gaussian kernel with σ = mean object↔KNR distance
+//! (Eq. 6). This module generalizes that choice — bandwidth rules
+//! ([`SigmaRule`]) and kernel families ([`SimKernel`]) — so the
+//! `ablation_kernels` bench can quantify how much of U-SPEC's quality is
+//! the pipeline versus the specific kernel. [`super::build_affinity`]
+//! remains the paper-exact default
+//! (`SimKernel::Gaussian(SigmaRule::MeanKnr)`).
+
+use super::knr::KnrResult;
+use super::Affinity;
+use crate::linalg::Csr;
+use crate::util::par;
+
+/// How the Gaussian/Laplacian bandwidth σ is derived from the KNR
+/// distances.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SigmaRule {
+    /// σ = mean of all object↔KNR distances (the paper's rule).
+    MeanKnr,
+    /// σ = median of all object↔KNR distances (robust to outlier rows).
+    MedianKnr,
+    /// σ = `factor` × the MeanKnr value.
+    Scaled(f64),
+    /// Fixed user-supplied σ (must be > 0).
+    Fixed(f64),
+}
+
+impl SigmaRule {
+    /// Resolve the rule to a concrete σ given the flat squared-distance
+    /// array of the KNR result.
+    pub fn resolve(&self, d2: &[f32]) -> f64 {
+        let mean = || -> f64 {
+            if d2.is_empty() {
+                return 1e-12;
+            }
+            let sum: f64 = d2.iter().map(|&v| (v.max(0.0) as f64).sqrt()).sum();
+            (sum / d2.len() as f64).max(1e-12)
+        };
+        match *self {
+            SigmaRule::MeanKnr => mean(),
+            SigmaRule::MedianKnr => {
+                if d2.is_empty() {
+                    return 1e-12;
+                }
+                let mut d: Vec<f64> = d2.iter().map(|&v| (v.max(0.0) as f64).sqrt()).collect();
+                let mid = d.len() / 2;
+                d.select_nth_unstable_by(mid, |a, b| a.partial_cmp(b).unwrap());
+                d[mid].max(1e-12)
+            }
+            SigmaRule::Scaled(f) => (f * mean()).max(1e-12),
+            SigmaRule::Fixed(s) => s.max(1e-12),
+        }
+    }
+}
+
+/// Similarity kernel applied to the K-nearest-representative distances.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SimKernel {
+    /// `exp(−d² / 2σ²)` — the paper's kernel (Eq. 6).
+    Gaussian(SigmaRule),
+    /// `exp(−d / σ)` — heavier tail, less bandwidth-sensitive.
+    Laplacian(SigmaRule),
+    /// Self-tuning local scaling (Zelnik-Manor & Perona adapted to the
+    /// bipartite setting): `exp(−d²ᵢⱼ / (σᵢ·σⱼ))` with σᵢ = distance from
+    /// object i to its K-th nearest representative and σⱼ = mean distance
+    /// of representative j to the objects that selected it.
+    SelfTuning,
+    /// `1 / (d² + ε·σ̄²)` — inverse quadratic, σ̄ from MeanKnr.
+    InverseQuadratic {
+        /// Regularizer ε as a fraction of σ̄² (e.g. 1.0).
+        eps: f64,
+    },
+}
+
+impl SimKernel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimKernel::Gaussian(_) => "gaussian",
+            SimKernel::Laplacian(_) => "laplacian",
+            SimKernel::SelfTuning => "self-tuning",
+            SimKernel::InverseQuadratic { .. } => "inv-quadratic",
+        }
+    }
+}
+
+/// Build the sparse N×p cross-affinity from a KNR result under an
+/// arbitrary kernel. Row layout matches [`super::build_affinity`]: exactly
+/// `k` entries per row, columns from `knr.idx`.
+pub fn build_affinity_kernel(
+    n: usize,
+    p: usize,
+    k: usize,
+    knr: &KnrResult,
+    kernel: SimKernel,
+) -> Affinity {
+    debug_assert_eq!(knr.idx.len(), n * k);
+    let mut vals = vec![0.0f64; n * k];
+    let sigma_used: f64;
+    match kernel {
+        SimKernel::Gaussian(rule) => {
+            let sigma = rule.resolve(&knr.d2);
+            sigma_used = sigma;
+            let denom = 2.0 * sigma * sigma;
+            par::par_for_chunks(&mut vals, k, |start, chunk| {
+                let i = start / k;
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    *v = (-(knr.d2[i * k + j].max(0.0) as f64) / denom).exp();
+                }
+            });
+        }
+        SimKernel::Laplacian(rule) => {
+            let sigma = rule.resolve(&knr.d2);
+            sigma_used = sigma;
+            par::par_for_chunks(&mut vals, k, |start, chunk| {
+                let i = start / k;
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    let d = (knr.d2[i * k + j].max(0.0) as f64).sqrt();
+                    *v = (-d / sigma).exp();
+                }
+            });
+        }
+        SimKernel::SelfTuning => {
+            // σᵢ: K-th (= furthest kept) representative distance per object.
+            let sig_obj: Vec<f64> = (0..n)
+                .map(|i| {
+                    knr.d2[i * k..(i + 1) * k]
+                        .iter()
+                        .map(|&v| (v.max(0.0) as f64).sqrt())
+                        .fold(0.0, f64::max)
+                        .max(1e-12)
+                })
+                .collect();
+            // σⱼ: mean incoming distance per representative.
+            let mut sum = vec![0.0f64; p];
+            let mut cnt = vec![0u64; p];
+            for i in 0..n {
+                for j in 0..k {
+                    let r = knr.idx[i * k + j] as usize;
+                    sum[r] += (knr.d2[i * k + j].max(0.0) as f64).sqrt();
+                    cnt[r] += 1;
+                }
+            }
+            let global: f64 = sum.iter().sum::<f64>() / (n * k) as f64;
+            let sig_rep: Vec<f64> = (0..p)
+                .map(|r| if cnt[r] > 0 { (sum[r] / cnt[r] as f64).max(1e-12) } else { global.max(1e-12) })
+                .collect();
+            sigma_used = global.max(1e-12);
+            par::par_for_chunks(&mut vals, k, |start, chunk| {
+                let i = start / k;
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    let r = knr.idx[i * k + j] as usize;
+                    let denom = (sig_obj[i] * sig_rep[r]).max(1e-24);
+                    *v = (-(knr.d2[i * k + j].max(0.0) as f64) / denom).exp();
+                }
+            });
+        }
+        SimKernel::InverseQuadratic { eps } => {
+            let sigma = SigmaRule::MeanKnr.resolve(&knr.d2);
+            sigma_used = sigma;
+            let reg = (eps * sigma * sigma).max(1e-24);
+            par::par_for_chunks(&mut vals, k, |start, chunk| {
+                let i = start / k;
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    *v = 1.0 / (knr.d2[i * k + j].max(0.0) as f64 + reg);
+                }
+            });
+        }
+    }
+    let b = Csr::from_uniform(n, p, k, knr.idx.clone(), vals);
+    Affinity { b, sigma: sigma_used }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::affinity::{build_affinity, knr::KnrIndex, select, NativeBackend, SelectStrategy};
+    use crate::data::synthetic::two_moons;
+
+    fn knr_fixture() -> (usize, usize, usize, KnrResult) {
+        let ds = two_moons(300, 0.05, 3);
+        let reps =
+            select(&ds.x, SelectStrategy::Hybrid { candidate_factor: 8 }, 40, 10, 7).unwrap();
+        let index = KnrIndex::build(&reps, 20, 7, &NativeBackend).unwrap();
+        let res = index.approx_knr(&ds.x, 4, &NativeBackend);
+        (300, 40, 4, res)
+    }
+
+    #[test]
+    fn gaussian_mean_matches_paper_default() {
+        let (n, p, k, knr) = knr_fixture();
+        let a = build_affinity(n, p, k, &knr);
+        let b = build_affinity_kernel(n, p, k, &knr, SimKernel::Gaussian(SigmaRule::MeanKnr));
+        // summation order differs (parallel reduce vs flat) — ulp-level only
+        assert!((a.sigma - b.sigma).abs() < 1e-12 * a.sigma.max(1.0));
+        assert_eq!(a.b.indices, b.b.indices);
+        for (x, y) in a.b.values.iter().zip(&b.b.values) {
+            assert!((x - y).abs() < 1e-12, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn sigma_rules_ordering() {
+        let (_, _, _, knr) = knr_fixture();
+        let mean = SigmaRule::MeanKnr.resolve(&knr.d2);
+        let median = SigmaRule::MedianKnr.resolve(&knr.d2);
+        let half = SigmaRule::Scaled(0.5).resolve(&knr.d2);
+        let fixed = SigmaRule::Fixed(0.123).resolve(&knr.d2);
+        assert!(mean > 0.0 && median > 0.0);
+        assert!((half - 0.5 * mean).abs() < 1e-12);
+        assert!((fixed - 0.123).abs() < 1e-12);
+        // KNR distances are right-skewed ⇒ median ≤ mean (not strict, but
+        // holds for moons)
+        assert!(median <= mean * 1.2);
+    }
+
+    #[test]
+    fn all_kernels_produce_valid_affinities() {
+        let (n, p, k, knr) = knr_fixture();
+        for kernel in [
+            SimKernel::Gaussian(SigmaRule::MedianKnr),
+            SimKernel::Laplacian(SigmaRule::MeanKnr),
+            SimKernel::SelfTuning,
+            SimKernel::InverseQuadratic { eps: 1.0 },
+        ] {
+            let aff = build_affinity_kernel(n, p, k, &knr, kernel);
+            assert_eq!(aff.b.nnz(), n * k, "{}", kernel.name());
+            assert!(aff.sigma > 0.0, "{}", kernel.name());
+            for &v in &aff.b.values {
+                assert!(v.is_finite() && v > 0.0, "{}: value {v}", kernel.name());
+            }
+        }
+    }
+
+    #[test]
+    fn kernels_are_monotone_decreasing_in_distance() {
+        // entries within a row must be non-increasing as d² grows (KNR rows
+        // are sorted ascending by distance).
+        let (n, p, k, knr) = knr_fixture();
+        for kernel in [
+            SimKernel::Gaussian(SigmaRule::MeanKnr),
+            SimKernel::Laplacian(SigmaRule::MeanKnr),
+            SimKernel::InverseQuadratic { eps: 0.5 },
+        ] {
+            let aff = build_affinity_kernel(n, p, k, &knr, kernel);
+            for i in 0..n {
+                let (_, vals) = aff.b.row(i);
+                for w in vals.windows(2) {
+                    assert!(
+                        w[0] >= w[1] - 1e-12,
+                        "{}: row {i} not monotone: {w:?}",
+                        kernel.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn self_tuning_clusters_moons() {
+        // end-to-end: the self-tuning kernel through the transfer cut still
+        // separates the moons.
+        let ds = two_moons(600, 0.05, 9);
+        let reps =
+            select(&ds.x, SelectStrategy::Hybrid { candidate_factor: 8 }, 60, 10, 7).unwrap();
+        let index = KnrIndex::build(&reps, 25, 7, &NativeBackend).unwrap();
+        let res = index.approx_knr(&ds.x, 5, &NativeBackend);
+        let aff = build_affinity_kernel(600, 60, 5, &res, SimKernel::SelfTuning);
+        let tc = crate::bipartite::transfer_cut(
+            &aff.b,
+            2,
+            crate::bipartite::EigSolver::Dense,
+            3,
+        )
+        .unwrap();
+        let km = crate::kmeans::kmeans(
+            &tc.embedding,
+            &crate::kmeans::KmeansParams { k: 2, ..Default::default() },
+            5,
+        )
+        .unwrap();
+        let score = crate::metrics::nmi(&km.labels, &ds.y);
+        assert!(score > 0.8, "nmi={score}");
+    }
+}

@@ -1,0 +1,406 @@
+//! K-nearest-representative search (paper §3.1.2).
+//!
+//! [`KnrIndex::build`] runs the two pre-steps: (1) group the p
+//! representatives into z₁ = ⌊p^½⌋ rep-clusters via k-means; (2) compute
+//! each representative's K′ nearest representative neighbors.
+//!
+//! [`KnrIndex::approx_knr`] then answers per-object queries with the
+//! coarse-to-fine three-step scheme: nearest rep-cluster → nearest
+//! representative inside it → top-K among that representative's K′
+//! neighborhood. All distance blocks go through the [`DistanceBackend`],
+//! batched per rep-cluster / per anchor so the compiled kernel sees dense
+//! rectangular work (the paper's "batch processing manner").
+
+use super::DistanceBackend;
+use crate::kmeans::{kmeans, KmeansParams};
+use crate::linalg::Mat;
+use crate::util::{argmin_k, par};
+use crate::{ensure_arg, Result};
+
+/// Preprocessed index over the representative set.
+#[derive(Debug, Clone)]
+pub struct KnrIndex {
+    /// The p×d representatives.
+    pub reps: Mat,
+    /// z₁×d rep-cluster centers.
+    pub rc_centers: Mat,
+    /// members[c] = representative ids in rep-cluster c.
+    pub members: Vec<Vec<u32>>,
+    /// Flattened p×(K′+1) neighbor lists (each representative's K′ nearest
+    /// representatives, self included at position 0).
+    pub neighbors: Vec<u32>,
+    /// K′+1 (row stride of `neighbors`).
+    pub nbr_len: usize,
+}
+
+/// Per-object K-nearest-representative answer (flattened n×K).
+#[derive(Debug, Clone)]
+pub struct KnrResult {
+    /// Representative column ids, n×K row-major.
+    pub idx: Vec<u32>,
+    /// Squared distances aligned with `idx`.
+    pub d2: Vec<f32>,
+    pub k: usize,
+}
+
+impl KnrIndex {
+    /// Pre-steps 1 & 2. `z1 = ⌊√p⌋` unless overridden, `k_prime` is the
+    /// candidate neighborhood size K′ (paper suggests 10·K).
+    pub fn build(
+        reps: &Mat,
+        k_prime: usize,
+        kmeans_iters: usize,
+        backend: &dyn DistanceBackend,
+    ) -> Result<KnrIndex> {
+        let p = reps.rows;
+        ensure_arg!(p >= 1, "KnrIndex: empty representative set");
+        let z1 = ((p as f64).sqrt().floor() as usize).max(1);
+        let k_prime = k_prime.min(p - 1);
+        // Pre-step 1: rep-clusters via k-means on the representatives.
+        let km = kmeans(
+            reps,
+            &KmeansParams { k: z1, max_iter: kmeans_iters, tol: 1e-3, ..Default::default() },
+            0x5EED ^ p as u64,
+        )?;
+        let mut members: Vec<Vec<u32>> = vec![Vec::new(); z1];
+        for (r, &c) in km.labels.iter().enumerate() {
+            members[c as usize].push(r as u32);
+        }
+        // k-means guarantees non-empty clusters (repair step), but guard:
+        members.retain(|m| !m.is_empty());
+        let rc_centers = if members.len() == z1 {
+            km.centers
+        } else {
+            // rebuild centers for surviving clusters
+            let mut c = Mat::zeros(members.len(), reps.cols);
+            for (ci, m) in members.iter().enumerate() {
+                for &r in m {
+                    for t in 0..reps.cols {
+                        let v = c.at(ci, t) + reps.at(r as usize, t) / m.len() as f32;
+                        c.set(ci, t, v);
+                    }
+                }
+            }
+            c
+        };
+        // Pre-step 2: K′-NN among representatives (exact, O(p²d) — p ≪ N).
+        let nbr_len = k_prime + 1;
+        let d2 = backend.sq_dists(reps, reps);
+        let neighbors: Vec<u32> = par::par_map(p, |i| {
+            let row: Vec<f64> = d2.data[i * p..(i + 1) * p].iter().map(|&v| v as f64).collect();
+            let mut order = argmin_k(&row, nbr_len);
+            // ensure self first
+            if let Some(pos) = order.iter().position(|&j| j == i) {
+                order.swap(0, pos);
+            } else {
+                order.insert(0, i);
+                order.truncate(nbr_len);
+            }
+            order.into_iter().map(|j| j as u32).collect::<Vec<u32>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect();
+        Ok(KnrIndex { reps: reps.clone(), rc_centers, members, neighbors, nbr_len })
+    }
+
+    pub fn p(&self) -> usize {
+        self.reps.rows
+    }
+
+    pub fn z1(&self) -> usize {
+        self.rc_centers.rows
+    }
+
+    /// The paper's three-step approximate K-nearest representatives for all
+    /// rows of `x`. O(N·(z₁ + z₂ + K′)·d) = O(N·p^½·d).
+    pub fn approx_knr(&self, x: &Mat, k: usize, backend: &dyn DistanceBackend) -> KnrResult {
+        let n = x.rows;
+        let p = self.p();
+        let k = k.min(p);
+        // ---- Step 1: nearest rep-cluster, batched over all of x ----------
+        let nearest_rc = nearest_row_batched(x, &self.rc_centers, backend);
+
+        // ---- Step 2: nearest representative inside that rep-cluster ------
+        // Bucket objects by rep-cluster so each bucket runs one dense block.
+        let z1 = self.z1();
+        let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); z1];
+        for (i, &c) in nearest_rc.iter().enumerate() {
+            buckets[c as usize].push(i as u32);
+        }
+        let mut anchor = vec![0u32; n]; // r_l per object
+        let per_bucket: Vec<(u32, Vec<u32>)> = par::par_map(z1, |c| {
+            let objs = &buckets[c];
+            if objs.is_empty() {
+                return (c as u32, Vec::new());
+            }
+            let mem = &self.members[c];
+            let xb = gather_rows_u32(x, objs);
+            let rb = gather_rows_u32(&self.reps, mem);
+            let d2 = backend.sq_dists(&xb, &rb);
+            let winners: Vec<u32> = (0..objs.len())
+                .map(|bi| {
+                    let row = &d2.data[bi * mem.len()..(bi + 1) * mem.len()];
+                    let mut best = 0usize;
+                    for (j, &v) in row.iter().enumerate().skip(1) {
+                        if v < row[best] {
+                            best = j;
+                        }
+                    }
+                    mem[best]
+                })
+                .collect();
+            (c as u32, winners)
+        });
+        for (c, winners) in per_bucket {
+            for (bi, &obj) in buckets[c as usize].iter().enumerate() {
+                anchor[obj as usize] = winners[bi];
+            }
+        }
+
+        // ---- Step 3: top-K among the anchor's K′ neighborhood -------------
+        // Bucket objects by anchor representative.
+        let mut by_anchor: Vec<Vec<u32>> = vec![Vec::new(); p];
+        for (i, &a) in anchor.iter().enumerate() {
+            by_anchor[a as usize].push(i as u32);
+        }
+        let mut idx = vec![0u32; n * k];
+        let mut d2out = vec![0f32; n * k];
+        let results: Vec<(u32, Vec<u32>, Vec<f32>)> = par::par_map(p, |a| {
+            let objs = &by_anchor[a];
+            if objs.is_empty() {
+                return (a as u32, Vec::new(), Vec::new());
+            }
+            let cand = &self.neighbors[a * self.nbr_len..(a + 1) * self.nbr_len];
+            let xb = gather_rows_u32(x, objs);
+            let rb = gather_rows_u32(&self.reps, cand);
+            let d2 = backend.sq_dists(&xb, &rb);
+            let m = cand.len();
+            let mut ids = Vec::with_capacity(objs.len() * k);
+            let mut ds = Vec::with_capacity(objs.len() * k);
+            for bi in 0..objs.len() {
+                let row: Vec<f64> =
+                    d2.data[bi * m..(bi + 1) * m].iter().map(|&v| v as f64).collect();
+                let top = argmin_k(&row, k);
+                for &t in &top {
+                    ids.push(cand[t]);
+                    ds.push(row[t] as f32);
+                }
+                // if neighborhood smaller than k (tiny p), pad with last
+                for _ in top.len()..k {
+                    ids.push(cand[top[top.len() - 1]]);
+                    ds.push(row[top[top.len() - 1]] as f32);
+                }
+            }
+            (a as u32, ids, ds)
+        });
+        for (a, ids, ds) in results {
+            for (bi, &obj) in by_anchor[a as usize].iter().enumerate() {
+                let o = obj as usize * k;
+                idx[o..o + k].copy_from_slice(&ids[bi * k..(bi + 1) * k]);
+                d2out[o..o + k].copy_from_slice(&ds[bi * k..(bi + 1) * k]);
+            }
+        }
+        KnrResult { idx, d2: d2out, k }
+    }
+
+    /// Exact K-nearest representatives (LSC-style, O(Npd) + O(NpK)) —
+    /// the comparator for Tables 15–16 and the approximation-recall tests.
+    pub fn exact_knr(&self, x: &Mat, k: usize, backend: &dyn DistanceBackend) -> KnrResult {
+        exact_knr(x, &self.reps, k, backend)
+    }
+}
+
+/// Exact K-nearest rows of `reps` for every row of `x`.
+pub fn exact_knr(x: &Mat, reps: &Mat, k: usize, backend: &dyn DistanceBackend) -> KnrResult {
+    let n = x.rows;
+    let p = reps.rows;
+    let k = k.min(p);
+    let batch = 4096usize;
+    let nb = n.div_ceil(batch);
+    let parts: Vec<(Vec<u32>, Vec<f32>)> = (0..nb)
+        .map(|b| {
+            let lo = b * batch;
+            let hi = ((b + 1) * batch).min(n);
+            let xb = Mat {
+                rows: hi - lo,
+                cols: x.cols,
+                data: x.data[lo * x.cols..hi * x.cols].to_vec(),
+            };
+            let d2 = backend.sq_dists(&xb, reps);
+            let rows: Vec<(Vec<u32>, Vec<f32>)> = par::par_map(hi - lo, |bi| {
+                let row: Vec<f64> =
+                    d2.data[bi * p..(bi + 1) * p].iter().map(|&v| v as f64).collect();
+                let top = argmin_k(&row, k);
+                (
+                    top.iter().map(|&t| t as u32).collect(),
+                    top.iter().map(|&t| row[t] as f32).collect(),
+                )
+            });
+            let mut ids = Vec::with_capacity((hi - lo) * k);
+            let mut ds = Vec::with_capacity((hi - lo) * k);
+            for (a, b) in rows {
+                ids.extend(a);
+                ds.extend(b);
+            }
+            (ids, ds)
+        })
+        .collect();
+    let mut idx = Vec::with_capacity(n * k);
+    let mut d2 = Vec::with_capacity(n * k);
+    for (a, b) in parts {
+        idx.extend(a);
+        d2.extend(b);
+    }
+    KnrResult { idx, d2, k }
+}
+
+/// Nearest row of `c` for every row of `x`, processed in fixed batches.
+fn nearest_row_batched(x: &Mat, c: &Mat, backend: &dyn DistanceBackend) -> Vec<u32> {
+    let n = x.rows;
+    let m = c.rows;
+    let batch = 8192usize;
+    let mut out = vec![0u32; n];
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + batch).min(n);
+        let xb = Mat { rows: hi - lo, cols: x.cols, data: x.data[lo * x.cols..hi * x.cols].to_vec() };
+        let d2 = backend.sq_dists(&xb, c);
+        let winners: Vec<u32> = par::par_map(hi - lo, |bi| {
+            let row = &d2.data[bi * m..(bi + 1) * m];
+            let mut best = 0usize;
+            for (j, &v) in row.iter().enumerate().skip(1) {
+                if v < row[best] {
+                    best = j;
+                }
+            }
+            best as u32
+        });
+        out[lo..hi].copy_from_slice(&winners);
+        lo = hi;
+    }
+    out
+}
+
+fn gather_rows_u32(m: &Mat, idx: &[u32]) -> Mat {
+    let mut out = Mat::zeros(idx.len(), m.cols);
+    for (o, &i) in idx.iter().enumerate() {
+        out.row_mut(o).copy_from_slice(m.row(i as usize));
+    }
+    out
+}
+
+/// Recall@K of an approximate KNR against the exact answer (mean fraction
+/// of the true K nearest representatives recovered per object).
+pub fn recall_at_k(approx: &KnrResult, exact: &KnrResult, n: usize) -> f64 {
+    assert_eq!(approx.k, exact.k);
+    let k = approx.k;
+    let mut hits = 0usize;
+    for i in 0..n {
+        let a: std::collections::HashSet<u32> =
+            approx.idx[i * k..(i + 1) * k].iter().copied().collect();
+        for &e in &exact.idx[i * k..(i + 1) * k] {
+            if a.contains(&e) {
+                hits += 1;
+            }
+        }
+    }
+    hits as f64 / (n * k) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::affinity::{select, NativeBackend, SelectStrategy};
+    use crate::data::synthetic::{concentric_circles, two_moons};
+
+    #[test]
+    fn index_structure() {
+        let ds = two_moons(800, 0.05, 1);
+        let reps = select(&ds.x, SelectStrategy::Hybrid { candidate_factor: 10 }, 64, 10, 2).unwrap();
+        let idx = KnrIndex::build(&reps, 20, 10, &NativeBackend).unwrap();
+        assert_eq!(idx.p(), 64);
+        assert_eq!(idx.z1(), 8); // ⌊√64⌋
+        let total: usize = idx.members.iter().map(|m| m.len()).sum();
+        assert_eq!(total, 64);
+        assert_eq!(idx.nbr_len, 21);
+        // each neighbor list starts with self
+        for r in 0..64 {
+            assert_eq!(idx.neighbors[r * 21], r as u32);
+        }
+    }
+
+    #[test]
+    fn exact_knr_is_truly_nearest() {
+        let ds = two_moons(300, 0.05, 2);
+        let reps = select(&ds.x, SelectStrategy::Random, 40, 10, 3).unwrap();
+        let res = exact_knr(&ds.x, &reps, 4, &NativeBackend);
+        // brute-force check a few objects
+        for i in [0usize, 17, 123, 299] {
+            let mut d: Vec<f64> = (0..40)
+                .map(|r| {
+                    (0..2)
+                        .map(|t| (ds.x.at(i, t) - reps.at(r, t)) as f64)
+                        .map(|v| v * v)
+                        .sum()
+                })
+                .collect();
+            let got = &res.idx[i * 4..(i + 1) * 4];
+            let mut want = argmin_k(&d, 4);
+            assert_eq!(got.iter().map(|&v| v as usize).collect::<Vec<_>>(), want);
+            // distances ascending
+            for w in res.d2[i * 4..(i + 1) * 4].windows(2) {
+                assert!(w[0] <= w[1] + 1e-6);
+            }
+            d.clear();
+            want.clear();
+        }
+    }
+
+    #[test]
+    fn approx_recall_high_on_clustered_data() {
+        let ds = concentric_circles(2000, 4);
+        let reps = select(&ds.x, SelectStrategy::Hybrid { candidate_factor: 10 }, 100, 15, 5).unwrap();
+        let index = KnrIndex::build(&reps, 50, 15, &NativeBackend).unwrap();
+        let approx = index.approx_knr(&ds.x, 5, &NativeBackend);
+        let exact = index.exact_knr(&ds.x, 5, &NativeBackend);
+        let recall = recall_at_k(&approx, &exact, ds.n());
+        assert!(recall > 0.85, "recall {recall}");
+    }
+
+    #[test]
+    fn approx_equals_exact_when_kprime_is_p() {
+        // With K' = p-1 the step-3 candidate set contains all reps of the
+        // anchor's neighborhood = all reps, so approx == exact.
+        let ds = two_moons(400, 0.05, 6);
+        let reps = select(&ds.x, SelectStrategy::Random, 25, 10, 7).unwrap();
+        let index = KnrIndex::build(&reps, 24, 10, &NativeBackend).unwrap();
+        let approx = index.approx_knr(&ds.x, 3, &NativeBackend);
+        let exact = index.exact_knr(&ds.x, 3, &NativeBackend);
+        assert!((recall_at_k(&approx, &exact, ds.n()) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn knr_rows_unique_and_valid() {
+        let ds = two_moons(500, 0.08, 8);
+        let reps = select(&ds.x, SelectStrategy::Hybrid { candidate_factor: 5 }, 49, 10, 9).unwrap();
+        let index = KnrIndex::build(&reps, 30, 10, &NativeBackend).unwrap();
+        let res = index.approx_knr(&ds.x, 5, &NativeBackend);
+        for i in 0..ds.n() {
+            let ids = &res.idx[i * 5..(i + 1) * 5];
+            let set: std::collections::HashSet<_> = ids.iter().collect();
+            assert_eq!(set.len(), 5, "row {i}: {ids:?}");
+            assert!(ids.iter().all(|&r| (r as usize) < 49));
+        }
+    }
+
+    #[test]
+    fn tiny_p_padding() {
+        // p smaller than K exercises the clamp paths
+        let ds = two_moons(100, 0.05, 10);
+        let reps = select(&ds.x, SelectStrategy::Random, 3, 5, 11).unwrap();
+        let index = KnrIndex::build(&reps, 10, 5, &NativeBackend).unwrap();
+        let res = index.approx_knr(&ds.x, 5, &NativeBackend);
+        assert_eq!(res.k, 3); // clamped to p
+    }
+}

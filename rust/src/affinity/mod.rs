@@ -1,0 +1,111 @@
+//! Affinity sub-matrix construction (paper §3.1.1–§3.1.2):
+//!
+//! * [`select`] — representative selection: random / k-means / **hybrid**
+//!   (random pre-sampling of p′ candidates + k-means to p centers).
+//! * [`knr`] — K-nearest-representative search: exact (LSC-style, O(Npd))
+//!   and the paper's **coarse-to-fine approximation** (O(N·p^½·d)).
+//! * [`build_affinity`] — the sparse N×p cross-affinity `B` with a Gaussian
+//!   kernel whose bandwidth σ is the mean object↔KNR distance.
+//!
+//! All distance evaluations go through a [`DistanceBackend`] so the same
+//! pipeline runs on the pure-Rust path or on the AOT-compiled Pallas kernel
+//! served by [`crate::runtime`].
+
+pub mod select;
+pub mod knr;
+pub mod kernel;
+
+use crate::linalg::{Csr, Mat};
+use crate::util::par;
+
+pub use knr::{KnrIndex, KnrResult};
+pub use select::{select, SelectStrategy};
+
+/// Pluggable distance engine. `sq_dists(x, c)` returns the full ‖xᵢ−cⱼ‖²
+/// block — the single operation the paper's hot path is built from (its
+/// "batch processing manner", §3.1.4). Implementations: native Rust
+/// ([`NativeBackend`]) and the PJRT artifact pool
+/// ([`crate::runtime::PjrtBackend`]).
+pub trait DistanceBackend: Sync {
+    /// Full pairwise squared-distance block (x.rows × c.rows).
+    fn sq_dists(&self, x: &Mat, c: &Mat) -> Mat;
+
+    /// Human-readable name for logs/benches.
+    fn name(&self) -> &str {
+        "native"
+    }
+}
+
+/// Pure-Rust backend (blocked/threaded gemm formulation).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeBackend;
+
+impl DistanceBackend for NativeBackend {
+    fn sq_dists(&self, x: &Mat, c: &Mat) -> Mat {
+        x.sq_dists(c)
+    }
+}
+
+/// The sparse affinity output of the construction phase.
+#[derive(Debug, Clone)]
+pub struct Affinity {
+    /// Sparse N×p cross-affinity (K non-zeros per row).
+    pub b: Csr,
+    /// Gaussian bandwidth actually used.
+    pub sigma: f64,
+}
+
+/// Build the sparse Gaussian cross-affinity `B` from a KNR result
+/// (Eq. 5–6 of the paper): `b_ij = exp(−‖xᵢ−rⱼ‖² / 2σ²)` for the K nearest
+/// representatives of each object, with σ = mean distance between objects
+/// and their K nearest representatives.
+pub fn build_affinity(n: usize, p: usize, k: usize, knr: &KnrResult) -> Affinity {
+    debug_assert_eq!(knr.idx.len(), n * k);
+    // σ: mean of the (true, non-squared) distances
+    let sum: f64 = par::par_reduce(
+        n,
+        0.0f64,
+        |i| knr.d2[i * k..(i + 1) * k].iter().map(|&v| (v.max(0.0) as f64).sqrt()).sum::<f64>(),
+        |a, b| a + b,
+    );
+    let sigma = (sum / (n * k) as f64).max(1e-12);
+    let denom = 2.0 * sigma * sigma;
+    let mut vals = vec![0.0f64; n * k];
+    par::par_for_chunks(&mut vals, k, |start, chunk| {
+        let i = start / k;
+        for (j, v) in chunk.iter_mut().enumerate() {
+            *v = (-(knr.d2[i * k + j].max(0.0) as f64) / denom).exp();
+        }
+    });
+    let b = Csr::from_uniform(n, p, k, knr.idx.clone(), vals);
+    Affinity { b, sigma }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::two_moons;
+
+    #[test]
+    fn affinity_structure() {
+        let ds = two_moons(500, 0.05, 3);
+        let reps = select(&ds.x, SelectStrategy::Hybrid { candidate_factor: 10 }, 50, 10, 7).unwrap();
+        let index = knr::KnrIndex::build(&reps, 25, 7, &NativeBackend).unwrap();
+        let res = index.approx_knr(&ds.x, 5, &NativeBackend);
+        let aff = build_affinity(ds.n(), 50, 5, &res);
+        assert_eq!(aff.b.rows, 500);
+        assert_eq!(aff.b.cols, 50);
+        assert_eq!(aff.b.nnz(), 500 * 5);
+        assert!(aff.sigma > 0.0);
+        // every row: exactly K entries, all in (0, 1]
+        for i in 0..500 {
+            let (cols, vals) = aff.b.row(i);
+            assert_eq!(cols.len(), 5);
+            let set: std::collections::HashSet<_> = cols.iter().collect();
+            assert_eq!(set.len(), 5, "duplicate representative in row {i}");
+            for &v in vals {
+                assert!(v > 0.0 && v <= 1.0 + 1e-12);
+            }
+        }
+    }
+}

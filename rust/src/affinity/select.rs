@@ -1,0 +1,143 @@
+//! Representative selection (paper §3.1.1): random (Nyström-style),
+//! k-means on the full data (LSC-K-style, O(Npdt)), and the paper's
+//! **hybrid** strategy — random pre-sampling of p′ ≫ p candidates followed
+//! by k-means on the candidates only, O(p′·p·d·t) = O(p²dt) for p′ = O(p).
+
+use crate::kmeans::{kmeans, Init, KmeansParams};
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+use crate::{ensure_arg, Result};
+
+/// How to pick the p representatives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SelectStrategy {
+    /// Uniform sample of p points (Nyström / LSC-R).
+    Random,
+    /// k-means on the entire dataset; centers are the representatives
+    /// (LSC-K). O(Npdt).
+    KmeansFull,
+    /// Random pre-sampling of `candidate_factor`·p candidates, then k-means
+    /// on the candidates (the paper's contribution #1). O(p²dt) for
+    /// candidate_factor = O(1).
+    Hybrid { candidate_factor: usize },
+}
+
+impl SelectStrategy {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            SelectStrategy::Random => "R",
+            SelectStrategy::KmeansFull => "K",
+            SelectStrategy::Hybrid { .. } => "H",
+        }
+    }
+}
+
+/// Select `p` representatives from `x`. `kmeans_iters` caps the k-means
+/// refinement (`t` in the paper's complexity terms).
+pub fn select(
+    x: &Mat,
+    strategy: SelectStrategy,
+    p: usize,
+    kmeans_iters: usize,
+    seed: u64,
+) -> Result<Mat> {
+    let n = x.rows;
+    ensure_arg!(p >= 1, "select: p must be >= 1");
+    ensure_arg!(p <= n, "select: p={p} > n={n}");
+    let mut rng = Rng::new(seed);
+    match strategy {
+        SelectStrategy::Random => {
+            let idx = rng.sample_indices(n, p);
+            Ok(x.gather_rows(&idx))
+        }
+        SelectStrategy::KmeansFull => {
+            let res = kmeans(
+                x,
+                &KmeansParams { k: p, max_iter: kmeans_iters, tol: 1e-3, init: Init::Random },
+                rng.next_u64(),
+            )?;
+            Ok(res.centers)
+        }
+        SelectStrategy::Hybrid { candidate_factor } => {
+            ensure_arg!(candidate_factor >= 1, "select: candidate_factor must be >= 1");
+            let p_prime = (candidate_factor * p).min(n);
+            let idx = rng.sample_indices(n, p_prime);
+            let candidates = x.gather_rows(&idx);
+            if p_prime == p {
+                return Ok(candidates);
+            }
+            let res = kmeans(
+                &candidates,
+                &KmeansParams { k: p, max_iter: kmeans_iters, tol: 1e-3, init: Init::Random },
+                rng.next_u64(),
+            )?;
+            Ok(res.centers)
+        }
+    }
+}
+
+/// Quantization error of a representative set: mean squared distance from
+/// each object to its nearest representative. Used by the Fig. 1
+/// comparison (`repro fig1`) — lower = representatives cover the data
+/// better.
+pub fn quantization_error(x: &Mat, reps: &Mat) -> f64 {
+    let (_, d2) = crate::kmeans::assign_batched(x, reps, 8192);
+    d2.iter().map(|&v| v as f64).sum::<f64>() / x.rows as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::two_moons;
+
+    #[test]
+    fn shapes() {
+        let ds = two_moons(1000, 0.05, 1);
+        for s in [
+            SelectStrategy::Random,
+            SelectStrategy::KmeansFull,
+            SelectStrategy::Hybrid { candidate_factor: 10 },
+        ] {
+            let reps = select(&ds.x, s, 40, 20, 9).unwrap();
+            assert_eq!(reps.rows, 40);
+            assert_eq!(reps.cols, 2);
+        }
+    }
+
+    #[test]
+    fn hybrid_beats_random_on_quantization() {
+        // Fig. 1's claim: hybrid representatives reflect the distribution
+        // better than random. Compare mean quantization error over trials.
+        let ds = two_moons(3000, 0.06, 2);
+        let trials = 5;
+        let (mut qr, mut qh) = (0.0, 0.0);
+        for t in 0..trials {
+            let r = select(&ds.x, SelectStrategy::Random, 30, 20, 100 + t).unwrap();
+            let h = select(&ds.x, SelectStrategy::Hybrid { candidate_factor: 10 }, 30, 20, 200 + t).unwrap();
+            qr += quantization_error(&ds.x, &r);
+            qh += quantization_error(&ds.x, &h);
+        }
+        assert!(qh < qr, "hybrid {qh} should beat random {qr}");
+    }
+
+    #[test]
+    fn hybrid_with_factor_one_is_random() {
+        let ds = two_moons(500, 0.05, 3);
+        let reps = select(&ds.x, SelectStrategy::Hybrid { candidate_factor: 1 }, 20, 20, 5).unwrap();
+        assert_eq!(reps.rows, 20);
+    }
+
+    #[test]
+    fn p_equals_n() {
+        let ds = two_moons(30, 0.05, 4);
+        let reps = select(&ds.x, SelectStrategy::Random, 30, 5, 1).unwrap();
+        assert_eq!(reps.rows, 30);
+    }
+
+    #[test]
+    fn rejects_bad_p() {
+        let ds = two_moons(10, 0.05, 5);
+        assert!(select(&ds.x, SelectStrategy::Random, 0, 5, 1).is_err());
+        assert!(select(&ds.x, SelectStrategy::Random, 11, 5, 1).is_err());
+    }
+}

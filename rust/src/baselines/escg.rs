@@ -1,0 +1,148 @@
+//! **ESCG** — Efficient Spectral Clustering on Graphs (Liu et al.,
+//! IJCAI'13), adapted to vector data through the same KNN affinity graph as
+//! SC. ESCG picks s ≪ N seed vertices, computes single-source shortest
+//! paths from each seed over the affinity graph (edge length = 1/weight),
+//! forms supernodes by nearest-seed assignment, and partitions the
+//! resulting object×supernode bipartite graph — here with the transfer
+//! cut. Still requires the O(N²d) KNN graph, hence the same N/A pattern as
+//! SC in Tables 4–6.
+
+use super::sc::knn_gaussian_affinity;
+use super::ClusteringOutput;
+use crate::bipartite::{transfer_cut, EigSolver};
+use crate::kmeans::{kmeans, KmeansParams};
+use crate::linalg::{Csr, Mat};
+use crate::util::rng::Rng;
+use crate::util::timer::PhaseTimer;
+use crate::{ensure_arg, Result};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Multi-source Dijkstra over a dense affinity (length = 1/weight).
+/// Returns for each node (nearest seed index, distance).
+fn nearest_seed_dijkstra(aff: &crate::linalg::DMat, seeds: &[usize]) -> Vec<(u32, f64)> {
+    let n = aff.rows;
+    let mut best = vec![(u32::MAX, f64::INFINITY); n];
+    // ordered-float via bit tricks in a min-heap of (dist, node, seed)
+    let mut heap: BinaryHeap<Reverse<(u64, usize, u32)>> = BinaryHeap::new();
+    let key = |d: f64| -> u64 { d.to_bits() }; // monotone for non-negative d
+    for (si, &s) in seeds.iter().enumerate() {
+        best[s] = (si as u32, 0.0);
+        heap.push(Reverse((key(0.0), s, si as u32)));
+    }
+    while let Some(Reverse((dk, u, si))) = heap.pop() {
+        let du = f64::from_bits(dk);
+        if du > best[u].1 {
+            continue;
+        }
+        for v in 0..n {
+            let w = aff.at(u, v);
+            if w <= 0.0 {
+                continue;
+            }
+            let nd = du + 1.0 / w;
+            if nd < best[v].1 {
+                best[v] = (si, nd);
+                heap.push(Reverse((key(nd), v, si)));
+            }
+        }
+    }
+    best
+}
+
+/// Run ESCG with `s` seeds (supernodes). `k_nn` controls the KNN graph.
+pub fn escg(x: &Mat, k: usize, s: usize, k_nn: usize, seed: u64) -> Result<ClusteringOutput> {
+    let n = x.rows;
+    ensure_arg!(k >= 1 && k <= n, "escg: bad k");
+    ensure_arg!(s >= k && s <= n, "escg: need k <= s <= n");
+    let mut timer = PhaseTimer::new();
+    let aff = timer.time("knn_graph", || knn_gaussian_affinity(x, k_nn.max(1)));
+    let mut rng = Rng::new(seed);
+    let seeds = rng.sample_indices(n, s);
+    let mut assignment = timer.time("shortest_paths", || nearest_seed_dijkstra(&aff, &seeds));
+    // KNN components without a seed are unreachable by the walk; attach
+    // their nodes to the Euclidean-nearest seed so no node is isolated.
+    let seed_mat = x.gather_rows(&seeds);
+    for i in 0..n {
+        if assignment[i].0 == u32::MAX {
+            let xi = Mat { rows: 1, cols: x.cols, data: x.row(i).to_vec() };
+            let d2 = xi.sq_dists(&seed_mat);
+            let mut best = 0usize;
+            for j in 1..s {
+                if d2.at(0, j) < d2.at(0, best) {
+                    best = j;
+                }
+            }
+            assignment[i] = (best as u32, f64::INFINITY);
+        }
+    }
+    // Bipartite cross-affinity R: r_ij = Σ_{l ∈ supernode j} w(i, l),
+    // built sparsely from the dense KNN affinity.
+    let b = timer.time("bipartite", || {
+        let mut rows: Vec<Vec<(u32, f64)>> = vec![Vec::new(); n];
+        for i in 0..n {
+            let mut acc: std::collections::HashMap<u32, f64> = std::collections::HashMap::new();
+            // membership term keeps disconnected nodes attached
+            let (own, _) = assignment[i];
+            if own != u32::MAX {
+                *acc.entry(own).or_insert(0.0) += 1e-6;
+            }
+            for j in 0..n {
+                let w = aff.at(i, j);
+                if w > 0.0 {
+                    let (sj, _) = assignment[j];
+                    if sj != u32::MAX {
+                        *acc.entry(sj).or_insert(0.0) += w;
+                    }
+                }
+            }
+            rows[i] = acc.into_iter().collect();
+            rows[i].sort_by_key(|&(c, _)| c);
+        }
+        Csr::from_rows(n, s, &rows)
+    });
+    let tc = timer.time("eigen", || transfer_cut(&b, k, EigSolver::Auto, seed ^ 0xE5C))?;
+    let km = timer.time("discretize", || {
+        kmeans(&tc.embedding, &KmeansParams { k, max_iter: 100, ..Default::default() }, seed ^ 0x9)
+    })?;
+    Ok(ClusteringOutput::new(km.labels, timer))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::two_moons;
+    use crate::metrics::nmi;
+
+    #[test]
+    fn solves_moons() {
+        let ds = two_moons(500, 0.05, 1);
+        let out = escg(&ds.x, 2, 50, 8, 3).unwrap();
+        let score = nmi(&out.labels, &ds.y);
+        assert!(score > 0.75, "nmi={score}");
+    }
+
+    #[test]
+    fn dijkstra_sane() {
+        // 4-node path graph: 0-1-2-3, seeds {0, 3}
+        let mut aff = crate::linalg::DMat::zeros(4, 4);
+        for (i, j) in [(0, 1), (1, 2), (2, 3)] {
+            aff.set(i, j, 1.0);
+            aff.set(j, i, 1.0);
+        }
+        let best = nearest_seed_dijkstra(&aff, &[0, 3]);
+        assert_eq!(best[0].0, 0);
+        assert_eq!(best[1].0, 0);
+        assert_eq!(best[2].0, 1);
+        assert_eq!(best[3].0, 1);
+        assert_eq!(best[1].1, 1.0);
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        let ds = two_moons(40, 0.05, 2);
+        assert!(escg(&ds.x, 0, 10, 5, 1).is_err());
+        assert!(escg(&ds.x, 5, 3, 5, 1).is_err());
+        assert!(escg(&ds.x, 2, 41, 5, 1).is_err());
+    }
+}

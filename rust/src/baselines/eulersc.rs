@@ -1,0 +1,107 @@
+//! **EulerSC** — Euler Spectral Clustering (Wu et al., TBD'18). The paper
+//! proves EulerSC is equivalent to *weighted positive Euler k-means*: map
+//! each feature through the Euler kernel e^{iαπx} (giving cos/sin pairs)
+//! and run k-means in that 2d-dimensional complex embedding. O(Ndkt) time,
+//! O(Nd) memory — scales to 20M objects but is locked to the Euler kernel
+//! and sensitive to α (Table 4's CG/Flower rows).
+
+use super::ClusteringOutput;
+use crate::kmeans::{kmeans, KmeansParams};
+use crate::linalg::Mat;
+use crate::util::par;
+use crate::util::timer::PhaseTimer;
+use crate::{ensure_arg, Result};
+
+/// Map data through the Euler kernel: per-dimension min-max normalization
+/// to [0,1], then x ↦ (cos(απx), sin(απx)) / √d.
+pub fn euler_embed(x: &Mat, alpha: f64) -> Mat {
+    let n = x.rows;
+    let d = x.cols;
+    // per-dim min/max
+    let mut mins = vec![f32::INFINITY; d];
+    let mut maxs = vec![f32::NEG_INFINITY; d];
+    for i in 0..n {
+        for (j, &v) in x.row(i).iter().enumerate() {
+            if v < mins[j] {
+                mins[j] = v;
+            }
+            if v > maxs[j] {
+                maxs[j] = v;
+            }
+        }
+    }
+    let scale = (1.0 / (d as f64).sqrt()) as f32;
+    let apif = (alpha * std::f64::consts::PI) as f32;
+    let mut out = Mat::zeros(n, 2 * d);
+    par::par_for_chunks(&mut out.data, 2 * d, |start, chunk| {
+        let i = start / (2 * d);
+        let row = x.row(i);
+        for j in 0..d {
+            let range = (maxs[j] - mins[j]).max(1e-12);
+            let t = (row[j] - mins[j]) / range;
+            let theta = apif * t;
+            chunk[2 * j] = theta.cos() * scale;
+            chunk[2 * j + 1] = theta.sin() * scale;
+        }
+    });
+    out
+}
+
+/// Run EulerSC ≡ positive Euler k-means. `alpha` is the Euler kernel
+/// parameter (the original paper tunes it per dataset; 1.1 is its
+/// recommended default for normalized features).
+pub fn eulersc(x: &Mat, k: usize, alpha: f64, seed: u64) -> Result<ClusteringOutput> {
+    ensure_arg!(k >= 1 && k <= x.rows, "eulersc: bad k");
+    ensure_arg!(alpha > 0.0, "eulersc: alpha must be > 0");
+    let mut timer = PhaseTimer::new();
+    let emb = timer.time("euler_embed", || euler_embed(x, alpha));
+    let km = timer.time("kmeans", || {
+        kmeans(&emb, &KmeansParams { k, max_iter: 100, ..Default::default() }, seed)
+    })?;
+    Ok(ClusteringOutput::new(km.labels, timer))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{concentric_circles, two_moons};
+    use crate::data::{real_surrogate, Benchmark};
+    use crate::metrics::nmi;
+
+    #[test]
+    fn embed_geometry() {
+        let ds = two_moons(100, 0.05, 1);
+        let e = euler_embed(&ds.x, 1.1);
+        assert_eq!(e.cols, 4);
+        // rows have constant norm 1 (unit complex numbers scaled by 1/√d)
+        for i in 0..100 {
+            let norm: f32 = e.row(i).iter().map(|v| v * v).sum::<f32>();
+            assert!((norm - 1.0).abs() < 1e-4, "norm {norm}");
+        }
+    }
+
+    #[test]
+    fn works_on_compact_classes() {
+        let ds = real_surrogate::surrogate(Benchmark::PenDigits, 2000, 2);
+        let out = eulersc(&ds.x, ds.k, 1.1, 5).unwrap();
+        let score = nmi(&out.labels, &ds.y);
+        assert!(score > 0.4, "nmi={score}");
+    }
+
+    #[test]
+    fn fails_on_rings_like_kmeans() {
+        // The paper's Table 4: EulerSC scores 0.00 on CC-5M — the Euler
+        // map cannot unfold concentric rings.
+        let ds = concentric_circles(2000, 3);
+        let out = eulersc(&ds.x, 3, 1.1, 5).unwrap();
+        let score = nmi(&out.labels, &ds.y);
+        assert!(score < 0.4, "rings should stay unsolved, nmi={score}");
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        let ds = two_moons(30, 0.05, 4);
+        assert!(eulersc(&ds.x, 0, 1.1, 1).is_err());
+        assert!(eulersc(&ds.x, 2, 0.0, 1).is_err());
+    }
+}

@@ -1,0 +1,153 @@
+//! **FastESC** — Fast Explicit Spectral Clustering (He et al., TCYB'18):
+//! represent objects by p random Fourier features of the Gaussian kernel,
+//! z(x) = √(2/p)·cos(Wᵀx + b) with W ~ N(0, σ⁻²) and b ~ U[0, 2π], then
+//! perform the eigen-decomposition explicitly on the p×p feature Gram
+//! matrix. O(Npd + p³) time, O(Np) memory.
+
+use super::ClusteringOutput;
+use crate::bipartite::top_eig;
+use crate::kmeans::{kmeans, KmeansParams};
+use crate::linalg::{DMat, Mat};
+use crate::util::rng::Rng;
+use crate::util::timer::PhaseTimer;
+use crate::{ensure_arg, Result};
+
+/// Random Fourier feature map of the Gaussian kernel with bandwidth σ.
+pub fn fourier_features(x: &Mat, p: usize, sigma: f64, seed: u64) -> Mat {
+    let d = x.cols;
+    let mut rng = Rng::new(seed);
+    // W: d×p frequencies, b: p phases
+    let w: Vec<f32> = (0..d * p).map(|_| (rng.normal() / sigma) as f32).collect();
+    let b: Vec<f32> = (0..p).map(|_| (rng.f64() * std::f64::consts::TAU) as f32).collect();
+    let wmat = Mat::from_vec(p, d, {
+        // transpose into p×d rows for matmul_nt
+        let mut t = vec![0f32; p * d];
+        for i in 0..d {
+            for j in 0..p {
+                t[j * d + i] = w[i * p + j];
+            }
+        }
+        t
+    });
+    let mut proj = x.matmul_nt(&wmat); // n×p = X Wᵀ
+    let scale = (2.0f32 / p as f32).sqrt();
+    crate::util::par::par_for_chunks(&mut proj.data, p, |start, chunk| {
+        let _i = start / p;
+        for (j, v) in chunk.iter_mut().enumerate() {
+            *v = scale * (*v + b[j]).cos();
+        }
+    });
+    proj
+}
+
+/// Estimate σ from mean pairwise distance of a subsample.
+fn estimate_sigma(x: &Mat, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let s = 500.min(x.rows);
+    let idx = rng.sample_indices(x.rows, s);
+    let xs = x.gather_rows(&idx);
+    let d2 = xs.sq_dists(&xs);
+    let mut sum = 0.0f64;
+    let mut cnt = 0u64;
+    for i in 0..s {
+        for j in 0..i {
+            sum += (d2.at(i, j).max(0.0) as f64).sqrt();
+            cnt += 1;
+        }
+    }
+    (sum / cnt.max(1) as f64).max(1e-9)
+}
+
+/// Run FastESC with `p` Fourier features.
+pub fn fastesc(x: &Mat, k: usize, p: usize, seed: u64) -> Result<ClusteringOutput> {
+    let n = x.rows;
+    ensure_arg!(k >= 1 && k <= n, "fastesc: bad k");
+    ensure_arg!(p >= k, "fastesc: p={p} < k={k}");
+    let mut timer = PhaseTimer::new();
+    let sigma = estimate_sigma(x, seed ^ 0x51);
+    let phi = timer.time("features", || fourier_features(x, p, sigma, seed));
+    let emb = timer.time("eigen", || -> Result<Mat> {
+        // degrees of the implicit affinity K ≈ Φ Φᵀ: deg = Φ (Φᵀ 1)
+        let phid = phi.to_f64();
+        let ones = DMat::from_vec(n, 1, vec![1.0; n]);
+        let pt1 = phid.transpose().matmul(&ones); // p×1
+        let deg = phid.matmul(&pt1); // n×1
+        let mut phin = phid.clone();
+        for i in 0..n {
+            let dv = deg.at(i, 0);
+            let s = if dv > 1e-12 { 1.0 / dv.sqrt() } else { 0.0 };
+            for j in 0..p {
+                phin.set(i, j, phin.at(i, j) * s);
+            }
+        }
+        // top-k eigenvectors of Φ̄ Φ̄ᵀ via the p×p Gram
+        let g = phin.gram();
+        let (vals, u) = top_eig(&g, k)?;
+        let mut ul = u.clone();
+        for c in 0..k {
+            let lam = vals[c].max(1e-12);
+            let s = 1.0 / lam.sqrt();
+            for r in 0..p {
+                ul.set(r, c, ul.at(r, c) * s);
+            }
+        }
+        let v = phin.matmul(&ul); // n×k left singular vectors
+        Ok(v.to_f32())
+    })?;
+    let km = timer.time("discretize", || {
+        kmeans(&emb, &KmeansParams { k, max_iter: 100, ..Default::default() }, seed ^ 0xFE5C)
+    })?;
+    Ok(ClusteringOutput::new(km.labels, timer))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{real_surrogate, Benchmark};
+    use crate::metrics::nmi;
+
+    #[test]
+    fn feature_map_bounded() {
+        let ds = crate::data::synthetic::two_moons(200, 0.05, 1);
+        let phi = fourier_features(&ds.x, 64, 1.0, 2);
+        assert_eq!(phi.rows, 200);
+        assert_eq!(phi.cols, 64);
+        let bound = (2.0f32 / 64.0).sqrt() + 1e-6;
+        for &v in &phi.data {
+            assert!(v.abs() <= bound, "{v} out of bound {bound}");
+        }
+    }
+
+    #[test]
+    fn kernel_approximation_quality() {
+        // z(x)ᵀz(y) should approximate exp(-‖x-y‖²/2σ²)
+        let ds = crate::data::synthetic::two_moons(50, 0.05, 3);
+        let sigma = 0.7;
+        let phi = fourier_features(&ds.x, 4096, sigma, 4);
+        let d2 = ds.x.sq_dists(&ds.x);
+        let mut max_err = 0.0f64;
+        for i in 0..20 {
+            for j in 0..20 {
+                let approx: f64 = (0..4096).map(|t| (phi.at(i, t) * phi.at(j, t)) as f64).sum();
+                let exact = (-(d2.at(i, j) as f64) / (2.0 * sigma * sigma)).exp();
+                max_err = max_err.max((approx - exact).abs());
+            }
+        }
+        assert!(max_err < 0.1, "max kernel err {max_err}");
+    }
+
+    #[test]
+    fn clusters_gaussian_surrogate() {
+        let ds = real_surrogate::surrogate(Benchmark::PenDigits, 2000, 5);
+        let out = fastesc(&ds.x, ds.k, 200, 7).unwrap();
+        let score = nmi(&out.labels, &ds.y);
+        assert!(score > 0.45, "nmi={score}");
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        let ds = crate::data::synthetic::two_moons(30, 0.05, 6);
+        assert!(fastesc(&ds.x, 0, 10, 1).is_err());
+        assert!(fastesc(&ds.x, 5, 3, 1).is_err());
+    }
+}

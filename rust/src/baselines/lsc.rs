@@ -1,0 +1,105 @@
+//! **LSC** — Landmark-based Spectral Clustering (Cai & Chen, TCYB'15).
+//! Select p landmarks (k-means centers → LSC-K, uniform random → LSC-R),
+//! compute the FULL dense N×p Gaussian affinity (this is the O(Npd) /
+//! O(Np) bottleneck the paper's approximate KNR removes), keep the
+//! K-nearest landmarks per object, then solve the same bipartite problem.
+//! We reuse the transfer cut for the eigen step — mathematically equivalent
+//! to LSC's SVD of the normalized Z, and strictly faster.
+
+use super::ClusteringOutput;
+use crate::affinity::{build_affinity, knr::exact_knr, select, NativeBackend, SelectStrategy};
+use crate::bipartite::{transfer_cut, EigSolver};
+use crate::kmeans::{kmeans, KmeansParams};
+use crate::linalg::Mat;
+use crate::util::timer::PhaseTimer;
+use crate::{ensure_arg, Result};
+
+/// Landmark selection flavor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LscVariant {
+    /// k-means landmark selection over the full dataset (O(Npdt)).
+    K,
+    /// uniform random landmarks.
+    R,
+}
+
+/// Run LSC. `p` landmarks, `k_nn` nearest landmarks kept per object.
+pub fn lsc(
+    x: &Mat,
+    k: usize,
+    p: usize,
+    k_nn: usize,
+    variant: LscVariant,
+    seed: u64,
+) -> Result<ClusteringOutput> {
+    let n = x.rows;
+    ensure_arg!(k >= 1 && k <= n, "lsc: bad k");
+    ensure_arg!(p >= k && p <= n, "lsc: need k <= p <= n");
+    let mut timer = PhaseTimer::new();
+    let strategy = match variant {
+        LscVariant::K => SelectStrategy::KmeansFull,
+        LscVariant::R => SelectStrategy::Random,
+    };
+    let landmarks = timer.time("select", || select(x, strategy, p, 10, seed))?;
+    // Exact K-nearest landmarks: requires ALL N×p distances (the paper's
+    // Table 2 "Affinity construction O(Npd)" row).
+    let knr = timer.time("affinity", || exact_knr(x, &landmarks, k_nn.min(p), &NativeBackend));
+    let aff = build_affinity(n, p, knr.k, &knr);
+    let tc = timer.time("eigen", || transfer_cut(&aff.b, k, EigSolver::Auto, seed ^ 0x15C))?;
+    let km = timer.time("discretize", || {
+        kmeans(&tc.embedding, &KmeansParams { k, max_iter: 100, ..Default::default() }, seed ^ 0xD15C)
+    })?;
+    Ok(ClusteringOutput::new(km.labels, timer))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::two_moons;
+    use crate::metrics::nmi;
+
+    #[test]
+    fn lsck_solves_moons() {
+        let ds = two_moons(1200, 0.06, 1);
+        let out = lsc(&ds.x, 2, 120, 5, LscVariant::K, 3).unwrap();
+        let score = nmi(&out.labels, &ds.y);
+        assert!(score > 0.8, "nmi={score}");
+    }
+
+    #[test]
+    fn lscr_runs_and_is_faster_to_select() {
+        let ds = two_moons(1200, 0.06, 2);
+        let out_r = lsc(&ds.x, 2, 120, 5, LscVariant::R, 3).unwrap();
+        let out_k = lsc(&ds.x, 2, 120, 5, LscVariant::K, 3).unwrap();
+        assert!(out_r.timer.get("select") <= out_k.timer.get("select"));
+        assert_eq!(out_r.labels.len(), 1200);
+    }
+
+    #[test]
+    fn lsc_matches_uspec_exact_mode_quality() {
+        // U-SPEC with exact KNR and k-means selection ≈ LSC-K by design.
+        let ds = two_moons(800, 0.05, 4);
+        let lk = lsc(&ds.x, 2, 100, 5, LscVariant::K, 9).unwrap();
+        let us = crate::uspec::uspec(
+            &ds.x,
+            &crate::uspec::UspecParams {
+                k: 2,
+                p: 100,
+                knr: crate::uspec::KnrMode::Exact,
+                selection: SelectStrategy::KmeansFull,
+                ..Default::default()
+            },
+            9,
+        )
+        .unwrap();
+        let d = (nmi(&lk.labels, &ds.y) - nmi(&us.labels, &ds.y)).abs();
+        assert!(d < 0.25, "quality gap {d}");
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        let ds = two_moons(40, 0.05, 5);
+        assert!(lsc(&ds.x, 0, 10, 3, LscVariant::R, 1).is_err());
+        assert!(lsc(&ds.x, 2, 41, 3, LscVariant::R, 1).is_err());
+    }
+}

@@ -1,0 +1,200 @@
+//! **Nyström** spectral clustering (Fowlkes et al. / Chen et al. TPAMI'11):
+//! sample p representatives, build the dense N×p Gaussian cross-affinity C,
+//! approximate the degree with d̂ = C·(W⁻¹·(Cᵀ·1)), normalize, and extract
+//! the top-k eigenvectors via the one-shot orthogonalized Nyström
+//! extension. O(Npd) time, O(Np) memory.
+
+use super::ClusteringOutput;
+use crate::bipartite::top_eig;
+use crate::kmeans::{kmeans, KmeansParams};
+use crate::linalg::{DMat, Mat};
+use crate::util::rng::Rng;
+use crate::util::timer::PhaseTimer;
+use crate::{ensure_arg, Error, Result};
+
+/// Dense Gaussian cross-affinity between all rows of `x` and `reps`,
+/// with σ set to the mean pairwise distance of a sample (a standard
+/// self-tuning choice matching the paper's Eq. 6 convention).
+pub fn gaussian_cross_affinity(x: &Mat, reps: &Mat, sigma: f64) -> DMat {
+    let d2 = x.sq_dists(reps);
+    let denom = 2.0 * sigma * sigma;
+    let mut out = DMat::zeros(x.rows, reps.rows);
+    for (o, &v) in out.data.iter_mut().zip(d2.data.iter()) {
+        *o = (-(v as f64) / denom).exp();
+    }
+    out
+}
+
+/// Estimate σ as the mean object↔representative distance over a sample.
+pub fn estimate_sigma(x: &Mat, reps: &Mat, sample: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let idx = rng.sample_indices(x.rows, sample.min(x.rows));
+    let xs = x.gather_rows(&idx);
+    let d2 = xs.sq_dists(reps);
+    let mean: f64 = d2.data.iter().map(|&v| (v.max(0.0) as f64).sqrt()).sum::<f64>()
+        / d2.data.len() as f64;
+    mean.max(1e-12)
+}
+
+/// Moore–Penrose pseudo-inverse square root of a symmetric PSD matrix.
+fn pinv_sqrt(a: &DMat, rcond: f64) -> Result<DMat> {
+    let (vals, vecs) = crate::linalg::eigen::sym_eig(a)?;
+    let n = a.rows;
+    let vmax = vals.iter().cloned().fold(0.0f64, f64::max);
+    let mut out = DMat::zeros(n, n);
+    for c in 0..n {
+        let lam = vals[c];
+        if lam > rcond * vmax && lam > 0.0 {
+            let s = 1.0 / lam.sqrt();
+            for i in 0..n {
+                for j in 0..n {
+                    let v = out.at(i, j) + vecs.at(i, c) * s * vecs.at(j, c);
+                    out.set(i, j, v);
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Run Nyström spectral clustering with `p` random representatives.
+pub fn nystrom(x: &Mat, k: usize, p: usize, seed: u64) -> Result<ClusteringOutput> {
+    let n = x.rows;
+    ensure_arg!(k >= 1 && k <= n, "nystrom: bad k");
+    ensure_arg!(p >= k && p <= n, "nystrom: need k <= p <= n");
+    let mut timer = PhaseTimer::new();
+    let mut rng = Rng::new(seed);
+
+    // representatives: uniform random sample
+    let rep_idx = rng.sample_indices(n, p);
+    let reps = x.gather_rows(&rep_idx);
+    let sigma = estimate_sigma(x, &reps, 2000, rng.next_u64());
+
+    // C: N×p cross affinity; W: p×p block among representatives
+    let c = timer.time("affinity", || gaussian_cross_affinity(x, &reps, sigma));
+    let mut w = DMat::zeros(p, p);
+    for (a, &i) in rep_idx.iter().enumerate() {
+        for b in 0..p {
+            w.set(a, b, c.at(i, b));
+        }
+    }
+    // symmetrize W (it is up to numerical noise)
+    for i in 0..p {
+        for j in 0..i {
+            let v = 0.5 * (w.at(i, j) + w.at(j, i));
+            w.set(i, j, v);
+            w.set(j, i, v);
+        }
+    }
+
+    let emb = timer.time("eigen", || -> Result<DMat> {
+        // degree estimate: d̂ = C W⁻¹ Cᵀ 1  (Chen et al. §2.2)
+        let ones = DMat::from_vec(n, 1, vec![1.0; n]);
+        let ct1 = c.transpose().matmul(&ones); // p×1
+        let w_pinv_sqrt = pinv_sqrt(&w, 1e-10)?;
+        let w_pinv = w_pinv_sqrt.matmul(&w_pinv_sqrt);
+        let dhat = c.matmul(&w_pinv.matmul(&ct1)); // n×1
+        for (i, v) in dhat.data.iter().enumerate() {
+            if *v <= 0.0 {
+                return Err(Error::Numerical(format!("nystrom: nonpositive degree at {i}")));
+            }
+        }
+        // normalize: C̄ = D^{-1/2} C
+        let mut cbar = c.clone();
+        for i in 0..n {
+            let s = 1.0 / dhat.at(i, 0).sqrt();
+            for j in 0..p {
+                cbar.set(i, j, cbar.at(i, j) * s);
+            }
+        }
+        // one-shot orthogonalization: S = W̄^{-1/2} (C̄ᵀC̄) W̄^{-1/2} — use the
+        // unnormalized W's pinv-sqrt scaled consistently. Following the
+        // standard recipe: S = W^{-1/2} Cᵀ C W^{-1/2} over normalized C.
+        let g = cbar.gram(); // p×p = C̄ᵀ C̄
+        let s = w_pinv_sqrt.matmul(&g).matmul(&w_pinv_sqrt);
+        // symmetrize
+        let mut ss = s.clone();
+        for i in 0..p {
+            for j in 0..p {
+                ss.set(i, j, 0.5 * (s.at(i, j) + s.at(j, i)));
+            }
+        }
+        let (vals, u) = top_eig(&ss, k)?;
+        // V = C̄ W^{-1/2} U Λ^{-1/2}
+        let mut ul = u.clone();
+        for cidx in 0..k {
+            let lam = vals[cidx].max(1e-12);
+            let sc = 1.0 / lam.sqrt();
+            for r in 0..p {
+                ul.set(r, cidx, ul.at(r, cidx) * sc);
+            }
+        }
+        let v = cbar.matmul(&w_pinv_sqrt.matmul(&ul)); // n×k
+        // row-normalize (Ng–Jordan–Weiss style discretization)
+        let mut vn = v.clone();
+        for i in 0..n {
+            let norm: f64 = (0..k).map(|j| v.at(i, j) * v.at(i, j)).sum::<f64>().sqrt();
+            if norm > 1e-12 {
+                for j in 0..k {
+                    vn.set(i, j, v.at(i, j) / norm);
+                }
+            }
+        }
+        Ok(vn)
+    })?;
+
+    let embf = emb.to_f32();
+    let km = timer.time("discretize", || {
+        kmeans(&embf, &KmeansParams { k, max_iter: 100, ..Default::default() }, rng.next_u64())
+    })?;
+    Ok(ClusteringOutput::new(km.labels, timer))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::two_moons;
+    use crate::data::{real_surrogate, Benchmark};
+    use crate::metrics::nmi;
+
+    #[test]
+    fn clusters_blob_like_data_well() {
+        // Nyström with Gaussian kernel handles compact classes.
+        let ds = real_surrogate::surrogate(Benchmark::PenDigits, 2000, 3);
+        let out = nystrom(&ds.x, ds.k, 150, 7).unwrap();
+        let score = nmi(&out.labels, &ds.y);
+        assert!(score > 0.55, "nmi={score}");
+    }
+
+    #[test]
+    fn struggles_on_moons_vs_uspec() {
+        // With few random reps and one-shot approximation, Nyström is
+        // noticeably weaker than U-SPEC on nonlinear shapes (Table 4 TB row).
+        let ds = two_moons(1500, 0.07, 5);
+        let ny = nystrom(&ds.x, 2, 60, 3).unwrap();
+        let us = crate::uspec::uspec(
+            &ds.x,
+            &crate::uspec::UspecParams { k: 2, p: 150, ..Default::default() },
+            3,
+        )
+        .unwrap();
+        let ny_nmi = nmi(&ny.labels, &ds.y);
+        let us_nmi = nmi(&us.labels, &ds.y);
+        assert!(us_nmi > ny_nmi - 0.05, "uspec {us_nmi} vs nystrom {ny_nmi}");
+    }
+
+    #[test]
+    fn pinv_sqrt_identity() {
+        let a = DMat::eye(5);
+        let s = pinv_sqrt(&a, 1e-12).unwrap();
+        assert!(s.frob_dist(&DMat::eye(5)) < 1e-10);
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        let ds = two_moons(50, 0.05, 6);
+        assert!(nystrom(&ds.x, 0, 10, 1).is_err());
+        assert!(nystrom(&ds.x, 2, 60, 1).is_err());
+        assert!(nystrom(&ds.x, 5, 3, 1).is_err());
+    }
+}

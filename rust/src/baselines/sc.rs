@@ -1,0 +1,102 @@
+//! **SC** — original spectral clustering (von Luxburg's normalized cut
+//! formulation): full N×N Gaussian affinity sparsified to the K-nearest
+//! neighbors, generalized eigenproblem on the graph Laplacian, k-means
+//! discretization. O(N²d) + O(N³): the reference method that motivates
+//! everything else in the paper (N/A beyond ~MNIST scale).
+
+use super::ClusteringOutput;
+use crate::kmeans::{kmeans, KmeansParams};
+use crate::linalg::{DMat, Mat};
+use crate::util::argmin_k;
+use crate::util::timer::PhaseTimer;
+use crate::{ensure_arg, Result};
+
+/// Build the symmetric KNN Gaussian affinity (dense N×N, tests/small-N
+/// only). σ = mean distance to the K-th nearest neighbor.
+pub fn knn_gaussian_affinity(x: &Mat, k_nn: usize) -> DMat {
+    let n = x.rows;
+    let d2 = x.sq_dists(x);
+    // σ from K-NN distances
+    let mut sum_knn = 0.0f64;
+    let mut knn_sets: Vec<Vec<usize>> = Vec::with_capacity(n);
+    for i in 0..n {
+        let row: Vec<f64> = d2.data[i * n..(i + 1) * n].iter().map(|&v| v as f64).collect();
+        let top = argmin_k(&row, k_nn + 1); // includes self at distance 0
+        let nbrs: Vec<usize> = top.into_iter().filter(|&j| j != i).take(k_nn).collect();
+        sum_knn += nbrs.iter().map(|&j| row[j].sqrt()).sum::<f64>();
+        knn_sets.push(nbrs);
+    }
+    let sigma = (sum_knn / (n * k_nn) as f64).max(1e-12);
+    let denom = 2.0 * sigma * sigma;
+    let mut aff = DMat::zeros(n, n);
+    for (i, nbrs) in knn_sets.iter().enumerate() {
+        for &j in nbrs {
+            let w = (-(d2.at(i, j) as f64) / denom).exp();
+            // symmetrize: mutual max
+            if w > aff.at(i, j) {
+                aff.set(i, j, w);
+                aff.set(j, i, w);
+            }
+        }
+    }
+    aff
+}
+
+/// Run original spectral clustering.
+pub fn sc(x: &Mat, k: usize, k_nn: usize, seed: u64) -> Result<ClusteringOutput> {
+    let n = x.rows;
+    ensure_arg!(k >= 1 && k <= n, "sc: bad k");
+    ensure_arg!(n >= 3, "sc: need >= 3 objects");
+    let mut timer = PhaseTimer::new();
+    let aff = timer.time("affinity", || knn_gaussian_affinity(x, k_nn.max(1)));
+    // guard isolated nodes: connect to overall nearest neighbor
+    let emb = timer.time("eigen", || crate::bipartite::ncut_embedding(&aff, k))?;
+    let embf = emb.to_f32();
+    let km = timer.time("discretize", || {
+        kmeans(&embf, &KmeansParams { k, max_iter: 100, ..Default::default() }, seed)
+    })?;
+    Ok(ClusteringOutput::new(km.labels, timer))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{concentric_circles, two_moons};
+    use crate::metrics::nmi;
+
+    #[test]
+    fn solves_moons() {
+        let ds = two_moons(400, 0.05, 1);
+        let out = sc(&ds.x, 2, 8, 7).unwrap();
+        let score = nmi(&out.labels, &ds.y);
+        assert!(score > 0.9, "nmi={score}");
+    }
+
+    #[test]
+    fn solves_rings() {
+        let ds = concentric_circles(450, 2);
+        let out = sc(&ds.x, 3, 8, 7).unwrap();
+        let score = nmi(&out.labels, &ds.y);
+        assert!(score > 0.9, "nmi={score}");
+    }
+
+    #[test]
+    fn affinity_symmetric_nonneg() {
+        let ds = two_moons(120, 0.05, 3);
+        let a = knn_gaussian_affinity(&ds.x, 5);
+        for i in 0..120 {
+            assert_eq!(a.at(i, i), 0.0);
+            for j in 0..120 {
+                assert!(a.at(i, j) >= 0.0);
+                assert!((a.at(i, j) - a.at(j, i)).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_args() {
+        let ds = two_moons(50, 0.05, 4);
+        assert!(sc(&ds.x, 0, 5, 1).is_err());
+        assert!(sc(&ds.x, 51, 5, 1).is_err());
+    }
+}

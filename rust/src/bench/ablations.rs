@@ -1,0 +1,309 @@
+//! Ablation benches for the design choices DESIGN.md calls out — beyond
+//! the paper's own tables:
+//!
+//! * **consensus** — the paper's bipartite transfer cut (U-SENC §3.2.2)
+//!   versus the classic hypergraph consensus family (CSPA/HGPA/MCLA [18],
+//!   HBGF [22]) on identical U-SPEC ensembles.
+//! * **eig** — Dense QL vs subspace iteration (`Auto`) vs LOBPCG on the
+//!   reduced p×p transfer-cut problem: time and eigenvalue agreement.
+//! * **kernels** — Gaussian/Laplacian/self-tuning/inverse-quadratic
+//!   similarity kernels and σ rules in the U-SPEC pipeline (Eq. 6 ablated).
+//! * **streaming** — the out-of-core two-pass pipeline vs in-memory
+//!   U-SPEC: quality parity and resident-memory model.
+
+use super::tables::Harness;
+use super::TablePrinter;
+use crate::affinity::kernel::{build_affinity_kernel, SigmaRule, SimKernel};
+use crate::affinity::{build_affinity, knr::KnrIndex, select, SelectStrategy};
+use crate::bench::runner::derive;
+use crate::bipartite::{row_normalize, transfer_cut, EigSolver};
+use crate::data::Benchmark;
+use crate::ensemble_baselines::strehl;
+use crate::kmeans::{kmeans, KmeansParams};
+use crate::metrics::{ca, nmi};
+use crate::usenc::{consensus_bipartite, generate_ensemble};
+use crate::Result;
+
+/// Consensus-function ablation: one shared U-SPEC ensemble per dataset,
+/// five consensus functions. CSPA is O(N²) and capped accordingly.
+pub fn consensus_ablation(h: &Harness) -> Result<String> {
+    const CSPA_CAP: usize = 3000;
+    let datasets = [Benchmark::Tb1m, Benchmark::Sf2m, Benchmark::Cc5m];
+    let mut tp = TablePrinter::new(
+        std::iter::once("Dataset".to_string())
+            .chain(["TC(U-SENC)", "CSPA", "HGPA", "MCLA", "HBGF"].iter().flat_map(|m| {
+                ["nmi", "ca", "s"].iter().map(move |s| format!("{m}:{s}"))
+            }))
+            .collect(),
+    );
+    // single-ensemble consensus comparisons are noisy (one unlucky
+    // ensemble flips the ranking) — average over several ensembles.
+    let rounds = h.cfg.runs.max(3);
+    for &b in &datasets {
+        let ds = b.generate(h.cfg.scale, h.cfg.seed ^ 0xDA7A);
+        let dp = derive(&h.cfg, &ds);
+        let mut params = crate::bench::runner::usenc_params(&h.cfg, &dp, ds.n());
+        // Consensus stability needs the paper's m: with k_i ∈ [20,60]
+        // fragments over a scaled-down n, small ensembles (m=8) leave the
+        // bipartite spectral cut under-determined (NMI varies 0.06–0.97
+        // per-ensemble on TB) while m=20 is consistently ≈0.98. The
+        // hypergraph baselines are less m-sensitive — that contrast is
+        // part of what this ablation shows, so fix m at the paper's 20.
+        params.m = params.m.max(20);
+        type F = fn(&crate::usenc::Ensemble, usize, u64) -> Result<Vec<u32>>;
+        let tc_fn: F = |e, k, s| consensus_bipartite(e, k, EigSolver::Auto, s).map(|(l, _)| l);
+        let fns: [(&str, F); 5] = [
+            ("TC", tc_fn),
+            ("CSPA", strehl::cspa),
+            ("HGPA", strehl::hgpa),
+            ("MCLA", strehl::mcla),
+            ("HBGF", strehl::hbgf),
+        ];
+        let mut sums = vec![(0.0f64, 0.0f64, 0.0f64, 0usize); fns.len()];
+        for round in 0..rounds {
+            let ens_seed = h.cfg.seed.wrapping_add(round as u64 * 7919);
+            eprintln!(
+                "[ablation-consensus] ensemble {}/{rounds} on {}",
+                round + 1,
+                ds.name
+            );
+            let ens = generate_ensemble(&ds.x, &params, ens_seed, h.backend())?;
+            for (mi, (name, f)) in fns.iter().enumerate() {
+                if *name == "CSPA" && ds.n() > CSPA_CAP {
+                    continue;
+                }
+                let t0 = std::time::Instant::now();
+                match f(&ens, dp.k, ens_seed ^ 0xC0) {
+                    Ok(labels) => {
+                        let s = &mut sums[mi];
+                        s.0 += nmi(&labels, &ds.y);
+                        s.1 += ca(&labels, &ds.y);
+                        s.2 += t0.elapsed().as_secs_f64();
+                        s.3 += 1;
+                    }
+                    Err(e) => eprintln!("  [warn] {name} failed: {e}"),
+                }
+            }
+        }
+        let mut row = vec![b.name().to_string()];
+        for (mi, (name, _)) in fns.iter().enumerate() {
+            let (n_sum, c_sum, t_sum, cnt) = sums[mi];
+            if *name == "CSPA" && ds.n() > CSPA_CAP {
+                row.extend(["N/A*".into(), "N/A*".into(), "N/A*".into()]);
+            } else if cnt == 0 {
+                row.extend(["err".into(), "err".into(), "err".into()]);
+            } else {
+                row.push(format!("{:.2}", n_sum / cnt as f64 * 100.0));
+                row.push(format!("{:.2}", c_sum / cnt as f64 * 100.0));
+                row.push(format!("{:.2}", t_sum / cnt as f64));
+            }
+        }
+        tp.row(row);
+    }
+    Ok(format!(
+        "\nAblation — consensus functions over identical U-SPEC ensembles \
+         (m={}, mean over {rounds} ensembles, consensus time only; \
+         N/A* = O(N²) method capped)\n{}",
+        h.cfg.m.max(20),
+        tp.render()
+    ))
+}
+
+/// Eigen-solver ablation on the reduced p×p problem.
+pub fn eig_ablation(h: &Harness) -> Result<String> {
+    let b = Benchmark::Sf2m;
+    let ds = b.generate(h.cfg.scale, h.cfg.seed ^ 0xDA7A);
+    let k = ds.k;
+    let mut tp = TablePrinter::new(vec![
+        "p".into(),
+        "dense:s".into(),
+        "auto:s".into(),
+        "auto:maxdiff".into(),
+        "lobpcg:s".into(),
+        "lobpcg:maxdiff".into(),
+        "nmi(auto)".into(),
+    ]);
+    for &p in &[100usize, 200, 400, 800] {
+        let p = p.min(ds.n() / 2);
+        eprintln!("[ablation-eig] p={p} on {}", ds.name);
+        let reps = select(
+            &ds.x,
+            SelectStrategy::Hybrid { candidate_factor: 10 },
+            p,
+            20,
+            h.cfg.seed,
+        )?;
+        let index = KnrIndex::build(&reps, 10 * h.cfg.k_nn, 20, h.backend())?;
+        let knr = index.approx_knr(&ds.x, h.cfg.k_nn.min(p), h.backend());
+        let aff = build_affinity(ds.n(), p, h.cfg.k_nn.min(p), &knr);
+        let time_solver = |s: EigSolver| -> Result<(f64, Vec<f64>, Vec<u32>)> {
+            let t0 = std::time::Instant::now();
+            let tc = transfer_cut(&aff.b, k, s, h.cfg.seed ^ 0xE1)?;
+            let secs = t0.elapsed().as_secs_f64();
+            let mut emb = tc.embedding;
+            row_normalize(&mut emb);
+            let km = kmeans(&emb, &KmeansParams { k, ..Default::default() }, 3)?;
+            Ok((secs, tc.lambdas, km.labels))
+        };
+        let (sd, ld, _) = time_solver(EigSolver::Dense)?;
+        let (sa, la, labels_a) = time_solver(EigSolver::Auto)?;
+        let (sl, ll, _) = time_solver(EigSolver::Lobpcg)?;
+        let maxdiff = |x: &[f64]| -> f64 {
+            x.iter().zip(&ld).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max)
+        };
+        tp.row(vec![
+            p.to_string(),
+            format!("{sd:.4}"),
+            format!("{sa:.4}"),
+            format!("{:.2e}", maxdiff(&la)),
+            format!("{sl:.4}"),
+            format!("{:.2e}", maxdiff(&ll)),
+            format!("{:.2}", nmi(&labels_a, &ds.y) * 100.0),
+        ]);
+    }
+    Ok(format!(
+        "\nAblation — reduced-problem eigensolver (dataset {}, k={k}; \
+         maxdiff = max |λ−λ_dense|)\n{}",
+        ds.name,
+        tp.render()
+    ))
+}
+
+/// Similarity-kernel ablation inside the U-SPEC pipeline.
+pub fn kernel_ablation(h: &Harness) -> Result<String> {
+    let kernels: [(&str, SimKernel); 6] = [
+        ("gauss-mean", SimKernel::Gaussian(SigmaRule::MeanKnr)),
+        ("gauss-median", SimKernel::Gaussian(SigmaRule::MedianKnr)),
+        ("gauss-0.5x", SimKernel::Gaussian(SigmaRule::Scaled(0.5))),
+        ("laplacian", SimKernel::Laplacian(SigmaRule::MeanKnr)),
+        ("self-tuning", SimKernel::SelfTuning),
+        ("inv-quad", SimKernel::InverseQuadratic { eps: 1.0 }),
+    ];
+    let mut tp = TablePrinter::new(
+        std::iter::once("Dataset".to_string())
+            .chain(kernels.iter().flat_map(|(tag, _)| {
+                ["nmi", "ca"].iter().map(move |s| format!("{tag}:{s}"))
+            }))
+            .collect(),
+    );
+    for &b in &[Benchmark::Tb1m, Benchmark::Sf2m, Benchmark::Cc5m, Benchmark::Mnist] {
+        let ds = b.generate(h.cfg.scale, h.cfg.seed ^ 0xDA7A);
+        let dp = derive(&h.cfg, &ds);
+        let reps = select(
+            &ds.x,
+            SelectStrategy::Hybrid { candidate_factor: 10 },
+            dp.p,
+            20,
+            h.cfg.seed,
+        )?;
+        let index = KnrIndex::build(&reps, 10 * dp.k_nn, 20, h.backend())?;
+        let knr = index.approx_knr(&ds.x, dp.k_nn, h.backend());
+        let mut row = vec![b.name().to_string()];
+        for (tag, kern) in &kernels {
+            eprintln!("[ablation-kernels] {tag} on {}", ds.name);
+            let aff = build_affinity_kernel(ds.n(), dp.p, dp.k_nn, &knr, *kern);
+            let res = (|| -> Result<Vec<u32>> {
+                let tc = transfer_cut(&aff.b, dp.k, EigSolver::Auto, h.cfg.seed ^ 0x4B)?;
+                let mut emb = tc.embedding;
+                row_normalize(&mut emb);
+                Ok(kmeans(&emb, &KmeansParams { k: dp.k, ..Default::default() }, 3)?.labels)
+            })();
+            match res {
+                Ok(labels) => {
+                    row.push(format!("{:.2}", nmi(&labels, &ds.y) * 100.0));
+                    row.push(format!("{:.2}", ca(&labels, &ds.y) * 100.0));
+                }
+                Err(e) => {
+                    eprintln!("  [warn] {tag} failed: {e}");
+                    row.extend(["err".into(), "err".into()]);
+                }
+            }
+        }
+        tp.row(row);
+    }
+    Ok(format!(
+        "\nAblation — similarity kernel / σ rule in U-SPEC (paper default = gauss-mean)\n{}",
+        tp.render()
+    ))
+}
+
+/// Streaming (out-of-core) vs in-memory U-SPEC.
+pub fn streaming_ablation(h: &Harness) -> Result<String> {
+    let mut tp = TablePrinter::new(vec![
+        "Dataset".into(),
+        "inmem:nmi".into(),
+        "inmem:s".into(),
+        "stream:nmi".into(),
+        "stream:s".into(),
+        "resident/dense".into(),
+    ]);
+    let dir = std::env::temp_dir().join("uspec_stream_bench");
+    std::fs::create_dir_all(&dir)?;
+    for &b in &[Benchmark::Tb1m, Benchmark::Sf2m, Benchmark::Cg10m] {
+        let ds = b.generate(h.cfg.scale, h.cfg.seed ^ 0xDA7A);
+        let dp = derive(&h.cfg, &ds);
+        let params = crate::bench::runner::uspec_params(&h.cfg, &dp);
+        eprintln!("[ablation-streaming] {}", ds.name);
+        let t0 = std::time::Instant::now();
+        let mem = crate::uspec::uspec_with_backend(&ds.x, &params, h.cfg.seed, h.backend())?;
+        let mem_s = t0.elapsed().as_secs_f64();
+
+        let path = dir.join(format!("{}.bin", b.name().replace('/', "_")));
+        let bin = crate::streaming::BinDataset::write_mat(&path, &ds.x)?;
+        let sp = crate::streaming::StreamParams { chunk: 8192, base: params.clone() };
+        let t1 = std::time::Instant::now();
+        let st = crate::streaming::stream_uspec(&bin, &sp, h.cfg.seed, h.backend())?;
+        let st_s = t1.elapsed().as_secs_f64();
+        let dense = (bin.n() * bin.d() * 4) as u64;
+        tp.row(vec![
+            b.name().to_string(),
+            format!("{:.2}", nmi(&mem.labels, &ds.y) * 100.0),
+            format!("{mem_s:.2}"),
+            format!("{:.2}", nmi(&st.labels, &ds.y) * 100.0),
+            format!("{st_s:.2}"),
+            format!("{:.2}", st.peak_bytes as f64 / dense as f64),
+        ]);
+        let _ = std::fs::remove_file(&path);
+    }
+    Ok(format!(
+        "\nAblation — out-of-core streaming U-SPEC vs in-memory (resident/dense = \
+         modeled resident peak over the dense N·d footprint; < 1 ⇒ smaller than \
+         holding the data itself for d ≫ K)\n{}",
+        tp.render()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+
+    fn tiny_harness() -> Harness {
+        let cfg = RunConfig {
+            scale: 0.0002,
+            runs: 1,
+            m: 3,
+            k_min: 4,
+            k_max: 8,
+            ..Default::default()
+        };
+        Harness::new(cfg).unwrap()
+    }
+
+    #[test]
+    fn consensus_ablation_renders() {
+        let h = tiny_harness();
+        let out = consensus_ablation(&h).unwrap();
+        assert!(out.contains("CSPA"));
+        assert!(out.contains("TB"));
+        assert!(!out.contains("err"), "{out}");
+    }
+
+    #[test]
+    fn kernel_ablation_renders() {
+        let h = tiny_harness();
+        let out = kernel_ablation(&h).unwrap();
+        assert!(out.contains("self-tuning"));
+        assert!(!out.contains("err"), "{out}");
+    }
+}

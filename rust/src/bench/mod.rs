@@ -1,0 +1,155 @@
+//! Benchmark harness: run statistics, the method dispatchers shared by the
+//! CLI and the `cargo bench` table binaries, and the paper-table drivers
+//! (one per Table 4–16 / Fig. 1/3/5). criterion is unavailable offline —
+//! [`Stats`] provides warmup/repeat/mean±std measurement instead.
+
+pub mod runner;
+pub mod tables;
+pub mod ablations;
+
+/// Mean ± population-std over repeated runs.
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    pub runs: Vec<f64>,
+}
+
+impl Stats {
+    pub fn push(&mut self, v: f64) {
+        self.runs.push(v);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.runs.is_empty() {
+            return f64::NAN;
+        }
+        self.runs.iter().sum::<f64>() / self.runs.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        let n = self.runs.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.runs.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / n as f64).sqrt()
+    }
+
+    /// `82.41±1.20`-style cell, matching the paper's table formatting.
+    pub fn fmt_pm(&self, scale: f64) -> String {
+        if self.runs.is_empty() {
+            return "-".into();
+        }
+        format!("{:.2}±{:.2}", self.mean() * scale, self.std() * scale)
+    }
+}
+
+/// A measured table cell (NMI/CA in [0,1], seconds) or an N/A marker with
+/// the reason the method is infeasible at paper scale.
+#[derive(Debug, Clone)]
+pub enum Cell {
+    Value { nmi: Stats, ca: Stats, secs: Stats },
+    NotFeasible(&'static str),
+}
+
+impl Cell {
+    pub fn na(reason: &'static str) -> Cell {
+        Cell::NotFeasible(reason)
+    }
+}
+
+/// Simple fixed-width table printer (the paper-table look).
+pub struct TablePrinter {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl TablePrinter {
+    pub fn new(header: Vec<String>) -> TablePrinter {
+        TablePrinter { header, rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(ncols) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:<width$}", c, width = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+/// Timing helper: median of `iters` timed executions after `warmup` runs.
+pub fn time_median<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<f64> = (0..iters.max(1))
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_math() {
+        let mut s = Stats::default();
+        for v in [1.0, 2.0, 3.0] {
+            s.push(v);
+        }
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+        assert!((s.std() - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(s.fmt_pm(1.0), "2.00±0.82");
+        assert_eq!(Stats::default().fmt_pm(1.0), "-");
+    }
+
+    #[test]
+    fn printer_aligns() {
+        let mut t = TablePrinter::new(vec!["Dataset".into(), "NMI".into()]);
+        t.row(vec!["TB-1M".into(), "95.86±0.48".into()]);
+        t.row(vec!["Flower-20M".into(), "86.86".into()]);
+        let r = t.render();
+        assert!(r.contains("Dataset"));
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+    }
+
+    #[test]
+    fn time_median_positive() {
+        let t = time_median(1, 3, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(t >= 0.0);
+    }
+}

@@ -1,0 +1,227 @@
+//! Method dispatch for the evaluation harness: one entry point per method
+//! name, the feasibility gates (paper-scale memory model + local time
+//! guard), and the shared parameter derivation.
+
+use crate::affinity::DistanceBackend;
+use crate::baselines::{self, ClusteringOutput, SpectralMethod};
+use crate::config::RunConfig;
+use crate::data::{Benchmark, Dataset};
+use crate::ensemble_baselines::{self, generate_kmeans_ensemble, EnsembleMethod};
+use crate::kmeans::{kmeans, KmeansParams};
+use crate::usenc::UsencParams;
+use crate::uspec::{uspec_with_backend, UspecParams};
+use crate::util::timer::PhaseTimer;
+use crate::{Error, Result};
+
+/// Parameters shared by the sub-matrix methods, derived per dataset:
+/// the paper's p=1000 / K=5 clamped to the (possibly scaled-down) n.
+#[derive(Debug, Clone)]
+pub struct DerivedParams {
+    pub k: usize,
+    pub p: usize,
+    pub k_nn: usize,
+}
+
+pub fn derive(cfg: &RunConfig, ds: &Dataset) -> DerivedParams {
+    let k = cfg.k.unwrap_or(ds.k).max(1);
+    let p = cfg.p.min(ds.n() / 2).max(k.min(ds.n()));
+    DerivedParams { k, p, k_nn: cfg.k_nn.min(p) }
+}
+
+/// U-SPEC parameter block from a config.
+pub fn uspec_params(_cfg: &RunConfig, dp: &DerivedParams) -> UspecParams {
+    UspecParams {
+        k: dp.k,
+        p: dp.p,
+        k_nn: dp.k_nn,
+        ..Default::default()
+    }
+}
+
+/// U-SENC parameter block. Base clusterers use a smaller p (the ensemble
+/// amortizes approximation error — paper §3.2.1 keeps p=1000; at scaled n
+/// the derive() clamp applies).
+pub fn usenc_params(cfg: &RunConfig, dp: &DerivedParams, n: usize) -> UsencParams {
+    let k_min = cfg.k_min.min(n.saturating_sub(1)).max(2);
+    let k_max = cfg.k_max.clamp(k_min, n);
+    UsencParams { k: dp.k, m: cfg.m, k_min, k_max, base: uspec_params(cfg, dp) }
+}
+
+/// Paper-scale feasibility: would this method fit the 64 GB budget at the
+/// dataset's FULL (Table 3) size? Reproduces the N/A pattern of Tables 4–9.
+pub fn feasible_at_paper_scale(
+    method_mem: impl Fn(u64, u64) -> u64,
+    bench: Option<Benchmark>,
+    budget: u64,
+) -> bool {
+    match bench {
+        Some(b) => {
+            let (n, d, _) = b.paper_shape();
+            method_mem(n as u64, d as u64) <= budget
+        }
+        None => true, // user datasets: run whatever they give us
+    }
+}
+
+/// Local time guard: O(N²)+ methods are capped on this (single-core) box
+/// regardless of the simulated budget.
+pub fn local_cap(method_name: &str) -> usize {
+    match method_name {
+        "SC" | "ESCG" | "EAC" | "WCT" => 2200,
+        _ => usize::MAX,
+    }
+}
+
+/// Run one spectral-track method (Tables 4–6). Returns labels + timing.
+pub fn run_spectral(
+    method: SpectralMethod,
+    ds: &Dataset,
+    cfg: &RunConfig,
+    seed: u64,
+    backend: &dyn DistanceBackend,
+) -> Result<ClusteringOutput> {
+    let dp = derive(cfg, ds);
+    match method {
+        SpectralMethod::Kmeans => {
+            let mut timer = PhaseTimer::new();
+            let r = timer.time("kmeans", || {
+                kmeans(&ds.x, &KmeansParams { k: dp.k, ..Default::default() }, seed)
+            })?;
+            Ok(ClusteringOutput::new(r.labels, timer))
+        }
+        SpectralMethod::Sc => baselines::sc::sc(&ds.x, dp.k, dp.k_nn.max(5), seed),
+        SpectralMethod::Escg => {
+            baselines::escg::escg(&ds.x, dp.k, dp.p.min(ds.n() / 4).max(dp.k), dp.k_nn.max(5), seed)
+        }
+        SpectralMethod::Nystrom => baselines::nystrom::nystrom(&ds.x, dp.k, dp.p, seed),
+        SpectralMethod::LscK => {
+            baselines::lsc::lsc(&ds.x, dp.k, dp.p, dp.k_nn, baselines::lsc::LscVariant::K, seed)
+        }
+        SpectralMethod::LscR => {
+            baselines::lsc::lsc(&ds.x, dp.k, dp.p, dp.k_nn, baselines::lsc::LscVariant::R, seed)
+        }
+        SpectralMethod::FastEsc => baselines::fastesc::fastesc(&ds.x, dp.k, dp.p, seed),
+        SpectralMethod::EulerSc => baselines::eulersc::eulersc(&ds.x, dp.k, 1.1, seed),
+        SpectralMethod::Uspec => {
+            let res = uspec_with_backend(&ds.x, &uspec_params(cfg, &dp), seed, backend)?;
+            Ok(ClusteringOutput::new(res.labels, res.timer))
+        }
+        SpectralMethod::Usenc => {
+            let params = usenc_params(cfg, &dp, ds.n());
+            let res = crate::coordinator::usenc_coordinated(
+                &ds.x,
+                &params,
+                seed,
+                backend,
+                cfg.workers,
+                None,
+            )?;
+            Ok(ClusteringOutput::new(res.labels, res.timer))
+        }
+    }
+}
+
+/// Run one ensemble-track method (Tables 7–9). Ensemble generation (by
+/// k-means, per the baselines' protocol) is timed as part of the method.
+pub fn run_ensemble(
+    method: EnsembleMethod,
+    ds: &Dataset,
+    cfg: &RunConfig,
+    seed: u64,
+    backend: &dyn DistanceBackend,
+) -> Result<ClusteringOutput> {
+    let dp = derive(cfg, ds);
+    if method == EnsembleMethod::Usenc {
+        let params = usenc_params(cfg, &dp, ds.n());
+        let res =
+            crate::coordinator::usenc_coordinated(&ds.x, &params, seed, backend, cfg.workers, None)?;
+        return Ok(ClusteringOutput::new(res.labels, res.timer));
+    }
+    let mut timer = PhaseTimer::new();
+    let k_min = cfg.k_min.min(ds.n().saturating_sub(1)).max(2);
+    let k_max = cfg.k_max.clamp(k_min, ds.n());
+    let ens = timer.time("generation", || {
+        generate_kmeans_ensemble(&ds.x, cfg.m, k_min, k_max, seed)
+    })?;
+    let out = match method {
+        EnsembleMethod::Eac => ensemble_baselines::eac::eac(&ens, dp.k)?,
+        EnsembleMethod::Wct => ensemble_baselines::wct::wct(&ens, dp.k)?,
+        EnsembleMethod::Kcc => ensemble_baselines::kcc::kcc(&ens, dp.k, seed ^ 0x1)?,
+        EnsembleMethod::Ptgp => ensemble_baselines::ptgp::ptgp(&ens, dp.k, seed ^ 0x2)?,
+        EnsembleMethod::Ecc => ensemble_baselines::ecc::ecc(&ens, dp.k, seed ^ 0x3)?,
+        EnsembleMethod::Sec => ensemble_baselines::sec::sec(&ens, dp.k, seed ^ 0x4)?,
+        EnsembleMethod::Lwgp => ensemble_baselines::lwgp::lwgp(&ens, dp.k, seed ^ 0x5)?,
+        EnsembleMethod::Usenc => unreachable!(),
+    };
+    timer.merge(&out.timer);
+    Ok(ClusteringOutput::new(out.labels, timer))
+}
+
+/// Run any method by name (CLI entry point).
+pub fn run_by_name(
+    name: &str,
+    ds: &Dataset,
+    cfg: &RunConfig,
+    seed: u64,
+    backend: &dyn DistanceBackend,
+) -> Result<ClusteringOutput> {
+    if let Some(m) = SpectralMethod::from_name(name) {
+        return run_spectral(m, ds, cfg, seed, backend);
+    }
+    if let Some(m) = EnsembleMethod::from_name(name) {
+        return run_ensemble(m, ds, cfg, seed, backend);
+    }
+    Err(Error::InvalidArg(format!(
+        "unknown method '{name}' (spectral: {:?}; ensemble: {:?})",
+        SpectralMethod::ALL.map(|m| m.name()),
+        EnsembleMethod::ALL.map(|m| m.name())
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::affinity::NativeBackend;
+    use crate::metrics::nmi;
+
+    #[test]
+    fn dispatch_every_spectral_method() {
+        let ds = Benchmark::Tb1m.generate(0.0006, 3); // ~600 points
+        let cfg = RunConfig { p: 80, m: 3, k_min: 4, k_max: 8, ..Default::default() };
+        for m in SpectralMethod::ALL {
+            let out = run_spectral(m, &ds, &cfg, 7, &NativeBackend)
+                .unwrap_or_else(|e| panic!("{} failed: {e}", m.name()));
+            assert_eq!(out.labels.len(), ds.n(), "{}", m.name());
+            let score = nmi(&out.labels, &ds.y);
+            assert!(score.is_finite(), "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn dispatch_every_ensemble_method() {
+        let ds = Benchmark::Tb1m.generate(0.0005, 4);
+        let cfg = RunConfig { p: 60, m: 4, k_min: 4, k_max: 8, ..Default::default() };
+        for m in EnsembleMethod::ALL {
+            let out = run_ensemble(m, &ds, &cfg, 9, &NativeBackend)
+                .unwrap_or_else(|e| panic!("{} failed: {e}", m.name()));
+            assert_eq!(out.labels.len(), ds.n(), "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn unknown_method_rejected() {
+        let ds = Benchmark::Tb1m.generate(0.0005, 5);
+        let cfg = RunConfig::default();
+        assert!(run_by_name("nope", &ds, &cfg, 1, &NativeBackend).is_err());
+        assert!(run_by_name("U-SPEC", &ds, &cfg, 1, &NativeBackend).is_ok());
+    }
+
+    #[test]
+    fn derive_clamps() {
+        let ds = Benchmark::Tb1m.generate(0.0005, 6);
+        let cfg = RunConfig { p: 100_000, ..Default::default() };
+        let dp = derive(&cfg, &ds);
+        assert!(dp.p <= ds.n() / 2);
+        assert!(dp.k_nn <= dp.p);
+    }
+}

@@ -1,0 +1,758 @@
+//! Paper-table drivers: one function per evaluation artifact (Tables 4–16,
+//! Figs. 1/3/5). Shared by the CLI (`repro table t4` …) and the
+//! `cargo bench` binaries. Output is the paper's row/column structure with
+//! measured mean±std cells; infeasible (paper-scale OOM) cells print N/A
+//! exactly where the paper reports N/A.
+
+use super::runner::{self, derive};
+use super::{Cell, Stats, TablePrinter};
+use crate::affinity::{DistanceBackend, NativeBackend, SelectStrategy};
+use crate::baselines::SpectralMethod;
+use crate::config::{BackendKind, RunConfig};
+use crate::data::{Benchmark, Dataset};
+use crate::ensemble_baselines::EnsembleMethod;
+use crate::metrics::{ca, nmi};
+use crate::uspec::KnrMode;
+use crate::Result;
+
+/// Everything a table driver needs.
+pub struct Harness {
+    pub cfg: RunConfig,
+    backend: Box<dyn DistanceBackend>,
+    /// Kernel pool kept alive for the pjrt backend.
+    _pool: Option<std::sync::Arc<crate::runtime::KernelPool>>,
+}
+
+impl Harness {
+    pub fn new(cfg: RunConfig) -> Result<Harness> {
+        let (backend, pool): (Box<dyn DistanceBackend>, _) = match cfg.backend {
+            BackendKind::Native => (Box::new(NativeBackend), None),
+            BackendKind::Pjrt => {
+                let pool = crate::runtime::KernelPool::start(crate::runtime::default_artifact_dir())?;
+                (Box::new(crate::runtime::PjrtBackend::new(pool.clone())), Some(pool))
+            }
+        };
+        Ok(Harness { cfg, backend, _pool: pool })
+    }
+
+    pub fn backend(&self) -> &dyn DistanceBackend {
+        self.backend.as_ref()
+    }
+
+    fn dataset(&self, b: Benchmark) -> Dataset {
+        b.generate(self.cfg.scale, self.cfg.seed ^ 0xDA7A)
+    }
+
+    /// Datasets for the full Tables 4–9 sweep.
+    pub fn all_datasets(&self) -> Vec<Benchmark> {
+        Benchmark::ALL.to_vec()
+    }
+
+    /// The four datasets of the parameter-analysis section (§4.5).
+    pub fn sweep_datasets(&self) -> Vec<Benchmark> {
+        vec![Benchmark::Mnist, Benchmark::Covertype, Benchmark::Tb1m, Benchmark::Sf2m]
+    }
+}
+
+/// Measure one method×dataset cell (runs repetitions, aggregates).
+fn measure<F>(h: &Harness, ds: &Dataset, runs: usize, mut run_once: F) -> Cell
+where
+    F: FnMut(u64) -> Result<Vec<u32>>,
+{
+    let mut nmi_s = Stats::default();
+    let mut ca_s = Stats::default();
+    let mut secs = Stats::default();
+    for r in 0..runs.max(1) {
+        let seed = h.cfg.seed.wrapping_add(1000 * r as u64 + 1);
+        let t0 = std::time::Instant::now();
+        match run_once(seed) {
+            Ok(labels) => {
+                secs.push(t0.elapsed().as_secs_f64());
+                nmi_s.push(nmi(&labels, &ds.y));
+                ca_s.push(ca(&labels, &ds.y));
+            }
+            Err(e) => {
+                eprintln!("  [warn] run failed on {}: {e}", ds.name);
+                return Cell::na("error");
+            }
+        }
+    }
+    Cell::Value { nmi: nmi_s, ca: ca_s, secs }
+}
+
+fn spectral_feasible(h: &Harness, m: SpectralMethod, b: Benchmark, ds: &Dataset) -> Option<&'static str> {
+    let (pn, pd, _) = b.paper_shape();
+    let mem = m.peak_memory_bytes(pn as u64, pd as u64, 1000, ds.k as u64, h.cfg.m as u64);
+    if mem > h.cfg.budget_bytes {
+        return Some("N/A");
+    }
+    if ds.n() > runner::local_cap(m.name()) {
+        return Some("N/A*");
+    }
+    None
+}
+
+fn ensemble_feasible(h: &Harness, m: EnsembleMethod, b: Benchmark, ds: &Dataset) -> Option<&'static str> {
+    let (pn, pd, _) = b.paper_shape();
+    let kc = (h.cfg.m * (h.cfg.k_min + h.cfg.k_max) / 2) as u64;
+    let mem = m.peak_memory_bytes(pn as u64, pd as u64, h.cfg.m as u64, kc);
+    if mem > h.cfg.budget_bytes {
+        return Some("N/A");
+    }
+    if ds.n() > runner::local_cap(m.name()) {
+        return Some("N/A*");
+    }
+    None
+}
+
+fn runs_for(h: &Harness, heavy: bool) -> usize {
+    if heavy {
+        1
+    } else {
+        h.cfg.runs
+    }
+}
+
+/// Summary rows: average score, normalized average, average rank — matching
+/// the bottom rows of Tables 4/5/7/8. `cells[method][dataset]`.
+fn summary_rows(methods: &[String], cells: &[Vec<Cell>], metric: impl Fn(&Cell) -> Option<f64>) -> Vec<Vec<String>> {
+    let nm = methods.len();
+    let nd = if nm > 0 { cells[0].len() } else { 0 };
+    // average + normalized average (only methods with full coverage)
+    let mut avg = vec![None::<f64>; nm];
+    let mut navg = vec![None::<f64>; nm];
+    for mi in 0..nm {
+        let vals: Vec<Option<f64>> = (0..nd).map(|di| metric(&cells[mi][di])).collect();
+        if vals.iter().all(|v| v.is_some()) {
+            avg[mi] = Some(vals.iter().map(|v| v.unwrap()).sum::<f64>() / nd as f64);
+        }
+    }
+    for di in 0..nd {
+        let best = (0..nm)
+            .filter_map(|mi| metric(&cells[mi][di]))
+            .fold(f64::MIN, f64::max);
+        if best <= 0.0 {
+            continue;
+        }
+        for mi in 0..nm {
+            if avg[mi].is_some() {
+                if let Some(v) = metric(&cells[mi][di]) {
+                    *navg[mi].get_or_insert(0.0) += v / best / nd as f64;
+                }
+            }
+        }
+    }
+    // average rank (infeasible methods tie at the bottom, as in the paper)
+    let mut ranks = vec![0.0f64; nm];
+    for di in 0..nd {
+        let mut scored: Vec<(usize, f64)> = (0..nm)
+            .map(|mi| (mi, metric(&cells[mi][di]).unwrap_or(f64::NEG_INFINITY)))
+            .collect();
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let mut rank = 1.0;
+        let mut i = 0;
+        while i < scored.len() {
+            // ties share the same rank
+            let mut j = i;
+            while j + 1 < scored.len() && (scored[j + 1].1 - scored[i].1).abs() < 1e-12 {
+                j += 1;
+            }
+            let shared = (i..=j).map(|t| rank + (t - i) as f64).sum::<f64>() / (j - i + 1) as f64;
+            for t in i..=j {
+                ranks[scored[t].0] += shared / nd as f64;
+            }
+            rank += (j - i + 1) as f64;
+            i = j + 1;
+        }
+    }
+    let fmt_opt = |v: Option<f64>| v.map(|x| format!("{:.2}", x * 100.0)).unwrap_or("N/A".into());
+    let mut rows = Vec::new();
+    let mut r1 = vec!["Avg. score".to_string()];
+    let mut r2 = vec!["N-Avg. score".to_string()];
+    let mut r3 = vec!["Avg. rank".to_string()];
+    for mi in 0..nm {
+        r1.push(fmt_opt(avg[mi]));
+        r2.push(fmt_opt(navg[mi]));
+        r3.push(format!("{:.2}", ranks[mi]));
+    }
+    rows.push(r1);
+    rows.push(r2);
+    rows.push(r3);
+    rows
+}
+
+fn cell_metric_nmi(c: &Cell) -> Option<f64> {
+    match c {
+        Cell::Value { nmi, .. } => Some(nmi.mean()),
+        _ => None,
+    }
+}
+
+fn cell_metric_ca(c: &Cell) -> Option<f64> {
+    match c {
+        Cell::Value { ca, .. } => Some(ca.mean()),
+        _ => None,
+    }
+}
+
+fn fmt_cell_metric(c: &Cell, which: &str) -> String {
+    match c {
+        Cell::NotFeasible(r) => r.to_string(),
+        Cell::Value { nmi, ca, secs } => match which {
+            "nmi" => nmi.fmt_pm(100.0),
+            "ca" => ca.fmt_pm(100.0),
+            _ => format!("{:.2}", secs.mean()),
+        },
+    }
+}
+
+/// Tables 4–6: all spectral methods × all ten datasets; prints the NMI,
+/// CA, and time tables plus the paper's summary rows.
+pub fn spectral_tables(h: &Harness) -> Result<String> {
+    let methods = SpectralMethod::ALL;
+    let datasets = h.all_datasets();
+    let mut cells: Vec<Vec<Cell>> = vec![Vec::new(); methods.len()];
+    for (mi, &m) in methods.iter().enumerate() {
+        for &b in &datasets {
+            let ds = h.dataset(b);
+            eprintln!("[t4-6] {} on {} (n={})", m.name(), ds.name, ds.n());
+            let cell = match spectral_feasible(h, m, b, &ds) {
+                Some(reason) => Cell::na(reason),
+                None => {
+                    let heavy = matches!(
+                        m,
+                        SpectralMethod::Sc | SpectralMethod::Escg | SpectralMethod::Usenc
+                    );
+                    measure(h, &ds, runs_for(h, heavy), |seed| {
+                        runner::run_spectral(m, &ds, &h.cfg, seed, h.backend())
+                            .map(|o| o.labels)
+                    })
+                }
+            };
+            cells[mi].push(cell);
+        }
+    }
+    let method_names: Vec<String> = methods.iter().map(|m| m.name().to_string()).collect();
+    let mut out = String::new();
+    for (tid, which, metric) in [
+        ("Table 4 — NMI(%)", "nmi", true),
+        ("Table 5 — CA(%)", "ca", true),
+        ("Table 6 — time (s)", "secs", false),
+    ] {
+        let mut tp = TablePrinter::new(
+            std::iter::once("Dataset".to_string()).chain(method_names.clone()).collect(),
+        );
+        for (di, &b) in datasets.iter().enumerate() {
+            let mut row = vec![b.name().to_string()];
+            for mi in 0..methods.len() {
+                row.push(fmt_cell_metric(&cells[mi][di], which));
+            }
+            tp.row(row);
+        }
+        if metric {
+            let f: &dyn Fn(&Cell) -> Option<f64> =
+                if which == "nmi" { &cell_metric_nmi } else { &cell_metric_ca };
+            for r in summary_rows(&method_names, &cells, f) {
+                tp.row(r);
+            }
+        }
+        out.push_str(&format!("\n{tid}  (scale={}, runs={})\n", h.cfg.scale, h.cfg.runs));
+        out.push_str(&tp.render());
+    }
+    out.push_str("\nN/A = infeasible at paper-scale 64 GB budget (memory model); N/A* = capped locally (single-core box).\n");
+    Ok(out)
+}
+
+/// Tables 7–9: ensemble methods × all ten datasets (U-SPEC column included
+/// for reference, as in the paper).
+pub fn ensemble_tables(h: &Harness) -> Result<String> {
+    let methods = EnsembleMethod::ALL;
+    let datasets = h.all_datasets();
+    let mut cells: Vec<Vec<Cell>> = vec![Vec::new(); methods.len()];
+    for (mi, &m) in methods.iter().enumerate() {
+        for &b in &datasets {
+            let ds = h.dataset(b);
+            eprintln!("[t7-9] {} on {} (n={})", m.name(), ds.name, ds.n());
+            let cell = match ensemble_feasible(h, m, b, &ds) {
+                Some(reason) => Cell::na(reason),
+                None => measure(h, &ds, runs_for(h, true), |seed| {
+                    runner::run_ensemble(m, &ds, &h.cfg, seed, h.backend()).map(|o| o.labels)
+                }),
+            };
+            cells[mi].push(cell);
+        }
+    }
+    let method_names: Vec<String> = methods.iter().map(|m| m.name().to_string()).collect();
+    let mut out = String::new();
+    for (tid, which, metric) in [
+        ("Table 7 — NMI(%)", "nmi", true),
+        ("Table 8 — CA(%)", "ca", true),
+        ("Table 9 — time (s)", "secs", false),
+    ] {
+        let mut tp = TablePrinter::new(
+            std::iter::once("Dataset".to_string()).chain(method_names.clone()).collect(),
+        );
+        for (di, &b) in datasets.iter().enumerate() {
+            let mut row = vec![b.name().to_string()];
+            for mi in 0..methods.len() {
+                row.push(fmt_cell_metric(&cells[mi][di], which));
+            }
+            tp.row(row);
+        }
+        if metric {
+            let f: &dyn Fn(&Cell) -> Option<f64> =
+                if which == "nmi" { &cell_metric_nmi } else { &cell_metric_ca };
+            for r in summary_rows(&method_names, &cells, f) {
+                tp.row(r);
+            }
+        }
+        out.push_str(&format!("\n{tid}  (m={}, scale={})\n", h.cfg.m, h.cfg.scale));
+        out.push_str(&tp.render());
+    }
+    Ok(out)
+}
+
+/// Generic parameter sweep driver: vary one parameter over `values`,
+/// running `methods` on the §4.5 datasets.
+fn sweep<FSet>(
+    h: &Harness,
+    title: &str,
+    param: &str,
+    values: &[usize],
+    methods: &[&str],
+    set: FSet,
+) -> Result<String>
+where
+    FSet: Fn(&mut RunConfig, usize),
+{
+    let mut out = String::new();
+    for &b in &h.sweep_datasets() {
+        let ds = h.dataset(b);
+        let mut tp = TablePrinter::new(
+            std::iter::once(param.to_string())
+                .chain(methods.iter().flat_map(|m| {
+                    ["nmi", "ca", "s"].iter().map(move |sfx| format!("{m}:{sfx}"))
+                }))
+                .collect(),
+        );
+        for &v in values {
+            let mut cfg = h.cfg.clone();
+            set(&mut cfg, v);
+            let mut row = vec![v.to_string()];
+            for m in methods {
+                eprintln!("[{title}] {m} {param}={v} on {}", ds.name);
+                // skip landmark counts beyond the scaled dataset
+                if (param == "p" && v > ds.n() / 2) || (param == "K" && v > cfg.p) {
+                    row.extend(["-".to_string(), "-".to_string(), "-".to_string()]);
+                    continue;
+                }
+                let cell = measure(h, &ds, 1, |seed| {
+                    runner::run_by_name(m, &ds, &cfg, seed, h.backend()).map(|o| o.labels)
+                });
+                match &cell {
+                    Cell::Value { nmi, ca, secs } => {
+                        row.push(format!("{:.2}", nmi.mean() * 100.0));
+                        row.push(format!("{:.2}", ca.mean() * 100.0));
+                        row.push(format!("{:.2}", secs.mean()));
+                    }
+                    Cell::NotFeasible(r) => {
+                        row.extend([r.to_string(), r.to_string(), r.to_string()])
+                    }
+                }
+            }
+            tp.row(row);
+        }
+        out.push_str(&format!("\n{title} — {}  (n={})\n", ds.name, ds.n()));
+        out.push_str(&tp.render());
+    }
+    Ok(out)
+}
+
+/// Table 10: varying number of representatives p.
+pub fn sweep_p(h: &Harness) -> Result<String> {
+    let values = [100usize, 200, 400, 600, 800, 1000];
+    sweep(h, "Table 10", "p", &values, &["Nystrom", "LSC-K", "LSC-R", "U-SPEC", "U-SENC"], |c, v| {
+        c.p = v
+    })
+}
+
+/// Table 11: varying number of nearest representatives K.
+pub fn sweep_k(h: &Harness) -> Result<String> {
+    let values = [2usize, 3, 4, 5, 6, 7, 8, 9, 10];
+    sweep(h, "Table 11", "K", &values, &["Nystrom", "LSC-K", "LSC-R", "U-SPEC", "U-SENC"], |c, v| {
+        c.k_nn = v
+    })
+}
+
+/// Table 12: varying ensemble size m.
+pub fn sweep_m(h: &Harness) -> Result<String> {
+    let values = [10usize, 20, 30, 40, 50];
+    sweep(
+        h,
+        "Table 12",
+        "m",
+        &values,
+        &["KCC", "PTGP", "ECC", "SEC", "LWGP", "U-SENC"],
+        |c, v| c.m = v,
+    )
+}
+
+/// Tables 13–14: representative selection strategies (H/R/K) for U-SPEC
+/// and U-SENC.
+pub fn selection_tables(h: &Harness) -> Result<String> {
+    let strategies: [(&str, SelectStrategy); 3] = [
+        ("H", SelectStrategy::Hybrid { candidate_factor: 10 }),
+        ("R", SelectStrategy::Random),
+        ("K", SelectStrategy::KmeansFull),
+    ];
+    let mut out = String::new();
+    for (table, method) in [("Table 13 — U-SPEC", "U-SPEC"), ("Table 14 — U-SENC", "U-SENC")] {
+        let mut tp = TablePrinter::new(
+            std::iter::once("Dataset".to_string())
+                .chain(strategies.iter().flat_map(|(tag, _)| {
+                    ["nmi", "ca", "s"].iter().map(move |sfx| format!("{tag}:{sfx}"))
+                }))
+                .collect(),
+        );
+        for &b in &h.sweep_datasets() {
+            let ds = h.dataset(b);
+            let mut row = vec![b.name().to_string()];
+            for (tag, strat) in &strategies {
+                eprintln!("[{table}] {tag} on {}", ds.name);
+                let dp = derive(&h.cfg, &ds);
+                let cell = measure(h, &ds, 1, |seed| {
+                    if method == "U-SPEC" {
+                        let mut params = runner::uspec_params(&h.cfg, &dp);
+                        params.selection = *strat;
+                        crate::uspec::uspec_with_backend(&ds.x, &params, seed, h.backend())
+                            .map(|r| r.labels)
+                    } else {
+                        let mut params = runner::usenc_params(&h.cfg, &dp, ds.n());
+                        params.base.selection = *strat;
+                        crate::coordinator::usenc_coordinated(
+                            &ds.x,
+                            &params,
+                            seed,
+                            h.backend(),
+                            h.cfg.workers,
+                            None,
+                        )
+                        .map(|r| r.labels)
+                    }
+                });
+                match &cell {
+                    Cell::Value { nmi, ca, secs } => {
+                        row.push(format!("{:.2}", nmi.mean() * 100.0));
+                        row.push(format!("{:.2}", ca.mean() * 100.0));
+                        row.push(format!("{:.2}", secs.mean()));
+                    }
+                    Cell::NotFeasible(r) => row.extend([r.to_string(), r.to_string(), r.to_string()]),
+                }
+            }
+            tp.row(row);
+        }
+        out.push_str(&format!("\n{table}: selection strategies (H=hybrid R=random K=k-means)\n"));
+        out.push_str(&tp.render());
+    }
+    Ok(out)
+}
+
+/// Tables 15–16: approximate vs exact K-nearest representatives.
+pub fn knr_tables(h: &Harness) -> Result<String> {
+    let modes: [(&str, KnrMode); 2] = [("A", KnrMode::Approx), ("E", KnrMode::Exact)];
+    let mut out = String::new();
+    for (table, method) in [("Table 15 — U-SPEC", "U-SPEC"), ("Table 16 — U-SENC", "U-SENC")] {
+        let mut tp = TablePrinter::new(
+            std::iter::once("Dataset".to_string())
+                .chain(modes.iter().flat_map(|(tag, _)| {
+                    ["nmi", "ca", "s"].iter().map(move |sfx| format!("{tag}:{sfx}"))
+                }))
+                .collect(),
+        );
+        for &b in &h.sweep_datasets() {
+            let ds = h.dataset(b);
+            let mut row = vec![b.name().to_string()];
+            for (tag, mode) in &modes {
+                eprintln!("[{table}] {tag} on {}", ds.name);
+                let dp = derive(&h.cfg, &ds);
+                let cell = measure(h, &ds, 1, |seed| {
+                    if method == "U-SPEC" {
+                        let mut params = runner::uspec_params(&h.cfg, &dp);
+                        params.knr = *mode;
+                        crate::uspec::uspec_with_backend(&ds.x, &params, seed, h.backend())
+                            .map(|r| r.labels)
+                    } else {
+                        let mut params = runner::usenc_params(&h.cfg, &dp, ds.n());
+                        params.base.knr = *mode;
+                        crate::coordinator::usenc_coordinated(
+                            &ds.x,
+                            &params,
+                            seed,
+                            h.backend(),
+                            h.cfg.workers,
+                            None,
+                        )
+                        .map(|r| r.labels)
+                    }
+                });
+                match &cell {
+                    Cell::Value { nmi, ca, secs } => {
+                        row.push(format!("{:.2}", nmi.mean() * 100.0));
+                        row.push(format!("{:.2}", ca.mean() * 100.0));
+                        row.push(format!("{:.2}", secs.mean()));
+                    }
+                    Cell::NotFeasible(r) => row.extend([r.to_string(), r.to_string(), r.to_string()]),
+                }
+            }
+            tp.row(row);
+        }
+        out.push_str(&format!("\n{table}: Approximate vs Exact K-nearest representatives\n"));
+        out.push_str(&tp.render());
+    }
+    Ok(out)
+}
+
+/// Fig. 1: quantization quality of random / k-means / hybrid selection.
+pub fn fig1(h: &Harness) -> Result<String> {
+    let ds = h.dataset(Benchmark::Tb1m);
+    let p = derive(&h.cfg, &ds).p.min(200);
+    let mut tp = TablePrinter::new(vec![
+        "strategy".into(),
+        "quantization err (mean)".into(),
+        "select time (s)".into(),
+    ]);
+    for (name, strat) in [
+        ("random", SelectStrategy::Random),
+        ("k-means", SelectStrategy::KmeansFull),
+        ("hybrid", SelectStrategy::Hybrid { candidate_factor: 10 }),
+    ] {
+        let mut qe = Stats::default();
+        let mut secs = Stats::default();
+        for r in 0..h.cfg.runs.max(3) {
+            let t0 = std::time::Instant::now();
+            let reps =
+                crate::affinity::select(&ds.x, strat, p, 20, h.cfg.seed + 77 * r as u64)?;
+            secs.push(t0.elapsed().as_secs_f64());
+            qe.push(crate::affinity::select::quantization_error(&ds.x, &reps));
+        }
+        tp.row(vec![name.into(), format!("{:.5}±{:.5}", qe.mean(), qe.std()), format!("{:.3}", secs.mean())]);
+    }
+    Ok(format!(
+        "\nFig. 1 — representative selection quality on {} (n={}, p={p})\n{}",
+        ds.name,
+        ds.n(),
+        tp.render()
+    ))
+}
+
+/// Fig. 3: the coarse-to-fine KNR approximation — per-step candidate
+/// counts and recall@K against the exact answer.
+pub fn fig3(h: &Harness) -> Result<String> {
+    let ds = h.dataset(Benchmark::Sf2m);
+    let dp = derive(&h.cfg, &ds);
+    let reps = crate::affinity::select(
+        &ds.x,
+        SelectStrategy::Hybrid { candidate_factor: 10 },
+        dp.p,
+        20,
+        h.cfg.seed,
+    )?;
+    let mut tp = TablePrinter::new(vec![
+        "K'".into(),
+        "cands/step1 (z1)".into(),
+        "cands/step2 (avg z2)".into(),
+        "cands/step3 (K'+1)".into(),
+        "recall@K".into(),
+        "exact cands (p)".into(),
+    ]);
+    for factor in [2usize, 5, 10, 20] {
+        let k_prime = factor * dp.k_nn;
+        let index =
+            crate::affinity::knr::KnrIndex::build(&reps, k_prime, 20, h.backend())?;
+        let approx = index.approx_knr(&ds.x, dp.k_nn, h.backend());
+        let exact = index.exact_knr(&ds.x, dp.k_nn, h.backend());
+        let recall = crate::affinity::knr::recall_at_k(&approx, &exact, ds.n());
+        let z2_avg = index.p() as f64 / index.z1() as f64;
+        tp.row(vec![
+            k_prime.to_string(),
+            index.z1().to_string(),
+            format!("{z2_avg:.1}"),
+            (index.nbr_len).to_string(),
+            format!("{recall:.4}"),
+            index.p().to_string(),
+        ]);
+    }
+    Ok(format!(
+        "\nFig. 3 — approximate KNR candidate budget vs recall on {} (n={}, p={}, K={})\n{}",
+        ds.name,
+        ds.n(),
+        dp.p,
+        dp.k_nn,
+        tp.render()
+    ))
+}
+
+/// Fig. 5: dump 0.1% subsamples of the five synthetic datasets as CSV.
+pub fn fig5(h: &Harness, out_dir: &std::path::Path) -> Result<String> {
+    std::fs::create_dir_all(out_dir)?;
+    let mut lines = String::from("\nFig. 5 — synthetic dataset subsamples (CSV)\n");
+    for b in [Benchmark::Tb1m, Benchmark::Sf2m, Benchmark::Cc5m, Benchmark::Cg10m, Benchmark::Flower20m] {
+        let ds = h.dataset(b);
+        let sub = ds.subsample((ds.n() / 1000).max(500), h.cfg.seed);
+        let path = out_dir.join(format!("fig5_{}.csv", b.name()));
+        crate::data::loader::save_csv(&sub, &path)?;
+        lines.push_str(&format!("  {} -> {} ({} points)\n", b.name(), path.display(), sub.n()));
+    }
+    Ok(lines)
+}
+
+/// Table 3: the dataset inventory.
+pub fn datasets_table() -> String {
+    let mut tp = TablePrinter::new(vec![
+        "Dataset".into(),
+        "#Object (paper)".into(),
+        "Dimension".into(),
+        "#Class".into(),
+        "kind".into(),
+    ]);
+    for b in Benchmark::ALL {
+        let (n, d, k) = b.paper_shape();
+        tp.row(vec![
+            b.name().into(),
+            n.to_string(),
+            d.to_string(),
+            k.to_string(),
+            if b.is_synthetic() { "synthetic".into() } else { "real (surrogate)".to_string() },
+        ]);
+    }
+    format!("\nTable 3 — benchmark datasets\n{}", tp.render())
+}
+
+/// Dispatch a table by id ("t4".."t16", "fig1", "fig3", "fig5", "t3").
+pub fn run_table(h: &Harness, id: &str) -> Result<String> {
+    match id.to_ascii_lowercase().as_str() {
+        "t3" | "datasets" => Ok(datasets_table()),
+        "t4" | "t5" | "t6" | "t4-6" => spectral_tables(h),
+        "t7" | "t8" | "t9" | "t7-9" => ensemble_tables(h),
+        "t10" => sweep_p(h),
+        "t11" => sweep_k(h),
+        "t12" => sweep_m(h),
+        "t13" | "t14" | "t13-14" => selection_tables(h),
+        "t15" | "t16" | "t15-16" => knr_tables(h),
+        "fig1" | "fig2" => fig1(h),
+        "ablation-consensus" => super::ablations::consensus_ablation(h),
+        "ablation-eig" => super::ablations::eig_ablation(h),
+        "ablation-kernels" => super::ablations::kernel_ablation(h),
+        "ablation-streaming" => super::ablations::streaming_ablation(h),
+        "fig3" => fig3(h),
+        "fig5" => fig5(h, std::path::Path::new("results")),
+        other => Err(crate::Error::InvalidArg(format!("unknown table id '{other}'"))),
+    }
+}
+
+/// Entry point shared by the `cargo bench` binaries: build a harness from
+/// env overrides (USPEC_SCALE / USPEC_RUNS / USPEC_M / USPEC_BACKEND /
+/// USPEC_SEED), run the given table ids, print, and persist to
+/// `results/<out_name>.txt`.
+pub fn bench_main(ids: &[&str], out_name: &str) {
+    let mut cfg = RunConfig::default();
+    let env_f64 = |k: &str| std::env::var(k).ok().and_then(|v| v.parse::<f64>().ok());
+    let env_usize = |k: &str| std::env::var(k).ok().and_then(|v| v.parse::<usize>().ok());
+    if let Some(v) = env_f64("USPEC_SCALE") {
+        cfg.scale = v;
+    }
+    if let Some(v) = env_usize("USPEC_RUNS") {
+        cfg.runs = v.max(1);
+    }
+    if let Some(v) = env_usize("USPEC_M") {
+        cfg.m = v.max(2);
+    }
+    if let Some(v) = env_usize("USPEC_SEED") {
+        cfg.seed = v as u64;
+    }
+    if let Ok(v) = std::env::var("USPEC_BACKEND") {
+        if let Ok(b) = crate::config::BackendKind::parse(&v) {
+            cfg.backend = b;
+        }
+    }
+    let h = match Harness::new(cfg) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("bench harness init failed: {e}");
+            std::process::exit(2);
+        }
+    };
+    let mut out = String::new();
+    for id in ids {
+        match run_table(&h, id) {
+            Ok(text) => out.push_str(&text),
+            Err(e) => {
+                eprintln!("table {id} failed: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+    println!("{out}");
+    let _ = std::fs::create_dir_all("results");
+    let path = format!("results/{out_name}.txt");
+    if std::fs::write(&path, &out).is_ok() {
+        eprintln!("[saved {path}]");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_harness() -> Harness {
+        let mut cfg = RunConfig::default();
+        cfg.scale = 0.0001; // floor sizes
+        cfg.runs = 1;
+        cfg.m = 3;
+        cfg.k_min = 3;
+        cfg.k_max = 6;
+        cfg.p = 60;
+        Harness::new(cfg).unwrap()
+    }
+
+    #[test]
+    fn summary_rows_rank_math() {
+        // 2 methods × 2 datasets; method 0 always better
+        let mk = |v: f64| {
+            let mut s = Stats::default();
+            s.push(v);
+            Cell::Value { nmi: s.clone(), ca: s.clone(), secs: s }
+        };
+        let cells = vec![vec![mk(0.9), mk(0.8)], vec![mk(0.5), Cell::na("N/A")]];
+        let rows = summary_rows(
+            &["A".into(), "B".into()],
+            &cells,
+            cell_metric_nmi,
+        );
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0][1], "85.00"); // avg of method A
+        assert_eq!(rows[0][2], "N/A"); // B lacks coverage
+        assert_eq!(rows[2][1], "1.00"); // A always rank 1
+    }
+
+    #[test]
+    fn fig1_runs() {
+        let h = tiny_harness();
+        let s = fig1(&h).unwrap();
+        assert!(s.contains("hybrid"));
+    }
+
+    #[test]
+    fn datasets_table_lists_all() {
+        let s = datasets_table();
+        for b in Benchmark::ALL {
+            assert!(s.contains(b.name()));
+        }
+    }
+
+    #[test]
+    fn run_table_rejects_unknown() {
+        let h = tiny_harness();
+        assert!(run_table(&h, "t99").is_err());
+    }
+}

@@ -1,0 +1,496 @@
+//! Bipartite graph partitioning via the transfer cut (paper §3.1.3,
+//! Li et al. CVPR'12).
+//!
+//! Given the sparse cross-affinity `B` (N×p) of the bipartite graph
+//! G = {X, R, B}, the generalized eigenproblem `L u = γ D u` on the
+//! (N+p)-node graph is reduced to `L_R v = λ D_R v` on the p-node graph
+//! G_R with `E_R = Bᵀ D_X⁻¹ B`, using the relations
+//! γ(2−γ) = λ and u = [h; v], h = T v / (1−γ), T = D_X⁻¹ B.
+//!
+//! The reduced p×p problem is solved by Chebyshev-filtered subspace
+//! iteration on the normalized affinity (default; LOBPCG and a dense
+//! tridiagonal-QL solver are selectable via [`EigSolver`], and every fast
+//! path falls back to dense); the lift back to the N side costs O(NKk).
+
+use crate::linalg::eigen::{sym_eig, sym_eig_generalized_smallest};
+use crate::linalg::lobpcg::lobpcg_smallest;
+use crate::linalg::{Csr, DMat, Mat};
+use crate::util::par;
+use crate::{ensure_arg, Error, Result};
+
+/// Output of the transfer cut: the spectral embedding of the N objects.
+#[derive(Debug, Clone)]
+pub struct TransferCut {
+    /// N×k object embedding (the h_i components of the first k
+    /// eigenvectors of the full bipartite problem).
+    pub embedding: Mat,
+    /// γ eigenvalues of the full problem (ascending, len k).
+    pub gammas: Vec<f64>,
+    /// λ eigenvalues of the reduced problem (ascending, len k).
+    pub lambdas: Vec<f64>,
+}
+
+/// Eigen-solver strategy for the reduced p×p problem.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EigSolver {
+    /// Always dense (tred2 + tqli). Exact, O(p³).
+    Dense,
+    /// Subspace iteration on the normalized affinity, dense fallback.
+    /// Fast and robust when k ≪ p (the default).
+    Auto,
+    /// LOBPCG on the normalized Laplacian (diagonal-preconditioned), dense
+    /// fallback. Exposed for the `ablation_eig` bench; `Auto` is usually
+    /// faster on the degenerate λ≈0 cluster eigenspaces of well-separated
+    /// data.
+    Lobpcg,
+}
+
+/// Solve the reduced generalized problem `L_R v = λ D_R v` for the
+/// smallest `k` eigenpairs. Returns (λ, V p×k).
+///
+/// Fast path (`EigSolver::Auto`): the smallest-k pairs of
+/// `I − D^{-1/2} E D^{-1/2}` are the LARGEST-k of the normalized affinity
+/// Ŝ = D^{-1/2} E D^{-1/2} (PSD, spectrum in [0, 1]) — computed by blocked
+/// subspace iteration with oversampling, which is robust to the k-fold
+/// degenerate λ=0 cluster that defeats gradient methods (k well-separated
+/// clusters ⇒ k disconnected graph components). O(p²·k·iters) ≪ O(p³).
+pub fn reduced_eig(e_r: &DMat, k: usize, solver: EigSolver, seed: u64) -> Result<(Vec<f64>, DMat)> {
+    let p = e_r.rows;
+    ensure_arg!(k >= 1 && k <= p, "reduced_eig: k={k} out of range for p={p}");
+    // degrees of G_R
+    let d_r: Vec<f64> = (0..p).map(|i| e_r.row(i).iter().sum()).collect();
+    ensure_arg!(
+        d_r.iter().all(|&x| x > 0.0),
+        "reduced_eig: isolated representative (zero degree)"
+    );
+    let use_fast = matches!(solver, EigSolver::Auto | EigSolver::Lobpcg) && p > 4 * k + 64;
+    if use_fast {
+        let dis: Vec<f64> = d_r.iter().map(|&x| 1.0 / x.sqrt()).collect();
+        // Ŝ = D^{-1/2} E D^{-1/2}
+        let mut s = DMat::zeros(p, p);
+        for i in 0..p {
+            for j in 0..p {
+                s.set(i, j, e_r.at(i, j) * dis[i] * dis[j]);
+            }
+        }
+        if matches!(solver, EigSolver::Lobpcg) {
+            // L̂ = I − Ŝ, smallest-k by LOBPCG with Jacobi preconditioning.
+            let mut lhat = DMat::zeros(p, p);
+            for i in 0..p {
+                for j in 0..p {
+                    lhat.set(i, j, if i == j { 1.0 - s.at(i, j) } else { -s.at(i, j) });
+                }
+            }
+            let precond: Vec<f64> =
+                (0..p).map(|i| 1.0 / lhat.at(i, i).max(1e-12)).collect();
+            if let Ok((vals, w)) =
+                lobpcg_smallest(&lhat, k, Some(&precond), 1e-7, 300, seed ^ 0x10B)
+            {
+                let vals: Vec<f64> = vals.iter().map(|&l| l.max(0.0)).collect();
+                let mut v = DMat::zeros(p, k);
+                for c in 0..k {
+                    for r in 0..p {
+                        v.set(r, c, w.at(r, c) * dis[r]);
+                    }
+                }
+                return Ok((vals, v));
+            }
+        } else if let Some((top_vals, w)) = subspace_iteration_largest(&s, k, 1e-6, 150, seed) {
+            // λ(L̂) = 1 − λ(Ŝ); generalized eigvec v = D^{-1/2} w.
+            let vals: Vec<f64> = top_vals.iter().map(|&l| (1.0 - l).max(0.0)).collect();
+            let mut v = DMat::zeros(p, k);
+            for c in 0..k {
+                for r in 0..p {
+                    v.set(r, c, w.at(r, c) * dis[r]);
+                }
+            }
+            return Ok((vals, v));
+        }
+    }
+    // Dense path.
+    let mut l_r = DMat::zeros(p, p);
+    for i in 0..p {
+        for j in 0..p {
+            l_r.set(i, j, if i == j { d_r[i] - e_r.at(i, j) } else { -e_r.at(i, j) });
+        }
+    }
+    sym_eig_generalized_smallest(&l_r, &d_r, k)
+}
+
+/// Chebyshev-filtered blocked subspace iteration for the largest-`k`
+/// eigenpairs of a symmetric PSD matrix with spectrum in [0, 1].
+///
+/// Plain power/subspace iteration converges like (λ_{k+1}/λ_k)^t, which is
+/// hopeless when the wanted eigenvalues cluster at 1 (k well-separated
+/// clusters ⇒ k eigenvalues ≈ 1; measured: 150 iterations and still 6e-5
+/// eigenvalue drift at p=1000). Instead, each outer step applies a
+/// degree-`DEG` Chebyshev polynomial that suppresses the unwanted interval
+/// [0, a] — T_m grows exponentially outside [-1, 1], so one filtered step
+/// is worth ~T_DEG(2λ/a − 1) plain steps. The filter bound `a` is adapted
+/// from the (k+1)-th Ritz value each outer iteration. Oversamples the
+/// block to ride out the degenerate leading cluster; returns None if it
+/// fails to converge (caller falls back to the dense solver).
+fn subspace_iteration_largest(
+    s: &DMat,
+    k: usize,
+    tol: f64,
+    max_iter: usize,
+    seed: u64,
+) -> Option<(Vec<f64>, DMat)> {
+    const DEG: usize = 8; // filter degree (matmuls per outer step)
+    let p = s.rows;
+    let q = (k + 8).min(p); // oversampled block
+    let mut rng = crate::util::rng::Rng::new(seed ^ 0x5B5);
+    let mut x = DMat::zeros(p, q);
+    for v in x.data.iter_mut() {
+        *v = rng.normal();
+    }
+    orthonormalize_cols(&mut x)?;
+    // Warm-up: a few plain iterations so the first Ritz values (and hence
+    // the first filter bound) are sane.
+    for _ in 0..4 {
+        x = s.matmul(&x);
+        orthonormalize_cols(&mut x)?;
+    }
+    // Rayleigh–Ritz helper: returns (all Ritz values ascending, rotated
+    // top-k basis, top-k values descending).
+    let ritz = |x: &DMat| -> Option<(Vec<f64>, DMat, Vec<f64>)> {
+        let sx = s.matmul(x);
+        let mut h = x.transpose().matmul(&sx);
+        for i in 0..q {
+            for j in 0..i {
+                let v = 0.5 * (h.at(i, j) + h.at(j, i));
+                h.set(i, j, v);
+                h.set(j, i, v);
+            }
+        }
+        let (hvals, hvecs) = sym_eig(&h).ok()?;
+        let vals: Vec<f64> = (0..k).map(|c| hvals[q - 1 - c]).collect();
+        let mut rot = DMat::zeros(q, k);
+        for c in 0..k {
+            for r in 0..q {
+                rot.set(r, c, hvecs.at(r, q - 1 - c));
+            }
+        }
+        Some((hvals, x.matmul(&rot), vals))
+    };
+    let (mut hvals, _w0, mut prev_vals) = ritz(&x)?;
+    let mut w;
+    let mut best: Option<(Vec<f64>, DMat, f64)> = None;
+    let outer_max = (max_iter / DEG).max(4);
+    for it in 0..outer_max {
+        // Filter bound: the (k+1)-th Ritz value (descending), i.e. the top
+        // of the unwanted spectrum as currently estimated. Clamp away from
+        // 0 and from the smallest wanted value.
+        let lam_kp1 = if q > k { hvals[q - 1 - k] } else { 0.5 };
+        let lam_k = prev_vals[k - 1];
+        let a = lam_kp1.clamp(1e-4, (lam_k * 0.999).max(1e-4));
+        // Z_{j} = T_j(L)·X with L = (2S − aI)/a; three-term recurrence.
+        let apply_l = |y: &DMat| -> DMat {
+            let mut sy = s.matmul(y);
+            // (2/a)·S·y − y
+            let inv = 2.0 / a;
+            for (o, v) in sy.data.iter_mut().zip(&y.data) {
+                *o = *o * inv - *v;
+            }
+            sy
+        };
+        let mut z_prev = x.clone();
+        let mut z = apply_l(&x);
+        for _ in 2..=DEG {
+            let mut z_next = apply_l(&z);
+            for (o, v) in z_next.data.iter_mut().zip(&z_prev.data) {
+                *o = 2.0 * *o - *v;
+            }
+            z_prev = z;
+            z = z_next;
+        }
+        x = z;
+        orthonormalize_cols(&mut x)?;
+        let (nh, nw, nvals) = ritz(&x)?;
+        hvals = nh;
+        w = nw;
+        let delta: f64 =
+            nvals.iter().zip(&prev_vals).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+        prev_vals = nvals;
+        if std::env::var("USPEC_EIG_TRACE").is_ok() {
+            eprintln!("[eig] outer {it} (deg {DEG}, bound {a:.3e}) delta {delta:.3e}");
+        }
+        if delta < tol {
+            if std::env::var("USPEC_EIG_DEBUG").is_ok() {
+                eprintln!(
+                    "[eig] chebyshev subspace converged at outer {it} ({} matmuls, delta {delta:.2e})",
+                    4 + (it + 1) * (DEG + 1)
+                );
+            }
+            return Some((prev_vals, w));
+        }
+        if best.as_ref().map(|(_, _, d)| delta < *d).unwrap_or(true) {
+            best = Some((prev_vals.clone(), w.clone(), delta));
+        }
+    }
+    // Not fully converged: a near-converged Ritz subspace is still a usable
+    // spectral embedding; only give up when clearly unconverged.
+    match best {
+        Some((vals, w, delta)) if delta < 1e-4 => {
+            if std::env::var("USPEC_EIG_DEBUG").is_ok() {
+                eprintln!("[eig] chebyshev subspace best-effort (delta {delta:.2e})");
+            }
+            Some((vals, w))
+        }
+        _ => {
+            if std::env::var("USPEC_EIG_DEBUG").is_ok() {
+                eprintln!("[eig] chebyshev subspace failed; dense fallback");
+            }
+            None
+        }
+    }
+}
+
+/// Gram–Schmidt column orthonormalization (two passes); None on rank
+/// deficiency.
+fn orthonormalize_cols(x: &mut DMat) -> Option<()> {
+    let (n, b) = (x.rows, x.cols);
+    for c in 0..b {
+        for _pass in 0..2 {
+            for prev in 0..c {
+                let mut dot = 0.0;
+                for r in 0..n {
+                    dot += x.at(r, prev) * x.at(r, c);
+                }
+                for r in 0..n {
+                    let v = x.at(r, c) - dot * x.at(r, prev);
+                    x.set(r, c, v);
+                }
+            }
+        }
+        let norm: f64 = (0..n).map(|r| x.at(r, c) * x.at(r, c)).sum::<f64>().sqrt();
+        if norm < 1e-13 {
+            return None;
+        }
+        for r in 0..n {
+            x.set(r, c, x.at(r, c) / norm);
+        }
+    }
+    Some(())
+}
+
+/// Full transfer cut over a sparse cross-affinity `B`.
+pub fn transfer_cut(b: &Csr, k: usize, solver: EigSolver, seed: u64) -> Result<TransferCut> {
+    let n = b.rows;
+    let p = b.cols;
+    ensure_arg!(k >= 1, "transfer_cut: k must be >= 1");
+    ensure_arg!(k <= p, "transfer_cut: k={k} > p={p}");
+    let dx = b.row_sums();
+    for (i, &s) in dx.iter().enumerate() {
+        if s <= 0.0 {
+            return Err(Error::Numerical(format!("transfer_cut: object {i} has zero affinity")));
+        }
+    }
+    let w: Vec<f64> = dx.iter().map(|&s| 1.0 / s).collect();
+    // Representatives no object selected have zero degree in G_R; drop
+    // them (exact: they carry no affinity mass) and remap columns.
+    let col = b.col_sums();
+    let owned_b;
+    let b = if col.iter().any(|&s| s <= 0.0) {
+        let keep: Vec<usize> = (0..p).filter(|&j| col[j] > 0.0).collect();
+        ensure_arg!(k <= keep.len(), "transfer_cut: k={k} > connected reps {}", keep.len());
+        let mut remap = vec![u32::MAX; p];
+        for (new, &old) in keep.iter().enumerate() {
+            remap[old] = new as u32;
+        }
+        let indices: Vec<u32> = b.indices.iter().map(|&c| remap[c as usize]).collect();
+        owned_b = Csr {
+            rows: n,
+            cols: keep.len(),
+            indptr: b.indptr.clone(),
+            indices,
+            values: b.values.clone(),
+        };
+        &owned_b
+    } else {
+        b
+    };
+    // E_R = Bᵀ D_X⁻¹ B — O(N K²)
+    let e_r = b.tdb(&w);
+    let (lambdas, v) = reduced_eig(&e_r, k, solver, seed)?;
+    // γ(2-γ) = λ ⇒ γ = 1 − sqrt(1−λ); clamp λ into [0, 1).
+    let gammas: Vec<f64> = lambdas
+        .iter()
+        .map(|&l| {
+            let l = l.clamp(0.0, 1.0 - 1e-12);
+            1.0 - (1.0 - l).sqrt()
+        })
+        .collect();
+    // h_i = T v_i / (1−γ_i), T = D_X⁻¹ B — sparse matvec, O(NKk).
+    let mut emb = Mat::zeros(n, k);
+    let tv = b.matmul_dense(&v); // N×k, rows scaled below
+    par::par_for_chunks(&mut emb.data, k, |start, chunk| {
+        let i = start / k;
+        let scale = w[i];
+        for (c, o) in chunk.iter_mut().enumerate() {
+            let denom = (1.0 - gammas[c]).max(1e-9);
+            *o = (tv.at(i, c) * scale / denom) as f32;
+        }
+    });
+    Ok(TransferCut { embedding: emb, gammas, lambdas })
+}
+
+/// Row-normalize a spectral embedding to unit L2 norm (NJW-style) — the
+/// discretization preprocessing Huang's reference implementation applies
+/// before k-means; removes the 1/(1−γ) column-scale imbalance.
+pub fn row_normalize(emb: &mut Mat) {
+    let k = emb.cols;
+    par::par_for_chunks(&mut emb.data, k, |_start, chunk| {
+        let norm: f32 = chunk.iter().map(|v| v * v).sum::<f32>().sqrt();
+        if norm > 1e-12 {
+            for v in chunk.iter_mut() {
+                *v /= norm;
+            }
+        }
+    });
+}
+
+/// Oracle (test-only scale): solve the FULL (N+p)-node generalized problem
+/// `L u = γ D u` densely. Used by the equivalence property tests.
+pub fn full_bipartite_eig(b: &Csr, k: usize) -> Result<(Vec<f64>, DMat)> {
+    let n = b.rows;
+    let p = b.cols;
+    let m = n + p;
+    let bd = b.to_dense();
+    // E = [[0, B],[Bᵀ, 0]]
+    let mut e = DMat::zeros(m, m);
+    for i in 0..n {
+        for j in 0..p {
+            e.set(i, n + j, bd.at(i, j));
+            e.set(n + j, i, bd.at(i, j));
+        }
+    }
+    let d: Vec<f64> = (0..m).map(|i| e.row(i).iter().sum()).collect();
+    ensure_arg!(d.iter().all(|&x| x > 0.0), "full_bipartite_eig: isolated node");
+    let mut l = DMat::zeros(m, m);
+    for i in 0..m {
+        for j in 0..m {
+            l.set(i, j, if i == j { d[i] - e.at(i, j) } else { -e.at(i, j) });
+        }
+    }
+    sym_eig_generalized_smallest(&l, &d, k)
+}
+
+/// Oracle spectral embedding helper for tiny dense graphs (used by the SC
+/// baseline and tests): smallest-k generalized eigenvectors of an affinity.
+pub fn ncut_embedding(aff: &DMat, k: usize) -> Result<DMat> {
+    let n = aff.rows;
+    let d: Vec<f64> = (0..n).map(|i| aff.row(i).iter().sum()).collect();
+    ensure_arg!(d.iter().all(|&x| x > 0.0), "ncut: isolated node");
+    let mut l = DMat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            l.set(i, j, if i == j { d[i] - aff.at(i, j) } else { -aff.at(i, j) });
+        }
+    }
+    let (_vals, v) = sym_eig_generalized_smallest(&l, &d, k)?;
+    Ok(v)
+}
+
+/// Eigen-decomposition of a normalized affinity (largest-k), used by
+/// Nyström. Returns (vals descending, vectors columns).
+pub fn top_eig(a: &DMat, k: usize) -> Result<(Vec<f64>, DMat)> {
+    let (vals, vecs) = sym_eig(a)?;
+    let n = a.rows;
+    let k = k.min(n);
+    let mut out_vals = Vec::with_capacity(k);
+    let mut out = DMat::zeros(n, k);
+    for c in 0..k {
+        let src = n - 1 - c;
+        out_vals.push(vals[src]);
+        for r in 0..n {
+            out.set(r, c, vecs.at(r, src));
+        }
+    }
+    Ok((out_vals, out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::affinity::{build_affinity, knr::KnrIndex, select, NativeBackend, SelectStrategy};
+    use crate::data::synthetic::two_moons;
+
+    fn moon_affinity(n: usize, p: usize, k_nn: usize, seed: u64) -> (crate::data::Dataset, Csr) {
+        let ds = two_moons(n, 0.05, seed);
+        let reps =
+            select(&ds.x, SelectStrategy::Hybrid { candidate_factor: 8 }, p, 15, seed).unwrap();
+        let index = KnrIndex::build(&reps, 5 * k_nn, 15, &NativeBackend).unwrap();
+        let res = index.approx_knr(&ds.x, k_nn, &NativeBackend);
+        let aff = build_affinity(ds.n(), p, k_nn, &res);
+        (ds, aff.b)
+    }
+
+    #[test]
+    fn gamma_lambda_relation() {
+        let (_, b) = moon_affinity(300, 30, 4, 3);
+        let tc = transfer_cut(&b, 4, EigSolver::Dense, 1).unwrap();
+        for (g, l) in tc.gammas.iter().zip(&tc.lambdas) {
+            assert!((g * (2.0 - g) - l.clamp(0.0, 1.0)).abs() < 1e-9);
+        }
+        // first eigenvalue ≈ 0 (connected graph) and ascending
+        assert!(tc.lambdas[0].abs() < 1e-6);
+        for w in tc.lambdas.windows(2) {
+            assert!(w[0] <= w[1] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn matches_full_problem_eigenvalues() {
+        // The reduced λ must satisfy γ(2−γ)=λ with the γ of the full
+        // (N+p)-node problem — the transfer-cut theorem (Eq. 10).
+        let (_, b) = moon_affinity(120, 16, 3, 5);
+        let tc = transfer_cut(&b, 3, EigSolver::Dense, 1).unwrap();
+        let (full_gammas, _) = full_bipartite_eig(&b, 3).unwrap();
+        for (ours, full) in tc.gammas.iter().zip(&full_gammas) {
+            assert!((ours - full).abs() < 1e-6, "{ours} vs {full}");
+        }
+    }
+
+    #[test]
+    fn embedding_separates_moons() {
+        let (ds, b) = moon_affinity(600, 60, 5, 7);
+        let tc = transfer_cut(&b, 2, EigSolver::Auto, 3).unwrap();
+        let km = crate::kmeans::kmeans(
+            &tc.embedding,
+            &crate::kmeans::KmeansParams { k: 2, ..Default::default() },
+            11,
+        )
+        .unwrap();
+        let nmi = crate::metrics::nmi(&km.labels, &ds.y);
+        assert!(nmi > 0.8, "nmi={nmi}");
+    }
+
+    #[test]
+    fn lobpcg_and_dense_agree() {
+        let (_, b) = moon_affinity(500, 80, 5, 9);
+        let tc_d = transfer_cut(&b, 3, EigSolver::Dense, 1).unwrap();
+        let tc_a = transfer_cut(&b, 3, EigSolver::Auto, 1).unwrap();
+        for (a, d) in tc_a.lambdas.iter().zip(&tc_d.lambdas) {
+            assert!((a - d).abs() < 1e-5, "{a} vs {d}");
+        }
+    }
+
+    #[test]
+    fn lobpcg_solver_agrees_with_dense() {
+        let (_, b) = moon_affinity(500, 90, 5, 13);
+        let tc_d = transfer_cut(&b, 3, EigSolver::Dense, 1).unwrap();
+        let tc_l = transfer_cut(&b, 3, EigSolver::Lobpcg, 1).unwrap();
+        for (l, d) in tc_l.lambdas.iter().zip(&tc_d.lambdas) {
+            assert!((l - d).abs() < 1e-4, "lobpcg {l} vs dense {d}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_k() {
+        let (_, b) = moon_affinity(100, 10, 3, 11);
+        assert!(transfer_cut(&b, 0, EigSolver::Dense, 1).is_err());
+        assert!(transfer_cut(&b, 11, EigSolver::Dense, 1).is_err());
+    }
+}

@@ -1,0 +1,347 @@
+//! Command-line interface for the `repro` leader binary (clap is
+//! unavailable offline — this is a small subcommand + `--key value`
+//! parser over [`crate::config::RunConfig`]).
+
+use crate::bench::tables::{self, Harness};
+use crate::bench::runner;
+use crate::config::RunConfig;
+use crate::data::{loader, Benchmark, Dataset};
+use crate::metrics::{ari, ca, nmi};
+use crate::{Error, Result};
+use std::path::Path;
+
+const USAGE: &str = "\
+repro — U-SPEC / U-SENC (TKDE'19) coordinator
+
+USAGE:
+  repro <command> [--key value ...]
+
+COMMANDS:
+  datasets                      print the Table 3 inventory
+  gen-data --dataset D --out F  generate a benchmark dataset as CSV
+  cluster  --dataset D --method M
+                                run one method, print NMI/CA/ARI/time
+  table    --id tN              regenerate a paper table (t3..t16, fig1/3/5)
+                                or an ablation (ablation-consensus |
+                                ablation-eig | ablation-kernels |
+                                ablation-streaming)
+  estimate-k --dataset D [--k_max N]
+                                eigengap estimate of the cluster count
+  stream   --dataset D|F.bin    out-of-core U-SPEC over an on-disk dataset
+                                (USPECB01 file, or a benchmark spilled to
+                                a temp file)
+  info                          print config + artifact status
+
+COMMON FLAGS (any config key):
+  --dataset    benchmark name (Table 3) or a CSV path  [TB-1M]
+  --scale      synthetic-size multiplier, 1.0 = paper  [0.002]
+  --method     k-means|SC|ESCG|Nystrom|LSC-K|LSC-R|FastESC|EulerSC|
+               U-SPEC|U-SENC|EAC|WCT|KCC|PTGP|ECC|SEC|LWGP  [u-spec]
+  --k          cluster count (default: ground truth)
+  --p          representatives (paper: 1000)
+  --k_nn       nearest representatives K (paper: 5)
+  --m          ensemble size (paper: 20)
+  --backend    native | pjrt (AOT kernels; needs `make artifacts`)
+  --workers    coordinator worker threads
+  --runs       repetitions for mean±std
+  --seed       master seed
+  --config     JSON config file (flags override it)
+";
+
+/// Parsed invocation.
+pub struct Invocation {
+    pub command: String,
+    pub cfg: RunConfig,
+    pub extra: std::collections::BTreeMap<String, String>,
+}
+
+/// Parse argv (excluding argv[0]).
+pub fn parse(args: &[String]) -> Result<Invocation> {
+    if args.is_empty() {
+        return Err(Error::Config(USAGE.into()));
+    }
+    let command = args[0].clone();
+    let mut cfg = RunConfig::default();
+    let mut extra = std::collections::BTreeMap::new();
+    // first pass: --config file
+    let mut i = 1;
+    while i + 1 < args.len() + 1 {
+        if i < args.len() && args[i] == "--config" {
+            if i + 1 >= args.len() {
+                return Err(Error::Config("--config needs a path".into()));
+            }
+            cfg = RunConfig::load(Path::new(&args[i + 1]))?;
+        }
+        i += 1;
+    }
+    let mut i = 1;
+    while i < args.len() {
+        let key = args[i]
+            .strip_prefix("--")
+            .ok_or_else(|| Error::Config(format!("expected --flag, got '{}'", args[i])))?;
+        let value = args
+            .get(i + 1)
+            .ok_or_else(|| Error::Config(format!("--{key} needs a value")))?;
+        match key {
+            "config" => {}
+            "id" | "out" | "k_max" => {
+                extra.insert(key.to_string(), value.clone());
+            }
+            _ => cfg.set(key, value)?,
+        }
+        i += 2;
+    }
+    Ok(Invocation { command, cfg, extra })
+}
+
+/// Resolve a dataset name (benchmark or CSV path).
+pub fn resolve_dataset(cfg: &RunConfig) -> Result<Dataset> {
+    if let Some(b) = Benchmark::from_name(&cfg.dataset) {
+        return Ok(b.generate(cfg.scale, cfg.seed ^ 0xDA7A));
+    }
+    let p = Path::new(&cfg.dataset);
+    if p.exists() {
+        return loader::load_csv(p);
+    }
+    Err(Error::InvalidArg(format!(
+        "unknown dataset '{}' (benchmarks: {:?})",
+        cfg.dataset,
+        Benchmark::ALL.map(|b| b.name())
+    )))
+}
+
+/// Execute a parsed invocation; returns the text to print.
+pub fn execute(inv: Invocation) -> Result<String> {
+    match inv.command.as_str() {
+        "help" | "--help" | "-h" => Ok(USAGE.to_string()),
+        "datasets" => Ok(tables::datasets_table()),
+        "info" => {
+            let art = crate::runtime::default_artifact_dir();
+            let status = if art.join("manifest.json").exists() {
+                let m = crate::runtime::Manifest::load(&art)?;
+                format!("{} artifacts (fingerprint {})", m.artifacts.len(), m.fingerprint)
+            } else {
+                "NOT BUILT — run `make artifacts`".into()
+            };
+            Ok(format!(
+                "config: {}\nartifacts [{}]: {}\nthreads: {}\n",
+                inv.cfg.to_json().to_string(),
+                art.display(),
+                status,
+                crate::util::par::num_threads()
+            ))
+        }
+        "gen-data" => {
+            let ds = resolve_dataset(&inv.cfg)?;
+            let out = inv
+                .extra
+                .get("out")
+                .ok_or_else(|| Error::Config("gen-data needs --out FILE".into()))?;
+            loader::save_csv(&ds, Path::new(out))?;
+            Ok(format!("wrote {} ({} × {}, k={}) to {}", ds.name, ds.n(), ds.d(), ds.k, out))
+        }
+        "cluster" => {
+            let ds = resolve_dataset(&inv.cfg)?;
+            let h = Harness::new(inv.cfg.clone())?;
+            let mut out = format!(
+                "dataset {}: n={} d={} k={}  method={} backend={}\n",
+                ds.name,
+                ds.n(),
+                ds.d(),
+                ds.k,
+                inv.cfg.method,
+                inv.cfg.backend.name()
+            );
+            for run in 0..inv.cfg.runs {
+                let seed = inv.cfg.seed.wrapping_add(run as u64);
+                let t0 = std::time::Instant::now();
+                let res = runner::run_by_name(&inv.cfg.method, &ds, &inv.cfg, seed, h.backend())?;
+                let secs = t0.elapsed().as_secs_f64();
+                out.push_str(&format!(
+                    "run {run}: NMI={:.4} CA={:.4} ARI={:.4} time={:.3}s  [{}]\n",
+                    nmi(&res.labels, &ds.y),
+                    ca(&res.labels, &ds.y),
+                    ari(&res.labels, &ds.y),
+                    secs,
+                    res.timer.summary()
+                ));
+            }
+            Ok(out)
+        }
+        "table" => {
+            let id = inv
+                .extra
+                .get("id")
+                .ok_or_else(|| Error::Config("table needs --id tN (t3..t16, fig1/3/5)".into()))?
+                .clone();
+            let h = Harness::new(inv.cfg)?;
+            tables::run_table(&h, &id)
+        }
+        "estimate-k" => {
+            let ds = resolve_dataset(&inv.cfg)?;
+            let h = Harness::new(inv.cfg.clone())?;
+            let dp = runner::derive(&inv.cfg, &ds);
+            let params = runner::uspec_params(&inv.cfg, &dp);
+            let k_max = inv
+                .extra
+                .get("k_max")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(20.min(ds.n() / 2).max(3));
+            let est = crate::uspec::estimate::estimate_k(
+                &ds.x,
+                &params,
+                2,
+                k_max,
+                inv.cfg.seed,
+                h.backend(),
+            )?;
+            let spectrum: Vec<String> =
+                est.lambdas.iter().map(|l| format!("{l:.3e}")).collect();
+            Ok(format!(
+                "dataset {}: n={} d={} (true k={})\nestimated k = {} (relative eigengap, gap {:.3e})\nspectrum: [{}]\n",
+                ds.name,
+                ds.n(),
+                ds.d(),
+                ds.k,
+                est.k,
+                est.gap,
+                spectrum.join(", ")
+            ))
+        }
+        "stream" => {
+            // cluster an on-disk USPECB01 file (or spill a benchmark first)
+            let h = Harness::new(inv.cfg.clone())?;
+            let path = Path::new(&inv.cfg.dataset);
+            let owned;
+            let (bin, truth) = if path.exists() && path.extension().map(|e| e == "bin").unwrap_or(false) {
+                (crate::streaming::BinDataset::open(path)?, None)
+            } else {
+                let ds = resolve_dataset(&inv.cfg)?;
+                let tmp = std::env::temp_dir()
+                    .join(format!("uspec_stream_{}.bin", std::process::id()));
+                owned = crate::streaming::BinDataset::write_mat(&tmp, &ds.x)?;
+                (owned, Some(ds))
+            };
+            let k = inv.cfg.k.or(truth.as_ref().map(|d| d.k)).unwrap_or(2);
+            let p = inv.cfg.p.min(bin.n() / 2).max(k.min(bin.n()));
+            let base = crate::uspec::UspecParams {
+                k,
+                p,
+                k_nn: inv.cfg.k_nn.min(p),
+                ..Default::default()
+            };
+            let sp = crate::streaming::StreamParams { chunk: 8192, base };
+            let t0 = std::time::Instant::now();
+            let res = crate::streaming::stream_uspec(&bin, &sp, inv.cfg.seed, h.backend())?;
+            let secs = t0.elapsed().as_secs_f64();
+            let mut out = format!(
+                "streamed U-SPEC over {} (n={} d={}, k={k}): {:.2}s, resident model {:.1} MB\n[{}]\n",
+                inv.cfg.dataset,
+                bin.n(),
+                bin.d(),
+                secs,
+                res.peak_bytes as f64 / 1e6,
+                res.timer.summary()
+            );
+            if let Some(ds) = truth {
+                out.push_str(&format!(
+                    "NMI={:.4} CA={:.4}\n",
+                    nmi(&res.labels, &ds.y),
+                    ca(&res.labels, &ds.y)
+                ));
+            }
+            Ok(out)
+        }
+        other => Err(Error::Config(format!("unknown command '{other}'\n\n{USAGE}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_cluster_flags() {
+        let inv = parse(&argv("cluster --dataset TB-1M --method U-SPEC --p 300 --runs 2")).unwrap();
+        assert_eq!(inv.command, "cluster");
+        assert_eq!(inv.cfg.p, 300);
+        assert_eq!(inv.cfg.runs, 2);
+    }
+
+    #[test]
+    fn parse_rejects_bad() {
+        assert!(parse(&[]).is_err());
+        assert!(parse(&argv("cluster --p")).is_err());
+        assert!(parse(&argv("cluster p 3")).is_err());
+        assert!(parse(&argv("cluster --bogus 1")).is_err());
+    }
+
+    #[test]
+    fn datasets_and_help() {
+        let out = execute(parse(&argv("datasets")).unwrap()).unwrap();
+        assert!(out.contains("Flower-20M"));
+        let help = execute(parse(&argv("help")).unwrap()).unwrap();
+        assert!(help.contains("USAGE"));
+    }
+
+    #[test]
+    fn cluster_small_end_to_end() {
+        let inv = parse(&argv(
+            "cluster --dataset TB-1M --scale 0.0001 --method U-SPEC --p 60 --runs 1 --seed 3",
+        ))
+        .unwrap();
+        let out = execute(inv).unwrap();
+        assert!(out.contains("NMI="), "{out}");
+    }
+
+    #[test]
+    fn estimate_k_end_to_end() {
+        let inv = parse(&argv(
+            "estimate-k --dataset CC-5M --scale 0.0004 --p 300 --seed 5 --k_max 8",
+        ))
+        .unwrap();
+        let out = execute(inv).unwrap();
+        assert!(out.contains("estimated k = 3"), "{out}");
+    }
+
+    #[test]
+    fn stream_command_on_benchmark() {
+        let inv = parse(&argv("stream --dataset TB-1M --scale 0.001 --seed 7")).unwrap();
+        let out = execute(inv).unwrap();
+        assert!(out.contains("streamed U-SPEC"), "{out}");
+        assert!(out.contains("NMI="), "{out}");
+    }
+
+    #[test]
+    fn stream_command_on_bin_file() {
+        let ds = crate::data::synthetic::two_moons(500, 0.05, 3);
+        let tmp = std::env::temp_dir().join(format!("uspec_cli_{}.bin", std::process::id()));
+        crate::streaming::BinDataset::write_mat(&tmp, &ds.x).unwrap();
+        let inv =
+            parse(&argv(&format!("stream --dataset {} --k 2 --p 80", tmp.display()))).unwrap();
+        let out = execute(inv).unwrap();
+        assert!(out.contains("streamed U-SPEC"), "{out}");
+        // unlabeled file: no NMI line
+        assert!(!out.contains("NMI="), "{out}");
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn gen_data_roundtrip() {
+        let tmp = std::env::temp_dir().join(format!("uspec_cli_{}.csv", std::process::id()));
+        let inv = parse(&argv(&format!(
+            "gen-data --dataset SF-2M --scale 0.0001 --out {}",
+            tmp.display()
+        )))
+        .unwrap();
+        let out = execute(inv).unwrap();
+        assert!(out.contains("wrote"));
+        let ds = loader::load_csv(&tmp).unwrap();
+        assert_eq!(ds.k, 4);
+        std::fs::remove_file(tmp).ok();
+    }
+}

@@ -1,0 +1,193 @@
+//! Run configuration: a JSON-file-backed config with CLI overrides — the
+//! launcher's single source of truth (serde is unavailable offline; the
+//! in-tree [`crate::util::json`] does the (de)serialization).
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::path::Path;
+
+/// Distance-backend choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust blocked gemm path.
+    Native,
+    /// AOT-compiled JAX/Pallas kernels via PJRT (requires `make artifacts`).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Ok(BackendKind::Native),
+            "pjrt" | "xla" | "kernel" => Ok(BackendKind::Pjrt),
+            other => Err(Error::Config(format!("unknown backend '{other}'"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Full run configuration (defaults follow the paper's §4.2 settings).
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Benchmark dataset name (Table 3) or a CSV path.
+    pub dataset: String,
+    /// Synthetic-size multiplier (1.0 = paper sizes).
+    pub scale: f64,
+    /// Clustering method name.
+    pub method: String,
+    /// Cluster count; None = dataset ground truth k.
+    pub k: Option<usize>,
+    /// Representatives / landmarks p.
+    pub p: usize,
+    /// Nearest representatives K.
+    pub k_nn: usize,
+    /// Ensemble size m.
+    pub m: usize,
+    /// Base-clusterer cluster range.
+    pub k_min: usize,
+    pub k_max: usize,
+    /// Distance backend.
+    pub backend: BackendKind,
+    /// Coordinator worker threads for ensemble generation.
+    pub workers: usize,
+    /// Repetitions for mean±std reporting.
+    pub runs: usize,
+    /// Master seed.
+    pub seed: u64,
+    /// Simulated memory budget in bytes for the N/A model (paper: 64 GB).
+    pub budget_bytes: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dataset: "TB-1M".into(),
+            scale: 0.002,
+            method: "u-spec".into(),
+            k: None,
+            p: 1000,
+            k_nn: 5,
+            m: 20,
+            k_min: 20,
+            k_max: 60,
+            backend: BackendKind::Native,
+            workers: crate::util::par::num_threads(),
+            runs: 3,
+            seed: 42,
+            budget_bytes: 64 * (1 << 30),
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("scale", Json::Num(self.scale)),
+            ("method", Json::Str(self.method.clone())),
+            ("k", self.k.map(|v| Json::Num(v as f64)).unwrap_or(Json::Null)),
+            ("p", Json::Num(self.p as f64)),
+            ("k_nn", Json::Num(self.k_nn as f64)),
+            ("m", Json::Num(self.m as f64)),
+            ("k_min", Json::Num(self.k_min as f64)),
+            ("k_max", Json::Num(self.k_max as f64)),
+            ("backend", Json::Str(self.backend.name().into())),
+            ("workers", Json::Num(self.workers as f64)),
+            ("runs", Json::Num(self.runs as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("budget_bytes", Json::Num(self.budget_bytes as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        let obj = v.as_obj().ok_or_else(|| Error::Config("config must be an object".into()))?;
+        for (key, val) in obj {
+            cfg.set(key, &json_to_string(val))?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let v = Json::parse(&text).map_err(Error::Config)?;
+        Self::from_json(&v)
+    }
+
+    /// Apply one `--key value` override.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let parse_usize = |v: &str| -> Result<usize> {
+            v.parse().map_err(|e| Error::Config(format!("{key}: {e}")))
+        };
+        match key {
+            "dataset" => self.dataset = value.to_string(),
+            "scale" => {
+                self.scale = value.parse().map_err(|e| Error::Config(format!("scale: {e}")))?
+            }
+            "method" => self.method = value.to_string(),
+            "k" => self.k = if value == "null" { None } else { Some(parse_usize(value)?) },
+            "p" => self.p = parse_usize(value)?,
+            "k_nn" | "K" => self.k_nn = parse_usize(value)?,
+            "m" => self.m = parse_usize(value)?,
+            "k_min" => self.k_min = parse_usize(value)?,
+            "k_max" => self.k_max = parse_usize(value)?,
+            "backend" => self.backend = BackendKind::parse(value)?,
+            "workers" => self.workers = parse_usize(value)?.max(1),
+            "runs" => self.runs = parse_usize(value)?.max(1),
+            "seed" => {
+                self.seed = value.parse().map_err(|e| Error::Config(format!("seed: {e}")))?
+            }
+            "budget_bytes" => {
+                self.budget_bytes =
+                    value.parse().map_err(|e| Error::Config(format!("budget: {e}")))?
+            }
+            "budget_gb" => {
+                let gb: f64 = value.parse().map_err(|e| Error::Config(format!("budget: {e}")))?;
+                self.budget_bytes = (gb * (1u64 << 30) as f64) as u64;
+            }
+            other => return Err(Error::Config(format!("unknown config key '{other}'"))),
+        }
+        Ok(())
+    }
+}
+
+fn json_to_string(v: &Json) -> String {
+    match v {
+        Json::Str(s) => s.clone(),
+        other => other.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut cfg = RunConfig::default();
+        cfg.set("dataset", "MNIST").unwrap();
+        cfg.set("p", "500").unwrap();
+        cfg.set("backend", "pjrt").unwrap();
+        cfg.set("budget_gb", "8").unwrap();
+        let j = cfg.to_json().to_string();
+        let back = RunConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.dataset, "MNIST");
+        assert_eq!(back.p, 500);
+        assert_eq!(back.backend, BackendKind::Pjrt);
+        assert_eq!(back.budget_bytes, 8 * (1 << 30));
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        let mut cfg = RunConfig::default();
+        assert!(cfg.set("nope", "1").is_err());
+        assert!(cfg.set("scale", "abc").is_err());
+        assert!(BackendKind::parse("gpu").is_err());
+    }
+}

@@ -1,0 +1,194 @@
+//! Loaders for user-supplied data: dense CSV (features..., label) and
+//! LIBSVM sparse text, plus a writer used by `repro fig5` / `gen-data`.
+
+use super::Dataset;
+use crate::linalg::Mat;
+use crate::{Error, Result};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Load a CSV where each line is `f1,f2,...,fd,label`. Lines starting with
+/// `#` and blank lines are skipped. Labels may be arbitrary integers; they
+/// are densified to 0..k-1.
+pub fn load_csv(path: &Path) -> Result<Dataset> {
+    let file = std::fs::File::open(path)?;
+    let reader = std::io::BufReader::new(file);
+    let mut data: Vec<f32> = Vec::new();
+    let mut raw_labels: Vec<i64> = Vec::new();
+    let mut d: Option<usize> = None;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(|f| f.trim()).collect();
+        if fields.len() < 2 {
+            return Err(Error::InvalidArg(format!("csv line {}: need >=2 fields", lineno + 1)));
+        }
+        let dd = fields.len() - 1;
+        match d {
+            None => d = Some(dd),
+            Some(prev) if prev != dd => {
+                return Err(Error::InvalidArg(format!(
+                    "csv line {}: {} features, expected {}",
+                    lineno + 1,
+                    dd,
+                    prev
+                )))
+            }
+            _ => {}
+        }
+        for f in &fields[..dd] {
+            data.push(f.parse::<f32>().map_err(|e| {
+                Error::InvalidArg(format!("csv line {}: bad float '{}': {}", lineno + 1, f, e))
+            })?);
+        }
+        raw_labels.push(fields[dd].parse::<i64>().map_err(|e| {
+            Error::InvalidArg(format!("csv line {}: bad label: {}", lineno + 1, e))
+        })?);
+    }
+    let d = d.ok_or_else(|| Error::InvalidArg("empty csv".into()))?;
+    let n = raw_labels.len();
+    // densify labels
+    let mut map = std::collections::BTreeMap::new();
+    for &l in &raw_labels {
+        let next = map.len() as u32;
+        map.entry(l).or_insert(next);
+    }
+    let y: Vec<u32> = raw_labels.iter().map(|l| map[l]).collect();
+    let name = path.file_stem().and_then(|s| s.to_str()).unwrap_or("csv").to_string();
+    Ok(Dataset::new(name, Mat::from_vec(n, d, data), y))
+}
+
+/// Write a dataset as CSV (inverse of [`load_csv`]).
+pub fn save_csv(ds: &Dataset, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(file);
+    for i in 0..ds.n() {
+        let row = ds.x.row(i);
+        for v in row {
+            write!(w, "{v},")?;
+        }
+        writeln!(w, "{}", ds.y[i])?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load LIBSVM format: `label idx:val idx:val ...` (1-based indices).
+/// `dim` pads/validates the feature count; pass 0 to infer from max index.
+pub fn load_libsvm(path: &Path, dim: usize) -> Result<Dataset> {
+    let text = std::fs::read_to_string(path)?;
+    let mut rows: Vec<(i64, Vec<(usize, f32)>)> = Vec::new();
+    let mut max_idx = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label: i64 = parts
+            .next()
+            .unwrap()
+            .parse()
+            .map_err(|e| Error::InvalidArg(format!("libsvm line {}: label: {}", lineno + 1, e)))?;
+        let mut feats = Vec::new();
+        for p in parts {
+            let (i, v) = p
+                .split_once(':')
+                .ok_or_else(|| Error::InvalidArg(format!("libsvm line {}: bad pair '{}'", lineno + 1, p)))?;
+            let i: usize = i
+                .parse()
+                .map_err(|e| Error::InvalidArg(format!("libsvm line {}: idx: {}", lineno + 1, e)))?;
+            let v: f32 = v
+                .parse()
+                .map_err(|e| Error::InvalidArg(format!("libsvm line {}: val: {}", lineno + 1, e)))?;
+            if i == 0 {
+                return Err(Error::InvalidArg(format!("libsvm line {}: 1-based idx", lineno + 1)));
+            }
+            max_idx = max_idx.max(i);
+            feats.push((i - 1, v));
+        }
+        rows.push((label, feats));
+    }
+    let d = if dim > 0 { dim } else { max_idx };
+    if max_idx > d {
+        return Err(Error::InvalidArg(format!("libsvm: index {max_idx} > dim {d}")));
+    }
+    let n = rows.len();
+    let mut data = vec![0.0f32; n * d];
+    let mut map = std::collections::BTreeMap::new();
+    let mut y = Vec::with_capacity(n);
+    for (r, (label, feats)) in rows.into_iter().enumerate() {
+        let next = map.len() as u32;
+        y.push(*map.entry(label).or_insert(next));
+        for (i, v) in feats {
+            data[r * d + i] = v;
+        }
+    }
+    let name = path.file_stem().and_then(|s| s.to_str()).unwrap_or("libsvm").to_string();
+    Ok(Dataset::new(name, Mat::from_vec(n, d, data), y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str, contents: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("uspec_test_{name}_{}", std::process::id()));
+        std::fs::write(&p, contents).unwrap();
+        p
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let ds = crate::data::synthetic::two_moons(50, 0.05, 1);
+        let p = std::env::temp_dir().join(format!("uspec_rt_{}.csv", std::process::id()));
+        save_csv(&ds, &p).unwrap();
+        let back = load_csv(&p).unwrap();
+        assert_eq!(back.n(), 50);
+        assert_eq!(back.d(), 2);
+        assert_eq!(back.y, ds.y);
+        for (a, b) in back.x.data.iter().zip(&ds.x.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn csv_rejects_ragged() {
+        let p = tmpfile("ragged", "1.0,2.0,0\n1.0,1\n");
+        assert!(load_csv(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn csv_skips_comments() {
+        let p = tmpfile("comments", "# header\n1.0,2.0,5\n\n3.0,4.0,9\n");
+        let ds = load_csv(&p).unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.y, vec![0, 1]); // densified from 5, 9
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn libsvm_parses() {
+        let p = tmpfile("libsvm", "1 1:0.5 3:2.0\n-1 2:1.5\n");
+        let ds = load_libsvm(&p, 0).unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.d(), 3);
+        assert_eq!(ds.x.at(0, 0), 0.5);
+        assert_eq!(ds.x.at(0, 2), 2.0);
+        assert_eq!(ds.x.at(1, 1), 1.5);
+        assert_eq!(ds.k, 2);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn libsvm_dim_check() {
+        let p = tmpfile("libsvm_dim", "1 5:1.0\n");
+        assert!(load_libsvm(&p, 3).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,188 @@
+//! Datasets: the paper's five synthetic shapes (Table 3 / Fig. 5), surrogate
+//! generators matching the five real datasets' (N, d, #class) signatures,
+//! and CSV/LIBSVM loaders for user data.
+
+pub mod synthetic;
+pub mod real_surrogate;
+pub mod loader;
+
+use crate::linalg::Mat;
+
+/// A labeled dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    /// n×d feature matrix.
+    pub x: Mat,
+    /// Ground-truth labels (dense 0..k-1).
+    pub y: Vec<u32>,
+    /// Number of ground-truth classes.
+    pub k: usize,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, x: Mat, y: Vec<u32>) -> Dataset {
+        assert_eq!(x.rows, y.len());
+        let k = y.iter().copied().max().map(|m| m as usize + 1).unwrap_or(0);
+        Dataset { name: name.into(), x, y, k }
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.rows
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.cols
+    }
+
+    /// Random subsample of `n` objects (used for Fig. 5-style plots).
+    pub fn subsample(&self, n: usize, seed: u64) -> Dataset {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let idx = rng.sample_indices(self.n(), n.min(self.n()));
+        Dataset::new(
+            format!("{}-sub{}", self.name, n),
+            self.x.gather_rows(&idx),
+            idx.iter().map(|&i| self.y[i]).collect(),
+        )
+    }
+}
+
+/// The paper's benchmark inventory (Table 3). `scale` multiplies the
+/// synthetic sizes (1.0 = the paper's ten-million-level sizes; the default
+/// harness uses 0.01 — see DESIGN.md "Substitutions").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Benchmark {
+    PenDigits,
+    Usps,
+    Letters,
+    Mnist,
+    Covertype,
+    Tb1m,
+    Sf2m,
+    Cc5m,
+    Cg10m,
+    Flower20m,
+}
+
+impl Benchmark {
+    pub const ALL: [Benchmark; 10] = [
+        Benchmark::PenDigits,
+        Benchmark::Usps,
+        Benchmark::Letters,
+        Benchmark::Mnist,
+        Benchmark::Covertype,
+        Benchmark::Tb1m,
+        Benchmark::Sf2m,
+        Benchmark::Cc5m,
+        Benchmark::Cg10m,
+        Benchmark::Flower20m,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Benchmark::PenDigits => "PenDigits",
+            Benchmark::Usps => "USPS",
+            Benchmark::Letters => "Letters",
+            Benchmark::Mnist => "MNIST",
+            Benchmark::Covertype => "Covertype",
+            Benchmark::Tb1m => "TB-1M",
+            Benchmark::Sf2m => "SF-2M",
+            Benchmark::Cc5m => "CC-5M",
+            Benchmark::Cg10m => "CG-10M",
+            Benchmark::Flower20m => "Flower-20M",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Benchmark> {
+        Benchmark::ALL.iter().copied().find(|b| b.name().eq_ignore_ascii_case(s))
+    }
+
+    /// Paper-reported (N, d, #class).
+    pub fn paper_shape(&self) -> (usize, usize, usize) {
+        match self {
+            Benchmark::PenDigits => (10_992, 16, 10),
+            Benchmark::Usps => (11_000, 256, 10),
+            Benchmark::Letters => (20_000, 16, 26),
+            Benchmark::Mnist => (70_000, 784, 10),
+            Benchmark::Covertype => (581_012, 54, 7),
+            Benchmark::Tb1m => (1_000_000, 2, 2),
+            Benchmark::Sf2m => (2_000_000, 2, 4),
+            Benchmark::Cc5m => (5_000_000, 2, 3),
+            Benchmark::Cg10m => (10_000_000, 2, 11),
+            Benchmark::Flower20m => (20_000_000, 2, 13),
+        }
+    }
+
+    pub fn is_synthetic(&self) -> bool {
+        matches!(
+            self,
+            Benchmark::Tb1m
+                | Benchmark::Sf2m
+                | Benchmark::Cc5m
+                | Benchmark::Cg10m
+                | Benchmark::Flower20m
+        )
+    }
+
+    /// Generate the dataset at `scale` × the paper size (clamped below so
+    /// every generated set stays clusterable: ≥ max(100·k, 500) objects).
+    pub fn generate(&self, scale: f64, seed: u64) -> Dataset {
+        let (n_full, _d, k) = self.paper_shape();
+        let n = ((n_full as f64 * scale) as usize).max(100 * k).max(500);
+        match self {
+            Benchmark::Tb1m => synthetic::two_bananas(n, seed),
+            Benchmark::Sf2m => synthetic::smiling_face(n, seed),
+            Benchmark::Cc5m => synthetic::concentric_circles(n, seed),
+            Benchmark::Cg10m => synthetic::circles_and_gaussians(n, seed),
+            Benchmark::Flower20m => synthetic::flower(n, seed),
+            Benchmark::PenDigits => real_surrogate::surrogate(*self, n, seed),
+            Benchmark::Usps => real_surrogate::surrogate(*self, n, seed),
+            Benchmark::Letters => real_surrogate::surrogate(*self, n, seed),
+            Benchmark::Mnist => real_surrogate::surrogate(*self, n, seed),
+            Benchmark::Covertype => real_surrogate::surrogate(*self, n, seed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inventory_matches_table3() {
+        assert_eq!(Benchmark::Mnist.paper_shape(), (70_000, 784, 10));
+        assert_eq!(Benchmark::Flower20m.paper_shape(), (20_000_000, 2, 13));
+        assert_eq!(Benchmark::ALL.len(), 10);
+    }
+
+    #[test]
+    fn generate_shapes() {
+        for b in Benchmark::ALL {
+            let ds = b.generate(0.001, 42);
+            let (_, d, k) = b.paper_shape();
+            assert_eq!(ds.d(), d, "{}", b.name());
+            assert_eq!(ds.k, k, "{}", b.name());
+            assert!(ds.n() >= (100 * k).max(500));
+            // labels dense
+            let maxl = *ds.y.iter().max().unwrap() as usize;
+            assert_eq!(maxl + 1, k);
+        }
+    }
+
+    #[test]
+    fn from_name_roundtrip() {
+        for b in Benchmark::ALL {
+            assert_eq!(Benchmark::from_name(b.name()), Some(b));
+        }
+        assert_eq!(Benchmark::from_name("tb-1m"), Some(Benchmark::Tb1m));
+        assert_eq!(Benchmark::from_name("nope"), None);
+    }
+
+    #[test]
+    fn subsample_consistent() {
+        let ds = Benchmark::Tb1m.generate(0.001, 1);
+        let sub = ds.subsample(100, 2);
+        assert_eq!(sub.n(), 100);
+        assert_eq!(sub.d(), 2);
+    }
+}

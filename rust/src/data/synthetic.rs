@@ -1,0 +1,254 @@
+//! The paper's five synthetic 2-D shapes (Fig. 5): Two Bananas, Smiling
+//! Face, Concentric Circles, Circles & Gaussians, Flower — all nonlinearly
+//! separable, which is what defeats k-means/EulerSC in Tables 4–5.
+//! Generation is O(N) and threaded; shapes are deterministic per seed.
+
+use super::Dataset;
+use crate::linalg::Mat;
+use crate::util::par;
+use crate::util::rng::Rng;
+
+use std::f64::consts::PI;
+
+/// Helper: fill an n×2 dataset in parallel using a per-chunk forked RNG.
+/// `f(rng, t) -> (x, y, label)` where t ∈ [0,1) is the object's quantile
+/// (gives deterministic class proportions regardless of thread count).
+fn gen2d(name: &str, n: usize, seed: u64, f: impl Fn(&mut Rng, f64) -> (f64, f64, u32) + Sync) -> Dataset {
+    let mut x = Mat::zeros(n, 2);
+    let mut y = vec![0u32; n];
+    // generate coordinates chunk-parallel
+    let chunk = 8192;
+    let coords: Vec<(f32, f32, u32)> = {
+        let nchunks = n.div_ceil(chunk);
+        let per_chunk: Vec<Vec<(f32, f32, u32)>> = par::par_map(nchunks, |ci| {
+            let lo = ci * chunk;
+            let hi = ((ci + 1) * chunk).min(n);
+            let mut rng = Rng::new(seed ^ (ci as u64).wrapping_mul(0xA24BAED4963EE407));
+            (lo..hi)
+                .map(|i| {
+                    let t = i as f64 / n as f64;
+                    let (a, b, l) = f(&mut rng, t);
+                    (a as f32, b as f32, l)
+                })
+                .collect()
+        });
+        per_chunk.into_iter().flatten().collect()
+    };
+    for (i, (a, b, l)) in coords.into_iter().enumerate() {
+        x.set(i, 0, a);
+        x.set(i, 1, b);
+        y[i] = l;
+    }
+    Dataset::new(name, x, y)
+}
+
+/// *Two Bananas* (TB): two interleaved crescents, 2 classes.
+pub fn two_bananas(n: usize, seed: u64) -> Dataset {
+    gen2d("TB", n, seed, |rng, t| {
+        let label = if t < 0.5 { 0u32 } else { 1u32 };
+        let theta = rng.f64() * PI;
+        let noise = 0.08;
+        let (cx, cy, flip) = if label == 0 { (0.0, 0.0, 1.0) } else { (1.0, 0.35, -1.0) };
+        let x = cx + theta.cos() * flip + rng.normal() * noise;
+        let y = cy + theta.sin() * flip + rng.normal() * noise;
+        (x, y, label)
+    })
+}
+
+/// Alias used in docs/tests: classic two-moons with parameterized noise.
+pub fn two_moons(n: usize, noise: f64, seed: u64) -> Dataset {
+    gen2d("moons", n, seed, |rng, t| {
+        let label = if t < 0.5 { 0u32 } else { 1u32 };
+        let theta = rng.f64() * PI;
+        if label == 0 {
+            (theta.cos() + rng.normal() * noise, theta.sin() + rng.normal() * noise, 0)
+        } else {
+            (
+                1.0 - theta.cos() + rng.normal() * noise,
+                0.5 - theta.sin() + rng.normal() * noise,
+                1,
+            )
+        }
+    })
+}
+
+/// *Smiling Face* (SF): face outline ring + two eye blobs + mouth arc,
+/// 4 classes.
+pub fn smiling_face(n: usize, seed: u64) -> Dataset {
+    gen2d("SF", n, seed, |rng, t| {
+        if t < 0.40 {
+            // face outline: full circle radius 1
+            let theta = rng.f64() * 2.0 * PI;
+            (theta.cos() + rng.normal() * 0.025, theta.sin() + rng.normal() * 0.025, 0)
+        } else if t < 0.55 {
+            // left eye
+            (-0.35 + rng.normal() * 0.06, 0.35 + rng.normal() * 0.06, 1)
+        } else if t < 0.70 {
+            // right eye
+            (0.35 + rng.normal() * 0.06, 0.35 + rng.normal() * 0.06, 2)
+        } else {
+            // mouth: lower arc
+            let theta = PI * (1.15 + 0.7 * rng.f64());
+            (0.55 * theta.cos() + rng.normal() * 0.025, 0.25 + 0.55 * theta.sin() + rng.normal() * 0.025, 3)
+        }
+    })
+}
+
+/// *Concentric Circles* (CC): three rings, 3 classes.
+pub fn concentric_circles(n: usize, seed: u64) -> Dataset {
+    gen2d("CC", n, seed, |rng, t| {
+        let label = if t < 1.0 / 3.0 {
+            0u32
+        } else if t < 2.0 / 3.0 {
+            1
+        } else {
+            2
+        };
+        let r = [0.4, 1.0, 1.6][label as usize];
+        let theta = rng.f64() * 2.0 * PI;
+        (r * theta.cos() + rng.normal() * 0.04, r * theta.sin() + rng.normal() * 0.04, label)
+    })
+}
+
+/// *Circles and Gaussians* (CG): 3 concentric rings around (-2, 0) plus a
+/// 2nd double-ring at (2.5, 0) plus 6 Gaussian blobs = 11 classes.
+pub fn circles_and_gaussians(n: usize, seed: u64) -> Dataset {
+    // class proportions: rings heavier than blobs
+    let blob_centers = [
+        (-2.0, 3.0),
+        (0.0, 3.2),
+        (2.0, 3.0),
+        (-1.0, -3.0),
+        (1.0, -3.2),
+        (3.5, -2.5),
+    ];
+    gen2d("CG", n, seed, |rng, t| {
+        if t < 0.45 {
+            // 3 rings at (-2, 0)
+            let which = (t / 0.15) as usize;
+            let r = [0.4, 0.9, 1.4][which.min(2)];
+            let theta = rng.f64() * 2.0 * PI;
+            (
+                -2.0 + r * theta.cos() + rng.normal() * 0.035,
+                r * theta.sin() + rng.normal() * 0.035,
+                which.min(2) as u32,
+            )
+        } else if t < 0.70 {
+            // 2 rings at (2.5, 0)
+            let which = ((t - 0.45) / 0.125) as usize;
+            let r = [0.5, 1.1][which.min(1)];
+            let theta = rng.f64() * 2.0 * PI;
+            (
+                2.5 + r * theta.cos() + rng.normal() * 0.035,
+                r * theta.sin() + rng.normal() * 0.035,
+                3 + which.min(1) as u32,
+            )
+        } else {
+            let which = (((t - 0.70) / 0.05) as usize).min(5);
+            let (cx, cy) = blob_centers[which];
+            (
+                cx + rng.normal() * 0.22,
+                cy + rng.normal() * 0.22,
+                5 + which as u32,
+            )
+        }
+    })
+}
+
+/// *Flower*: a center disc, a stem arc, a surrounding ring, and 10 petal
+/// blobs = 13 classes.
+pub fn flower(n: usize, seed: u64) -> Dataset {
+    gen2d("Flower", n, seed, |rng, t| {
+        if t < 0.18 {
+            // center disc
+            let r = 0.45 * rng.f64().sqrt();
+            let theta = rng.f64() * 2.0 * PI;
+            (r * theta.cos(), r * theta.sin(), 0)
+        } else if t < 0.36 {
+            // outer ring
+            let theta = rng.f64() * 2.0 * PI;
+            (2.2 * theta.cos() + rng.normal() * 0.04, 2.2 * theta.sin() + rng.normal() * 0.04, 1)
+        } else if t < 0.50 {
+            // stem arc below
+            let theta = PI * (1.25 + 0.5 * rng.f64());
+            (
+                1.2 * theta.cos() + rng.normal() * 0.04,
+                -2.4 + 1.2 * theta.sin() + rng.normal() * 0.04,
+                2,
+            )
+        } else {
+            // 10 petals between center and ring
+            let which = (((t - 0.50) / 0.05) as usize).min(9);
+            let ang = 2.0 * PI * which as f64 / 10.0;
+            (
+                1.3 * ang.cos() + rng.normal() * 0.10,
+                1.3 * ang.sin() + rng.normal() * 0.10,
+                3 + which as u32,
+            )
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn class_counts(y: &[u32], k: usize) -> Vec<usize> {
+        let mut c = vec![0usize; k];
+        for &l in y {
+            c[l as usize] += 1;
+        }
+        c
+    }
+
+    #[test]
+    fn shapes_and_classes() {
+        let cases: Vec<(Dataset, usize)> = vec![
+            (two_bananas(3000, 1), 2),
+            (smiling_face(3000, 2), 4),
+            (concentric_circles(3000, 3), 3),
+            (circles_and_gaussians(5000, 4), 11),
+            (flower(5000, 5), 13),
+        ];
+        for (ds, k) in cases {
+            assert_eq!(ds.k, k, "{}", ds.name);
+            assert_eq!(ds.d(), 2);
+            let counts = class_counts(&ds.y, k);
+            assert!(counts.iter().all(|&c| c > 0), "{}: empty class {counts:?}", ds.name);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = two_bananas(500, 9);
+        let b = two_bananas(500, 9);
+        assert_eq!(a.x.data, b.x.data);
+        let c = two_bananas(500, 10);
+        assert_ne!(a.x.data, c.x.data);
+    }
+
+    #[test]
+    fn bananas_not_linearly_separable_by_kmeans() {
+        // k-means should do poorly on TB while the classes are balanced —
+        // this is the paper's core motivation (Table 4: TB-1M k-means NMI≈26%).
+        let ds = two_bananas(4000, 11);
+        let res = crate::kmeans::kmeans(
+            &ds.x,
+            &crate::kmeans::KmeansParams { k: 2, ..Default::default() },
+            3,
+        )
+        .unwrap();
+        let nmi = crate::metrics::nmi(&res.labels, &ds.y);
+        assert!(nmi < 0.7, "k-means should not solve TB, nmi={nmi}");
+    }
+
+    #[test]
+    fn rings_radii_sane() {
+        let ds = concentric_circles(3000, 12);
+        for i in 0..ds.n() {
+            let r = (ds.x.at(i, 0).powi(2) + ds.x.at(i, 1).powi(2)).sqrt();
+            let want = [0.4f32, 1.0, 1.6][ds.y[i] as usize];
+            assert!((r - want).abs() < 0.35, "r={r} want≈{want}");
+        }
+    }
+}

@@ -1,0 +1,56 @@
+//! Co-association matrix (Fred & Jain's evidence accumulation): the N×N
+//! matrix whose (i,j) entry is the fraction of base clusterings that put
+//! i and j in the same cluster. O(N²m) time, O(N²) memory — the substrate
+//! of EAC and WCT (and the reason they go N/A past MNIST scale).
+
+use crate::linalg::DMat;
+use crate::usenc::Ensemble;
+use crate::util::par;
+
+/// Dense co-association matrix, entries in [0, 1], unit diagonal.
+pub fn coassociation(ens: &Ensemble) -> DMat {
+    let n = ens.n();
+    let m = ens.m();
+    let mut c = DMat::zeros(n, n);
+    let inv = 1.0 / m as f64;
+    par::par_for_chunks(&mut c.data, n, |start, chunk| {
+        let i = start / n;
+        for (j, v) in chunk.iter_mut().enumerate() {
+            let mut same = 0usize;
+            for l in &ens.labelings {
+                if l[i] == l[j] {
+                    same += 1;
+                }
+            }
+            *v = same as f64 * inv;
+        }
+    });
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Ensemble {
+        let mut e = Ensemble::default();
+        e.push(vec![0, 0, 1, 1]);
+        e.push(vec![0, 1, 1, 1]);
+        e
+    }
+
+    #[test]
+    fn values() {
+        let c = coassociation(&toy());
+        assert_eq!(c.at(0, 0), 1.0);
+        assert_eq!(c.at(0, 1), 0.5); // together in base 0 only
+        assert_eq!(c.at(2, 3), 1.0);
+        assert_eq!(c.at(0, 2), 0.0);
+        // symmetric
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(c.at(i, j), c.at(j, i));
+            }
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! **ECC** — Entropy-based Consensus Clustering (Liu et al.,
+//! Bioinformatics'17). The entropy utility makes the consensus a hard-EM
+//! fit of a mixture of products of categoricals: each consensus cluster
+//! keeps, per base clustering, a distribution over that clustering's
+//! labels; objects are assigned by categorical log-likelihood. (This is
+//! the Bregman-divergence k-means the KCC unified view associates with the
+//! U_H utility.)
+
+use crate::baselines::ClusteringOutput;
+use crate::usenc::Ensemble;
+use crate::util::rng::Rng;
+use crate::util::timer::PhaseTimer;
+use crate::{ensure_arg, Result};
+
+/// Run ECC for `k` consensus clusters.
+pub fn ecc(ens: &Ensemble, k: usize, seed: u64) -> Result<ClusteringOutput> {
+    ensure_arg!(ens.m() >= 1, "ecc: empty ensemble");
+    let n = ens.n();
+    ensure_arg!(k >= 1 && k <= n, "ecc: bad k");
+    let mut timer = PhaseTimer::new();
+    let m = ens.m();
+    let ks = ens.ks();
+    let mut rng = Rng::new(seed);
+    // Initialize from the first base clustering (folded onto k labels) —
+    // a far better EM start than uniform noise; ties broken randomly.
+    let mut labels: Vec<u32> = ens.labelings[0].iter().map(|&l| l % k as u32).collect();
+    // ensure every consensus cluster is seeded
+    for c in 0..k {
+        if !labels.iter().any(|&l| l == c as u32) {
+            let i = rng.usize(n);
+            labels[i] = c as u32;
+        }
+    }
+    let eps = 1e-6;
+
+    timer.time("hard_em", || {
+        // offsets into a flat θ[k][Σ kᵢ] table
+        let mut offsets = vec![0usize; m];
+        let mut acc = 0;
+        for (t, &kt) in ks.iter().enumerate() {
+            offsets[t] = acc;
+            acc += kt;
+        }
+        let kc = acc;
+        for _iter in 0..50 {
+            // M step: per consensus-cluster categorical distributions
+            let mut counts = vec![0.0f64; k * kc];
+            let mut sizes = vec![0.0f64; k];
+            for i in 0..n {
+                let c = labels[i] as usize;
+                sizes[c] += 1.0;
+                for (t, l) in ens.labelings.iter().enumerate() {
+                    counts[c * kc + offsets[t] + l[i] as usize] += 1.0;
+                }
+            }
+            // log θ with Laplace smoothing
+            let mut logtheta = vec![0.0f64; k * kc];
+            for c in 0..k {
+                for t in 0..m {
+                    let kt = ks[t];
+                    let denom = sizes[c] + eps * kt as f64;
+                    for j in 0..kt {
+                        let p = (counts[c * kc + offsets[t] + j] + eps) / denom.max(eps);
+                        logtheta[c * kc + offsets[t] + j] = p.ln();
+                    }
+                }
+            }
+            // E step (hard): assign by max log-likelihood
+            let mut changed = 0usize;
+            for i in 0..n {
+                let mut best = 0usize;
+                let mut best_ll = f64::NEG_INFINITY;
+                for c in 0..k {
+                    let mut ll = 0.0;
+                    for (t, l) in ens.labelings.iter().enumerate() {
+                        ll += logtheta[c * kc + offsets[t] + l[i] as usize];
+                    }
+                    if ll > best_ll {
+                        best_ll = ll;
+                        best = c;
+                    }
+                }
+                if labels[i] != best as u32 {
+                    labels[i] = best as u32;
+                    changed += 1;
+                }
+            }
+            if changed == 0 {
+                break;
+            }
+        }
+    });
+    Ok(ClusteringOutput::new(labels, timer))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::two_moons;
+    use crate::ensemble_baselines::generate_kmeans_ensemble;
+    use crate::metrics::nmi;
+
+    #[test]
+    fn perfect_ensemble_recovered() {
+        let truth = vec![0u32, 0, 0, 1, 1, 1, 2, 2, 2];
+        let mut ens = Ensemble::default();
+        for _ in 0..5 {
+            ens.push(truth.clone());
+        }
+        let out = ecc(&ens, 3, 11).unwrap();
+        assert!((nmi(&out.labels, &truth) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn consensus_runs_on_kmeans_ensemble() {
+        let ds = two_moons(300, 0.06, 1);
+        let ens = generate_kmeans_ensemble(&ds.x, 8, 5, 10, 3).unwrap();
+        let out = ecc(&ens, 2, 5).unwrap();
+        assert_eq!(out.labels.len(), 300);
+        let score = nmi(&out.labels, &ds.y);
+        assert!(score >= 0.0); // ECC is weak on nonconvex data; just sanity
+    }
+
+    #[test]
+    fn rejects_bad() {
+        assert!(ecc(&Ensemble::default(), 2, 1).is_err());
+    }
+}

@@ -1,0 +1,75 @@
+//! **KCC** — K-means-based Consensus Clustering (Wu et al., TKDE'15).
+//! With the U_c utility, the consensus problem is exactly k-means over the
+//! rows of the binary object×cluster incidence matrix B̃ — which is how we
+//! realize it (the unified-view theorem of the KCC paper).
+
+use crate::baselines::ClusteringOutput;
+use crate::kmeans::{kmeans, KmeansParams};
+use crate::linalg::Mat;
+use crate::usenc::Ensemble;
+use crate::util::timer::PhaseTimer;
+use crate::{ensure_arg, Result};
+
+/// Densify the ensemble incidence into an N×k_c f32 matrix.
+pub fn incidence_dense(ens: &Ensemble) -> Mat {
+    let b = ens.incidence();
+    let mut x = Mat::zeros(b.rows, b.cols);
+    for i in 0..b.rows {
+        let (cols, vals) = b.row(i);
+        for (c, v) in cols.iter().zip(vals) {
+            x.set(i, *c as usize, *v as f32);
+        }
+    }
+    x
+}
+
+/// Run KCC (U_c utility = plain k-means on B̃).
+pub fn kcc(ens: &Ensemble, k: usize, seed: u64) -> Result<ClusteringOutput> {
+    ensure_arg!(ens.m() >= 1, "kcc: empty ensemble");
+    ensure_arg!(k >= 1 && k <= ens.n(), "kcc: bad k");
+    let mut timer = PhaseTimer::new();
+    let x = timer.time("binary_matrix", || incidence_dense(ens));
+    let km = timer.time("kmeans", || {
+        kmeans(&x, &KmeansParams { k, max_iter: 100, ..Default::default() }, seed)
+    })?;
+    Ok(ClusteringOutput::new(km.labels, timer))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::two_moons;
+    use crate::ensemble_baselines::generate_kmeans_ensemble;
+    use crate::metrics::nmi;
+
+    #[test]
+    fn perfect_ensemble_recovered() {
+        let truth = vec![0u32, 0, 0, 0, 1, 1, 1, 1];
+        let mut ens = Ensemble::default();
+        for _ in 0..4 {
+            ens.push(truth.clone());
+        }
+        let out = kcc(&ens, 2, 3).unwrap();
+        assert!((nmi(&out.labels, &truth) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn consensus_on_moons() {
+        let ds = two_moons(400, 0.06, 4);
+        let ens = generate_kmeans_ensemble(&ds.x, 10, 6, 12, 5).unwrap();
+        let out = kcc(&ens, 2, 7).unwrap();
+        let score = nmi(&out.labels, &ds.y);
+        assert!(score > 0.2, "nmi={score}"); // KCC is weak on nonconvex data (Table 7)
+    }
+
+    #[test]
+    fn incidence_dense_row_sums_equal_m() {
+        let ds = two_moons(100, 0.05, 6);
+        let ens = generate_kmeans_ensemble(&ds.x, 5, 3, 6, 7).unwrap();
+        let x = incidence_dense(&ens);
+        for i in 0..100 {
+            let s: f32 = x.row(i).iter().sum();
+            assert_eq!(s, 5.0);
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Average-linkage agglomerative clustering on a dense similarity matrix
+//! (Lance–Williams update). Substrate for EAC and WCT. O(N²) memory,
+//! O(N² log N)-ish time with the nearest-neighbor cache — fine at the
+//! scales where the N×N co-association itself is feasible.
+
+use crate::linalg::DMat;
+
+/// Cut an average-linkage dendrogram over similarity `s` at `k` clusters.
+/// Returns dense labels 0..k-1.
+pub fn average_linkage(s: &DMat, k: usize) -> Vec<u32> {
+    let n = s.rows;
+    assert_eq!(s.rows, s.cols);
+    assert!(k >= 1 && k <= n, "average_linkage: bad k={k} for n={n}");
+    // Working similarity matrix; sim[i][j] for active clusters.
+    let mut sim = s.clone();
+    let mut size = vec![1usize; n];
+    let mut active = vec![true; n];
+    // parent mapping for final label extraction
+    let mut members: Vec<Vec<u32>> = (0..n).map(|i| vec![i as u32]).collect();
+    // nearest-neighbor cache: best[j] = (best similarity, argmax) over active i≠j
+    let mut best: Vec<(f64, usize)> = (0..n)
+        .map(|i| {
+            let mut b = (f64::NEG_INFINITY, usize::MAX);
+            for j in 0..n {
+                if j != i && sim.at(i, j) > b.0 {
+                    b = (sim.at(i, j), j);
+                }
+            }
+            b
+        })
+        .collect();
+    let mut clusters = n;
+    while clusters > k {
+        // find globally most similar active pair via the cache
+        let mut bi = usize::MAX;
+        let mut bv = f64::NEG_INFINITY;
+        for i in 0..n {
+            if active[i] && best[i].0 > bv {
+                bv = best[i].0;
+                bi = i;
+            }
+        }
+        let bj = best[bi].1;
+        debug_assert!(active[bj]);
+        // merge bj into bi (average linkage)
+        let (si, sj) = (size[bi] as f64, size[bj] as f64);
+        for t in 0..n {
+            if active[t] && t != bi && t != bj {
+                let v = (si * sim.at(bi, t) + sj * sim.at(bj, t)) / (si + sj);
+                sim.set(bi, t, v);
+                sim.set(t, bi, v);
+            }
+        }
+        active[bj] = false;
+        size[bi] += size[bj];
+        let moved = std::mem::take(&mut members[bj]);
+        members[bi].extend(moved);
+        // refresh caches referencing bi/bj
+        for i in 0..n {
+            if !active[i] {
+                continue;
+            }
+            if i == bi || best[i].1 == bi || best[i].1 == bj {
+                let mut b = (f64::NEG_INFINITY, usize::MAX);
+                for j in 0..n {
+                    if active[j] && j != i && sim.at(i, j) > b.0 {
+                        b = (sim.at(i, j), j);
+                    }
+                }
+                best[i] = b;
+            }
+        }
+        clusters -= 1;
+    }
+    let mut labels = vec![0u32; n];
+    let mut next = 0u32;
+    for i in 0..n {
+        if active[i] {
+            for &obj in &members[i] {
+                labels[obj as usize] = next;
+            }
+            next += 1;
+        }
+    }
+    labels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Block-diagonal similarity: two obvious groups.
+    fn two_blocks() -> DMat {
+        let mut s = DMat::zeros(6, 6);
+        for i in 0..6 {
+            for j in 0..6 {
+                let same = (i < 3) == (j < 3);
+                s.set(i, j, if same { 0.9 } else { 0.1 });
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn recovers_blocks() {
+        let labels = average_linkage(&two_blocks(), 2);
+        assert_eq!(labels[0], labels[1]);
+        assert_eq!(labels[1], labels[2]);
+        assert_eq!(labels[3], labels[4]);
+        assert_eq!(labels[4], labels[5]);
+        assert_ne!(labels[0], labels[3]);
+    }
+
+    #[test]
+    fn k_equals_n_and_one() {
+        let s = two_blocks();
+        let l1 = average_linkage(&s, 1);
+        assert!(l1.iter().all(|&l| l == 0));
+        let ln = average_linkage(&s, 6);
+        let set: std::collections::HashSet<_> = ln.iter().collect();
+        assert_eq!(set.len(), 6);
+    }
+
+    #[test]
+    fn chain_merge_order() {
+        // three points on a line in similarity space: 0~1 strong, 1~2 weak
+        let mut s = DMat::zeros(3, 3);
+        s.set(0, 1, 0.9);
+        s.set(1, 0, 0.9);
+        s.set(1, 2, 0.2);
+        s.set(2, 1, 0.2);
+        let labels = average_linkage(&s, 2);
+        assert_eq!(labels[0], labels[1]);
+        assert_ne!(labels[0], labels[2]);
+    }
+}

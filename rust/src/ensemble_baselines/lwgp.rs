@@ -1,0 +1,126 @@
+//! **LWGP** — Locally Weighted Graph Partitioning (Huang et al., TCYB'18).
+//! Each base cluster is weighted by its *ensemble-driven cluster index*
+//! (ECI) — the exponential of its negative mean entropy against the other
+//! base clusterings; reliable clusters (consistently reproduced across the
+//! ensemble) get weight ≈ 1, noisy ones are damped. The weighted
+//! object×cluster bipartite graph is then partitioned by the transfer cut.
+
+use crate::baselines::ClusteringOutput;
+use crate::bipartite::{transfer_cut, EigSolver};
+use crate::kmeans::{kmeans, KmeansParams};
+use crate::linalg::Csr;
+use crate::usenc::Ensemble;
+use crate::util::timer::PhaseTimer;
+use crate::{ensure_arg, Result};
+
+/// ECI of every cluster in the ensemble (flattened over the incidence
+/// column order). `theta` is the damping parameter (0.4 in the original).
+pub fn cluster_eci(ens: &Ensemble, theta: f64) -> Vec<f64> {
+    let n = ens.n();
+    let m = ens.m();
+    let ks = ens.ks();
+    let kc: usize = ks.iter().sum();
+    let mut offsets = vec![0usize; m];
+    let mut acc = 0;
+    for (t, &kt) in ks.iter().enumerate() {
+        offsets[t] = acc;
+        acc += kt;
+    }
+    // member lists per cluster
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); kc];
+    for i in 0..n {
+        for (t, l) in ens.labelings.iter().enumerate() {
+            members[offsets[t] + l[i] as usize].push(i as u32);
+        }
+    }
+    // entropy of cluster C against base clustering t':
+    //   H_{t'}(C) = −Σ_j p_j log2 p_j,  p_j = |C ∩ C'_j| / |C|
+    let mut eci = vec![0.0f64; kc];
+    for (c, mem) in members.iter().enumerate() {
+        if mem.is_empty() {
+            continue;
+        }
+        let mut h = 0.0;
+        for l in &ens.labelings {
+            let mut counts: std::collections::HashMap<u32, usize> = std::collections::HashMap::new();
+            for &i in mem {
+                *counts.entry(l[i as usize]).or_insert(0) += 1;
+            }
+            for (_, &cnt) in counts.iter() {
+                let p = cnt as f64 / mem.len() as f64;
+                h -= p * p.log2();
+            }
+        }
+        eci[c] = (-h / (theta * m as f64)).exp();
+    }
+    eci
+}
+
+/// Run LWGP: ECI-weighted bipartite graph + transfer cut.
+pub fn lwgp(ens: &Ensemble, k: usize, seed: u64) -> Result<ClusteringOutput> {
+    ensure_arg!(ens.m() >= 1, "lwgp: empty ensemble");
+    let n = ens.n();
+    ensure_arg!(k >= 1 && k <= n, "lwgp: bad k");
+    let mut timer = PhaseTimer::new();
+    let eci = timer.time("eci", || cluster_eci(ens, 0.4));
+    let b = timer.time("weighted_graph", || {
+        let raw = ens.incidence();
+        // scale column j by ECI_j
+        let mut vals = raw.values.clone();
+        for (v, c) in vals.iter_mut().zip(raw.indices.iter()) {
+            *v *= eci[*c as usize].max(1e-9);
+        }
+        Csr { rows: raw.rows, cols: raw.cols, indptr: raw.indptr, indices: raw.indices, values: vals }
+    });
+    ensure_arg!(k <= b.cols, "lwgp: k > total clusters");
+    let tc = timer.time("transfer_cut", || transfer_cut(&b, k, EigSolver::Auto, seed))?;
+    let mut emb = tc.embedding.clone();
+    crate::bipartite::row_normalize(&mut emb);
+    let km = timer.time("discretize", || {
+        kmeans(&emb, &KmeansParams { k, max_iter: 100, ..Default::default() }, seed ^ 0x1)
+    })?;
+    Ok(ClusteringOutput::new(km.labels, timer))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::two_moons;
+    use crate::ensemble_baselines::generate_kmeans_ensemble;
+    use crate::metrics::nmi;
+
+    #[test]
+    fn eci_rewards_consistent_clusters() {
+        let mut ens = Ensemble::default();
+        // cluster {0,1,2} reproduced identically in both clusterings,
+        // objects 3..6 split inconsistently
+        ens.push(vec![0, 0, 0, 1, 1, 2, 2]);
+        ens.push(vec![0, 0, 0, 1, 2, 1, 2]);
+        let eci = cluster_eci(&ens, 0.4);
+        // cluster 0 of base 0 (cols 0) is perfectly stable -> ECI = 1
+        assert!((eci[0] - 1.0).abs() < 1e-12, "{:?}", eci);
+        // the noisy clusters have lower ECI
+        assert!(eci[1] < 1.0);
+    }
+
+    #[test]
+    fn perfect_ensemble_recovered() {
+        let truth = vec![0u32, 0, 0, 1, 1, 1, 2, 2, 2];
+        let mut ens = Ensemble::default();
+        for _ in 0..4 {
+            ens.push(truth.clone());
+        }
+        let out = lwgp(&ens, 3, 5).unwrap();
+        assert!((nmi(&out.labels, &truth) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn strong_consensus_on_moons() {
+        // LWGP is the strongest baseline in Table 7; expect a solid score.
+        let ds = two_moons(500, 0.06, 4);
+        let ens = generate_kmeans_ensemble(&ds.x, 10, 6, 14, 5).unwrap();
+        let out = lwgp(&ens, 2, 9).unwrap();
+        let score = nmi(&out.labels, &ds.y);
+        assert!(score > 0.4, "nmi={score}");
+    }
+}

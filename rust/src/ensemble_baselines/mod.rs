@@ -1,0 +1,145 @@
+//! The seven baseline ensemble-clustering methods of the paper's §4.4
+//! (Tables 7–9): EAC, WCT, KCC, PTGP, ECC, SEC, LWGP. All consume an
+//! [`Ensemble`] of base clusterings; following the baselines' own papers
+//! (and the paper's experimental protocol), their ensembles are generated
+//! by k-means with per-clusterer random k ∈ [k_min, k_max].
+
+pub mod linkage;
+pub mod coassoc;
+pub mod eac;
+pub mod wct;
+pub mod kcc;
+pub mod ecc;
+pub mod sec;
+pub mod ptgp;
+pub mod lwgp;
+pub mod strehl;
+
+use crate::kmeans::{kmeans, KmeansParams};
+use crate::linalg::Mat;
+use crate::usenc::{draw_base_k, Ensemble};
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// Identifier for every method in Tables 7–9.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EnsembleMethod {
+    Eac,
+    Wct,
+    Kcc,
+    Ptgp,
+    Ecc,
+    Sec,
+    Lwgp,
+    Usenc,
+}
+
+impl EnsembleMethod {
+    pub const ALL: [EnsembleMethod; 8] = [
+        EnsembleMethod::Eac,
+        EnsembleMethod::Wct,
+        EnsembleMethod::Kcc,
+        EnsembleMethod::Ptgp,
+        EnsembleMethod::Ecc,
+        EnsembleMethod::Sec,
+        EnsembleMethod::Lwgp,
+        EnsembleMethod::Usenc,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EnsembleMethod::Eac => "EAC",
+            EnsembleMethod::Wct => "WCT",
+            EnsembleMethod::Kcc => "KCC",
+            EnsembleMethod::Ptgp => "PTGP",
+            EnsembleMethod::Ecc => "ECC",
+            EnsembleMethod::Sec => "SEC",
+            EnsembleMethod::Lwgp => "LWGP",
+            EnsembleMethod::Usenc => "U-SENC",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<EnsembleMethod> {
+        EnsembleMethod::ALL.iter().copied().find(|m| m.name().eq_ignore_ascii_case(s))
+    }
+
+    /// Peak-memory model (bytes) at problem size n with ensemble size m and
+    /// k_c total base clusters. EAC/WCT materialize the N×N co-association
+    /// (the paper's N/A cut-off above MNIST); the rest are O(N·(m+k_c)).
+    pub fn peak_memory_bytes(&self, n: u64, d: u64, m: u64, kc: u64) -> u64 {
+        let f = 8u64;
+        match self {
+            EnsembleMethod::Eac | EnsembleMethod::Wct => f * n * n + f * n * d,
+            // sparse incidence (m non-zeros/row) + k_c-wide centroid table
+            EnsembleMethod::Kcc | EnsembleMethod::Ecc | EnsembleMethod::Sec => {
+                f * n * m + f * kc * 64 + f * n * d
+            }
+            EnsembleMethod::Ptgp => f * n * (m + 4) + f * n * d, // microcluster-side is ≪ N
+            EnsembleMethod::Lwgp => f * n * (m + 4) + f * n * d,
+            EnsembleMethod::Usenc => {
+                let sp = 32u64; // √p at p=1000
+                f * n * (sp + m) + f * n * d
+            }
+        }
+    }
+}
+
+/// Generate an ensemble of `m` k-means base clusterings with random
+/// kⁱ ∈ [k_min, k_max] — the base-clusterer protocol of all seven baseline
+/// papers (paper §4.2, last bullet).
+pub fn generate_kmeans_ensemble(
+    x: &Mat,
+    m: usize,
+    k_min: usize,
+    k_max: usize,
+    seed: u64,
+) -> Result<Ensemble> {
+    let mut rng = Rng::new(seed);
+    let mut ens = Ensemble::default();
+    for i in 0..m {
+        let ki = draw_base_k(&mut rng, k_min, k_max, x.rows);
+        let r = kmeans(
+            x,
+            &KmeansParams { k: ki, max_iter: 30, tol: 1e-3, ..Default::default() },
+            rng.fork(i as u64).next_u64(),
+        )?;
+        ens.push(r.labels);
+    }
+    Ok(ens)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::two_moons;
+
+    #[test]
+    fn kmeans_ensemble_shape() {
+        let ds = two_moons(300, 0.05, 1);
+        let ens = generate_kmeans_ensemble(&ds.x, 5, 4, 9, 7).unwrap();
+        assert_eq!(ens.m(), 5);
+        assert_eq!(ens.n(), 300);
+        for k in ens.ks() {
+            assert!((4..=9).contains(&k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn memory_model_na_pattern() {
+        // EAC/WCT: fit MNIST (70k), fail Covertype (581k) — Table 7.
+        let budget = 64u64 * (1 << 30);
+        assert!(EnsembleMethod::Eac.peak_memory_bytes(70_000, 784, 20, 800) <= budget);
+        assert!(EnsembleMethod::Wct.peak_memory_bytes(581_012, 54, 20, 800) > budget);
+        // everything else fits Flower-20M
+        for m in [
+            EnsembleMethod::Kcc,
+            EnsembleMethod::Ptgp,
+            EnsembleMethod::Ecc,
+            EnsembleMethod::Sec,
+            EnsembleMethod::Lwgp,
+            EnsembleMethod::Usenc,
+        ] {
+            assert!(m.peak_memory_bytes(20_000_000, 2, 20, 800) <= budget, "{}", m.name());
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! **PTGP** — Probability Trajectory based Graph Partitioning (Huang et
+//! al., TKDE'16). Objects with identical ensemble label vectors collapse
+//! into *microclusters* (N → N′ ≪ N); the microcluster co-association is
+//! sparsified to each row's elite neighbors; probability trajectories are
+//! random-walk rows [P¹ … P^L] whose similarity (PTS) feeds a normalized-
+//! cut partition of the microclusters, mapped back to objects.
+
+use crate::baselines::ClusteringOutput;
+use crate::kmeans::{kmeans, KmeansParams};
+use crate::linalg::DMat;
+use crate::usenc::Ensemble;
+use crate::util::timer::PhaseTimer;
+use crate::{ensure_arg, Result};
+use std::collections::HashMap;
+
+/// Microcluster decomposition: groups of objects sharing the exact same
+/// label across every base clustering. Returns (object→micro id, sizes).
+pub fn microclusters(ens: &Ensemble) -> (Vec<u32>, Vec<u32>) {
+    microclusters_prefix(ens, ens.m())
+}
+
+/// Microclusters keyed on the first `prefix` base clusterings only.
+fn microclusters_prefix(ens: &Ensemble, prefix: usize) -> (Vec<u32>, Vec<u32>) {
+    let n = ens.n();
+    let prefix = prefix.clamp(1, ens.m());
+    let mut map: HashMap<Vec<u32>, u32> = HashMap::new();
+    let mut assign = vec![0u32; n];
+    let mut sizes: Vec<u32> = Vec::new();
+    for i in 0..n {
+        let key: Vec<u32> = ens.labelings[..prefix].iter().map(|l| l[i]).collect();
+        let next = map.len() as u32;
+        let id = *map.entry(key).or_insert_with(|| {
+            sizes.push(0);
+            next
+        });
+        sizes[id as usize] += 1;
+        assign[i] = id;
+    }
+    (assign, sizes)
+}
+
+/// Granularity control (the PTGP paper's N′ ≪ N assumption): pick the
+/// longest base-clustering prefix whose microcluster count stays ≤ `cap`,
+/// so the dense N′×N′ trajectory machinery stays tractable.
+pub fn microclusters_capped(ens: &Ensemble, cap: usize) -> (Vec<u32>, Vec<u32>) {
+    let mut best = microclusters_prefix(ens, 1);
+    for prefix in 2..=ens.m() {
+        let cand = microclusters_prefix(ens, prefix);
+        if cand.1.len() > cap {
+            break;
+        }
+        best = cand;
+    }
+    best
+}
+
+/// Micro-level co-association (N′×N′) weighted by the base clusterings.
+fn micro_coassociation(ens: &Ensemble, assign: &[u32], n_micro: usize) -> DMat {
+    // representative label vector per microcluster
+    let mut rep = vec![usize::MAX; n_micro];
+    for (i, &a) in assign.iter().enumerate() {
+        if rep[a as usize] == usize::MAX {
+            rep[a as usize] = i;
+        }
+    }
+    let m = ens.m();
+    let mut c = DMat::zeros(n_micro, n_micro);
+    for a in 0..n_micro {
+        for b in 0..n_micro {
+            let (ia, ib) = (rep[a], rep[b]);
+            let mut same = 0usize;
+            for l in &ens.labelings {
+                if l[ia] == l[ib] {
+                    same += 1;
+                }
+            }
+            c.set(a, b, same as f64 / m as f64);
+        }
+    }
+    c
+}
+
+/// Probability-trajectory similarity over the elite-neighbor random walk.
+/// `top_t`: elite neighbors kept per row; `walk_len`: trajectory length L.
+pub fn pts_similarity(coassoc: &DMat, sizes: &[u32], top_t: usize, walk_len: usize) -> DMat {
+    let n = coassoc.rows;
+    // sparsify: keep top_t entries per row (off-diagonal), weight by target size
+    let mut p = DMat::zeros(n, n);
+    for i in 0..n {
+        let row: Vec<f64> = (0..n)
+            .map(|j| if j == i { f64::NEG_INFINITY } else { coassoc.at(i, j) * sizes[j] as f64 })
+            .collect();
+        let keys: Vec<f64> = row.iter().map(|&v| -v).collect();
+        let keep = crate::util::argmin_k(&keys, top_t.min(n.saturating_sub(1)));
+        let mut s = 0.0;
+        for &j in &keep {
+            if row[j] > 0.0 {
+                s += row[j];
+            }
+        }
+        if s <= 0.0 {
+            p.set(i, i, 1.0);
+            continue;
+        }
+        for &j in &keep {
+            if row[j] > 0.0 {
+                p.set(i, j, row[j] / s);
+            }
+        }
+    }
+    // trajectories: rows of [P, P², ..., P^L]
+    let mut traj: Vec<DMat> = Vec::with_capacity(walk_len);
+    let mut cur = p.clone();
+    traj.push(cur.clone());
+    for _ in 1..walk_len {
+        cur = cur.matmul(&p);
+        traj.push(cur.clone());
+    }
+    // PTS = cosine similarity of concatenated trajectory rows
+    let mut sim = DMat::zeros(n, n);
+    let norms: Vec<f64> = (0..n)
+        .map(|i| {
+            traj.iter()
+                .map(|t| t.row(i).iter().map(|v| v * v).sum::<f64>())
+                .sum::<f64>()
+                .sqrt()
+                .max(1e-12)
+        })
+        .collect();
+    for i in 0..n {
+        for j in 0..=i {
+            let mut dot = 0.0;
+            for t in &traj {
+                let (ri, rj) = (t.row(i), t.row(j));
+                for q in 0..n {
+                    dot += ri[q] * rj[q];
+                }
+            }
+            let v = dot / (norms[i] * norms[j]);
+            sim.set(i, j, v);
+            sim.set(j, i, v);
+        }
+    }
+    sim
+}
+
+/// Run PTGP.
+pub fn ptgp(ens: &Ensemble, k: usize, seed: u64) -> Result<ClusteringOutput> {
+    ensure_arg!(ens.m() >= 1, "ptgp: empty ensemble");
+    let n = ens.n();
+    ensure_arg!(k >= 1 && k <= n, "ptgp: bad k");
+    let mut timer = PhaseTimer::new();
+    let (assign, sizes) = timer.time("microclusters", || microclusters_capped(ens, 2000));
+    let n_micro = sizes.len();
+    if n_micro <= k {
+        // each microcluster its own consensus cluster (degenerate but valid)
+        let labels: Vec<u32> = assign.iter().map(|&a| a.min(k as u32 - 1)).collect();
+        return Ok(ClusteringOutput::new(labels, timer));
+    }
+    let coassoc = timer.time("micro_coassoc", || micro_coassociation(ens, &assign, n_micro));
+    let sim = timer.time("pts", || {
+        let top_t = (n_micro / 10).clamp(3, 40);
+        pts_similarity(&coassoc, &sizes, top_t, 3)
+    });
+    // normalized-cut partition of the microcluster similarity graph,
+    // size-weighted so big microclusters count proportionally.
+    let labels_micro = timer.time("partition", || -> Result<Vec<u32>> {
+        let mut w = sim.clone();
+        for i in 0..n_micro {
+            for j in 0..n_micro {
+                let v = w.at(i, j) * (sizes[i] as f64).sqrt() * (sizes[j] as f64).sqrt();
+                w.set(i, j, v);
+            }
+            let d = w.at(i, i).max(1e-9);
+            w.set(i, i, d);
+        }
+        let emb = crate::bipartite::ncut_embedding(&w, k)?;
+        let km = kmeans(
+            &emb.to_f32(),
+            &KmeansParams { k, max_iter: 100, ..Default::default() },
+            seed,
+        )?;
+        Ok(km.labels)
+    })?;
+    let labels: Vec<u32> = assign.iter().map(|&a| labels_micro[a as usize]).collect();
+    Ok(ClusteringOutput::new(labels, timer))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::two_moons;
+    use crate::ensemble_baselines::generate_kmeans_ensemble;
+    use crate::metrics::nmi;
+
+    #[test]
+    fn microclusters_group_identical_rows() {
+        let mut ens = Ensemble::default();
+        ens.push(vec![0, 0, 1, 1, 1]);
+        ens.push(vec![0, 0, 0, 1, 1]);
+        let (assign, sizes) = microclusters(&ens);
+        assert_eq!(assign[0], assign[1]);
+        assert_ne!(assign[1], assign[2]);
+        assert_eq!(assign[3], assign[4]);
+        assert_eq!(sizes.iter().sum::<u32>(), 5);
+        assert_eq!(sizes.len(), 3);
+    }
+
+    #[test]
+    fn perfect_ensemble_recovered() {
+        let truth = vec![0u32, 0, 0, 1, 1, 1, 2, 2, 2];
+        let mut ens = Ensemble::default();
+        for _ in 0..4 {
+            ens.push(truth.clone());
+        }
+        let out = ptgp(&ens, 3, 3).unwrap();
+        assert!((nmi(&out.labels, &truth) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn consensus_on_moons() {
+        let ds = two_moons(400, 0.06, 3);
+        let ens = generate_kmeans_ensemble(&ds.x, 10, 6, 12, 5).unwrap();
+        let out = ptgp(&ens, 2, 7).unwrap();
+        let score = nmi(&out.labels, &ds.y);
+        assert!(score > 0.3, "nmi={score}");
+    }
+
+    #[test]
+    fn pts_rows_unit_self_similarity() {
+        let mut ens = Ensemble::default();
+        ens.push(vec![0, 0, 1, 1, 2, 2]);
+        ens.push(vec![0, 1, 1, 2, 2, 0]);
+        let (assign, sizes) = microclusters(&ens);
+        let c = micro_coassociation(&ens, &assign, sizes.len());
+        let s = pts_similarity(&c, &sizes, 3, 2);
+        for i in 0..sizes.len() {
+            assert!((s.at(i, i) - 1.0).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,77 @@
+//! **SEC** — Spectral Ensemble Clustering (Liu et al., TKDE'17): spectral
+//! clustering of the co-association matrix, shown by the original paper to
+//! be equivalent to weighted k-means over rows of the (degree-normalized)
+//! incidence matrix — which is how we realize it, avoiding the N×N
+//! co-association entirely.
+
+use crate::baselines::ClusteringOutput;
+use crate::kmeans::{kmeans, KmeansParams};
+use crate::linalg::Mat;
+use crate::usenc::Ensemble;
+use crate::util::timer::PhaseTimer;
+use crate::{ensure_arg, Result};
+
+/// Spectral-normalized incidence: column j of B̃ scaled by 1/√(col_sum_j)
+/// (the D_C^{-1/2} normalization of the co-association's normalized cut).
+pub fn normalized_incidence(ens: &Ensemble) -> Mat {
+    let b = ens.incidence();
+    let col = b.col_sums();
+    let scale: Vec<f32> =
+        col.iter().map(|&s| if s > 0.0 { (1.0 / s.sqrt()) as f32 } else { 0.0 }).collect();
+    let mut x = Mat::zeros(b.rows, b.cols);
+    for i in 0..b.rows {
+        let (cols, vals) = b.row(i);
+        for (c, v) in cols.iter().zip(vals) {
+            x.set(i, *c as usize, *v as f32 * scale[*c as usize]);
+        }
+    }
+    x
+}
+
+/// Run SEC.
+pub fn sec(ens: &Ensemble, k: usize, seed: u64) -> Result<ClusteringOutput> {
+    ensure_arg!(ens.m() >= 1, "sec: empty ensemble");
+    ensure_arg!(k >= 1 && k <= ens.n(), "sec: bad k");
+    let mut timer = PhaseTimer::new();
+    let x = timer.time("normalize", || normalized_incidence(ens));
+    let km = timer.time("weighted_kmeans", || {
+        kmeans(&x, &KmeansParams { k, max_iter: 100, ..Default::default() }, seed)
+    })?;
+    Ok(ClusteringOutput::new(km.labels, timer))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::two_moons;
+    use crate::ensemble_baselines::generate_kmeans_ensemble;
+    use crate::metrics::nmi;
+
+    #[test]
+    fn perfect_ensemble_recovered() {
+        let truth = vec![0u32, 0, 0, 0, 1, 1, 1, 1, 1, 1];
+        let mut ens = Ensemble::default();
+        for _ in 0..4 {
+            ens.push(truth.clone());
+        }
+        let out = sec(&ens, 2, 3).unwrap();
+        assert!((nmi(&out.labels, &truth) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn column_normalization_downweights_big_clusters() {
+        let mut ens = Ensemble::default();
+        ens.push(vec![0, 0, 0, 0, 0, 0, 0, 1]); // heavily imbalanced base
+        let x = normalized_incidence(&ens);
+        assert!(x.at(7, 1) > x.at(0, 0)); // small cluster gets larger weight
+    }
+
+    #[test]
+    fn runs_on_kmeans_ensemble() {
+        let ds = two_moons(300, 0.06, 2);
+        let ens = generate_kmeans_ensemble(&ds.x, 8, 5, 10, 7).unwrap();
+        let out = sec(&ens, 2, 9).unwrap();
+        let score = nmi(&out.labels, &ds.y);
+        assert!(score >= 0.0 && out.labels.len() == 300);
+    }
+}

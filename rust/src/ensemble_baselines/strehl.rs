@@ -1,0 +1,292 @@
+//! The three hypergraph consensus functions of Strehl & Ghosh (JMLR'03,
+//! ref. [18] of the paper): **CSPA**, **HGPA**, and **MCLA**. All three
+//! reduce ensemble consensus to a graph partitioning problem solved here
+//! by the multilevel partitioner in [`crate::graphpart`] (the original
+//! implementations call METIS/hMETIS, ref. [23]).
+//!
+//! These are provided beyond the paper's own baseline set (Tables 7–9) for
+//! the consensus-function ablation bench (`ablation_consensus`): the same
+//! U-SPEC ensembles fused by the bipartite transfer cut (U-SENC) versus
+//! the classic hypergraph family.
+
+use crate::graphpart::{partition, Graph, PartitionParams};
+use crate::usenc::Ensemble;
+use crate::{ensure_arg, Result};
+
+/// CSPA — cluster-based similarity partitioning. Builds the N×N
+/// co-association similarity and partitions its graph with METIS-style
+/// k-way partitioning. O(N²·m) time and O(N²) memory: like EAC/WCT it is
+/// infeasible past ~10⁵ objects (which is exactly why the paper's
+/// consensus operates on the N×k_c bipartite graph instead).
+pub fn cspa(ens: &Ensemble, k: usize, seed: u64) -> Result<Vec<u32>> {
+    ensure_arg!(ens.m() >= 1, "cspa: empty ensemble");
+    let n = ens.n();
+    ensure_arg!(k >= 1 && k <= n, "cspa: bad k={k} for n={n}");
+    let co = super::coassoc::coassociation(ens);
+    let mut edges = Vec::new();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let w = co.at(i, j);
+            if w > 0.0 {
+                edges.push((i as u32, j as u32, w));
+            }
+        }
+    }
+    let g = Graph::from_edges(n, &edges);
+    partition(&g, k, &PartitionParams::default(), seed)
+}
+
+/// HGPA — hypergraph partitioning. Each cluster in the ensemble is a
+/// hyperedge over its members; the minimum hyperedge cut with balanced
+/// parts is approximated via the standard *star expansion*: one auxiliary
+/// vertex per hyperedge connected to its members with weight 1/|C|, and
+/// (near-)zero vertex weight so balance is computed over objects only.
+pub fn hgpa(ens: &Ensemble, k: usize, seed: u64) -> Result<Vec<u32>> {
+    ensure_arg!(ens.m() >= 1, "hgpa: empty ensemble");
+    let n = ens.n();
+    ensure_arg!(k >= 1 && k <= n, "hgpa: bad k={k} for n={n}");
+    let b = ens.incidence();
+    let kc = b.cols;
+    // vertices: 0..n objects, n..n+kc hyperedge stars
+    let mut sizes = vec![0usize; kc];
+    for idx in &b.indices {
+        sizes[*idx as usize] += 1;
+    }
+    let mut edges = Vec::with_capacity(b.nnz());
+    for i in 0..n {
+        let (cols, _) = b.row(i);
+        for &c in cols {
+            let sz = sizes[c as usize].max(1);
+            edges.push((i as u32, (n + c as usize) as u32, 1.0 / sz as f64));
+        }
+    }
+    let mut g = Graph::from_edges(n + kc, &edges);
+    for v in n..n + kc {
+        g.vwgt[v] = 1e-6; // stars are (almost) weightless for balance
+    }
+    let part = partition(&g, k, &PartitionParams::default(), seed)?;
+    Ok(part[..n].to_vec())
+}
+
+/// MCLA — meta-clustering. Clusters become vertices of a meta-graph with
+/// binary-Jaccard edge weights; the meta-graph is partitioned into k
+/// meta-clusters; each object joins the meta-cluster in which it
+/// participates most strongly (average incidence, ties → lower id).
+pub fn mcla(ens: &Ensemble, k: usize, seed: u64) -> Result<Vec<u32>> {
+    ensure_arg!(ens.m() >= 1, "mcla: empty ensemble");
+    let n = ens.n();
+    ensure_arg!(k >= 1 && k <= n, "mcla: bad k={k} for n={n}");
+    let b = ens.incidence();
+    let kc = b.cols;
+    ensure_arg!(k <= kc, "mcla: k={k} > total clusters {kc}");
+    // cluster membership lists
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); kc];
+    for i in 0..n {
+        let (cols, _) = b.row(i);
+        for &c in cols {
+            members[c as usize].push(i as u32);
+        }
+    }
+    // pairwise Jaccard between clusters (via sorted-list intersection)
+    let mut edges = Vec::new();
+    for a in 0..kc {
+        for c in (a + 1)..kc {
+            let inter = intersect_count(&members[a], &members[c]);
+            if inter == 0 {
+                continue;
+            }
+            let union = members[a].len() + members[c].len() - inter;
+            edges.push((a as u32, c as u32, inter as f64 / union as f64));
+        }
+    }
+    let mut g = Graph::from_edges(kc, &edges);
+    // meta-graph vertex weight = cluster size (balances object mass)
+    for c in 0..kc {
+        g.vwgt[c] = members[c].len().max(1) as f64;
+    }
+    let meta = partition(&g, k, &PartitionParams::default(), seed)?;
+    // association strength of each object with each meta-cluster
+    let mut meta_sizes = vec![0usize; k];
+    for &p in &meta {
+        meta_sizes[p as usize] += 1;
+    }
+    let mut labels = vec![0u32; n];
+    let mut assoc = vec![0.0f64; k];
+    for i in 0..n {
+        for a in assoc.iter_mut() {
+            *a = 0.0;
+        }
+        let (cols, _) = b.row(i);
+        for &c in cols {
+            let p = meta[c as usize] as usize;
+            assoc[p] += 1.0 / meta_sizes[p].max(1) as f64;
+        }
+        let best = assoc
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(&a.0)))
+            .map(|(p, _)| p)
+            .unwrap_or(0);
+        labels[i] = best as u32;
+    }
+    Ok(labels)
+}
+
+/// HBGF — hybrid bipartite graph formulation (Fern & Brodley, ICML'04,
+/// ref. [22]): objects AND clusters are vertices of one bipartite graph
+/// (edge (x, C) = 1 iff x ∈ C) partitioned jointly by METIS-style k-way
+/// partitioning; the object labels are read off the joint partition.
+/// This is the *graph-partitioning* counterpart of the paper's spectral
+/// transfer cut over the same graph.
+pub fn hbgf(ens: &Ensemble, k: usize, seed: u64) -> Result<Vec<u32>> {
+    ensure_arg!(ens.m() >= 1, "hbgf: empty ensemble");
+    let n = ens.n();
+    ensure_arg!(k >= 1 && k <= n, "hbgf: bad k={k} for n={n}");
+    let b = ens.incidence();
+    let kc = b.cols;
+    let mut edges = Vec::with_capacity(b.nnz());
+    for i in 0..n {
+        let (cols, _) = b.row(i);
+        for &c in cols {
+            edges.push((i as u32, (n + c as usize) as u32, 1.0));
+        }
+    }
+    let mut g = Graph::from_edges(n + kc, &edges);
+    // Fern & Brodley balance over objects; cluster vertices carry the mass
+    // of their members on the other side — weight both sides equally.
+    for v in n..n + kc {
+        g.vwgt[v] = 1e-6;
+    }
+    let part = partition(&g, k, &PartitionParams::default(), seed)?;
+    Ok(part[..n].to_vec())
+}
+
+/// Sorted-slice intersection size.
+fn intersect_count(a: &[u32], b: &[u32]) -> usize {
+    let (mut i, mut j, mut c) = (0, 0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                c += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::two_moons;
+    use crate::ensemble_baselines::generate_kmeans_ensemble;
+    use crate::metrics::nmi;
+
+    /// A clean 3-cluster ensemble where all bases agree.
+    fn agreeing_ensemble(n_per: usize, m: usize) -> (Ensemble, Vec<u32>) {
+        let truth: Vec<u32> =
+            (0..3 * n_per).map(|i| (i / n_per) as u32).collect();
+        let mut ens = Ensemble::default();
+        for _ in 0..m {
+            ens.push(truth.clone());
+        }
+        (ens, truth)
+    }
+
+    #[test]
+    fn all_recover_unanimous_ensemble() {
+        let (ens, truth) = agreeing_ensemble(30, 4);
+        for (name, f) in [
+            ("cspa", cspa as fn(&Ensemble, usize, u64) -> Result<Vec<u32>>),
+            ("hgpa", hgpa),
+            ("mcla", mcla),
+            ("hbgf", hbgf),
+        ] {
+            let labels = f(&ens, 3, 7).unwrap();
+            let score = nmi(&labels, &truth);
+            assert!(score > 0.99, "{name}: nmi={score}");
+        }
+    }
+
+    /// Three far-apart Gaussian blobs: k-means with k∈[4,8] over-clusters,
+    /// but fragments never span blobs, so every consensus function must
+    /// reassemble the blobs exactly.
+    fn blobs(n_per: usize, seed: u64) -> (crate::linalg::Mat, Vec<u32>) {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let centers = [(0.0, 0.0), (25.0, 0.0), (0.0, 25.0)];
+        let n = 3 * n_per;
+        let mut x = crate::linalg::Mat::zeros(n, 2);
+        let mut y = vec![0u32; n];
+        for i in 0..n {
+            let c = i / n_per;
+            y[i] = c as u32;
+            x.set(i, 0, (centers[c].0 + rng.normal()) as f32);
+            x.set(i, 1, (centers[c].1 + rng.normal()) as f32);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn consensus_on_kmeans_ensemble() {
+        let (x, y) = blobs(120, 11);
+        let ens = generate_kmeans_ensemble(&x, 8, 4, 8, 3).unwrap();
+        for (name, f) in [
+            ("cspa", cspa as fn(&Ensemble, usize, u64) -> Result<Vec<u32>>),
+            ("mcla", mcla),
+            ("hbgf", hbgf),
+            ("hgpa", hgpa),
+        ] {
+            let labels = f(&ens, 3, 5).unwrap();
+            let score = nmi(&labels, &y);
+            assert!(score > 0.8, "{name}: nmi={score}");
+            assert_eq!(labels.len(), 360);
+        }
+    }
+
+    #[test]
+    fn consensus_on_moons_uspec_ensemble_beats_random() {
+        // Nonlinear moons: fragments from k-means cross the moons, so the
+        // hypergraph family is *expected* to be weak here — this is exactly
+        // the gap U-SENC's diverse U-SPEC generation closes (ablation
+        // bench `ablation_consensus`). We only require valid output.
+        let ds = two_moons(300, 0.05, 11);
+        let ens = generate_kmeans_ensemble(&ds.x, 6, 4, 8, 3).unwrap();
+        for f in [cspa as fn(&Ensemble, usize, u64) -> Result<Vec<u32>>, mcla, hbgf] {
+            let labels = f(&ens, 2, 5).unwrap();
+            assert_eq!(labels.len(), 300);
+            assert!(labels.iter().all(|&l| l < 2));
+        }
+    }
+
+    #[test]
+    fn label_range_and_errors() {
+        let (ens, _) = agreeing_ensemble(10, 2);
+        let labels = mcla(&ens, 3, 1).unwrap();
+        assert!(labels.iter().all(|&l| l < 3));
+        assert!(cspa(&Ensemble::default(), 2, 1).is_err());
+        assert!(hgpa(&ens, 0, 1).is_err());
+        assert!(mcla(&ens, 31, 1).is_err()); // k > n
+    }
+
+    #[test]
+    fn intersect_count_basic() {
+        assert_eq!(intersect_count(&[1, 3, 5], &[2, 3, 5, 9]), 2);
+        assert_eq!(intersect_count(&[], &[1]), 0);
+        assert_eq!(intersect_count(&[7], &[7]), 1);
+    }
+
+    #[test]
+    fn mcla_jaccard_metagraph_sane() {
+        // two bases with identical partitions → their clusters pair up with
+        // Jaccard 1.0 and mcla reproduces the partition exactly.
+        let mut ens = Ensemble::default();
+        ens.push(vec![0, 0, 0, 1, 1, 1]);
+        ens.push(vec![1, 1, 1, 0, 0, 0]); // same partition, swapped labels
+        let labels = mcla(&ens, 2, 9).unwrap();
+        let truth = vec![0, 0, 0, 1, 1, 1];
+        assert!((nmi(&labels, &truth) - 1.0).abs() < 1e-9);
+    }
+}

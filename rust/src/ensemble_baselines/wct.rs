@@ -1,0 +1,162 @@
+//! **WCT** — Weighted Connected Triple (Iam-On et al., TPAMI'11): refines
+//! the co-association matrix with cluster-level link information. Two
+//! clusters that share many members with a common third cluster form a
+//! "connected triple"; object pairs that never co-occur still receive
+//! similarity through the WCT score of their host clusters.
+
+use super::linkage::average_linkage;
+use crate::baselines::ClusteringOutput;
+use crate::linalg::DMat;
+use crate::usenc::Ensemble;
+use crate::util::timer::PhaseTimer;
+use crate::{ensure_arg, Result};
+
+/// Cluster-level WCT similarity over all k_c clusters of the ensemble.
+/// wct(a, b) = Σ_c min(J(a,c), J(b,c)) / max_triple, J = Jaccard overlap.
+pub fn cluster_wct(ens: &Ensemble) -> DMat {
+    let b = ens.incidence();
+    let kc = b.cols;
+    let n = ens.n();
+    // membership sets per cluster (bitset-free: sorted vecs)
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); kc];
+    for i in 0..n {
+        for &c in b.row(i).0 {
+            members[c as usize].push(i as u32);
+        }
+    }
+    // pairwise Jaccard between clusters (k_c is small: Σkᵢ ≈ m·k̄)
+    let mut jac = DMat::zeros(kc, kc);
+    for a in 0..kc {
+        for c in (a + 1)..kc {
+            let inter = intersect_size(&members[a], &members[c]);
+            if inter == 0 {
+                continue;
+            }
+            let uni = members[a].len() + members[c].len() - inter;
+            let j = inter as f64 / uni as f64;
+            jac.set(a, c, j);
+            jac.set(c, a, j);
+        }
+    }
+    // connected-triple accumulation
+    let mut wct = DMat::zeros(kc, kc);
+    let mut maxv = 0.0f64;
+    for a in 0..kc {
+        for bq in (a + 1)..kc {
+            let mut s = 0.0;
+            for c in 0..kc {
+                if c != a && c != bq {
+                    s += jac.at(a, c).min(jac.at(bq, c));
+                }
+            }
+            wct.set(a, bq, s);
+            wct.set(bq, a, s);
+            maxv = maxv.max(s);
+        }
+    }
+    if maxv > 0.0 {
+        for v in wct.data.iter_mut() {
+            *v /= maxv;
+        }
+    }
+    wct
+}
+
+/// Refined co-association: pairs in the same cluster contribute 1; pairs in
+/// different clusters contribute `dc · wct` of their host clusters
+/// (dc = decay constant, 0.8 in the original paper).
+pub fn refined_coassociation(ens: &Ensemble, dc: f64) -> DMat {
+    let n = ens.n();
+    let m = ens.m();
+    let wct = cluster_wct(ens);
+    // per-base-clustering column offsets
+    let ks = ens.ks();
+    let mut offsets = vec![0usize; m];
+    let mut acc = 0;
+    for (i, &k) in ks.iter().enumerate() {
+        offsets[i] = acc;
+        acc += k;
+    }
+    let mut out = DMat::zeros(n, n);
+    let inv = 1.0 / m as f64;
+    crate::util::par::par_for_chunks(&mut out.data, n, |start, chunk| {
+        let i = start / n;
+        for (j, v) in chunk.iter_mut().enumerate() {
+            let mut s = 0.0;
+            for (t, l) in ens.labelings.iter().enumerate() {
+                if l[i] == l[j] {
+                    s += 1.0;
+                } else {
+                    let ca = offsets[t] + l[i] as usize;
+                    let cb = offsets[t] + l[j] as usize;
+                    s += dc * wct.at(ca, cb);
+                }
+            }
+            *v = s * inv;
+        }
+    });
+    out
+}
+
+/// Run WCT consensus.
+pub fn wct(ens: &Ensemble, k: usize) -> Result<ClusteringOutput> {
+    ensure_arg!(ens.m() >= 1, "wct: empty ensemble");
+    ensure_arg!(k >= 1 && k <= ens.n(), "wct: bad k");
+    let mut timer = PhaseTimer::new();
+    let c = timer.time("refined_coassoc", || refined_coassociation(ens, 0.8));
+    let labels = timer.time("linkage", || average_linkage(&c, k));
+    Ok(ClusteringOutput::new(labels, timer))
+}
+
+fn intersect_size(a: &[u32], b: &[u32]) -> usize {
+    let (mut i, mut j, mut c) = (0, 0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                c += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::two_moons;
+    use crate::ensemble_baselines::generate_kmeans_ensemble;
+    use crate::metrics::nmi;
+
+    #[test]
+    fn refined_at_least_plain_coassoc() {
+        let ds = two_moons(200, 0.06, 1);
+        let ens = generate_kmeans_ensemble(&ds.x, 6, 4, 8, 3).unwrap();
+        let plain = super::super::coassoc::coassociation(&ens);
+        let refined = refined_coassociation(&ens, 0.8);
+        for i in 0..200 {
+            for j in 0..200 {
+                assert!(refined.at(i, j) >= plain.at(i, j) - 1e-12);
+                assert!(refined.at(i, j) <= 1.0 + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn consensus_reasonable() {
+        let ds = two_moons(300, 0.06, 2);
+        let ens = generate_kmeans_ensemble(&ds.x, 8, 6, 12, 5).unwrap();
+        let out = wct(&ens, 2).unwrap();
+        let score = nmi(&out.labels, &ds.y);
+        assert!(score > 0.3, "nmi={score}");
+    }
+
+    #[test]
+    fn intersect_helper() {
+        assert_eq!(intersect_size(&[1, 3, 5], &[3, 4, 5, 6]), 2);
+        assert_eq!(intersect_size(&[], &[1]), 0);
+    }
+}

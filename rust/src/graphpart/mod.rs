@@ -1,0 +1,565 @@
+//! Multilevel k-way graph partitioning — a METIS-like substrate
+//! (Karypis & Kumar, SISC'98; ref. [23] of the paper).
+//!
+//! The paper's related work builds consensus clusterings by partitioning
+//! graphs derived from the ensemble: Strehl & Ghosh's CSPA/HGPA/MCLA [18]
+//! and Fern & Brodley's HBGF [22] all call METIS/hMETIS. This module
+//! provides that substrate: the classic three-phase multilevel scheme —
+//!
+//! 1. **Coarsening** by heavy-edge matching until the graph is small,
+//! 2. **Initial partitioning** by greedy (boundary-weighted) region
+//!    growing on the coarsest graph,
+//! 3. **Uncoarsening** with boundary Kernighan–Lin refinement at every
+//!    level (gain-driven single-vertex moves under a balance constraint).
+//!
+//! The objective is the weighted **edge cut** subject to vertex-weight
+//! balance `w(part) ≤ (1+ε)·w(V)/k`.
+
+use crate::util::rng::Rng;
+use crate::{ensure_arg, Result};
+
+/// Undirected weighted graph in CSR form with vertex weights.
+///
+/// Invariants: adjacency is symmetric (every edge stored in both
+/// directions), no self-loops, `xadj.len() == n+1`.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    /// CSR row pointers (n+1).
+    pub xadj: Vec<usize>,
+    /// Flattened neighbor lists.
+    pub adjncy: Vec<u32>,
+    /// Edge weights, parallel to `adjncy`.
+    pub adjwgt: Vec<f64>,
+    /// Vertex weights (n).
+    pub vwgt: Vec<f64>,
+}
+
+impl Graph {
+    /// Number of vertices.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.vwgt.len()
+    }
+
+    /// Neighbor slice of vertex `v`.
+    #[inline]
+    pub fn neighbors(&self, v: usize) -> (&[u32], &[f64]) {
+        let (lo, hi) = (self.xadj[v], self.xadj[v + 1]);
+        (&self.adjncy[lo..hi], &self.adjwgt[lo..hi])
+    }
+
+    /// Build a symmetric graph from an undirected edge list. Duplicate
+    /// edges are merged by summing weights; self-loops are dropped.
+    pub fn from_edges(n: usize, edges: &[(u32, u32, f64)]) -> Graph {
+        let mut adj: Vec<Vec<(u32, f64)>> = vec![Vec::new(); n];
+        for &(a, b, w) in edges {
+            if a == b || w <= 0.0 {
+                continue;
+            }
+            adj[a as usize].push((b, w));
+            adj[b as usize].push((a, w));
+        }
+        let mut xadj = Vec::with_capacity(n + 1);
+        let mut adjncy = Vec::new();
+        let mut adjwgt = Vec::new();
+        xadj.push(0);
+        for list in adj.iter_mut() {
+            list.sort_unstable_by_key(|&(c, _)| c);
+            let mut i = 0;
+            while i < list.len() {
+                let c = list[i].0;
+                let mut w = 0.0;
+                while i < list.len() && list[i].0 == c {
+                    w += list[i].1;
+                    i += 1;
+                }
+                adjncy.push(c);
+                adjwgt.push(w);
+            }
+            xadj.push(adjncy.len());
+        }
+        Graph { xadj, adjncy, adjwgt, vwgt: vec![1.0; n] }
+    }
+
+    /// Total vertex weight.
+    pub fn total_vwgt(&self) -> f64 {
+        self.vwgt.iter().sum()
+    }
+
+    /// Weighted edge cut of a partition (each cut edge counted once).
+    pub fn edge_cut(&self, part: &[u32]) -> f64 {
+        debug_assert_eq!(part.len(), self.n());
+        let mut cut = 0.0;
+        for v in 0..self.n() {
+            let (nbrs, wts) = self.neighbors(v);
+            for (u, w) in nbrs.iter().zip(wts) {
+                if part[v] != part[*u as usize] {
+                    cut += w;
+                }
+            }
+        }
+        cut / 2.0
+    }
+
+    /// Max part weight divided by the ideal `w(V)/k` (1.0 = perfectly
+    /// balanced).
+    pub fn imbalance(&self, part: &[u32], k: usize) -> f64 {
+        let mut pw = vec![0.0f64; k];
+        for (v, &p) in part.iter().enumerate() {
+            pw[p as usize] += self.vwgt[v];
+        }
+        let ideal = self.total_vwgt() / k as f64;
+        pw.iter().cloned().fold(0.0, f64::max) / ideal.max(1e-300)
+    }
+}
+
+/// Tuning parameters for [`partition`].
+#[derive(Debug, Clone)]
+pub struct PartitionParams {
+    /// Allowed imbalance ε: part weight ≤ (1+ε)·w(V)/k.
+    pub epsilon: f64,
+    /// Stop coarsening when the graph has at most `coarse_factor·k`
+    /// vertices.
+    pub coarse_factor: usize,
+    /// Refinement passes per level.
+    pub refine_passes: usize,
+    /// Independent initial-partition trials on the coarsest graph.
+    pub init_trials: usize,
+}
+
+impl Default for PartitionParams {
+    fn default() -> Self {
+        PartitionParams { epsilon: 0.10, coarse_factor: 30, refine_passes: 8, init_trials: 4 }
+    }
+}
+
+/// One coarsening level: the coarse graph plus the fine→coarse vertex map.
+struct Level {
+    graph: Graph,
+    /// `cmap[fine_v] = coarse_v` for the graph one level finer.
+    cmap: Vec<u32>,
+}
+
+/// Multilevel k-way partition of `g`. Returns per-vertex part labels in
+/// `0..k`.
+pub fn partition(g: &Graph, k: usize, params: &PartitionParams, seed: u64) -> Result<Vec<u32>> {
+    ensure_arg!(k >= 1, "partition: k must be >= 1");
+    let n = g.n();
+    ensure_arg!(n > 0, "partition: empty graph");
+    if k == 1 {
+        return Ok(vec![0; n]);
+    }
+    if k >= n {
+        // one vertex per part (extra parts stay empty)
+        return Ok((0..n).map(|v| v as u32).collect());
+    }
+    let mut rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15);
+
+    // ---- Phase 1: coarsen -------------------------------------------------
+    let target = (params.coarse_factor * k).max(32);
+    let mut levels: Vec<Level> = Vec::new();
+    let mut current = g.clone();
+    while current.n() > target {
+        let (coarse, cmap) = coarsen_hem(&current, &mut rng);
+        // Matching stalled (e.g. star graphs): stop coarsening.
+        if coarse.n() as f64 > 0.95 * current.n() as f64 {
+            break;
+        }
+        levels.push(Level { graph: current, cmap });
+        current = coarse;
+    }
+
+    // ---- Phase 2: initial partition on the coarsest graph -----------------
+    let mut best: Option<(f64, Vec<u32>)> = None;
+    for trial in 0..params.init_trials.max(1) {
+        let mut part = greedy_growing(&current, k, params.epsilon, rng.fork(trial as u64));
+        refine_fm(&current, &mut part, k, params.epsilon, params.refine_passes);
+        let cut = current.edge_cut(&part);
+        if best.as_ref().map(|(c, _)| cut < *c).unwrap_or(true) {
+            best = Some((cut, part));
+        }
+    }
+    let mut part = best.expect("at least one trial").1;
+
+    // ---- Phase 3: uncoarsen + refine ---------------------------------------
+    for level in levels.iter().rev() {
+        let fine_n = level.graph.n();
+        let mut fine_part = vec![0u32; fine_n];
+        for v in 0..fine_n {
+            fine_part[v] = part[level.cmap[v] as usize];
+        }
+        refine_fm(&level.graph, &mut fine_part, k, params.epsilon, params.refine_passes);
+        part = fine_part;
+    }
+    Ok(part)
+}
+
+/// Heavy-edge matching coarsening: visit vertices in random order, match
+/// each unmatched vertex to its unmatched neighbor with the heaviest edge
+/// (or leave it solo), then contract matched pairs.
+fn coarsen_hem(g: &Graph, rng: &mut Rng) -> (Graph, Vec<u32>) {
+    let n = g.n();
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    const UNMATCHED: u32 = u32::MAX;
+    let mut mate = vec![UNMATCHED; n];
+    for &v in &order {
+        if mate[v] != UNMATCHED {
+            continue;
+        }
+        let (nbrs, wts) = g.neighbors(v);
+        let mut best = UNMATCHED;
+        let mut best_w = f64::NEG_INFINITY;
+        for (u, w) in nbrs.iter().zip(wts) {
+            let u = *u as usize;
+            if mate[u] == UNMATCHED && u != v && *w > best_w {
+                best_w = *w;
+                best = u as u32;
+            }
+        }
+        if best != UNMATCHED {
+            mate[v] = best;
+            mate[best as usize] = v as u32;
+        } else {
+            mate[v] = v as u32; // solo
+        }
+    }
+    // Assign coarse ids (the lower endpoint of each pair owns the id).
+    let mut cmap = vec![u32::MAX; n];
+    let mut next = 0u32;
+    for v in 0..n {
+        if cmap[v] != u32::MAX {
+            continue;
+        }
+        let m = mate[v] as usize;
+        cmap[v] = next;
+        cmap[m] = next; // m == v for solo vertices
+        next += 1;
+    }
+    let cn = next as usize;
+    // Contract: coarse vertex weights and merged edge lists.
+    let mut cvwgt = vec![0.0f64; cn];
+    for v in 0..n {
+        cvwgt[cmap[v] as usize] += g.vwgt[v];
+    }
+    // Accumulate coarse edges with a per-coarse-vertex scatter map.
+    let mut xadj = Vec::with_capacity(cn + 1);
+    let mut adjncy: Vec<u32> = Vec::with_capacity(g.adjncy.len() / 2 + cn);
+    let mut adjwgt: Vec<f64> = Vec::with_capacity(g.adjncy.len() / 2 + cn);
+    let mut touch_pos = vec![usize::MAX; cn]; // coarse nbr -> slot in this row
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); cn];
+    for v in 0..n {
+        members[cmap[v] as usize].push(v as u32);
+    }
+    xadj.push(0);
+    for cv in 0..cn {
+        let row_start = adjncy.len();
+        for &v in &members[cv] {
+            let (nbrs, wts) = g.neighbors(v as usize);
+            for (u, w) in nbrs.iter().zip(wts) {
+                let cu = cmap[*u as usize] as usize;
+                if cu == cv {
+                    continue; // contracted edge disappears
+                }
+                if touch_pos[cu] == usize::MAX || touch_pos[cu] < row_start {
+                    touch_pos[cu] = adjncy.len();
+                    adjncy.push(cu as u32);
+                    adjwgt.push(*w);
+                } else {
+                    adjwgt[touch_pos[cu]] += *w;
+                }
+            }
+        }
+        xadj.push(adjncy.len());
+    }
+    (Graph { xadj, adjncy, adjwgt, vwgt: cvwgt }, cmap)
+}
+
+/// Greedy graph growing: seed k regions at random vertices, repeatedly
+/// attach the unassigned vertex with the strongest connection to any
+/// under-capacity region. Unreachable leftovers go to the lightest part.
+fn greedy_growing(g: &Graph, k: usize, epsilon: f64, mut rng: Rng) -> Vec<u32> {
+    let n = g.n();
+    let cap = (1.0 + epsilon) * g.total_vwgt() / k as f64;
+    const UNASSIGNED: u32 = u32::MAX;
+    let mut part = vec![UNASSIGNED; n];
+    let mut pw = vec![0.0f64; k];
+    // gain[v] = (best part, connection weight) among under-capacity parts
+    // maintained lazily through a simple priority scan (coarsest graph is
+    // small — O(n²·k) here is cheap and robust).
+    let seeds = rng.sample_indices(n, k.min(n));
+    for (p, &s) in seeds.iter().enumerate() {
+        part[s] = p as u32;
+        pw[p] += g.vwgt[s];
+    }
+    // Frontier-driven growth.
+    let mut conn = vec![vec![0.0f64; k]; n]; // connection of v to each part
+    let mut frontier: Vec<usize> = Vec::new();
+    for (p, &s) in seeds.iter().enumerate() {
+        let (nbrs, wts) = g.neighbors(s);
+        for (u, w) in nbrs.iter().zip(wts) {
+            let u = *u as usize;
+            if part[u] == UNASSIGNED {
+                if conn[u].iter().all(|&c| c == 0.0) {
+                    frontier.push(u);
+                }
+                conn[u][p] += w;
+            }
+        }
+    }
+    let mut assigned = seeds.len();
+    while assigned < n {
+        // pick the frontier vertex with max connection to an open part
+        let mut best_v = usize::MAX;
+        let mut best_p = 0usize;
+        let mut best_c = f64::NEG_INFINITY;
+        frontier.retain(|&v| part[v] == UNASSIGNED);
+        for &v in &frontier {
+            for p in 0..k {
+                if pw[p] + g.vwgt[v] <= cap && conn[v][p] > best_c {
+                    best_c = conn[v][p];
+                    best_v = v;
+                    best_p = p;
+                }
+            }
+        }
+        let (v, p) = if best_v == usize::MAX {
+            // no frontier vertex fits: take any unassigned vertex, lightest part
+            let v = (0..n).find(|&v| part[v] == UNASSIGNED).expect("unassigned exists");
+            let p = (0..k).fold(0, |b, p| if pw[p] < pw[b] { p } else { b });
+            (v, p)
+        } else {
+            (best_v, best_p)
+        };
+        part[v] = p as u32;
+        pw[p] += g.vwgt[v];
+        assigned += 1;
+        let (nbrs, wts) = g.neighbors(v);
+        for (u, w) in nbrs.iter().zip(wts) {
+            let u = *u as usize;
+            if part[u] == UNASSIGNED {
+                if conn[u].iter().all(|&c| c == 0.0) {
+                    frontier.push(u);
+                }
+                conn[u][p] += w;
+            }
+        }
+    }
+    part
+}
+
+/// Boundary Fiduccia–Mattheyses refinement: each pass tentatively moves a
+/// sequence of (locked-once) vertices by best gain — *including negative-
+/// gain hill-climbing moves* — and rolls back to the best prefix. This is
+/// what lets the partitioner escape the local optima that defeat plain
+/// positive-gain Kernighan–Lin sweeps (e.g. uniform-weight bipartite
+/// incidence graphs, where single moves are rarely profitable in
+/// isolation).
+fn refine_fm(g: &Graph, part: &mut [u32], k: usize, epsilon: f64, passes: usize) {
+    let n = g.n();
+    let cap = (1.0 + epsilon) * g.total_vwgt() / k as f64;
+    let mut pw = vec![0.0f64; k];
+    for v in 0..n {
+        pw[part[v] as usize] += g.vwgt[v];
+    }
+    // conn[v*k + p] = weight from v into part p (kept incrementally)
+    let mut conn = vec![0.0f64; n * k];
+    for v in 0..n {
+        let (nbrs, wts) = g.neighbors(v);
+        for (u, w) in nbrs.iter().zip(wts) {
+            conn[v * k + part[*u as usize] as usize] += w;
+        }
+    }
+    // Cap the tentative-move sequence so one pass stays near-linear.
+    let max_moves = n.min(4 * n / k.max(1) + 64);
+    let mut locked = vec![false; n];
+    for _pass in 0..passes {
+        for l in locked.iter_mut() {
+            *l = false;
+        }
+        let mut moves: Vec<(usize, u32)> = Vec::new(); // (vertex, old part)
+        let mut cum = 0.0f64;
+        let mut best_cum = 0.0f64;
+        let mut best_len = 0usize;
+        for _step in 0..max_moves {
+            // pick the best-gain feasible move among unlocked boundary vertices
+            let mut sel: Option<(usize, usize, f64)> = None;
+            for v in 0..n {
+                if locked[v] {
+                    continue;
+                }
+                let home = part[v] as usize;
+                let base = conn[v * k + home];
+                for p in 0..k {
+                    if p == home || pw[p] + g.vwgt[v] > cap {
+                        continue;
+                    }
+                    let gain = conn[v * k + p] - base;
+                    if gain == 0.0 && conn[v * k + p] == 0.0 {
+                        continue; // interior vertex w.r.t. this target
+                    }
+                    if sel.map(|(_, _, bg)| gain > bg + 1e-12).unwrap_or(true) {
+                        sel = Some((v, p, gain));
+                    }
+                }
+            }
+            let Some((v, p, gain)) = sel else { break };
+            // apply tentatively
+            let home = part[v] as usize;
+            pw[home] -= g.vwgt[v];
+            pw[p] += g.vwgt[v];
+            part[v] = p as u32;
+            locked[v] = true;
+            let (nbrs, wts) = g.neighbors(v);
+            for (u, w) in nbrs.iter().zip(wts) {
+                let u = *u as usize;
+                conn[u * k + home] -= w;
+                conn[u * k + p] += w;
+            }
+            moves.push((v, home as u32));
+            cum += gain;
+            if cum > best_cum + 1e-12 {
+                best_cum = cum;
+                best_len = moves.len();
+            }
+            // stop early when deep underwater with no prospect
+            if cum < best_cum - 2.0 * (1.0 + best_cum.abs()) && moves.len() > best_len + 32 {
+                break;
+            }
+        }
+        // roll back everything after the best prefix
+        for &(v, old) in moves[best_len..].iter().rev() {
+            let cur = part[v] as usize;
+            let old = old as usize;
+            pw[cur] -= g.vwgt[v];
+            pw[old] += g.vwgt[v];
+            part[v] = old as u32;
+            let (nbrs, wts) = g.neighbors(v);
+            for (u, w) in nbrs.iter().zip(wts) {
+                let u = *u as usize;
+                conn[u * k + cur] -= w;
+                conn[u * k + old] += w;
+            }
+        }
+        if best_cum <= 1e-12 {
+            break; // pass produced no improvement
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two dense cliques joined by a single light edge.
+    fn two_cliques(size: usize) -> Graph {
+        let mut edges = Vec::new();
+        for block in 0..2u32 {
+            let off = block * size as u32;
+            for i in 0..size as u32 {
+                for j in (i + 1)..size as u32 {
+                    edges.push((off + i, off + j, 1.0));
+                }
+            }
+        }
+        edges.push((0, size as u32, 0.01)); // bridge
+        Graph::from_edges(2 * size, &edges)
+    }
+
+    /// Ring of `k` cliques, adjacent cliques bridged by one light edge.
+    fn clique_ring(k: usize, size: usize) -> Graph {
+        let mut edges = Vec::new();
+        for b in 0..k as u32 {
+            let off = b * size as u32;
+            for i in 0..size as u32 {
+                for j in (i + 1)..size as u32 {
+                    edges.push((off + i, off + j, 1.0));
+                }
+            }
+            let next = ((b as usize + 1) % k) as u32 * size as u32;
+            edges.push((off, next, 0.05));
+        }
+        Graph::from_edges(k * size, &edges)
+    }
+
+    #[test]
+    fn from_edges_merges_and_symmetrizes() {
+        let g = Graph::from_edges(3, &[(0, 1, 1.0), (1, 0, 2.0), (1, 2, 1.0), (2, 2, 9.0)]);
+        let (n0, w0) = g.neighbors(0);
+        assert_eq!(n0, &[1]);
+        assert_eq!(w0, &[3.0]); // merged duplicate
+        let (n2, _) = g.neighbors(2);
+        assert_eq!(n2, &[1]); // self-loop dropped
+        assert_eq!(g.n(), 3);
+    }
+
+    #[test]
+    fn bisects_two_cliques() {
+        let g = two_cliques(40);
+        let part = partition(&g, 2, &PartitionParams::default(), 7).unwrap();
+        // must cut exactly the bridge
+        assert!((g.edge_cut(&part) - 0.01).abs() < 1e-9, "cut={}", g.edge_cut(&part));
+        assert!(g.imbalance(&part, 2) < 1.05);
+        // each clique uniform
+        for block in 0..2 {
+            let base = part[block * 40];
+            for v in 0..40 {
+                assert_eq!(part[block * 40 + v], base);
+            }
+        }
+    }
+
+    #[test]
+    fn kway_on_clique_ring() {
+        let k = 5;
+        let g = clique_ring(k, 30);
+        let part = partition(&g, k, &PartitionParams::default(), 3).unwrap();
+        // optimal cut = k bridges of 0.05
+        let cut = g.edge_cut(&part);
+        assert!(cut <= k as f64 * 0.05 + 1e-9, "cut={cut}");
+        assert!(g.imbalance(&part, k) <= 1.1 + 1e-9);
+    }
+
+    #[test]
+    fn respects_vertex_weights() {
+        // a path of 4 vertices where vertex 0 is very heavy: balance forces
+        // it alone in its part.
+        let mut g = Graph::from_edges(4, &[(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0)]);
+        g.vwgt = vec![10.0, 1.0, 1.0, 1.0];
+        let part = partition(&g, 2, &PartitionParams { epsilon: 0.4, ..Default::default() }, 1)
+            .unwrap();
+        assert_ne!(part[0], part[3]);
+    }
+
+    #[test]
+    fn k_edge_cases() {
+        let g = two_cliques(5);
+        assert_eq!(partition(&g, 1, &PartitionParams::default(), 1).unwrap(), vec![0; 10]);
+        let p = partition(&g, 10, &PartitionParams::default(), 1).unwrap();
+        assert_eq!(p.len(), 10);
+        assert!(partition(&g, 0, &PartitionParams::default(), 1).is_err());
+    }
+
+    #[test]
+    fn partition_deterministic_per_seed() {
+        let g = clique_ring(4, 20);
+        let a = partition(&g, 4, &PartitionParams::default(), 42).unwrap();
+        let b = partition(&g, 4, &PartitionParams::default(), 42).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn coarsening_preserves_total_weight() {
+        let g = clique_ring(3, 25);
+        let mut rng = Rng::new(5);
+        let (coarse, cmap) = coarsen_hem(&g, &mut rng);
+        assert!((coarse.total_vwgt() - g.total_vwgt()).abs() < 1e-9);
+        assert!(coarse.n() < g.n());
+        assert!(cmap.iter().all(|&c| (c as usize) < coarse.n()));
+        // edge weight conservation: coarse total edge weight + contracted
+        // intra-pair weight = fine total edge weight
+        let fine_w: f64 = g.adjwgt.iter().sum::<f64>() / 2.0;
+        let coarse_w: f64 = coarse.adjwgt.iter().sum::<f64>() / 2.0;
+        assert!(coarse_w <= fine_w + 1e-9);
+    }
+}

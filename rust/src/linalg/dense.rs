@@ -1,0 +1,323 @@
+//! Row-major dense matrices: `Mat` (f32, data-scale) and `DMat` (f64,
+//! eigen-scale) plus the blocked, threaded kernels the clustering hot
+//! paths need (gemm with transposed RHS, row norms, pairwise distances).
+
+use crate::util::par;
+
+/// f32 row-major matrix. The workhorse container for datasets,
+/// representatives, eigenvector embeddings.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "Mat::from_vec shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Gather a subset of rows into a new matrix.
+    pub fn gather_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (o, &i) in idx.iter().enumerate() {
+            out.row_mut(o).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Squared L2 norm of every row.
+    pub fn row_sqnorms(&self) -> Vec<f32> {
+        par::par_map(self.rows, |i| {
+            self.row(i).iter().map(|&v| v * v).sum::<f32>()
+        })
+    }
+
+    /// `self · otherᵀ` (m×d · (n×d)ᵀ = m×n), blocked and threaded. The RHS
+    /// is given row-major with rows as the *output columns*, which is the
+    /// natural layout for pairwise-distance style products (both operands
+    /// are collections of d-vectors) and is unit-stride in the inner loop.
+    pub fn matmul_nt(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_nt inner dim mismatch");
+        let m = self.rows;
+        let n = other.rows;
+        let d = self.cols;
+        let mut out = Mat::zeros(m, n);
+        // Each thread owns a contiguous band of output rows.
+        par::par_for_chunks(&mut out.data, n * 64.max(1), |start, chunk| {
+            let row0 = start / n;
+            let nrows = chunk.len() / n;
+            for bi in 0..nrows {
+                let i = row0 + bi;
+                let a = self.row(i);
+                let orow = &mut chunk[bi * n..(bi + 1) * n];
+                // 4-way j-unrolled dot products; LLVM vectorizes the d loop.
+                let mut j = 0;
+                while j + 4 <= n {
+                    let (b0, b1, b2, b3) =
+                        (other.row(j), other.row(j + 1), other.row(j + 2), other.row(j + 3));
+                    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
+                    for t in 0..d {
+                        let av = a[t];
+                        s0 += av * b0[t];
+                        s1 += av * b1[t];
+                        s2 += av * b2[t];
+                        s3 += av * b3[t];
+                    }
+                    orow[j] = s0;
+                    orow[j + 1] = s1;
+                    orow[j + 2] = s2;
+                    orow[j + 3] = s3;
+                    j += 4;
+                }
+                while j < n {
+                    let b = other.row(j);
+                    let mut s = 0.0f32;
+                    for t in 0..d {
+                        s += a[t] * b[t];
+                    }
+                    orow[j] = s;
+                    j += 1;
+                }
+            }
+        });
+        out
+    }
+
+    /// Pairwise squared Euclidean distances `‖xᵢ − cⱼ‖²` (m×n), computed as
+    /// ‖x‖² + ‖c‖² − 2·x·cᵀ — the same formulation the L1 Pallas kernel
+    /// uses. Negative values from cancellation are clamped to 0.
+    pub fn sq_dists(&self, centers: &Mat) -> Mat {
+        let xn = self.row_sqnorms();
+        let cn = centers.row_sqnorms();
+        let mut g = self.matmul_nt(centers);
+        let n = centers.rows;
+        par::par_for_chunks(&mut g.data, n, |start, chunk| {
+            let i = start / n;
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v = (xn[i] + cn[j] - 2.0 * *v).max(0.0);
+            }
+        });
+        g
+    }
+
+    /// Convert to f64.
+    pub fn to_f64(&self) -> DMat {
+        DMat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| v as f64).collect(),
+        }
+    }
+}
+
+/// f64 row-major matrix for the small spectral problems.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl DMat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        DMat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = DMat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        DMat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    pub fn transpose(&self) -> DMat {
+        let mut t = DMat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    /// Plain gemm `self · other`.
+    pub fn matmul(&self, other: &DMat) -> DMat {
+        assert_eq!(self.cols, other.rows, "matmul inner dim mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = DMat::zeros(m, n);
+        par::par_for_chunks(&mut out.data, n, |start, chunk| {
+            let i = start / n;
+            let a = self.row(i);
+            for (t, &av) in a.iter().enumerate().take(k) {
+                if av == 0.0 {
+                    continue;
+                }
+                let b = other.row(t);
+                for j in 0..n {
+                    chunk[j] += av * b[j];
+                }
+            }
+        });
+        out
+    }
+
+    /// `selfᵀ · self` (Gram matrix), exploiting symmetry.
+    pub fn gram(&self) -> DMat {
+        let (m, n) = (self.rows, self.cols);
+        let mut g = DMat::zeros(n, n);
+        for r in 0..m {
+            let row = self.row(r);
+            for i in 0..n {
+                let ri = row[i];
+                if ri == 0.0 {
+                    continue;
+                }
+                for j in i..n {
+                    g.data[i * n + j] += ri * row[j];
+                }
+            }
+        }
+        for i in 0..n {
+            for j in 0..i {
+                g.data[i * n + j] = g.data[j * n + i];
+            }
+        }
+        g
+    }
+
+    pub fn to_f32(&self) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| v as f32).collect(),
+        }
+    }
+
+    /// Frobenius norm of (self - other).
+    pub fn frob_dist(&self, other: &DMat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randmat(r: usize, c: usize, rng: &mut Rng) -> Mat {
+        Mat::from_vec(r, c, (0..r * c).map(|_| rng.f32() - 0.5).collect())
+    }
+
+    #[test]
+    fn matmul_nt_matches_naive() {
+        let mut rng = Rng::new(11);
+        for &(m, n, d) in &[(1usize, 1usize, 1usize), (3, 5, 4), (17, 9, 7), (64, 33, 13)] {
+            let a = randmat(m, d, &mut rng);
+            let b = randmat(n, d, &mut rng);
+            let g = a.matmul_nt(&b);
+            for i in 0..m {
+                for j in 0..n {
+                    let want: f32 = (0..d).map(|t| a.at(i, t) * b.at(j, t)).sum();
+                    assert!((g.at(i, j) - want).abs() < 1e-4, "({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sq_dists_matches_direct() {
+        let mut rng = Rng::new(12);
+        let x = randmat(23, 6, &mut rng);
+        let c = randmat(7, 6, &mut rng);
+        let d2 = x.sq_dists(&c);
+        for i in 0..23 {
+            for j in 0..7 {
+                let want: f32 = (0..6)
+                    .map(|t| {
+                        let diff = x.at(i, t) - c.at(j, t);
+                        diff * diff
+                    })
+                    .sum();
+                assert!((d2.at(i, j) - want).abs() < 1e-4);
+                assert!(d2.at(i, j) >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn dmat_matmul_and_gram() {
+        let a = DMat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = DMat::from_vec(3, 2, vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58.0, 64.0, 139.0, 154.0]);
+        let g = a.gram();
+        let want = a.transpose().matmul(&a);
+        assert!(g.frob_dist(&want) < 1e-12);
+    }
+
+    #[test]
+    fn gather_rows_works() {
+        let m = Mat::from_vec(3, 2, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        let g = m.gather_rows(&[2, 0]);
+        assert_eq!(g.data, vec![4.0, 5.0, 0.0, 1.0]);
+    }
+}

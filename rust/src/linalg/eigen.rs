@@ -1,0 +1,315 @@
+//! Dense symmetric eigensolver: Householder tridiagonalization (`tred2`)
+//! followed by implicit-shift QL iteration (`tqli`). This replaces MATLAB's
+//! `eig`/`eigs` on the reduced p×p (or k_c×k_c) transfer-cut problems.
+//!
+//! Also provides the *generalized* symmetric solve `L v = λ D v` with
+//! diagonal `D`, via the congruence transform `D^{-1/2} L D^{-1/2}`.
+
+use crate::linalg::dense::DMat;
+use crate::{Error, Result};
+
+/// Full eigen-decomposition of a symmetric matrix.
+/// Returns eigenvalues ascending and the matrix whose *columns* are the
+/// corresponding orthonormal eigenvectors.
+pub fn sym_eig(a: &DMat) -> Result<(Vec<f64>, DMat)> {
+    let n = a.rows;
+    if n == 0 {
+        return Ok((Vec::new(), DMat::zeros(0, 0)));
+    }
+    if a.rows != a.cols {
+        return Err(Error::InvalidArg(format!("sym_eig: non-square {}x{}", a.rows, a.cols)));
+    }
+    let mut z = a.clone();
+    let (mut d, mut e) = tred2(&mut z);
+    tqli(&mut d, &mut e, &mut z)?;
+    // Sort ascending, permute columns of z accordingly.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| d[i].partial_cmp(&d[j]).unwrap_or(std::cmp::Ordering::Equal));
+    let vals: Vec<f64> = order.iter().map(|&i| d[i]).collect();
+    let mut vecs = DMat::zeros(n, n);
+    for (newc, &oldc) in order.iter().enumerate() {
+        for r in 0..n {
+            vecs.set(r, newc, z.at(r, oldc));
+        }
+    }
+    Ok((vals, vecs))
+}
+
+/// Smallest-k eigenpairs of the generalized problem `L v = λ D v` with
+/// diagonal `D` (entries > 0). Returns (λ[..k], V n×k).
+pub fn sym_eig_generalized_smallest(
+    l: &DMat,
+    d_diag: &[f64],
+    k: usize,
+) -> Result<(Vec<f64>, DMat)> {
+    let n = l.rows;
+    if d_diag.len() != n {
+        return Err(Error::InvalidArg("generalized eig: diag size".into()));
+    }
+    let dinv_sqrt: Vec<f64> = d_diag
+        .iter()
+        .map(|&x| if x > 1e-300 { 1.0 / x.sqrt() } else { 0.0 })
+        .collect();
+    // S = D^{-1/2} L D^{-1/2}
+    let mut s = DMat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            s.set(i, j, l.at(i, j) * dinv_sqrt[i] * dinv_sqrt[j]);
+        }
+    }
+    let (vals, vecs) = sym_eig(&s)?;
+    let k = k.min(n);
+    let mut v = DMat::zeros(n, k);
+    for c in 0..k {
+        for r in 0..n {
+            v.set(r, c, vecs.at(r, c) * dinv_sqrt[r]);
+        }
+    }
+    Ok((vals[..k].to_vec(), v))
+}
+
+/// Householder reduction of symmetric `a` (destroyed; replaced by the
+/// accumulated orthogonal transform) to tridiagonal form. Returns
+/// (diagonal, sub-diagonal with e[0]=0). Numerical Recipes `tred2`.
+fn tred2(a: &mut DMat) -> (Vec<f64>, Vec<f64>) {
+    let n = a.rows;
+    let mut d = vec![0.0f64; n];
+    let mut e = vec![0.0f64; n];
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        if l > 0 {
+            let scale: f64 = (0..=l).map(|k| a.at(i, k).abs()).sum();
+            if scale == 0.0 {
+                e[i] = a.at(i, l);
+            } else {
+                for k in 0..=l {
+                    let v = a.at(i, k) / scale;
+                    a.set(i, k, v);
+                    h += v * v;
+                }
+                let mut f = a.at(i, l);
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                a.set(i, l, f - g);
+                f = 0.0;
+                for j in 0..=l {
+                    a.set(j, i, a.at(i, j) / h);
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += a.at(j, k) * a.at(i, k);
+                    }
+                    for k in (j + 1)..=l {
+                        g += a.at(k, j) * a.at(i, k);
+                    }
+                    e[j] = g / h;
+                    f += e[j] * a.at(i, j);
+                }
+                let hh = f / (h + h);
+                for j in 0..=l {
+                    let f = a.at(i, j);
+                    let g = e[j] - hh * f;
+                    e[j] = g;
+                    for k in 0..=j {
+                        let v = a.at(j, k) - (f * e[k] + g * a.at(i, k));
+                        a.set(j, k, v);
+                    }
+                }
+            }
+        } else {
+            e[i] = a.at(i, l);
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        if d[i] != 0.0 {
+            for j in 0..i {
+                let mut g = 0.0;
+                for k in 0..i {
+                    g += a.at(i, k) * a.at(k, j);
+                }
+                for k in 0..i {
+                    let v = a.at(k, j) - g * a.at(k, i);
+                    a.set(k, j, v);
+                }
+            }
+        }
+        d[i] = a.at(i, i);
+        a.set(i, i, 1.0);
+        for j in 0..i {
+            a.set(j, i, 0.0);
+            a.set(i, j, 0.0);
+        }
+    }
+    (d, e)
+}
+
+#[inline]
+fn pythag(a: f64, b: f64) -> f64 {
+    a.hypot(b)
+}
+
+/// Implicit-shift QL on a tridiagonal (d = diag, e = subdiag with e[0]
+/// unused); accumulates rotations into `z`. Numerical Recipes `tqli`.
+fn tqli(d: &mut [f64], e: &mut [f64], z: &mut DMat) -> Result<()> {
+    let n = d.len();
+    if n == 0 {
+        return Ok(());
+    }
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // Find a small sub-diagonal element to split.
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > 50 {
+                return Err(Error::Numerical("tqli: >50 iterations".into()));
+            }
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = pythag(g, 1.0);
+            g = d[m] - d[l] + e[l] / (g + if g >= 0.0 { r.abs() } else { -r.abs() });
+            let (mut s, mut c) = (1.0f64, 1.0f64);
+            let mut p = 0.0f64;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = pythag(f, g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                for k in 0..n {
+                    f = z.at(k, i + 1);
+                    z.set(k, i + 1, s * z.at(k, i) + c * f);
+                    z.set(k, i, c * z.at(k, i) - s * f);
+                }
+            }
+            if r == 0.0 && m > l + 1 {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_sym(n: usize, rng: &mut Rng) -> DMat {
+        let mut a = DMat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.normal();
+                a.set(i, j, v);
+                a.set(j, i, v);
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let mut a = DMat::zeros(4, 4);
+        for (i, &v) in [3.0, -1.0, 2.0, 0.5].iter().enumerate() {
+            a.set(i, i, v);
+        }
+        let (vals, _) = sym_eig(&a).unwrap();
+        assert_eq!(vals.iter().map(|v| (v * 1e9).round() / 1e9).collect::<Vec<_>>(), vec![-1.0, 0.5, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn residuals_and_orthonormality() {
+        let mut rng = Rng::new(9);
+        for &n in &[1usize, 2, 5, 20, 60] {
+            let a = random_sym(n, &mut rng);
+            let (vals, v) = sym_eig(&a).unwrap();
+            // ascending
+            for w in vals.windows(2) {
+                assert!(w[0] <= w[1] + 1e-12);
+            }
+            // A v = λ v
+            let av = a.matmul(&v);
+            for c in 0..n {
+                for r in 0..n {
+                    let want = vals[c] * v.at(r, c);
+                    assert!(
+                        (av.at(r, c) - want).abs() < 1e-8 * (1.0 + vals[c].abs()),
+                        "n={n} resid ({r},{c}): {} vs {}",
+                        av.at(r, c),
+                        want
+                    );
+                }
+            }
+            // VᵀV = I
+            let vtv = v.transpose().matmul(&v);
+            assert!(vtv.frob_dist(&DMat::eye(n)) < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn known_2x2() {
+        let a = DMat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let (vals, _) = sym_eig(&a).unwrap();
+        assert!((vals[0] - 1.0).abs() < 1e-12);
+        assert!((vals[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn generalized_matches_direct() {
+        let mut rng = Rng::new(10);
+        let n = 12;
+        // Laplacian-like PSD matrix
+        let b = random_sym(n, &mut rng);
+        let l = b.matmul(&b.transpose());
+        let d: Vec<f64> = (0..n).map(|_| rng.f64() + 0.5).collect();
+        let (vals, v) = sym_eig_generalized_smallest(&l, &d, 3).unwrap();
+        // check L v = λ D v
+        let lv = l.matmul(&v);
+        for c in 0..3 {
+            for r in 0..n {
+                let want = vals[c] * d[r] * v.at(r, c);
+                assert!((lv.at(r, c) - want).abs() < 1e-7 * (1.0 + vals[c].abs()), "{} {}", lv.at(r, c), want);
+            }
+        }
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let mut rng = Rng::new(13);
+        let a = random_sym(30, &mut rng);
+        let tr: f64 = (0..30).map(|i| a.at(i, i)).sum();
+        let (vals, _) = sym_eig(&a).unwrap();
+        assert!((vals.iter().sum::<f64>() - tr).abs() < 1e-8);
+    }
+}

@@ -1,0 +1,14 @@
+//! Dense/sparse linear algebra and symmetric eigensolvers.
+//!
+//! Data matrices (`Mat`) are `f32` row-major — datasets here reach tens of
+//! millions of rows, so the element type matches the AOT kernels and halves
+//! memory traffic. Small spectral problems (`DMat`, p×p or k_c×k_c) are
+//! solved in `f64` for eigen stability.
+
+pub mod dense;
+pub mod sparse;
+pub mod eigen;
+pub mod lobpcg;
+
+pub use dense::{DMat, Mat};
+pub use sparse::Csr;

@@ -1,0 +1,215 @@
+//! CSR sparse matrices — the cross-affinity matrix `B` (N×p, K non-zeros
+//! per row) and the ensemble incidence matrix `B̃` (N×k_c, m non-zeros per
+//! row) live here, together with the fused products the transfer cut needs.
+
+use crate::linalg::dense::DMat;
+use crate::util::par;
+
+/// Compressed sparse row matrix (f64 values, usize col indices).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from per-row (col, value) lists.
+    pub fn from_rows(rows: usize, cols: usize, row_entries: &[Vec<(u32, f64)>]) -> Csr {
+        assert_eq!(row_entries.len(), rows);
+        let nnz: usize = row_entries.iter().map(|r| r.len()).sum();
+        let mut indptr = Vec::with_capacity(rows + 1);
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        indptr.push(0);
+        for row in row_entries {
+            for &(c, v) in row {
+                debug_assert!((c as usize) < cols);
+                indices.push(c);
+                values.push(v);
+            }
+            indptr.push(indices.len());
+        }
+        Csr { rows, cols, indptr, indices, values }
+    }
+
+    /// Build a uniform-degree CSR: every row has exactly `k` entries given
+    /// by parallel arrays `cols_flat[r*k + j]`, `vals_flat[r*k + j]`.
+    pub fn from_uniform(rows: usize, cols: usize, k: usize, cols_flat: Vec<u32>, vals_flat: Vec<f64>) -> Csr {
+        assert_eq!(cols_flat.len(), rows * k);
+        assert_eq!(vals_flat.len(), rows * k);
+        let indptr = (0..=rows).map(|r| r * k).collect();
+        Csr { rows, cols, indptr, indices: cols_flat, values: vals_flat }
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Row sums (the diagonal of D_X for a bipartite cross-affinity).
+    pub fn row_sums(&self) -> Vec<f64> {
+        par::par_map(self.rows, |i| self.row(i).1.iter().sum())
+    }
+
+    /// Column sums.
+    pub fn col_sums(&self) -> Vec<f64> {
+        let mut sums = vec![0.0f64; self.cols];
+        for (j, v) in self.indices.iter().zip(&self.values) {
+            sums[*j as usize] += *v;
+        }
+        sums
+    }
+
+    /// Sparse · dense: y = A · x, where x is rows=cols of A.
+    pub fn matmul_dense(&self, x: &DMat) -> DMat {
+        assert_eq!(self.cols, x.rows);
+        let n = x.cols;
+        let mut out = DMat::zeros(self.rows, n);
+        par::par_for_chunks(&mut out.data, n, |start, chunk| {
+            let i = start / n;
+            let (cols, vals) = self.row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                let xr = x.row(*c as usize);
+                for j in 0..n {
+                    chunk[j] += v * xr[j];
+                }
+            }
+        });
+        out
+    }
+
+    /// The transfer-cut core product `E = Bᵀ · diag(w) · B` (cols×cols,
+    /// dense output). Parallelized over row blocks with thread-local
+    /// accumulators; cost O(nnz · K) = O(N·K²) for uniform degree K.
+    pub fn tdb(&self, w: &[f64]) -> DMat {
+        assert_eq!(w.len(), self.rows);
+        let p = self.cols;
+        let nt = par::num_threads();
+        let chunk = self.rows.div_ceil(nt).max(1);
+        let partials: Vec<DMat> = par::par_map(nt, |t| {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(self.rows);
+            let mut acc = DMat::zeros(p, p);
+            for i in lo..hi {
+                let (cols, vals) = self.row(i);
+                let wi = w[i];
+                if wi == 0.0 {
+                    continue;
+                }
+                for (a, &ca) in cols.iter().enumerate() {
+                    let va = vals[a] * wi;
+                    let arow = &mut acc.data[ca as usize * p..(ca as usize + 1) * p];
+                    for (b, &cb) in cols.iter().enumerate() {
+                        arow[cb as usize] += va * vals[b];
+                    }
+                }
+            }
+            acc
+        });
+        let mut e = DMat::zeros(p, p);
+        for part in partials {
+            for (o, v) in e.data.iter_mut().zip(part.data) {
+                *o += v;
+            }
+        }
+        e
+    }
+
+    /// Dense representation (tests / tiny problems only).
+    pub fn to_dense(&self) -> DMat {
+        let mut d = DMat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                d.set(i, *c as usize, *v);
+            }
+        }
+        d
+    }
+
+    /// Scale rows in place by `s[i]`.
+    pub fn scale_rows(&mut self, s: &[f64]) {
+        assert_eq!(s.len(), self.rows);
+        for i in 0..self.rows {
+            let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+            for v in &mut self.values[lo..hi] {
+                *v *= s[i];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_csr(rows: usize, cols: usize, per_row: usize, rng: &mut Rng) -> Csr {
+        let entries: Vec<Vec<(u32, f64)>> = (0..rows)
+            .map(|_| {
+                rng.sample_indices(cols, per_row)
+                    .into_iter()
+                    .map(|c| (c as u32, rng.f64() + 0.1))
+                    .collect()
+            })
+            .collect();
+        Csr::from_rows(rows, cols, &entries)
+    }
+
+    #[test]
+    fn row_and_col_sums() {
+        let m = Csr::from_rows(2, 3, &[vec![(0, 1.0), (2, 2.0)], vec![(1, 3.0)]]);
+        assert_eq!(m.row_sums(), vec![3.0, 3.0]);
+        assert_eq!(m.col_sums(), vec![1.0, 3.0, 2.0]);
+        assert_eq!(m.nnz(), 3);
+    }
+
+    #[test]
+    fn tdb_matches_dense() {
+        let mut rng = Rng::new(5);
+        let b = random_csr(40, 9, 4, &mut rng);
+        let w: Vec<f64> = (0..40).map(|_| rng.f64() + 0.5).collect();
+        let e = b.tdb(&w);
+        // dense reference: Bᵀ diag(w) B
+        let bd = b.to_dense();
+        let mut wd = DMat::zeros(40, 40);
+        for i in 0..40 {
+            wd.set(i, i, w[i]);
+        }
+        let want = bd.transpose().matmul(&wd).matmul(&bd);
+        assert!(e.frob_dist(&want) < 1e-9, "dist {}", e.frob_dist(&want));
+    }
+
+    #[test]
+    fn matmul_dense_matches() {
+        let mut rng = Rng::new(6);
+        let a = random_csr(15, 8, 3, &mut rng);
+        let x = DMat::from_vec(8, 2, (0..16).map(|i| i as f64 * 0.3 - 1.0).collect());
+        let y = a.matmul_dense(&x);
+        let want = a.to_dense().matmul(&x);
+        assert!(y.frob_dist(&want) < 1e-10);
+    }
+
+    #[test]
+    fn uniform_ctor() {
+        let m = Csr::from_uniform(2, 4, 2, vec![1, 3, 0, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.row(0), (&[1u32, 3u32][..], &[1.0, 2.0][..]));
+        assert_eq!(m.row(1), (&[0u32, 2u32][..], &[3.0, 4.0][..]));
+    }
+
+    #[test]
+    fn scale_rows_works() {
+        let mut m = Csr::from_rows(2, 2, &[vec![(0, 2.0)], vec![(1, 3.0)]]);
+        m.scale_rows(&[0.5, 2.0]);
+        assert_eq!(m.values, vec![1.0, 6.0]);
+    }
+}

@@ -1,0 +1,23 @@
+//! `repro` — the U-SPEC / U-SENC command-line leader.
+//!
+//! Examples:
+//!   repro datasets
+//!   repro cluster --dataset TB-1M --scale 0.01 --method U-SPEC --backend pjrt
+//!   repro cluster --dataset CC-5M --method U-SENC --m 20 --workers 4
+//!   repro table --id t4 --scale 0.001
+//!   repro gen-data --dataset Flower-20M --scale 0.01 --out flower.csv
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match uspec::cli::parse(&args).and_then(uspec::cli::execute) {
+        Ok(out) => {
+            println!("{out}");
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}

@@ -1,0 +1,226 @@
+//! Additional clustering-quality measures beyond the paper's NMI/CA:
+//! purity, pairwise precision/recall/F, Rand and Jaccard indices, and the
+//! V-measure family (homogeneity / completeness). Used by the extended
+//! examples and the consensus-function ablation bench, and as
+//! cross-checks in the property tests (e.g. ARI and Rand must agree on
+//! their fixed points).
+
+use super::{contingency, Contingency};
+
+/// Purity: each predicted cluster votes for its majority class;
+/// purity = (Σ_c max_j n_cj) / N, in (0, 1].
+pub fn purity(pred: &[u32], truth: &[u32]) -> f64 {
+    let c = contingency(pred, truth);
+    if c.n == 0 {
+        return 0.0;
+    }
+    let mut total = 0u64;
+    for i in 0..c.k1 {
+        total += (0..c.k2).map(|j| c.table[i * c.k2 + j]).max().unwrap_or(0);
+    }
+    total as f64 / c.n as f64
+}
+
+/// Pair-counting statistics (a, b, c, d):
+/// a = pairs together in both, b = together in pred only,
+/// c = together in truth only, d = separated in both. a+b+c+d = C(n,2).
+pub fn pair_counts(pred: &[u32], truth: &[u32]) -> (f64, f64, f64, f64) {
+    let ct = contingency(pred, truth);
+    let comb2 = |x: u64| -> f64 { (x as f64) * (x as f64 - 1.0) / 2.0 };
+    let sum_ij: f64 = ct.table.iter().map(|&x| comb2(x)).sum();
+    let sum_rows: f64 = ct.row_sums.iter().map(|&x| comb2(x)).sum();
+    let sum_cols: f64 = ct.col_sums.iter().map(|&x| comb2(x)).sum();
+    let total = comb2(ct.n);
+    let a = sum_ij;
+    let b = sum_rows - sum_ij;
+    let c = sum_cols - sum_ij;
+    let d = total - a - b - c;
+    (a, b, c, d)
+}
+
+/// (Unadjusted) Rand index: (a + d) / C(n,2), in [0, 1].
+pub fn rand_index(pred: &[u32], truth: &[u32]) -> f64 {
+    let (a, b, c, d) = pair_counts(pred, truth);
+    let total = a + b + c + d;
+    if total <= 0.0 {
+        return 0.0;
+    }
+    (a + d) / total
+}
+
+/// Jaccard index over pairs: a / (a + b + c), in [0, 1].
+pub fn jaccard_index(pred: &[u32], truth: &[u32]) -> f64 {
+    let (a, b, c, _) = pair_counts(pred, truth);
+    if a + b + c <= 0.0 {
+        return 0.0;
+    }
+    a / (a + b + c)
+}
+
+/// Pairwise precision, recall, and F1 of the "same cluster" relation.
+pub fn pairwise_f(pred: &[u32], truth: &[u32]) -> (f64, f64, f64) {
+    let (a, b, c, _) = pair_counts(pred, truth);
+    let precision = if a + b > 0.0 { a / (a + b) } else { 0.0 };
+    let recall = if a + c > 0.0 { a / (a + c) } else { 0.0 };
+    let f1 = if precision + recall > 0.0 {
+        2.0 * precision * recall / (precision + recall)
+    } else {
+        0.0
+    };
+    (precision, recall, f1)
+}
+
+fn entropy(sums: &[u64], n: f64) -> f64 {
+    sums.iter()
+        .filter(|&&s| s > 0)
+        .map(|&s| {
+            let p = s as f64 / n;
+            -p * p.ln()
+        })
+        .sum()
+}
+
+fn conditional_entropy_truth_given_pred(c: &Contingency) -> f64 {
+    let n = c.n as f64;
+    let mut h = 0.0;
+    for i in 0..c.k1 {
+        let ni = c.row_sums[i] as f64;
+        if ni == 0.0 {
+            continue;
+        }
+        for j in 0..c.k2 {
+            let nij = c.table[i * c.k2 + j] as f64;
+            if nij > 0.0 {
+                h -= (nij / n) * (nij / ni).ln();
+            }
+        }
+    }
+    h
+}
+
+/// Homogeneity: 1 − H(truth|pred)/H(truth). 1 ⇔ every predicted cluster
+/// contains members of a single class.
+pub fn homogeneity(pred: &[u32], truth: &[u32]) -> f64 {
+    let c = contingency(pred, truth);
+    let n = c.n as f64;
+    if n == 0.0 {
+        return 1.0;
+    }
+    let h_truth = entropy(&c.col_sums, n);
+    if h_truth <= 0.0 {
+        return 1.0;
+    }
+    (1.0 - conditional_entropy_truth_given_pred(&c) / h_truth).clamp(0.0, 1.0)
+}
+
+/// Completeness: 1 − H(pred|truth)/H(pred). 1 ⇔ every class is contained
+/// in a single predicted cluster. (Homogeneity with arguments swapped.)
+pub fn completeness(pred: &[u32], truth: &[u32]) -> f64 {
+    homogeneity(truth, pred)
+}
+
+/// V-measure: harmonic mean of homogeneity and completeness
+/// (Rosenberg & Hirschberg).
+pub fn v_measure(pred: &[u32], truth: &[u32]) -> f64 {
+    let h = homogeneity(pred, truth);
+    let c = completeness(pred, truth);
+    if h + c <= 0.0 {
+        return 0.0;
+    }
+    2.0 * h * c / (h + c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{ari, nmi};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn purity_bounds_and_known() {
+        let truth = vec![0, 0, 0, 1, 1, 1];
+        assert_eq!(purity(&truth, &truth), 1.0);
+        // one predicted cluster over two equal classes → purity 1/2
+        let one = vec![0; 6];
+        assert!((purity(&one, &truth) - 0.5).abs() < 1e-12);
+        // singletons are trivially pure
+        let singles: Vec<u32> = (0..6).collect();
+        assert_eq!(purity(&singles, &truth), 1.0);
+    }
+
+    #[test]
+    fn pair_counts_sum_to_total() {
+        let mut rng = Rng::new(7);
+        for _ in 0..20 {
+            let n = 120;
+            let a: Vec<u32> = (0..n).map(|_| rng.usize(4) as u32).collect();
+            let b: Vec<u32> = (0..n).map(|_| rng.usize(3) as u32).collect();
+            let (pa, pb, pc, pd) = pair_counts(&a, &b);
+            let total = (n * (n - 1) / 2) as f64;
+            assert!((pa + pb + pc + pd - total).abs() < 1e-6);
+            assert!(pa >= 0.0 && pb >= 0.0 && pc >= 0.0 && pd >= 0.0);
+        }
+    }
+
+    #[test]
+    fn rand_jaccard_fixed_points() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        assert_eq!(rand_index(&a, &a), 1.0);
+        assert_eq!(jaccard_index(&a, &a), 1.0);
+        let relabeled = vec![7, 7, 3, 3, 5, 5];
+        assert_eq!(rand_index(&a, &relabeled), 1.0);
+        // pairwise F on identical partitions
+        let (p, r, f1) = pairwise_f(&a, &relabeled);
+        assert_eq!((p, r, f1), (1.0, 1.0, 1.0));
+    }
+
+    #[test]
+    fn rand_vs_ari_consistency() {
+        // ARI = (RI − E[RI]) / (max − E[RI]); both must rank candidate
+        // clusterings identically against a fixed truth when k matches.
+        let truth: Vec<u32> = (0..200).map(|i| (i / 50) as u32).collect();
+        let mut rng = Rng::new(3);
+        let noisy = |flip: f64, rng: &mut Rng| -> Vec<u32> {
+            truth
+                .iter()
+                .map(|&l| if rng.f64() < flip { rng.usize(4) as u32 } else { l })
+                .collect()
+        };
+        let good = noisy(0.05, &mut rng);
+        let bad = noisy(0.5, &mut rng);
+        assert!(rand_index(&good, &truth) > rand_index(&bad, &truth));
+        assert!(ari(&good, &truth) > ari(&bad, &truth));
+        assert!(jaccard_index(&good, &truth) > jaccard_index(&bad, &truth));
+    }
+
+    #[test]
+    fn v_measure_family() {
+        let truth = vec![0, 0, 0, 1, 1, 1];
+        // singletons: perfectly homogeneous, incomplete
+        let singles: Vec<u32> = (0..6).collect();
+        assert!((homogeneity(&singles, &truth) - 1.0).abs() < 1e-12);
+        assert!(completeness(&singles, &truth) < 0.5);
+        // one blob: complete but not homogeneous
+        let blob = vec![0; 6];
+        assert!((completeness(&blob, &truth) - 1.0).abs() < 1e-12);
+        assert_eq!(homogeneity(&blob, &truth), 0.0);
+        // v-measure is symmetric
+        let pred = vec![0, 0, 1, 1, 2, 2];
+        assert!((v_measure(&pred, &truth) - v_measure(&truth, &pred)).abs() < 1e-12);
+        assert_eq!(v_measure(&truth, &truth), 1.0);
+    }
+
+    #[test]
+    fn v_measure_tracks_nmi() {
+        // V-measure and NMI are both normalized MI variants: they must
+        // order a clean vs a noisy clustering the same way.
+        let truth: Vec<u32> = (0..300).map(|i| (i / 100) as u32).collect();
+        let mut rng = Rng::new(11);
+        let noisy: Vec<u32> = truth
+            .iter()
+            .map(|&l| if rng.f64() < 0.3 { rng.usize(3) as u32 } else { l })
+            .collect();
+        assert!(v_measure(&truth, &truth) > v_measure(&noisy, &truth));
+        assert!(nmi(&truth, &truth) > nmi(&noisy, &truth));
+    }
+}

@@ -1,0 +1,147 @@
+//! Kuhn–Munkres (Hungarian) assignment on an n×n integer cost matrix,
+//! O(n³) shortest-augmenting-path formulation. Substrate for the CA
+//! metric's optimal cluster↔class matching.
+
+/// Solve min-cost perfect assignment. `cost` is row-major n×n.
+/// Returns `assign[row] = col`.
+pub fn solve(cost: &[i64], n: usize) -> Vec<usize> {
+    assert_eq!(cost.len(), n * n);
+    if n == 0 {
+        return Vec::new();
+    }
+    const INF: i64 = i64::MAX / 4;
+    // Potentials + matching over 1-based arrays (classic formulation).
+    let mut u = vec![0i64; n + 1];
+    let mut v = vec![0i64; n + 1];
+    let mut p = vec![0usize; n + 1]; // p[col] = row matched to col (0 = none)
+    let mut way = vec![0usize; n + 1];
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![INF; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = INF;
+            let mut j1 = 0usize;
+            for j in 1..=n {
+                if !used[j] {
+                    let cur = cost[(i0 - 1) * n + (j - 1)] - u[i0] - v[j];
+                    if cur < minv[j] {
+                        minv[j] = cur;
+                        way[j] = j0;
+                    }
+                    if minv[j] < delta {
+                        delta = minv[j];
+                        j1 = j;
+                    }
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+    let mut assign = vec![0usize; n];
+    for j in 1..=n {
+        if p[j] > 0 {
+            assign[p[j] - 1] = j - 1;
+        }
+    }
+    assign
+}
+
+/// Total cost of an assignment.
+pub fn assignment_cost(cost: &[i64], n: usize, assign: &[usize]) -> i64 {
+    assign.iter().enumerate().map(|(i, &j)| cost[i * n + j]).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn brute_force(cost: &[i64], n: usize) -> i64 {
+        // permutations up to n=7
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut best = i64::MAX;
+        permute(&mut perm, 0, cost, n, &mut best);
+        best
+    }
+
+    fn permute(perm: &mut Vec<usize>, k: usize, cost: &[i64], n: usize, best: &mut i64) {
+        if k == n {
+            let c = assignment_cost(cost, n, perm);
+            if c < *best {
+                *best = c;
+            }
+            return;
+        }
+        for i in k..n {
+            perm.swap(k, i);
+            permute(perm, k + 1, cost, n, best);
+            perm.swap(k, i);
+        }
+    }
+
+    #[test]
+    fn known_3x3() {
+        // classic example, optimum = 5 (0->1, 1->0, 2->2): 1+2+2
+        let cost = vec![4, 1, 3, 2, 0, 5, 3, 2, 2];
+        let a = solve(&cost, 3);
+        assert_eq!(assignment_cost(&cost, 3, &a), 5);
+    }
+
+    #[test]
+    fn identity_when_diag_cheapest() {
+        let cost = vec![0, 9, 9, 9, 0, 9, 9, 9, 0];
+        assert_eq!(solve(&cost, 3), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn matches_brute_force_random() {
+        let mut rng = Rng::new(17);
+        for trial in 0..50 {
+            let n = 2 + rng.usize(5); // 2..6
+            let cost: Vec<i64> = (0..n * n).map(|_| rng.usize(50) as i64).collect();
+            let a = solve(&cost, n);
+            // valid permutation
+            let mut seen = vec![false; n];
+            for &j in &a {
+                assert!(!seen[j], "trial {trial}: column used twice");
+                seen[j] = true;
+            }
+            assert_eq!(assignment_cost(&cost, n, &a), brute_force(&cost, n), "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn handles_negative_costs() {
+        let cost = vec![-5, 0, 0, -5];
+        let a = solve(&cost, 2);
+        assert_eq!(assignment_cost(&cost, 2, &a), -10);
+    }
+
+    #[test]
+    fn empty() {
+        assert_eq!(solve(&[], 0), Vec::<usize>::new());
+    }
+}

@@ -1,0 +1,219 @@
+//! Clustering evaluation: NMI (Strehl & Ghosh normalization), clustering
+//! accuracy CA (optimal label matching via the Hungarian algorithm), and
+//! ARI. These are the two measures used throughout the paper's §4.
+
+pub mod hungarian;
+pub mod extras;
+
+pub use extras::{
+    completeness, homogeneity, jaccard_index, pair_counts, pairwise_f, purity, rand_index,
+    v_measure,
+};
+
+use std::collections::HashMap;
+
+/// Contingency table between two labelings (dense, k₁×k₂) plus marginals.
+pub struct Contingency {
+    pub table: Vec<u64>,
+    pub k1: usize,
+    pub k2: usize,
+    pub row_sums: Vec<u64>,
+    pub col_sums: Vec<u64>,
+    pub n: u64,
+}
+
+/// Remap arbitrary labels to 0..k-1 (dense ids).
+pub fn densify_labels(labels: &[u32]) -> (Vec<u32>, usize) {
+    let mut map = HashMap::new();
+    let mut out = Vec::with_capacity(labels.len());
+    for &l in labels {
+        let next = map.len() as u32;
+        let id = *map.entry(l).or_insert(next);
+        out.push(id);
+    }
+    (out, map.len())
+}
+
+/// Build the contingency table of two labelings over the same objects.
+pub fn contingency(a: &[u32], b: &[u32]) -> Contingency {
+    assert_eq!(a.len(), b.len(), "labelings must cover the same objects");
+    let (da, k1) = densify_labels(a);
+    let (db, k2) = densify_labels(b);
+    let mut table = vec![0u64; k1 * k2];
+    for (&x, &y) in da.iter().zip(&db) {
+        table[x as usize * k2 + y as usize] += 1;
+    }
+    let mut row_sums = vec![0u64; k1];
+    let mut col_sums = vec![0u64; k2];
+    for i in 0..k1 {
+        for j in 0..k2 {
+            row_sums[i] += table[i * k2 + j];
+            col_sums[j] += table[i * k2 + j];
+        }
+    }
+    Contingency { table, k1, k2, row_sums, col_sums, n: a.len() as u64 }
+}
+
+/// Normalized mutual information, NMI = I(A;B) / sqrt(H(A)·H(B))
+/// (Strehl–Ghosh), in [0, 1]. Degenerate single-cluster labelings give 0.
+pub fn nmi(a: &[u32], b: &[u32]) -> f64 {
+    let c = contingency(a, b);
+    let n = c.n as f64;
+    if n == 0.0 {
+        return 0.0;
+    }
+    let mut mi = 0.0;
+    for i in 0..c.k1 {
+        for j in 0..c.k2 {
+            let nij = c.table[i * c.k2 + j] as f64;
+            if nij > 0.0 {
+                let pij = nij / n;
+                let pi = c.row_sums[i] as f64 / n;
+                let pj = c.col_sums[j] as f64 / n;
+                mi += pij * (pij / (pi * pj)).ln();
+            }
+        }
+    }
+    let h = |sums: &[u64]| -> f64 {
+        sums.iter()
+            .filter(|&&s| s > 0)
+            .map(|&s| {
+                let p = s as f64 / n;
+                -p * p.ln()
+            })
+            .sum()
+    };
+    let ha = h(&c.row_sums);
+    let hb = h(&c.col_sums);
+    if ha <= 0.0 || hb <= 0.0 {
+        return 0.0;
+    }
+    (mi / (ha * hb).sqrt()).clamp(0.0, 1.0)
+}
+
+/// Clustering accuracy: fraction of objects whose predicted cluster, under
+/// the best one-to-one cluster↔class matching (Hungarian on the negated
+/// contingency), equals the ground-truth class.
+pub fn ca(pred: &[u32], truth: &[u32]) -> f64 {
+    let c = contingency(pred, truth);
+    if c.n == 0 {
+        return 0.0;
+    }
+    let k = c.k1.max(c.k2);
+    // Pad to square cost matrix; maximize matches = minimize (max - table).
+    let maxv = *c.table.iter().max().unwrap_or(&0) as i64;
+    let mut cost = vec![0i64; k * k];
+    for i in 0..k {
+        for j in 0..k {
+            let v = if i < c.k1 && j < c.k2 { c.table[i * c.k2 + j] as i64 } else { 0 };
+            cost[i * k + j] = maxv - v;
+        }
+    }
+    let assign = hungarian::solve(&cost, k);
+    let mut matched = 0u64;
+    for (i, &j) in assign.iter().enumerate() {
+        if i < c.k1 && j < c.k2 {
+            matched += c.table[i * c.k2 + j];
+        }
+    }
+    matched as f64 / c.n as f64
+}
+
+/// Adjusted Rand index (Hubert & Arabie).
+pub fn ari(a: &[u32], b: &[u32]) -> f64 {
+    let c = contingency(a, b);
+    let n = c.n;
+    if n < 2 {
+        return 0.0;
+    }
+    let comb2 = |x: u64| -> f64 { (x as f64) * (x as f64 - 1.0) / 2.0 };
+    let sum_ij: f64 = c.table.iter().map(|&x| comb2(x)).sum();
+    let sum_a: f64 = c.row_sums.iter().map(|&x| comb2(x)).sum();
+    let sum_b: f64 = c.col_sums.iter().map(|&x| comb2(x)).sum();
+    let total = comb2(n);
+    let expected = sum_a * sum_b / total;
+    let maxi = 0.5 * (sum_a + sum_b);
+    if (maxi - expected).abs() < 1e-12 {
+        return 0.0;
+    }
+    (sum_ij - expected) / (maxi - expected)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn nmi_identity_and_permutation() {
+        let a = vec![0, 0, 1, 1, 2, 2, 2];
+        assert!((nmi(&a, &a) - 1.0).abs() < 1e-12);
+        let perm = vec![5, 5, 9, 9, 1, 1, 1]; // same partition, relabeled
+        assert!((nmi(&a, &perm) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nmi_degenerate() {
+        let a = vec![0, 0, 0, 0];
+        let b = vec![0, 1, 2, 3];
+        assert_eq!(nmi(&a, &b), 0.0);
+        assert_eq!(nmi(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn nmi_independent_low() {
+        let mut rng = Rng::new(1);
+        let n = 20_000;
+        let a: Vec<u32> = (0..n).map(|_| rng.usize(4) as u32).collect();
+        let b: Vec<u32> = (0..n).map(|_| rng.usize(4) as u32).collect();
+        assert!(nmi(&a, &b) < 0.01);
+    }
+
+    #[test]
+    fn ca_perfect_and_permuted() {
+        let truth = vec![0, 0, 1, 1, 2, 2];
+        assert_eq!(ca(&truth, &truth), 1.0);
+        let pred = vec![2, 2, 0, 0, 1, 1];
+        assert_eq!(ca(&pred, &truth), 1.0);
+    }
+
+    #[test]
+    fn ca_known_value() {
+        // 1 of 6 objects misassigned under the optimal matching.
+        let truth = vec![0, 0, 0, 1, 1, 1];
+        let pred = vec![0, 0, 1, 1, 1, 1];
+        assert!((ca(&pred, &truth) - 5.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ca_different_k() {
+        let truth = vec![0, 0, 1, 1];
+        let pred = vec![0, 1, 2, 3]; // over-clustered
+        // best matching pairs 2 of 4
+        assert!((ca(&pred, &truth) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ari_properties() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        assert!((ari(&a, &a) - 1.0).abs() < 1e-12);
+        let mut rng = Rng::new(2);
+        let n = 30_000;
+        let x: Vec<u32> = (0..n).map(|_| rng.usize(3) as u32).collect();
+        let y: Vec<u32> = (0..n).map(|_| rng.usize(3) as u32).collect();
+        assert!(ari(&x, &y).abs() < 0.01);
+    }
+
+    #[test]
+    fn ca_at_least_plurality() {
+        // CA can never be below the best single-class share under matching
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let n = 200;
+            let t: Vec<u32> = (0..n).map(|_| rng.usize(3) as u32).collect();
+            let p: Vec<u32> = (0..n).map(|_| rng.usize(5) as u32).collect();
+            let acc = ca(&p, &t);
+            assert!(acc > 0.0 && acc <= 1.0);
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the rust runtime. Lists every compiled HLO-text artifact with its
+//! static shapes so the runtime can pick the smallest variant that fits a
+//! request (padding rows/columns as needed).
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::path::Path;
+
+/// One AOT-compiled graph variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// Graph kind: "pdist" | "dist_top1" | "dist_topk".
+    pub graph: String,
+    /// File name (relative to the artifact dir).
+    pub file: String,
+    /// Static batch rows.
+    pub b: usize,
+    /// Static center rows.
+    pub c: usize,
+    /// Static feature dim.
+    pub d: usize,
+    /// top-k width (dist_topk only).
+    pub k: Option<usize>,
+    /// Number of tuple outputs.
+    pub outputs: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub fingerprint: String,
+    pub batch: usize,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).map_err(|e| Error::Runtime(format!("manifest: {e}")))?;
+        let fingerprint = v
+            .get("fingerprint")
+            .and_then(|f| f.as_str())
+            .ok_or_else(|| Error::Runtime("manifest: missing fingerprint".into()))?
+            .to_string();
+        let batch = v
+            .get("batch")
+            .and_then(|b| b.as_usize())
+            .ok_or_else(|| Error::Runtime("manifest: missing batch".into()))?;
+        let arts = v
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| Error::Runtime("manifest: missing artifacts".into()))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let get_str = |k: &str| -> Result<String> {
+                a.get(k)
+                    .and_then(|v| v.as_str())
+                    .map(|s| s.to_string())
+                    .ok_or_else(|| Error::Runtime(format!("manifest: artifact missing {k}")))
+            };
+            let get_usize = |k: &str| -> Result<usize> {
+                a.get(k)
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| Error::Runtime(format!("manifest: artifact missing {k}")))
+            };
+            artifacts.push(ArtifactMeta {
+                name: get_str("name")?,
+                graph: get_str("graph")?,
+                file: get_str("file")?,
+                b: get_usize("b")?,
+                c: get_usize("c")?,
+                d: get_usize("d")?,
+                k: a.get("k").and_then(|v| v.as_usize()),
+                outputs: get_usize("outputs")?,
+            });
+        }
+        Ok(Manifest { fingerprint, batch, artifacts })
+    }
+
+    /// Smallest pdist variant covering (c, d); None if nothing fits.
+    pub fn pick(&self, graph: &str, c: usize, d: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.graph == graph && a.c >= c && a.d >= d)
+            .min_by_key(|a| (a.c, a.d))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "fingerprint": "abc",
+      "batch": 2048,
+      "artifacts": [
+        {"name": "pdist_b2048_c64_d2", "graph": "pdist", "file": "p.hlo.txt",
+         "b": 2048, "c": 64, "d": 2, "k": null, "inputs": ["x","c"], "outputs": 1},
+        {"name": "pdist_b2048_c256_d16", "graph": "pdist", "file": "q.hlo.txt",
+         "b": 2048, "c": 256, "d": 16, "k": null, "inputs": ["x","c"], "outputs": 1},
+        {"name": "dist_topk_b2048_c64_d2_k5", "graph": "dist_topk", "file": "t.hlo.txt",
+         "b": 2048, "c": 64, "d": 2, "k": 5, "inputs": ["x","c","valid"], "outputs": 2}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.batch, 2048);
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.artifacts[2].k, Some(5));
+    }
+
+    #[test]
+    fn pick_smallest_fit() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.pick("pdist", 10, 2).unwrap();
+        assert_eq!(a.c, 64);
+        let b = m.pick("pdist", 100, 2).unwrap();
+        assert_eq!(b.c, 256);
+        assert!(m.pick("pdist", 300, 2).is_none());
+        assert!(m.pick("pdist", 10, 999).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.pick("pdist", 64, 784).is_some());
+            assert!(m.pick("dist_top1", 64, 2).is_some());
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the PJRT CPU client via the
+//! `xla` crate. Python never runs here — the artifacts are self-contained.
+//!
+//! * [`manifest`] — the artifact inventory (static shapes per variant).
+//! * [`Runtime`] — compile-on-first-use executable cache + the padding
+//!   machinery that maps arbitrary (rows, centers, d) requests onto the
+//!   fixed-shape variants (rows → B-chunks, d → zero-padded columns,
+//!   centers → padded rows masked or sliced away).
+//! * [`pool`] — the kernel service thread + [`pool::PjrtBackend`], the
+//!   [`crate::affinity::DistanceBackend`] the coordinator hands to U-SPEC.
+
+pub mod manifest;
+pub mod pool;
+
+pub use manifest::{ArtifactMeta, Manifest};
+pub use pool::{KernelPool, PjrtBackend};
+
+use crate::linalg::Mat;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Default artifact directory: `$USPEC_ARTIFACTS` or `<crate>/artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("USPEC_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// The PJRT CPU runtime: one client, lazily compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Counters for the perf report.
+    pub dispatched: u64,
+    pub rows_processed: u64,
+}
+
+impl Runtime {
+    /// Load the manifest and initialize the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir, manifest, exes: HashMap::new(), dispatched: 0, rows_processed: 0 })
+    }
+
+    /// Compile (or fetch cached) executable for an artifact.
+    fn exe(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.exes.contains_key(name) {
+            let meta = self
+                .manifest
+                .artifacts
+                .iter()
+                .find(|a| a.name == name)
+                .ok_or_else(|| Error::Runtime(format!("unknown artifact {name}")))?
+                .clone();
+            let path = self.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.exes.insert(name.to_string(), exe);
+        }
+        Ok(&self.exes[name])
+    }
+
+    /// True if a pdist variant covers (centers, d).
+    pub fn covers(&self, c: usize, d: usize) -> bool {
+        self.manifest.pick("pdist", c, d).is_some()
+    }
+
+    /// Full pairwise squared distances through the compiled Pallas kernel.
+    /// Arbitrary `x.rows` (chunked over the static B), `c.rows`/`d` padded
+    /// up to the chosen variant.
+    pub fn pdist(&mut self, x: &Mat, c: &Mat) -> Result<Mat> {
+        let meta = self
+            .manifest
+            .pick("pdist", c.rows, c.cols)
+            .ok_or_else(|| {
+                Error::Runtime(format!("no pdist artifact for c={} d={}", c.rows, c.cols))
+            })?
+            .clone();
+        let (bv, cv, dv) = (meta.b, meta.c, meta.d);
+        let n = x.rows;
+        let cn = c.rows;
+        let d = x.cols;
+        debug_assert_eq!(c.cols, d);
+        // centers padded once per call
+        let cpad = pad_mat(c, cv, dv);
+        let c_lit = xla::Literal::vec1(&cpad).reshape(&[cv as i64, dv as i64])?;
+        let mut out = Mat::zeros(n, cn);
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + bv).min(n);
+            let rows = hi - lo;
+            let xpad = pad_rows(&x.data[lo * d..hi * d], rows, d, bv, dv);
+            let x_lit = xla::Literal::vec1(&xpad).reshape(&[bv as i64, dv as i64])?;
+            let exe = self.exe(&meta.name)?;
+            let result = exe.execute::<xla::Literal>(&[x_lit, c_lit.clone()])?[0][0]
+                .to_literal_sync()?;
+            let d2 = result.to_tuple1()?;
+            let vals = d2.to_vec::<f32>()?; // bv × cv
+            for r in 0..rows {
+                let src = &vals[r * cv..r * cv + cn];
+                out.data[(lo + r) * cn..(lo + r) * cn + cn].copy_from_slice(src);
+            }
+            self.dispatched += 1;
+            self.rows_processed += rows as u64;
+            lo = hi;
+        }
+        Ok(out)
+    }
+
+    /// Fused nearest-center (labels + min distance) through the compiled
+    /// `dist_top1` graph. Centers beyond `c.rows` are masked invalid.
+    pub fn dist_top1(&mut self, x: &Mat, c: &Mat) -> Result<(Vec<u32>, Vec<f32>)> {
+        let meta = self
+            .manifest
+            .pick("dist_top1", c.rows, c.cols)
+            .ok_or_else(|| {
+                Error::Runtime(format!("no dist_top1 artifact for c={} d={}", c.rows, c.cols))
+            })?
+            .clone();
+        let (bv, cv, dv) = (meta.b, meta.c, meta.d);
+        let n = x.rows;
+        let cn = c.rows;
+        let d = x.cols;
+        let cpad = pad_mat(c, cv, dv);
+        let c_lit = xla::Literal::vec1(&cpad).reshape(&[cv as i64, dv as i64])?;
+        let mut valid = vec![0f32; cv];
+        for v in valid.iter_mut().take(cn) {
+            *v = 1.0;
+        }
+        let v_lit = xla::Literal::vec1(&valid);
+        let mut labels = vec![0u32; n];
+        let mut dists = vec![0f32; n];
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + bv).min(n);
+            let rows = hi - lo;
+            let xpad = pad_rows(&x.data[lo * d..hi * d], rows, d, bv, dv);
+            let x_lit = xla::Literal::vec1(&xpad).reshape(&[bv as i64, dv as i64])?;
+            let exe = self.exe(&meta.name)?;
+            let result = exe
+                .execute::<xla::Literal>(&[x_lit, c_lit.clone(), v_lit.clone()])?[0][0]
+                .to_literal_sync()?;
+            let (idx, dist) = result.to_tuple2()?;
+            let idx = idx.to_vec::<i32>()?;
+            let dist = dist.to_vec::<f32>()?;
+            for r in 0..rows {
+                labels[lo + r] = idx[r] as u32;
+                dists[lo + r] = dist[r];
+            }
+            self.dispatched += 1;
+            self.rows_processed += rows as u64;
+            lo = hi;
+        }
+        Ok((labels, dists))
+    }
+}
+
+/// Pad an n×d matrix into padded_rows×padded_d (zero fill), row-major f32.
+fn pad_mat(m: &Mat, padded_rows: usize, padded_d: usize) -> Vec<f32> {
+    pad_rows(&m.data, m.rows, m.cols, padded_rows, padded_d)
+}
+
+fn pad_rows(data: &[f32], rows: usize, d: usize, padded_rows: usize, padded_d: usize) -> Vec<f32> {
+    debug_assert!(rows <= padded_rows && d <= padded_d);
+    let mut out = vec![0f32; padded_rows * padded_d];
+    for r in 0..rows {
+        out[r * padded_d..r * padded_d + d].copy_from_slice(&data[r * d..(r + 1) * d]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padding_layout() {
+        let m = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let p = pad_mat(&m, 3, 4);
+        assert_eq!(p.len(), 12);
+        assert_eq!(&p[0..4], &[1.0, 2.0, 0.0, 0.0]);
+        assert_eq!(&p[4..8], &[3.0, 4.0, 0.0, 0.0]);
+        assert_eq!(&p[8..12], &[0.0; 4]);
+    }
+
+    // Full runtime execution tests live in rust/tests/integration_runtime.rs
+    // (they need `make artifacts` to have run).
+}

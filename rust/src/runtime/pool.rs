@@ -1,0 +1,295 @@
+//! Kernel service thread + dynamic request batching.
+//!
+//! The PJRT client and its executables live on ONE dedicated service
+//! thread (they are not `Sync`; single ownership also matches the paper's
+//! single-accelerator deployment). Clustering workers — the m base
+//! clusterers of U-SENC run concurrently by the coordinator — submit
+//! [`Req`]s over an mpsc channel and block on their reply.
+//!
+//! **Dynamic batching** (the vLLM-router move, and the paper's "batch
+//! processing manner" §3.1.4): the service thread drains whatever requests
+//! are queued; consecutive `pdist` requests against the *same center set*
+//! are coalesced into one padded kernel dispatch, amortizing the fixed
+//! per-dispatch cost (literal building + PJRT launch) across requesters.
+
+use super::Runtime;
+use crate::affinity::DistanceBackend;
+use crate::linalg::Mat;
+use crate::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+
+/// A kernel request.
+enum Req {
+    Pdist { x: Mat, c: Arc<Mat>, reply: Sender<Result<Mat>> },
+    Top1 { x: Mat, c: Arc<Mat>, reply: Sender<Result<(Vec<u32>, Vec<f32>)>> },
+    Stats { reply: Sender<(u64, u64)> },
+    Shutdown,
+}
+
+/// Handle to the kernel service thread.
+pub struct KernelPool {
+    tx: Mutex<Sender<Req>>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// Requests answered by coalesced dispatches (perf counter).
+    pub coalesced: AtomicU64,
+}
+
+impl KernelPool {
+    /// Start the service thread over the artifact dir.
+    pub fn start(dir: impl AsRef<std::path::Path>) -> Result<Arc<KernelPool>> {
+        let dir = dir.as_ref().to_path_buf();
+        // Fail fast on a missing manifest (on the caller's thread).
+        let _probe = super::Manifest::load(&dir)?;
+        let (tx, rx) = channel::<Req>();
+        let pool = Arc::new(KernelPool {
+            tx: Mutex::new(tx),
+            handle: Mutex::new(None),
+            coalesced: AtomicU64::new(0),
+        });
+        let pool2 = pool.clone();
+        let handle = std::thread::Builder::new()
+            .name("uspec-kernel-pool".into())
+            .spawn(move || service_loop(dir, rx, pool2))
+            .map_err(|e| Error::Runtime(format!("spawn kernel pool: {e}")))?;
+        *pool.handle.lock().unwrap() = Some(handle);
+        Ok(pool)
+    }
+
+    fn send(&self, req: Req) {
+        // A dead service thread surfaces as a RecvError on the reply side.
+        let _ = self.tx.lock().unwrap().send(req);
+    }
+
+    /// Squared distances via the compiled kernel (blocking).
+    pub fn pdist(&self, x: Mat, c: Arc<Mat>) -> Result<Mat> {
+        let (rtx, rrx) = channel();
+        self.send(Req::Pdist { x, c, reply: rtx });
+        rrx.recv().map_err(|_| Error::Runtime("kernel pool died".into()))?
+    }
+
+    /// Fused nearest-center via the compiled kernel (blocking).
+    pub fn top1(&self, x: Mat, c: Arc<Mat>) -> Result<(Vec<u32>, Vec<f32>)> {
+        let (rtx, rrx) = channel();
+        self.send(Req::Top1 { x, c, reply: rtx });
+        rrx.recv().map_err(|_| Error::Runtime("kernel pool died".into()))?
+    }
+
+    /// (dispatches, rows processed) since start.
+    pub fn stats(&self) -> (u64, u64) {
+        let (rtx, rrx) = channel();
+        self.send(Req::Stats { reply: rtx });
+        rrx.recv().unwrap_or((0, 0))
+    }
+}
+
+impl Drop for KernelPool {
+    fn drop(&mut self) {
+        let _ = self.tx.lock().unwrap().send(Req::Shutdown);
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn service_loop(dir: std::path::PathBuf, rx: Receiver<Req>, pool: Arc<KernelPool>) {
+    let mut rt = match Runtime::load(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            // Drain requests with the load error until shutdown.
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Req::Pdist { reply, .. } => {
+                        let _ = reply.send(Err(Error::Runtime(format!("runtime load failed: {e}"))));
+                    }
+                    Req::Top1 { reply, .. } => {
+                        let _ = reply.send(Err(Error::Runtime(format!("runtime load failed: {e}"))));
+                    }
+                    Req::Stats { reply } => {
+                        let _ = reply.send((0, 0));
+                    }
+                    Req::Shutdown => return,
+                }
+            }
+            return;
+        }
+    };
+    let batch_rows = rt.manifest.batch;
+    loop {
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return,
+        };
+        match first {
+            Req::Shutdown => return,
+            Req::Stats { reply } => {
+                let _ = reply.send((rt.dispatched, rt.rows_processed));
+            }
+            Req::Top1 { x, c, reply } => {
+                let _ = reply.send(rt.dist_top1(&x, &c));
+            }
+            Req::Pdist { x, c, reply } => {
+                // Coalesce: drain the queue for more pdist requests against
+                // the same center set (Arc pointer equality — workers share
+                // the Arc for a given rep set / neighborhood table).
+                let mut xs = vec![x];
+                let mut replies = vec![reply];
+                let mut pending: Vec<Req> = Vec::new();
+                loop {
+                    match rx.try_recv() {
+                        Ok(Req::Pdist { x: x2, c: c2, reply: r2 })
+                            if Arc::ptr_eq(&c, &c2)
+                                && xs.iter().map(|m| m.rows).sum::<usize>() + x2.rows
+                                    <= batch_rows =>
+                        {
+                            xs.push(x2);
+                            replies.push(r2);
+                        }
+                        Ok(other) => {
+                            pending.push(other);
+                            break;
+                        }
+                        Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+                    }
+                }
+                if xs.len() == 1 {
+                    let _ = replies.pop().unwrap().send(rt.pdist(&xs[0], &c));
+                } else {
+                    pool.coalesced.fetch_add(xs.len() as u64 - 1, Ordering::Relaxed);
+                    // concat rows, one dispatch, split results
+                    let d = xs[0].cols;
+                    let total: usize = xs.iter().map(|m| m.rows).sum();
+                    let mut big = Mat::zeros(total, d);
+                    let mut off = 0;
+                    for m in &xs {
+                        big.data[off * d..(off + m.rows) * d].copy_from_slice(&m.data);
+                        off += m.rows;
+                    }
+                    match rt.pdist(&big, &c) {
+                        Ok(all) => {
+                            let cn = c.rows;
+                            let mut off = 0;
+                            for (m, r) in xs.iter().zip(replies) {
+                                let part = Mat {
+                                    rows: m.rows,
+                                    cols: cn,
+                                    data: all.data[off * cn..(off + m.rows) * cn].to_vec(),
+                                };
+                                off += m.rows;
+                                let _ = r.send(Ok(part));
+                            }
+                        }
+                        Err(e) => {
+                            let msg = e.to_string();
+                            for r in replies {
+                                let _ = r.send(Err(Error::Runtime(msg.clone())));
+                            }
+                        }
+                    }
+                }
+                // process any request we pulled while coalescing
+                for req in pending {
+                    match req {
+                        Req::Pdist { x, c, reply } => {
+                            let _ = reply.send(rt.pdist(&x, &c));
+                        }
+                        Req::Top1 { x, c, reply } => {
+                            let _ = reply.send(rt.dist_top1(&x, &c));
+                        }
+                        Req::Stats { reply } => {
+                            let _ = reply.send((rt.dispatched, rt.rows_processed));
+                        }
+                        Req::Shutdown => return,
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// [`DistanceBackend`] backed by the kernel pool, with automatic native
+/// fallback when no artifact covers the request shape (or when the block
+/// is too small to amortize a dispatch).
+pub struct PjrtBackend {
+    pool: Arc<KernelPool>,
+    /// Center sets larger than this (or d larger than the artifact grid)
+    /// fall back to the native path.
+    max_c: usize,
+    max_d: usize,
+    /// Blocks with fewer result cells than this run natively.
+    pub min_cells: usize,
+    /// Perf counters.
+    pub kernel_calls: AtomicU64,
+    pub native_calls: AtomicU64,
+    /// Cache of the last center set seen (Arc identity enables coalescing).
+    last_c: Mutex<Option<(u64, Arc<Mat>)>>,
+}
+
+impl PjrtBackend {
+    pub fn new(pool: Arc<KernelPool>) -> PjrtBackend {
+        PjrtBackend {
+            pool,
+            max_c: 256,
+            max_d: 784,
+            min_cells: 0,
+            kernel_calls: AtomicU64::new(0),
+            native_calls: AtomicU64::new(0),
+            last_c: Mutex::new(None),
+        }
+    }
+
+    /// Cheap content hash for center-set identity.
+    fn hash_mat(m: &Mat) -> u64 {
+        let mut h = 0xcbf29ce484222325u64;
+        let mut mix = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(0x100000001b3);
+        };
+        mix(m.rows as u64);
+        mix(m.cols as u64);
+        // sample up to 64 elements spread across the buffer
+        let n = m.data.len();
+        let step = (n / 64).max(1);
+        for i in (0..n).step_by(step) {
+            mix(m.data[i].to_bits() as u64);
+        }
+        h
+    }
+
+    fn shared_centers(&self, c: &Mat) -> Arc<Mat> {
+        let h = Self::hash_mat(c);
+        let mut guard = self.last_c.lock().unwrap();
+        if let Some((ph, pc)) = guard.as_ref() {
+            if *ph == h && pc.rows == c.rows && pc.cols == c.cols && pc.data == c.data {
+                return pc.clone();
+            }
+        }
+        let arc = Arc::new(c.clone());
+        *guard = Some((h, arc.clone()));
+        arc
+    }
+}
+
+impl DistanceBackend for PjrtBackend {
+    fn sq_dists(&self, x: &Mat, c: &Mat) -> Mat {
+        let fits = c.rows <= self.max_c && c.cols <= self.max_d;
+        let big_enough = x.rows * c.rows >= self.min_cells;
+        if fits && big_enough {
+            let carc = self.shared_centers(c);
+            match self.pool.pdist(x.clone(), carc) {
+                Ok(m) => {
+                    self.kernel_calls.fetch_add(1, Ordering::Relaxed);
+                    return m;
+                }
+                Err(_) => { /* fall through to native */ }
+            }
+        }
+        self.native_calls.fetch_add(1, Ordering::Relaxed);
+        x.sq_dists(c)
+    }
+
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+}

@@ -1,0 +1,402 @@
+//! Out-of-core U-SPEC: cluster datasets that do not fit in memory.
+//!
+//! The paper's motivation is "ten-million-level datasets on a PC with
+//! 64 GB memory" (§1). This module takes the limited-resource premise one
+//! step further: the dataset lives **on disk** ([`BinDataset`], a flat
+//! row-major f32 file) and the whole U-SPEC pipeline runs in two
+//! bounded-memory passes —
+//!
+//! 1. **Pass 1** (selection): reservoir-sample the p′ candidate
+//!    representatives in one sequential sweep (`O(p′·d)` resident), then
+//!    k-means them down to the p representatives and build the
+//!    [`KnrIndex`] (both `O(p·d)`).
+//! 2. **Pass 2** (affinity): stream objects chunk-by-chunk through the
+//!    approximate-KNR search, appending to the sparse `B` (`O(N·K)` —
+//!    the algorithm's intrinsic memory floor, see §3.1.4) and then run the
+//!    transfer cut and the k-means discretization on the `N×k` embedding.
+//!
+//! Resident peak is `O(N·K + chunk·d + p·d)` — independent of `N·d`,
+//! which only ever streams off disk.
+
+use crate::affinity::{build_affinity, knr::KnrIndex, select::SelectStrategy, DistanceBackend};
+use crate::bipartite::{row_normalize, transfer_cut};
+use crate::kmeans::{kmeans, KmeansParams};
+use crate::linalg::Mat;
+use crate::uspec::UspecParams;
+use crate::util::rng::Rng;
+use crate::util::timer::PhaseTimer;
+use crate::{ensure_arg, Error, Result};
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// Magic bytes of the on-disk format (`USPECBIN` v1).
+const MAGIC: &[u8; 8] = b"USPECB01";
+
+/// A dense row-major f32 dataset on disk: 8-byte magic, u64 n, u64 d,
+/// then `n·d` little-endian f32 values. Labels (if any) live elsewhere —
+/// the clustering path never needs them.
+pub struct BinDataset {
+    path: PathBuf,
+    n: usize,
+    d: usize,
+}
+
+impl BinDataset {
+    /// Create a file and stream rows into it via the returned writer.
+    pub fn create(path: &Path, d: usize) -> Result<BinWriter> {
+        ensure_arg!(d >= 1, "BinDataset: d must be >= 1");
+        let file = std::fs::File::create(path)?;
+        let mut w = BufWriter::new(file);
+        w.write_all(MAGIC)?;
+        w.write_all(&0u64.to_le_bytes())?; // n patched on finish
+        w.write_all(&(d as u64).to_le_bytes())?;
+        Ok(BinWriter { w: Some(w), path: path.to_path_buf(), d, n: 0 })
+    }
+
+    /// Open an existing file, validating the header.
+    pub fn open(path: &Path) -> Result<BinDataset> {
+        let mut f = std::fs::File::open(path)?;
+        let mut header = [0u8; 24];
+        f.read_exact(&mut header)
+            .map_err(|_| Error::InvalidArg(format!("{}: truncated header", path.display())))?;
+        if &header[..8] != MAGIC {
+            return Err(Error::InvalidArg(format!("{}: not a USPECB01 file", path.display())));
+        }
+        let n = u64::from_le_bytes(header[8..16].try_into().unwrap()) as usize;
+        let d = u64::from_le_bytes(header[16..24].try_into().unwrap()) as usize;
+        ensure_arg!(d >= 1, "{}: d=0", path.display());
+        let expect = 24 + (n * d * 4) as u64;
+        let len = f.metadata()?.len();
+        if len != expect {
+            return Err(Error::InvalidArg(format!(
+                "{}: size {len} != expected {expect} (n={n}, d={d})",
+                path.display()
+            )));
+        }
+        Ok(BinDataset { path: path.to_path_buf(), n, d })
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Read rows `[start, start+len)` into a dense matrix.
+    pub fn read_chunk(&self, start: usize, len: usize) -> Result<Mat> {
+        ensure_arg!(start + len <= self.n, "read_chunk: out of range");
+        let mut f = std::fs::File::open(&self.path)?;
+        f.seek(SeekFrom::Start(24 + (start * self.d * 4) as u64))?;
+        let mut buf = vec![0u8; len * self.d * 4];
+        f.read_exact(&mut buf)?;
+        let data: Vec<f32> = buf
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        Ok(Mat::from_vec(len, self.d, data))
+    }
+
+    /// Sequentially visit the dataset in chunks of `chunk` rows.
+    pub fn for_each_chunk(
+        &self,
+        chunk: usize,
+        mut f: impl FnMut(usize, &Mat) -> Result<()>,
+    ) -> Result<()> {
+        let chunk = chunk.max(1);
+        let mut start = 0;
+        while start < self.n {
+            let len = chunk.min(self.n - start);
+            let m = self.read_chunk(start, len)?;
+            f(start, &m)?;
+            start += len;
+        }
+        Ok(())
+    }
+
+    /// Write an in-memory matrix to disk (test/example helper).
+    pub fn write_mat(path: &Path, x: &Mat) -> Result<BinDataset> {
+        let mut w = BinDataset::create(path, x.cols)?;
+        for i in 0..x.rows {
+            w.push_row(x.row(i))?;
+        }
+        w.finish()
+    }
+}
+
+/// Incremental writer returned by [`BinDataset::create`].
+pub struct BinWriter {
+    w: Option<BufWriter<std::fs::File>>,
+    path: PathBuf,
+    d: usize,
+    n: usize,
+}
+
+impl BinWriter {
+    pub fn push_row(&mut self, row: &[f32]) -> Result<()> {
+        ensure_arg!(row.len() == self.d, "push_row: got {} dims, want {}", row.len(), self.d);
+        let w = self.w.as_mut().expect("writer finished");
+        for v in row {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        self.n += 1;
+        Ok(())
+    }
+
+    /// Flush, patch the row count into the header, and reopen read-only.
+    pub fn finish(mut self) -> Result<BinDataset> {
+        let w = self.w.take().expect("writer finished twice");
+        let mut file = w.into_inner().map_err(|e| Error::Io(e.into_error()))?;
+        file.seek(SeekFrom::Start(8))?;
+        file.write_all(&(self.n as u64).to_le_bytes())?;
+        file.sync_all()?;
+        drop(file);
+        BinDataset::open(&self.path)
+    }
+}
+
+/// Resource limits for the streaming pipeline.
+#[derive(Debug, Clone)]
+pub struct StreamParams {
+    /// Rows per chunk in pass 2 (the resident working set is
+    /// `chunk × d` f32s plus the growing sparse B).
+    pub chunk: usize,
+    /// U-SPEC hyper-parameters (p, K, k, solver, ...). The `selection`
+    /// field is ignored: streaming always uses reservoir + k-means (the
+    /// hybrid strategy's out-of-core form).
+    pub base: UspecParams,
+}
+
+impl Default for StreamParams {
+    fn default() -> Self {
+        StreamParams { chunk: 8192, base: UspecParams::default() }
+    }
+}
+
+/// Streaming result: labels plus the observed resident-memory model.
+#[derive(Debug)]
+pub struct StreamResult {
+    pub labels: Vec<u32>,
+    /// Estimated peak resident bytes of the pipeline (B + chunk + index).
+    pub peak_bytes: u64,
+    pub timer: PhaseTimer,
+}
+
+/// Single-pass reservoir sample of `size` rows (Vitter's Algorithm R),
+/// reading the dataset sequentially in `chunk`-row blocks.
+pub fn reservoir_sample(
+    ds: &BinDataset,
+    size: usize,
+    chunk: usize,
+    seed: u64,
+) -> Result<Mat> {
+    let size = size.min(ds.n());
+    ensure_arg!(size >= 1, "reservoir_sample: empty sample");
+    let mut rng = Rng::new(seed ^ 0x9E5E_2B01);
+    let mut sample = Mat::zeros(size, ds.d());
+    let mut seen = 0usize;
+    ds.for_each_chunk(chunk, |_, m| {
+        for i in 0..m.rows {
+            if seen < size {
+                sample.row_mut(seen).copy_from_slice(m.row(i));
+            } else {
+                let j = rng.usize(seen + 1);
+                if j < size {
+                    sample.row_mut(j).copy_from_slice(m.row(i));
+                }
+            }
+            seen += 1;
+        }
+        Ok(())
+    })?;
+    Ok(sample)
+}
+
+/// Out-of-core U-SPEC over an on-disk dataset.
+pub fn stream_uspec(
+    ds: &BinDataset,
+    params: &StreamParams,
+    seed: u64,
+    backend: &dyn DistanceBackend,
+) -> Result<StreamResult> {
+    let n = ds.n();
+    let base = params.base.clamped(n);
+    let p = base.p;
+    let k_nn = base.k_nn.min(p);
+    ensure_arg!(n >= 2, "stream_uspec: need at least 2 objects");
+    let mut timer = PhaseTimer::new();
+
+    // ---- Pass 1: selection ------------------------------------------------
+    let candidate_factor = match base.selection {
+        SelectStrategy::Hybrid { candidate_factor } => candidate_factor,
+        _ => 10,
+    };
+    let p_prime = (p * candidate_factor).min(n);
+    let candidates = timer.time("reservoir", || {
+        reservoir_sample(ds, p_prime, params.chunk, seed ^ 0x5E1)
+    })?;
+    let reps = timer.time("selection", || {
+        let km = kmeans(
+            &candidates,
+            &KmeansParams { k: p, max_iter: base.kmeans_iters, tol: 1e-3, ..Default::default() },
+            seed ^ 0x5E2,
+        )?;
+        Ok::<Mat, Error>(km.centers)
+    })?;
+    let index = timer.time("knr_index", || {
+        KnrIndex::build(&reps, base.k_prime_factor * k_nn, base.kmeans_iters, backend)
+    })?;
+
+    // ---- Pass 2: streamed affinity ----------------------------------------
+    let mut idx = Vec::with_capacity(n * k_nn);
+    let mut d2 = Vec::with_capacity(n * k_nn);
+    timer.time("knr_stream", || {
+        ds.for_each_chunk(params.chunk, |_, m| {
+            let res = index.approx_knr(m, k_nn, backend);
+            idx.extend_from_slice(&res.idx);
+            d2.extend_from_slice(&res.d2);
+            Ok(())
+        })
+    })?;
+    let knr = crate::affinity::knr::KnrResult { idx, d2, k: k_nn };
+    let aff = timer.time("affinity", || Ok::<_, Error>(build_affinity(n, p, k_nn, &knr)))?;
+
+    // ---- Transfer cut + discretization -------------------------------------
+    let tc = timer.time("eigen", || transfer_cut(&aff.b, base.k, base.solver, seed ^ 0x5E3))?;
+    let mut emb = tc.embedding;
+    row_normalize(&mut emb);
+    let km = timer.time("discretize", || {
+        kmeans(
+            &emb,
+            &KmeansParams { k: base.k, max_iter: base.kmeans_iters, ..Default::default() },
+            seed ^ 0x5E4,
+        )
+    })?;
+
+    // Peak model: sparse B (idx u32 + d2 f32 + csr f64) + chunk + index.
+    let peak_bytes = (n * k_nn) as u64 * (4 + 4 + 8 + 4)
+        + (params.chunk * ds.d()) as u64 * 4
+        + (p * ds.d()) as u64 * 4
+        + (n * base.k) as u64 * 4;
+    Ok(StreamResult { labels: km.labels, peak_bytes, timer })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::affinity::NativeBackend;
+    use crate::data::synthetic::{concentric_circles, two_moons};
+    use crate::metrics::nmi;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("uspec_stream_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn bin_roundtrip() {
+        let ds = two_moons(257, 0.05, 1); // deliberately not chunk-aligned
+        let path = tmp("roundtrip.bin");
+        let bin = BinDataset::write_mat(&path, &ds.x).unwrap();
+        assert_eq!(bin.n(), 257);
+        assert_eq!(bin.d(), 2);
+        let back = bin.read_chunk(0, 257).unwrap();
+        assert_eq!(back.data, ds.x.data);
+        // chunked reads agree with one-shot
+        let mut rows = 0;
+        bin.for_each_chunk(100, |start, m| {
+            for i in 0..m.rows {
+                assert_eq!(m.row(i), ds.x.row(start + i));
+            }
+            rows += m.rows;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(rows, 257);
+    }
+
+    #[test]
+    fn open_rejects_corruption() {
+        let path = tmp("corrupt.bin");
+        std::fs::write(&path, b"not a dataset").unwrap();
+        assert!(BinDataset::open(&path).is_err());
+        // truncated payload
+        let ds = two_moons(50, 0.05, 2);
+        let good = tmp("trunc.bin");
+        BinDataset::write_mat(&good, &ds.x).unwrap();
+        let bytes = std::fs::read(&good).unwrap();
+        std::fs::write(&good, &bytes[..bytes.len() - 4]).unwrap();
+        assert!(BinDataset::open(&good).is_err());
+    }
+
+    #[test]
+    fn reservoir_uniformity() {
+        // sample 1 row from n=100 many times: each row should appear
+        // roughly uniformly (chi-square-lite bound).
+        let mut x = Mat::zeros(100, 1);
+        for i in 0..100 {
+            x.set(i, 0, i as f32);
+        }
+        let path = tmp("reservoir.bin");
+        let bin = BinDataset::write_mat(&path, &x).unwrap();
+        let mut counts = vec![0u32; 100];
+        for s in 0..3000 {
+            let m = reservoir_sample(&bin, 1, 17, s).unwrap();
+            counts[m.at(0, 0) as usize] += 1;
+        }
+        let (min, max) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+        assert!(*min >= 5, "min count {min}");
+        assert!(*max <= 70, "max count {max}");
+    }
+
+    #[test]
+    fn streamed_uspec_clusters_circles() {
+        let ds = concentric_circles(3000, 5);
+        let path = tmp("circles.bin");
+        let bin = BinDataset::write_mat(&path, &ds.x).unwrap();
+        let params = StreamParams {
+            chunk: 700, // force multiple pass-2 chunks
+            base: UspecParams { k: 3, p: 250, ..Default::default() },
+        };
+        let res = stream_uspec(&bin, &params, 42, &NativeBackend).unwrap();
+        let score = nmi(&res.labels, &ds.y);
+        assert!(score > 0.9, "nmi={score}");
+        // resident model must be far below the dense footprint
+        let dense = (bin.n() * bin.d() * 4) as u64;
+        assert!(res.peak_bytes < 40 * dense, "peak={} dense={dense}", res.peak_bytes);
+    }
+
+    #[test]
+    fn streamed_matches_in_memory_quality() {
+        let ds = two_moons(2000, 0.06, 9);
+        let path = tmp("moons.bin");
+        let bin = BinDataset::write_mat(&path, &ds.x).unwrap();
+        let params = StreamParams {
+            chunk: 512,
+            base: UspecParams { k: 2, p: 200, ..Default::default() },
+        };
+        let streamed = stream_uspec(&bin, &params, 7, &NativeBackend).unwrap();
+        let in_mem = crate::uspec::uspec(
+            &ds.x,
+            &UspecParams { k: 2, p: 200, ..Default::default() },
+            7,
+        )
+        .unwrap();
+        let s_nmi = nmi(&streamed.labels, &ds.y);
+        let m_nmi = nmi(&in_mem.labels, &ds.y);
+        assert!(s_nmi > 0.85, "streamed nmi={s_nmi}");
+        assert!(s_nmi > m_nmi - 0.15, "streamed {s_nmi} vs in-mem {m_nmi}");
+    }
+
+    #[test]
+    fn writer_validates_dims() {
+        let path = tmp("dims.bin");
+        let mut w = BinDataset::create(&path, 3).unwrap();
+        assert!(w.push_row(&[1.0, 2.0]).is_err());
+        w.push_row(&[1.0, 2.0, 3.0]).unwrap();
+        let bin = w.finish().unwrap();
+        assert_eq!((bin.n(), bin.d()), (1, 3));
+    }
+}

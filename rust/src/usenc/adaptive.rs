@@ -1,0 +1,181 @@
+//! Adaptive ensemble size — an extension past the paper's fixed m = 20
+//! (§4.5.3 shows quality saturating in m): grow the ensemble in batches
+//! and stop once the consensus stabilizes, measured by the NMI between
+//! consecutive consensus clusterings. Spends base-clusterer budget only
+//! while it still changes the answer.
+
+use crate::affinity::DistanceBackend;
+use crate::linalg::Mat;
+use crate::metrics::nmi;
+use crate::usenc::{consensus_bipartite, draw_base_k, Ensemble, UsencParams};
+use crate::uspec::{uspec_with_backend, UspecParams};
+use crate::util::rng::Rng;
+use crate::{ensure_arg, Result};
+
+/// Stopping policy for [`usenc_adaptive`].
+#[derive(Debug, Clone)]
+pub struct AdaptiveParams {
+    /// Base clusterers added per round (paper's unit of work).
+    pub batch: usize,
+    /// Minimum ensemble size before stabilization may stop the loop.
+    pub m_min: usize,
+    /// Hard ceiling on the ensemble size.
+    pub m_max: usize,
+    /// Stop when NMI(consensusᵣ, consensusᵣ₋₁) ≥ `stability` for
+    /// `patience` consecutive rounds.
+    pub stability: f64,
+    pub patience: usize,
+}
+
+impl Default for AdaptiveParams {
+    fn default() -> Self {
+        AdaptiveParams { batch: 4, m_min: 8, m_max: 40, stability: 0.995, patience: 2 }
+    }
+}
+
+/// Outcome of the adaptive loop.
+#[derive(Debug, Clone)]
+pub struct AdaptiveResult {
+    pub labels: Vec<u32>,
+    pub ensemble: Ensemble,
+    /// NMI between consecutive consensus clusterings, one per round after
+    /// the first.
+    pub stability_trace: Vec<f64>,
+    /// True if the loop stopped on stabilization (false = hit m_max).
+    pub converged: bool,
+}
+
+/// U-SENC with adaptive ensemble size. Base clusterers are derived from
+/// the same seed stream as [`crate::usenc::generate_ensemble`], so a
+/// converged adaptive run is a prefix of the fixed-m run.
+pub fn usenc_adaptive(
+    x: &Mat,
+    params: &UsencParams,
+    adaptive: &AdaptiveParams,
+    seed: u64,
+    backend: &dyn DistanceBackend,
+) -> Result<AdaptiveResult> {
+    ensure_arg!(adaptive.batch >= 1, "adaptive: batch must be >= 1");
+    ensure_arg!(
+        adaptive.m_min >= 2 && adaptive.m_min <= adaptive.m_max,
+        "adaptive: bad m range [{}, {}]",
+        adaptive.m_min,
+        adaptive.m_max
+    );
+    // stability > 1.0 is allowed: NMI never reaches it, so it disables
+    // early stopping (run exactly to m_max).
+    ensure_arg!(adaptive.stability > 0.0, "adaptive: stability must be > 0");
+    let mut rng = Rng::new(seed);
+    let mut ens = Ensemble::default();
+    let mut prev_labels: Option<Vec<u32>> = None;
+    let mut trace = Vec::new();
+    let mut stable_rounds = 0usize;
+    let mut i = 0usize;
+    loop {
+        // grow the ensemble by one batch (same seed stream as fixed-m)
+        let grow_to = (ens.m() + adaptive.batch).min(adaptive.m_max);
+        while ens.m() < grow_to {
+            let ki = draw_base_k(&mut rng, params.k_min, params.k_max, x.rows);
+            let base = UspecParams { k: ki, ..params.base.clone() };
+            let job_seed = rng.fork(i as u64).next_u64();
+            let res = uspec_with_backend(x, &base, job_seed, backend)?;
+            ens.push(res.labels);
+            i += 1;
+        }
+        let (labels, _) =
+            consensus_bipartite(&ens, params.k, params.base.solver, seed ^ 0xC075)?;
+        if let Some(prev) = &prev_labels {
+            let s = nmi(prev, &labels);
+            trace.push(s);
+            if ens.m() >= adaptive.m_min && s >= adaptive.stability {
+                stable_rounds += 1;
+            } else {
+                stable_rounds = 0;
+            }
+        }
+        let converged = stable_rounds >= adaptive.patience;
+        if converged || ens.m() >= adaptive.m_max {
+            return Ok(AdaptiveResult { labels, ensemble: ens, stability_trace: trace, converged });
+        }
+        prev_labels = Some(labels);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::affinity::NativeBackend;
+    use crate::data::synthetic::{concentric_circles, two_moons};
+
+    fn base_params(k: usize, p: usize) -> UsencParams {
+        UsencParams {
+            k,
+            m: 40,
+            k_min: 5,
+            k_max: 12,
+            base: UspecParams { p, ..Default::default() },
+        }
+    }
+
+    #[test]
+    fn converges_early_on_easy_data() {
+        let ds = two_moons(1200, 0.05, 3);
+        let res = usenc_adaptive(
+            &ds.x,
+            &base_params(2, 120),
+            &AdaptiveParams::default(),
+            17,
+            &NativeBackend,
+        )
+        .unwrap();
+        assert!(res.converged, "trace {:?}", res.stability_trace);
+        assert!(
+            res.ensemble.m() < 40,
+            "easy data should stop before m_max (got m={})",
+            res.ensemble.m()
+        );
+        let score = crate::metrics::nmi(&res.labels, &ds.y);
+        assert!(score > 0.85, "nmi={score}");
+    }
+
+    #[test]
+    fn respects_m_max() {
+        let ds = concentric_circles(600, 7);
+        let ap = AdaptiveParams {
+            batch: 3,
+            m_min: 6,
+            m_max: 9,
+            stability: 1.1, // unattainable → must run to the ceiling
+            patience: 1,
+        };
+        let res =
+            usenc_adaptive(&ds.x, &base_params(3, 80), &ap, 5, &NativeBackend).unwrap();
+        assert!(!res.converged);
+        assert_eq!(res.ensemble.m(), 9);
+    }
+
+    #[test]
+    fn prefix_of_fixed_m_seed_stream() {
+        // the adaptive ensemble must be a prefix of generate_ensemble's
+        // output for the same seed (same job derivation)
+        let ds = two_moons(400, 0.05, 9);
+        let params = base_params(2, 60);
+        let ap = AdaptiveParams { batch: 2, m_min: 4, m_max: 6, stability: 2.0, patience: 1 };
+        let res = usenc_adaptive(&ds.x, &params, &ap, 23, &NativeBackend).unwrap();
+        let fixed =
+            crate::usenc::generate_ensemble(&ds.x, &params, 23, &NativeBackend).unwrap();
+        for (a, b) in res.ensemble.labelings.iter().zip(&fixed.labelings) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        let ds = two_moons(100, 0.05, 1);
+        let params = base_params(2, 30);
+        let bad = AdaptiveParams { batch: 0, ..Default::default() };
+        assert!(usenc_adaptive(&ds.x, &params, &bad, 1, &NativeBackend).is_err());
+        let bad = AdaptiveParams { m_min: 10, m_max: 5, ..Default::default() };
+        assert!(usenc_adaptive(&ds.x, &params, &bad, 1, &NativeBackend).is_err());
+    }
+}

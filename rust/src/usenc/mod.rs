@@ -1,0 +1,279 @@
+//! **U-SENC** — Ultra-Scalable Ensemble Clustering (paper §3.2).
+//!
+//! Ensemble generation runs m diverse U-SPEC base clusterers (independent
+//! hybrid representative sets; random per-clusterer cluster count
+//! kⁱ ∈ [k_min, k_max]); the consensus function builds the object×cluster
+//! bipartite graph B̃ (exactly m ones per row) and partitions it with the
+//! same transfer cut. Complexity O(N·m·p^½·d) time, O(N·p^½) memory.
+//!
+//! Base clusterers can be driven sequentially ([`usenc`]), by the
+//! leader/worker scheduler in [`crate::coordinator`], or with an adaptive
+//! ensemble size ([`adaptive::usenc_adaptive`]).
+
+pub mod adaptive;
+
+use crate::affinity::DistanceBackend;
+use crate::bipartite::{transfer_cut, EigSolver};
+use crate::kmeans::{kmeans, KmeansParams};
+use crate::linalg::{Csr, Mat};
+use crate::uspec::{uspec_with_backend, UspecParams};
+use crate::util::rng::Rng;
+use crate::util::timer::PhaseTimer;
+use crate::{ensure_arg, Result};
+
+/// An ensemble of base clusterings over the same N objects.
+#[derive(Debug, Clone, Default)]
+pub struct Ensemble {
+    /// labelings[i] has length N with labels densified to 0..kᵢ-1.
+    pub labelings: Vec<Vec<u32>>,
+}
+
+impl Ensemble {
+    pub fn m(&self) -> usize {
+        self.labelings.len()
+    }
+
+    pub fn n(&self) -> usize {
+        self.labelings.first().map(|l| l.len()).unwrap_or(0)
+    }
+
+    pub fn push(&mut self, labels: Vec<u32>) {
+        if let Some(first) = self.labelings.first() {
+            assert_eq!(first.len(), labels.len(), "ensemble labelings must align");
+        }
+        self.labelings.push(labels);
+    }
+
+    /// Per-base-clustering cluster counts.
+    pub fn ks(&self) -> Vec<usize> {
+        self.labelings
+            .iter()
+            .map(|l| l.iter().copied().max().map(|m| m as usize + 1).unwrap_or(0))
+            .collect()
+    }
+
+    /// Total number of clusters k_c = Σ kᵢ.
+    pub fn total_clusters(&self) -> usize {
+        self.ks().iter().sum()
+    }
+
+    /// The object×cluster incidence matrix B̃ (N×k_c, one 1 per base
+    /// clustering per row — Eq. 18–19).
+    pub fn incidence(&self) -> Csr {
+        let n = self.n();
+        let m = self.m();
+        let ks = self.ks();
+        let kc: usize = ks.iter().sum();
+        // column offsets per base clustering
+        let mut offsets = vec![0usize; m];
+        let mut acc = 0;
+        for (i, &k) in ks.iter().enumerate() {
+            offsets[i] = acc;
+            acc += k;
+        }
+        let mut cols = vec![0u32; n * m];
+        let vals = vec![1.0f64; n * m];
+        for i in 0..n {
+            for (b, labeling) in self.labelings.iter().enumerate() {
+                cols[i * m + b] = (offsets[b] + labeling[i] as usize) as u32;
+            }
+        }
+        Csr::from_uniform(n, kc, m, cols, vals)
+    }
+}
+
+/// U-SENC hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct UsencParams {
+    /// Number of clusters in the consensus output.
+    pub k: usize,
+    /// Ensemble size m (paper default 20).
+    pub m: usize,
+    /// Base-clusterer cluster-count range [k_min, k_max] (paper: [20, 60]).
+    pub k_min: usize,
+    pub k_max: usize,
+    /// Base U-SPEC parameters (k is overridden per clusterer).
+    pub base: UspecParams,
+}
+
+impl Default for UsencParams {
+    fn default() -> Self {
+        UsencParams { k: 2, m: 20, k_min: 20, k_max: 60, base: UspecParams::default() }
+    }
+}
+
+/// U-SENC output.
+#[derive(Debug, Clone)]
+pub struct UsencResult {
+    pub labels: Vec<u32>,
+    pub ensemble: Ensemble,
+    pub timer: PhaseTimer,
+}
+
+/// Draw the i-th base clusterer's cluster count kⁱ (Eq. 14), clamped to n.
+pub fn draw_base_k(rng: &mut Rng, k_min: usize, k_max: usize, n: usize) -> usize {
+    let (lo, hi) = (k_min.min(k_max), k_max.max(k_min));
+    let tau = rng.f64();
+    let k = ((tau * (hi - lo) as f64).floor() as usize + lo).max(2);
+    k.min(n)
+}
+
+/// Generate the ensemble of m base clusterings via m U-SPEC runs.
+pub fn generate_ensemble(
+    x: &Mat,
+    params: &UsencParams,
+    seed: u64,
+    backend: &dyn DistanceBackend,
+) -> Result<Ensemble> {
+    let mut rng = Rng::new(seed);
+    let mut ens = Ensemble::default();
+    for i in 0..params.m {
+        let ki = draw_base_k(&mut rng, params.k_min, params.k_max, x.rows);
+        let base = UspecParams { k: ki, ..params.base.clone() };
+        let job_seed = rng.fork(i as u64).next_u64();
+        let res = uspec_with_backend(x, &base, job_seed, backend)?;
+        ens.push(res.labels);
+    }
+    Ok(ens)
+}
+
+/// Consensus function: partition the object×cluster bipartite graph
+/// (§3.2.2). Usable with any ensemble (also the k-means ensembles of the
+/// baseline methods).
+pub fn consensus_bipartite(
+    ensemble: &Ensemble,
+    k: usize,
+    solver: EigSolver,
+    seed: u64,
+) -> Result<(Vec<u32>, Mat)> {
+    ensure_arg!(ensemble.m() >= 1, "consensus: empty ensemble");
+    let n = ensemble.n();
+    ensure_arg!(k >= 1 && k <= n, "consensus: bad k={k}");
+    let b = ensemble.incidence();
+    ensure_arg!(k <= b.cols, "consensus: k={k} > total clusters {}", b.cols);
+    let tc = transfer_cut(&b, k, solver, seed)?;
+    let mut emb = tc.embedding.clone();
+    crate::bipartite::row_normalize(&mut emb);
+    let km = kmeans(
+        &emb,
+        &KmeansParams { k, max_iter: 100, ..Default::default() },
+        seed ^ 0xD15C,
+    )?;
+    Ok((km.labels, tc.embedding))
+}
+
+/// Full U-SENC: ensemble generation + bipartite consensus (sequential
+/// base-clusterer execution; see [`crate::coordinator`] for the scheduled
+/// parallel path).
+pub fn usenc(
+    x: &Mat,
+    params: &UsencParams,
+    seed: u64,
+    backend: &dyn DistanceBackend,
+) -> Result<UsencResult> {
+    let mut timer = PhaseTimer::new();
+    let ensemble = timer.time("generation", || generate_ensemble(x, params, seed, backend))?;
+    let (labels, _emb) = timer.time("consensus", || {
+        consensus_bipartite(&ensemble, params.k, params.base.solver, seed ^ 0xC075)
+    })?;
+    Ok(UsencResult { labels, ensemble, timer })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::affinity::NativeBackend;
+    use crate::data::synthetic::{concentric_circles, two_moons};
+    use crate::metrics::nmi;
+
+    fn small_params(k: usize, m: usize, p: usize) -> UsencParams {
+        UsencParams {
+            k,
+            m,
+            k_min: 5,
+            k_max: 12,
+            base: UspecParams { p, ..Default::default() },
+        }
+    }
+
+    #[test]
+    fn incidence_structure() {
+        let mut ens = Ensemble::default();
+        ens.push(vec![0, 0, 1, 1]);
+        ens.push(vec![0, 1, 1, 2]);
+        assert_eq!(ens.m(), 2);
+        assert_eq!(ens.ks(), vec![2, 3]);
+        assert_eq!(ens.total_clusters(), 5);
+        let b = ens.incidence();
+        assert_eq!(b.rows, 4);
+        assert_eq!(b.cols, 5);
+        assert_eq!(b.nnz(), 8); // exactly m per row
+        // object 3: cluster 1 of base 0 (col 1), cluster 2 of base 1 (col 2+2=4)
+        assert_eq!(b.row(3).0, &[1u32, 4u32]);
+        // column sums = cluster sizes
+        assert_eq!(b.col_sums(), vec![2.0, 2.0, 1.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn consensus_label_permutation_invariant() {
+        let mut a = Ensemble::default();
+        a.push(vec![0, 0, 0, 1, 1, 1, 2, 2, 2]);
+        a.push(vec![0, 0, 1, 1, 1, 2, 2, 2, 0]);
+        let mut b = Ensemble::default();
+        // same partitions, permuted labels
+        b.push(vec![2, 2, 2, 0, 0, 0, 1, 1, 1]);
+        b.push(vec![1, 1, 2, 2, 2, 0, 0, 0, 1]);
+        let (la, _) = consensus_bipartite(&a, 3, EigSolver::Dense, 5).unwrap();
+        let (lb, _) = consensus_bipartite(&b, 3, EigSolver::Dense, 5).unwrap();
+        assert!((nmi(&la, &lb) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn recovers_moons() {
+        let ds = two_moons(1200, 0.06, 3);
+        let res = usenc(&ds.x, &small_params(2, 6, 120), 17, &NativeBackend).unwrap();
+        let score = nmi(&res.labels, &ds.y);
+        assert!(score > 0.85, "nmi={score}");
+        assert_eq!(res.ensemble.m(), 6);
+    }
+
+    #[test]
+    fn usenc_at_least_as_good_as_median_base_on_rings() {
+        let ds = concentric_circles(1500, 5);
+        let params = small_params(3, 8, 150);
+        let res = usenc(&ds.x, &params, 23, &NativeBackend).unwrap();
+        let consensus_nmi = nmi(&res.labels, &ds.y);
+        // The robustness claim: the consensus must beat the average base
+        // clustering (whose k is drawn in [5,12] ≠ 3).
+        let mean_base: f64 = res
+            .ensemble
+            .labelings
+            .iter()
+            .map(|l| nmi(l, &ds.y))
+            .sum::<f64>()
+            / res.ensemble.m() as f64;
+        assert!(consensus_nmi > 0.7, "consensus nmi={consensus_nmi}");
+        assert!(
+            consensus_nmi > mean_base,
+            "consensus {consensus_nmi} should beat mean base {mean_base}"
+        );
+    }
+
+    #[test]
+    fn draw_base_k_in_range() {
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let k = draw_base_k(&mut rng, 20, 60, 10_000);
+            assert!((20..=60).contains(&k));
+        }
+        // clamped by n
+        let k = draw_base_k(&mut rng, 20, 60, 10);
+        assert!(k <= 10);
+    }
+
+    #[test]
+    fn rejects_empty_ensemble() {
+        let ens = Ensemble::default();
+        assert!(consensus_bipartite(&ens, 2, EigSolver::Dense, 1).is_err());
+    }
+}

@@ -1,0 +1,224 @@
+//! **U-SPEC** — Ultra-Scalable Spectral Clustering (paper §3.1).
+//!
+//! Pipeline: hybrid representative selection → approximate K-nearest
+//! representatives → sparse Gaussian cross-affinity `B` → transfer-cut
+//! bipartite partitioning → k-means discretization. Dominant complexity
+//! O(N·p^½·d) time and O(N·p^½) memory.
+
+use crate::affinity::{
+    build_affinity, knr::KnrIndex, select, DistanceBackend, NativeBackend, SelectStrategy,
+};
+use crate::bipartite::{transfer_cut, EigSolver};
+use crate::kmeans::{kmeans, KmeansParams};
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+use crate::util::timer::PhaseTimer;
+use crate::{ensure_arg, Result};
+
+pub mod estimate;
+
+/// Exact vs approximate K-nearest-representative search (Tables 15–16).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KnrMode {
+    /// The paper's coarse-to-fine approximation, O(N·p^½·d).
+    Approx,
+    /// LSC-style exact search, O(N·p·d).
+    Exact,
+}
+
+/// U-SPEC hyper-parameters (paper defaults: p=1000, K=5, K′=10K, p′=10p).
+#[derive(Debug, Clone)]
+pub struct UspecParams {
+    /// Number of clusters in the output.
+    pub k: usize,
+    /// Number of representatives p.
+    pub p: usize,
+    /// Number of nearest representatives K kept per object.
+    pub k_nn: usize,
+    /// Candidate neighborhood size K′ as a multiple of K.
+    pub k_prime_factor: usize,
+    /// Representative selection strategy (hybrid by default).
+    pub selection: SelectStrategy,
+    /// K-nearest-representative mode.
+    pub knr: KnrMode,
+    /// k-means iteration cap (selection, rep-clusters, discretization).
+    pub kmeans_iters: usize,
+    /// Eigen solver for the reduced problem.
+    pub solver: EigSolver,
+}
+
+impl Default for UspecParams {
+    fn default() -> Self {
+        UspecParams {
+            k: 2,
+            p: 1000,
+            k_nn: 5,
+            k_prime_factor: 10,
+            selection: SelectStrategy::Hybrid { candidate_factor: 10 },
+            knr: KnrMode::Approx,
+            kmeans_iters: 100,
+            solver: EigSolver::Auto,
+        }
+    }
+}
+
+impl UspecParams {
+    /// Clamp p (and derived sizes) to the dataset size — small inputs in
+    /// tests/benches keep the paper defaults otherwise.
+    pub fn clamped(&self, n: usize) -> UspecParams {
+        let mut p = self.p.min(n);
+        p = p.max(self.k.min(n));
+        UspecParams { p, ..self.clone() }
+    }
+}
+
+/// U-SPEC output.
+#[derive(Debug, Clone)]
+pub struct UspecResult {
+    pub labels: Vec<u32>,
+    /// Spectral embedding (N×k) the labels were discretized from.
+    pub embedding: Mat,
+    /// Per-phase wall-clock timings.
+    pub timer: PhaseTimer,
+    /// Gaussian bandwidth used for the affinity.
+    pub sigma: f64,
+}
+
+/// Run U-SPEC with an explicit distance backend (native or PJRT).
+pub fn uspec_with_backend(
+    x: &Mat,
+    params: &UspecParams,
+    seed: u64,
+    backend: &dyn DistanceBackend,
+) -> Result<UspecResult> {
+    let n = x.rows;
+    ensure_arg!(n >= 2, "uspec: need at least 2 objects");
+    let params = params.clamped(n);
+    ensure_arg!(params.k >= 1 && params.k <= n, "uspec: bad k={}", params.k);
+    ensure_arg!(params.k <= params.p, "uspec: k={} > p={}", params.k, params.p);
+    let mut rng = Rng::new(seed);
+    let mut timer = PhaseTimer::new();
+
+    // Phase 1: representative selection (§3.1.1). Selection only needs a
+    // coarse vector quantization — cap its k-means iterations (the paper's
+    // small `t`), independent of the discretization budget.
+    let sel_seed = rng.next_u64();
+    let sel_iters = params.kmeans_iters.min(20);
+    let reps = timer.time("select", || {
+        select(x, params.selection, params.p, sel_iters, sel_seed)
+    })?;
+
+    // Phase 2: K-nearest representatives + sparse affinity (§3.1.2).
+    let k_prime = (params.k_nn * params.k_prime_factor).max(params.k_nn + 1);
+    let index = timer.time("knr_index", || {
+        KnrIndex::build(&reps, k_prime, params.kmeans_iters.min(30), backend)
+    })?;
+    let knr = timer.time("knr_query", || match params.knr {
+        KnrMode::Approx => index.approx_knr(x, params.k_nn, backend),
+        KnrMode::Exact => index.exact_knr(x, params.k_nn, backend),
+    });
+    let aff = timer.time("affinity", || build_affinity(n, index.p(), knr.k, &knr));
+
+    // Phase 3: transfer-cut bipartite partitioning (§3.1.3).
+    let tc_seed = rng.next_u64();
+    let tc = timer.time("transfer_cut", || {
+        transfer_cut(&aff.b, params.k.min(index.p()), params.solver, tc_seed)
+    })?;
+
+    // Phase 4: k-means discretization (row-normalized, NJW-style).
+    let km_seed = rng.next_u64();
+    let mut emb = tc.embedding.clone();
+    crate::bipartite::row_normalize(&mut emb);
+    let km = timer.time("discretize", || {
+        kmeans(
+            &emb,
+            &KmeansParams { k: params.k, max_iter: params.kmeans_iters, ..Default::default() },
+            km_seed,
+        )
+    })?;
+
+    Ok(UspecResult { labels: km.labels, embedding: tc.embedding, timer, sigma: aff.sigma })
+}
+
+/// Run U-SPEC on the pure-Rust backend.
+pub fn uspec(x: &Mat, params: &UspecParams, seed: u64) -> Result<UspecResult> {
+    uspec_with_backend(x, params, seed, &NativeBackend)
+}
+
+// Re-exports for the doc example.
+pub use crate::metrics;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{concentric_circles, two_bananas, two_moons};
+    use crate::metrics::{ca, nmi};
+
+    #[test]
+    fn solves_two_moons() {
+        let ds = two_moons(2000, 0.06, 7);
+        let params = UspecParams { k: 2, p: 200, ..Default::default() };
+        let res = uspec(&ds.x, &params, 42).unwrap();
+        let score = nmi(&res.labels, &ds.y);
+        assert!(score > 0.9, "nmi={score}");
+        assert!(res.sigma > 0.0);
+        assert!(res.timer.total() > 0.0);
+    }
+
+    #[test]
+    fn solves_nonlinear_shapes_where_kmeans_fails() {
+        // The paper's headline qualitative claim (Tables 4–5, TB/CC rows).
+        let ds = concentric_circles(3000, 8);
+        let res = uspec(&ds.x, &UspecParams { k: 3, p: 300, ..Default::default() }, 1).unwrap();
+        let uspec_nmi = nmi(&res.labels, &ds.y);
+        let km = crate::kmeans::kmeans(
+            &ds.x,
+            &crate::kmeans::KmeansParams { k: 3, ..Default::default() },
+            1,
+        )
+        .unwrap();
+        let km_nmi = nmi(&km.labels, &ds.y);
+        assert!(uspec_nmi > 0.95, "uspec nmi={uspec_nmi}");
+        assert!(km_nmi < 0.1, "kmeans nmi={km_nmi}");
+    }
+
+    #[test]
+    fn bananas_ca_high() {
+        let ds = two_bananas(3000, 9);
+        let res = uspec(&ds.x, &UspecParams { k: 2, p: 250, ..Default::default() }, 5).unwrap();
+        let acc = ca(&res.labels, &ds.y);
+        assert!(acc > 0.9, "ca={acc}");
+    }
+
+    #[test]
+    fn exact_mode_works() {
+        let ds = two_moons(800, 0.05, 10);
+        let params = UspecParams { k: 2, p: 100, knr: KnrMode::Exact, ..Default::default() };
+        let res = uspec(&ds.x, &params, 3).unwrap();
+        assert!(nmi(&res.labels, &ds.y) > 0.85);
+    }
+
+    #[test]
+    fn clamps_oversized_p() {
+        let ds = two_moons(150, 0.05, 11);
+        let params = UspecParams { k: 2, p: 1000, ..Default::default() };
+        let res = uspec(&ds.x, &params, 3).unwrap();
+        assert_eq!(res.labels.len(), 150);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = two_moons(500, 0.05, 12);
+        let params = UspecParams { k: 2, p: 80, ..Default::default() };
+        let a = uspec(&ds.x, &params, 99).unwrap();
+        let b = uspec(&ds.x, &params, 99).unwrap();
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn rejects_degenerate() {
+        let ds = two_moons(10, 0.05, 13);
+        assert!(uspec(&ds.x, &UspecParams { k: 0, ..Default::default() }, 1).is_err());
+        assert!(uspec(&ds.x, &UspecParams { k: 11, ..Default::default() }, 1).is_err());
+    }
+}

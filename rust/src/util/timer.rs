@@ -1,0 +1,63 @@
+//! Lightweight phase timing used by the pipelines and the bench harness.
+
+use std::time::Instant;
+
+/// Accumulates named phase durations (seconds).
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    pub phases: Vec<(String, f64)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure and record it under `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.phases.push((name.to_string(), t0.elapsed().as_secs_f64()));
+        out
+    }
+
+    pub fn total(&self) -> f64 {
+        self.phases.iter().map(|(_, t)| t).sum()
+    }
+
+    pub fn get(&self, name: &str) -> f64 {
+        self.phases.iter().filter(|(n, _)| n == name).map(|(_, t)| t).sum()
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (n, t) in &other.phases {
+            self.phases.push((n.clone(), *t));
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        for (n, t) in &self.phases {
+            s.push_str(&format!("{n}: {t:.4}s  "));
+        }
+        s.push_str(&format!("| total {:.4}s", self.total()));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_phases() {
+        let mut t = PhaseTimer::new();
+        let v = t.time("a", || 42);
+        assert_eq!(v, 42);
+        t.time("b", || std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert_eq!(t.phases.len(), 2);
+        assert!(t.get("b") >= 0.002);
+        assert!(t.total() >= t.get("b"));
+        assert!(t.summary().contains("total"));
+    }
+}

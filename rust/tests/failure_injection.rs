@@ -1,0 +1,253 @@
+//! Failure-injection tests: every layer must fail *loudly and precisely*
+//! on bad input — corrupt artifacts, degenerate data, impossible
+//! parameters — and never panic or silently produce garbage.
+
+use uspec::affinity::{build_affinity, knr::KnrIndex, select, NativeBackend, SelectStrategy};
+use uspec::bipartite::{transfer_cut, EigSolver};
+use uspec::data::loader;
+use uspec::graphpart::{partition, Graph, PartitionParams};
+use uspec::kmeans::{kmeans, KmeansParams};
+use uspec::linalg::{Csr, Mat};
+use uspec::runtime::{KernelPool, Runtime};
+use uspec::streaming::{stream_uspec, BinDataset, StreamParams};
+use uspec::usenc::{consensus_bipartite, usenc, Ensemble, UsencParams};
+use uspec::uspec::{uspec, UspecParams};
+use uspec::Error;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("uspec_failure_tests").join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+// ---------- runtime: artifacts ------------------------------------------
+
+#[test]
+fn runtime_missing_dir_is_runtime_error() {
+    let Err(err) = Runtime::load("/nonexistent/artifact/dir") else {
+        panic!("load of missing dir succeeded")
+    };
+    assert!(matches!(err, Error::Runtime(_)), "got {err}");
+    let Err(err) = KernelPool::start("/nonexistent/artifact/dir") else {
+        panic!("pool start on missing dir succeeded")
+    };
+    assert!(matches!(err, Error::Runtime(_)), "got {err}");
+}
+
+#[test]
+fn runtime_corrupt_manifest_rejected() {
+    let dir = tmpdir("corrupt_manifest");
+    std::fs::write(dir.join("manifest.json"), "{ not json !!").unwrap();
+    let Err(err) = Runtime::load(&dir) else { panic!("corrupt manifest accepted") };
+    assert!(matches!(err, Error::Runtime(_)), "got {err}");
+    // structurally valid JSON but missing required keys
+    std::fs::write(dir.join("manifest.json"), r#"{"batch": 2048}"#).unwrap();
+    let Err(err) = Runtime::load(&dir) else { panic!("incomplete manifest accepted") };
+    let msg = format!("{err}");
+    assert!(msg.contains("fingerprint"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn runtime_manifest_pointing_at_missing_hlo() {
+    let dir = tmpdir("missing_hlo");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"fingerprint":"f","batch":8,"artifacts":[
+            {"name":"pdist_x","graph":"pdist","file":"gone.hlo.txt",
+             "b":8,"c":4,"d":2,"k":null,"inputs":["x","c"],"outputs":1}]}"#,
+    )
+    .unwrap();
+    // loading may defer compilation; executing a matching shape must error,
+    // not panic.
+    match Runtime::load(&dir) {
+        Err(e) => assert!(matches!(e, Error::Runtime(_) | Error::Xla(_) | Error::Io(_))),
+        Ok(mut rt) => {
+            let x = Mat::zeros(8, 2);
+            let c = Mat::zeros(4, 2);
+            assert!(rt.pdist(&x, &c).is_err());
+        }
+    }
+}
+
+// ---------- affinity / transfer cut -------------------------------------
+
+#[test]
+fn transfer_cut_zero_affinity_row_is_numerical_error() {
+    // object 2 has no representative connection at all
+    let rows = vec![
+        vec![(0u32, 0.9), (1u32, 0.3)],
+        vec![(0u32, 0.8), (1u32, 0.1)],
+        vec![],
+        vec![(1u32, 0.7), (2u32, 0.2)],
+    ];
+    let b = Csr::from_rows(4, 3, &rows);
+    let err = transfer_cut(&b, 2, EigSolver::Dense, 1).unwrap_err();
+    assert!(matches!(err, Error::Numerical(_)), "got {err:?}");
+    let msg = format!("{err}");
+    assert!(msg.contains("object 2"), "error should name the offending row: {msg}");
+}
+
+#[test]
+fn transfer_cut_drops_unselected_representatives() {
+    // representative 2 is never selected: transfer cut must still work by
+    // dropping the empty column (and must not panic on the p→p' remap).
+    let rows = vec![
+        vec![(0u32, 0.9), (1u32, 0.3)],
+        vec![(0u32, 0.8), (1u32, 0.1)],
+        vec![(0u32, 0.5), (3u32, 0.9)],
+        vec![(1u32, 0.7), (3u32, 0.2)],
+    ];
+    let b = Csr::from_rows(4, 4, &rows);
+    let tc = transfer_cut(&b, 2, EigSolver::Dense, 1).unwrap();
+    assert_eq!(tc.embedding.rows, 4);
+    // but k greater than the *connected* representative count must fail
+    assert!(transfer_cut(&b, 4, EigSolver::Dense, 1).is_err());
+}
+
+#[test]
+fn select_rejects_degenerate_requests() {
+    let ds = uspec::data::synthetic::two_moons(50, 0.05, 1);
+    assert!(select(&ds.x, SelectStrategy::Random, 0, 5, 1).is_err());
+    // p > n clamps or errors — must not panic either way
+    let _ = select(&ds.x, SelectStrategy::Random, 500, 5, 1);
+}
+
+#[test]
+fn knr_index_rejects_empty_reps() {
+    let empty = Mat::zeros(0, 2);
+    assert!(KnrIndex::build(&empty, 5, 5, &NativeBackend).is_err());
+}
+
+// ---------- uspec / usenc -----------------------------------------------
+
+#[test]
+fn uspec_impossible_k() {
+    let ds = uspec::data::synthetic::two_moons(30, 0.05, 1);
+    let params = UspecParams { k: 31, p: 10, ..Default::default() };
+    assert!(uspec(&ds.x, &params, 1).is_err());
+    let params = UspecParams { k: 0, p: 10, ..Default::default() };
+    assert!(uspec(&ds.x, &params, 1).is_err());
+}
+
+#[test]
+fn uspec_constant_data_does_not_panic() {
+    // all points identical: distances are all zero; σ clamps; the pipeline
+    // may legitimately fail (zero affinity is fine) but must not panic.
+    let x = Mat::from_vec(40, 2, vec![1.5f32; 80]);
+    let params = UspecParams { k: 2, p: 8, ..Default::default() };
+    let _ = uspec(&x, &params, 3);
+}
+
+#[test]
+fn usenc_rejects_bad_ranges() {
+    let ds = uspec::data::synthetic::two_moons(60, 0.05, 1);
+    // k_min > k_max is normalized or rejected, not a panic
+    let params = UsencParams {
+        k: 2,
+        m: 3,
+        k_min: 9,
+        k_max: 4,
+        base: UspecParams { p: 20, ..Default::default() },
+    };
+    let _ = usenc(&ds.x, &params, 1, &NativeBackend);
+    // empty ensemble consensus
+    assert!(consensus_bipartite(&Ensemble::default(), 2, EigSolver::Dense, 1).is_err());
+    // k exceeding total cluster count
+    let mut ens = Ensemble::default();
+    ens.push(vec![0, 1, 0, 1]);
+    assert!(consensus_bipartite(&ens, 3, EigSolver::Dense, 1).is_err());
+}
+
+// ---------- kmeans -------------------------------------------------------
+
+#[test]
+fn kmeans_rejects_degenerate() {
+    let x = Mat::zeros(10, 2);
+    assert!(kmeans(&x, &KmeansParams { k: 0, ..Default::default() }, 1).is_err());
+    assert!(kmeans(&x, &KmeansParams { k: 11, ..Default::default() }, 1).is_err());
+    let empty = Mat::zeros(0, 2);
+    assert!(kmeans(&empty, &KmeansParams { k: 1, ..Default::default() }, 1).is_err());
+}
+
+// ---------- graph partitioner -------------------------------------------
+
+#[test]
+fn partition_edge_cases() {
+    let g = Graph::from_edges(4, &[(0, 1, 1.0), (2, 3, 1.0)]);
+    assert!(partition(&g, 0, &PartitionParams::default(), 1).is_err());
+    // disconnected graph still partitions (cut 0 achievable)
+    let part = partition(&g, 2, &PartitionParams::default(), 1).unwrap();
+    assert!(g.edge_cut(&part) <= 1.0 + 1e-12);
+    // isolated vertices (no edges at all)
+    let iso = Graph::from_edges(5, &[]);
+    let part = partition(&iso, 3, &PartitionParams::default(), 1).unwrap();
+    assert_eq!(part.len(), 5);
+}
+
+// ---------- loaders / on-disk format ------------------------------------
+
+#[test]
+fn csv_loader_errors_are_descriptive() {
+    let dir = tmpdir("csv");
+    let bad_width = dir.join("width.csv");
+    std::fs::write(&bad_width, "1.0,2.0,0\n1.0,3\n").unwrap();
+    let err = loader::load_csv(&bad_width).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("line 2"), "{msg}");
+
+    let bad_float = dir.join("float.csv");
+    std::fs::write(&bad_float, "1.0,abc,0\n").unwrap();
+    let err = loader::load_csv(&bad_float).unwrap_err();
+    assert!(format!("{err}").contains("bad float"), "{err}");
+
+    assert!(loader::load_csv(std::path::Path::new("/no/such/file.csv")).is_err());
+}
+
+#[test]
+fn bin_dataset_rejects_header_lies() {
+    let dir = tmpdir("bin");
+    // header claims more rows than the file holds
+    let path = dir.join("lies.bin");
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(b"USPECB01");
+    bytes.extend_from_slice(&1000u64.to_le_bytes());
+    bytes.extend_from_slice(&2u64.to_le_bytes());
+    bytes.extend_from_slice(&[0u8; 64]); // far too short
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(BinDataset::open(&path).is_err());
+    // d = 0
+    let path2 = dir.join("d0.bin");
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(b"USPECB01");
+    bytes.extend_from_slice(&0u64.to_le_bytes());
+    bytes.extend_from_slice(&0u64.to_le_bytes());
+    std::fs::write(&path2, &bytes).unwrap();
+    assert!(BinDataset::open(&path2).is_err());
+}
+
+#[test]
+fn stream_uspec_tiny_dataset_errors_cleanly() {
+    let dir = tmpdir("stream");
+    let x = Mat::from_vec(1, 2, vec![0.0, 0.0]);
+    let path = dir.join("one.bin");
+    let bin = BinDataset::write_mat(&path, &x).unwrap();
+    let params = StreamParams { chunk: 8, base: UspecParams { k: 2, p: 4, ..Default::default() } };
+    assert!(stream_uspec(&bin, &params, 1, &NativeBackend).is_err());
+}
+
+// ---------- affinity construction on adversarial KNR ---------------------
+
+#[test]
+fn build_affinity_handles_zero_distances() {
+    // duplicate points: d² = 0 everywhere in some rows ⇒ b_ij = 1, σ > 0
+    let knr = uspec::affinity::knr::KnrResult {
+        idx: vec![0, 1, 0, 1, 0, 1],
+        d2: vec![0.0, 0.0, 0.0, 0.5, 0.1, 0.2],
+        k: 2,
+    };
+    let aff = build_affinity(3, 2, 2, &knr);
+    assert!(aff.sigma > 0.0);
+    for &v in &aff.b.values {
+        assert!(v.is_finite() && v > 0.0 && v <= 1.0 + 1e-12);
+    }
+}

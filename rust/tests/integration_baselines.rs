@@ -1,0 +1,97 @@
+//! Integration: the 14 baselines on shared workloads — the qualitative
+//! ordering the paper's Tables 4–9 report, at test scale.
+
+use uspec::affinity::NativeBackend;
+use uspec::baselines::SpectralMethod;
+use uspec::bench::runner::{run_ensemble, run_spectral};
+use uspec::config::RunConfig;
+use uspec::data::Benchmark;
+use uspec::ensemble_baselines::EnsembleMethod;
+use uspec::metrics::nmi;
+
+fn cfg_small() -> RunConfig {
+    RunConfig { p: 100, m: 5, k_min: 4, k_max: 10, runs: 1, ..Default::default() }
+}
+
+#[test]
+fn spectral_methods_on_rings_uspec_wins() {
+    // CC (concentric circles) is the separator: kernel-free methods
+    // (k-means, EulerSC, FastESC with few features) collapse, graph
+    // methods shine — the Table 4 CC-5M column.
+    let ds = Benchmark::Cc5m.generate(0.0006, 3); // 3000 points, 3 rings
+    let cfg = RunConfig { p: 200, m: 10, k_min: 6, k_max: 14, runs: 1, ..Default::default() };
+    let mut scores = std::collections::HashMap::new();
+    for m in [
+        SpectralMethod::Kmeans,
+        SpectralMethod::EulerSc,
+        SpectralMethod::Uspec,
+        SpectralMethod::Usenc,
+    ] {
+        let out = run_spectral(m, &ds, &cfg, 7, &NativeBackend).unwrap();
+        scores.insert(m.name(), nmi(&out.labels, &ds.y));
+    }
+    assert!(scores["U-SPEC"] > 0.9, "{scores:?}");
+    assert!(scores["U-SENC"] > 0.6, "{scores:?}");
+    assert!(scores["k-means"] < 0.1, "{scores:?}");
+    assert!(scores["EulerSC"] < 0.5, "{scores:?}");
+    assert!(scores["U-SENC"] > scores["k-means"] + 0.5, "{scores:?}");
+}
+
+#[test]
+fn all_ensemble_methods_beat_chance_on_blobs() {
+    let ds = Benchmark::PenDigits.generate(0.09, 5); // ~1000 points, 10 classes
+    let cfg = cfg_small();
+    for m in EnsembleMethod::ALL {
+        let out = run_ensemble(m, &ds, &cfg, 11, &NativeBackend).unwrap();
+        let score = nmi(&out.labels, &ds.y);
+        assert!(score > 0.25, "{}: nmi={score}", m.name());
+    }
+}
+
+#[test]
+fn usenc_tops_ensemble_baselines_on_nonlinear_data() {
+    // Table 7's headline: U-SENC (U-SPEC base clusterers) beats k-means-
+    // based ensembles on nonlinearly separable data.
+    let ds = Benchmark::Tb1m.generate(0.0012, 9);
+    let cfg = cfg_small();
+    let usenc_score = {
+        let out = run_ensemble(EnsembleMethod::Usenc, &ds, &cfg, 3, &NativeBackend).unwrap();
+        nmi(&out.labels, &ds.y)
+    };
+    let mut beaten = 0;
+    let mut total = 0;
+    for m in [EnsembleMethod::Kcc, EnsembleMethod::Ecc, EnsembleMethod::Sec, EnsembleMethod::Lwgp] {
+        let out = run_ensemble(m, &ds, &cfg, 3, &NativeBackend).unwrap();
+        let s = nmi(&out.labels, &ds.y);
+        total += 1;
+        if usenc_score >= s - 1e-9 {
+            beaten += 1;
+        }
+    }
+    assert!(
+        beaten * 2 >= total && usenc_score > 0.6,
+        "U-SENC {usenc_score} beat {beaten}/{total}"
+    );
+}
+
+#[test]
+fn sub_matrix_methods_complete_quickly_vs_full_graph() {
+    // Table 6's shape: sub-matrix methods (Nyström/LSC/U-SPEC) are far
+    // cheaper than the full-graph SC on the same data.
+    let ds = Benchmark::Usps.generate(0.1, 13); // ~1100 × 256
+    let cfg = cfg_small();
+    let t_sc = {
+        let t0 = std::time::Instant::now();
+        run_spectral(SpectralMethod::Sc, &ds, &cfg, 5, &NativeBackend).unwrap();
+        t0.elapsed().as_secs_f64()
+    };
+    let t_uspec = {
+        let t0 = std::time::Instant::now();
+        run_spectral(SpectralMethod::Uspec, &ds, &cfg, 5, &NativeBackend).unwrap();
+        t0.elapsed().as_secs_f64()
+    };
+    assert!(
+        t_uspec < t_sc,
+        "U-SPEC ({t_uspec:.2}s) should be faster than SC ({t_sc:.2}s)"
+    );
+}

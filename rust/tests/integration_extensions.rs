@@ -1,0 +1,117 @@
+//! Cross-module integration of the extension features: out-of-core
+//! streaming and k-estimation driven through the AOT/PJRT kernel backend,
+//! adaptive ensembles through the coordinator's job-derivation stream, and
+//! the hypergraph consensus functions on coordinator-generated ensembles.
+
+use uspec::affinity::NativeBackend;
+use uspec::coordinator::run_base_clusterers;
+use uspec::data::synthetic::{concentric_circles, two_moons};
+use uspec::ensemble_baselines::strehl;
+use uspec::metrics::nmi;
+use uspec::runtime::{default_artifact_dir, KernelPool, PjrtBackend};
+use uspec::streaming::{stream_uspec, BinDataset, StreamParams};
+use uspec::usenc::adaptive::{usenc_adaptive, AdaptiveParams};
+use uspec::usenc::UsencParams;
+use uspec::uspec::estimate::estimate_k;
+use uspec::uspec::UspecParams;
+
+fn artifacts_ready() -> bool {
+    default_artifact_dir().join("manifest.json").exists()
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("uspec_ext_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn streaming_through_pjrt_backend() {
+    if !artifacts_ready() {
+        eprintln!("[skip] artifacts not built");
+        return;
+    }
+    let ds = two_moons(3000, 0.06, 5);
+    let bin = BinDataset::write_mat(&tmp("pjrt_moons.bin"), &ds.x).unwrap();
+    let pool = KernelPool::start(default_artifact_dir()).unwrap();
+    let backend = PjrtBackend::new(pool);
+    let params = StreamParams {
+        chunk: 1024,
+        base: UspecParams { k: 2, p: 200, ..Default::default() },
+    };
+    let pjrt = stream_uspec(&bin, &params, 11, &backend).unwrap();
+    let native = stream_uspec(&bin, &params, 11, &NativeBackend).unwrap();
+    let s_pjrt = nmi(&pjrt.labels, &ds.y);
+    let s_native = nmi(&native.labels, &ds.y);
+    assert!(s_pjrt > 0.85, "pjrt streamed nmi={s_pjrt}");
+    // both backends compute the same distances (allclose) → same quality
+    assert!(
+        (s_pjrt - s_native).abs() < 0.1,
+        "pjrt {s_pjrt} vs native {s_native}"
+    );
+}
+
+#[test]
+fn estimate_k_through_pjrt_backend() {
+    if !artifacts_ready() {
+        eprintln!("[skip] artifacts not built");
+        return;
+    }
+    let ds = concentric_circles(2000, 9);
+    let pool = KernelPool::start(default_artifact_dir()).unwrap();
+    let backend = PjrtBackend::new(pool);
+    let params = UspecParams { p: 400, ..Default::default() };
+    let est = estimate_k(&ds.x, &params, 2, 8, 3, &backend).unwrap();
+    assert_eq!(est.k, 3, "spectrum {:?}", est.lambdas);
+}
+
+#[test]
+fn adaptive_usenc_prefix_matches_coordinator_jobs() {
+    // the adaptive loop and the coordinator derive base clusterers from
+    // the same seed stream: a converged adaptive ensemble must be a prefix
+    // of the coordinator's (worker-count-independent) output.
+    let ds = two_moons(600, 0.05, 13);
+    let params = UsencParams {
+        k: 2,
+        m: 10,
+        k_min: 4,
+        k_max: 9,
+        base: UspecParams { p: 80, ..Default::default() },
+    };
+    let ap = AdaptiveParams { batch: 2, m_min: 4, m_max: 6, stability: 2.0, patience: 1 };
+    let adaptive = usenc_adaptive(&ds.x, &params, &ap, 31, &NativeBackend).unwrap();
+    let coordinated =
+        run_base_clusterers(&ds.x, &params, 31, &NativeBackend, 3, None).unwrap();
+    assert_eq!(adaptive.ensemble.m(), 6);
+    for (i, a) in adaptive.ensemble.labelings.iter().enumerate() {
+        assert_eq!(a, &coordinated.labelings[i], "base clustering {i} diverged");
+    }
+}
+
+#[test]
+fn hypergraph_consensus_on_coordinator_ensemble() {
+    // full path: coordinator-generated U-SPEC ensemble → all four
+    // hypergraph consensus functions produce valid, informative labels.
+    let ds = concentric_circles(900, 3);
+    let params = UsencParams {
+        k: 3,
+        m: 6,
+        k_min: 6,
+        k_max: 12,
+        base: UspecParams { p: 90, ..Default::default() },
+    };
+    let ens = run_base_clusterers(&ds.x, &params, 7, &NativeBackend, 2, None).unwrap();
+    for (name, f) in [
+        ("cspa", strehl::cspa as fn(&uspec::usenc::Ensemble, usize, u64) -> uspec::Result<Vec<u32>>),
+        ("hgpa", strehl::hgpa),
+        ("mcla", strehl::mcla),
+        ("hbgf", strehl::hbgf),
+    ] {
+        let labels = f(&ens, 3, 5).unwrap();
+        assert_eq!(labels.len(), 900);
+        let score = nmi(&labels, &ds.y);
+        // U-SPEC bases separate the rings; any reasonable consensus keeps
+        // most of that signal.
+        assert!(score > 0.5, "{name}: nmi={score}");
+    }
+}

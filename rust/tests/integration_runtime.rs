@@ -1,0 +1,160 @@
+//! Integration: the PJRT runtime (AOT-compiled JAX/Pallas artifacts) vs the
+//! native backend, and the kernel pool / coordinator composition.
+//! Requires `make artifacts` (skipped with a notice otherwise).
+
+use std::sync::Arc;
+use uspec::affinity::{DistanceBackend, NativeBackend};
+use uspec::data::synthetic::two_moons;
+use uspec::linalg::Mat;
+use uspec::runtime::{default_artifact_dir, KernelPool, PjrtBackend, Runtime};
+use uspec::util::rng::Rng;
+
+fn artifacts_ready() -> bool {
+    let ok = default_artifact_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts/ not built — run `make artifacts`");
+    }
+    ok
+}
+
+fn randmat(r: usize, c: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_vec(r, c, (0..r * c).map(|_| rng.normal() as f32).collect())
+}
+
+#[test]
+fn pdist_matches_native_across_shapes() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut rt = Runtime::load(default_artifact_dir()).unwrap();
+    // shapes exercising padding in every direction: ragged batch, c and d
+    // strictly below / exactly at variant sizes
+    for &(n, c, d) in &[
+        (100usize, 10usize, 2usize),
+        (2048, 64, 2),
+        (2049, 33, 7),
+        (512, 64, 16),
+        (300, 200, 50),
+        (64, 256, 784),
+        (4097, 5, 3),
+    ] {
+        let x = randmat(n, d, 1000 + n as u64);
+        let cm = randmat(c, d, 2000 + c as u64);
+        let got = rt.pdist(&x, &cm).unwrap();
+        let want = x.sq_dists(&cm);
+        assert_eq!(got.rows, n);
+        assert_eq!(got.cols, c);
+        for i in 0..n {
+            for j in 0..c {
+                let (a, b) = (got.at(i, j), want.at(i, j));
+                assert!(
+                    (a - b).abs() <= 1e-3 * (1.0 + b.abs()),
+                    "n={n} c={c} d={d} ({i},{j}): pjrt {a} vs native {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dist_top1_matches_native_argmin() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut rt = Runtime::load(default_artifact_dir()).unwrap();
+    let x = randmat(700, 5, 11);
+    let c = randmat(40, 5, 12);
+    let (labels, dists) = rt.dist_top1(&x, &c).unwrap();
+    let want = x.sq_dists(&c);
+    for i in 0..700 {
+        let mut best = 0usize;
+        for j in 1..40 {
+            if want.at(i, j) < want.at(i, best) {
+                best = j;
+            }
+        }
+        assert_eq!(labels[i] as usize, best, "row {i}");
+        assert!((dists[i] - want.at(i, best)).abs() < 1e-3 * (1.0 + dists[i].abs()));
+    }
+}
+
+#[test]
+fn kernel_pool_serves_concurrent_requests() {
+    if !artifacts_ready() {
+        return;
+    }
+    let pool = KernelPool::start(default_artifact_dir()).unwrap();
+    let c = Arc::new(randmat(32, 4, 5));
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..6u64 {
+            let pool = pool.clone();
+            let c = c.clone();
+            handles.push(s.spawn(move || {
+                let x = randmat(97 + t as usize, 4, 100 + t);
+                let got = pool.pdist(x.clone(), c.clone()).unwrap();
+                let want = x.sq_dists(&c);
+                for (a, b) in got.data.iter().zip(&want.data) {
+                    assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    let (dispatched, rows) = pool.stats();
+    assert!(dispatched >= 1);
+    assert!(rows >= 6 * 97);
+}
+
+#[test]
+fn pjrt_backend_runs_uspec_end_to_end() {
+    if !artifacts_ready() {
+        return;
+    }
+    let pool = KernelPool::start(default_artifact_dir()).unwrap();
+    let backend = PjrtBackend::new(pool);
+    let ds = two_moons(1200, 0.06, 21);
+    let params = uspec::uspec::UspecParams { k: 2, p: 150, ..Default::default() };
+    let res = uspec::uspec::uspec_with_backend(&ds.x, &params, 42, &backend).unwrap();
+    let nmi = uspec::metrics::nmi(&res.labels, &ds.y);
+    assert!(nmi > 0.85, "pjrt-backed U-SPEC nmi={nmi}");
+    assert!(
+        backend.kernel_calls.load(std::sync::atomic::Ordering::Relaxed) > 0,
+        "expected kernel dispatches on the hot path"
+    );
+}
+
+#[test]
+fn pjrt_and_native_backends_agree_on_labels() {
+    if !artifacts_ready() {
+        return;
+    }
+    let pool = KernelPool::start(default_artifact_dir()).unwrap();
+    let backend = PjrtBackend::new(pool);
+    let ds = two_moons(600, 0.05, 33);
+    let params = uspec::uspec::UspecParams { k: 2, p: 80, ..Default::default() };
+    let a = uspec::uspec::uspec_with_backend(&ds.x, &params, 7, &backend).unwrap();
+    let b = uspec::uspec::uspec_with_backend(&ds.x, &params, 7, &NativeBackend).unwrap();
+    // identical seeds + (near-)identical distances → identical partitions
+    let agreement = uspec::metrics::nmi(&a.labels, &b.labels);
+    assert!(agreement > 0.95, "backend divergence: nmi={agreement}");
+}
+
+#[test]
+fn backend_falls_back_when_shape_uncovered() {
+    if !artifacts_ready() {
+        return;
+    }
+    let pool = KernelPool::start(default_artifact_dir()).unwrap();
+    let backend = PjrtBackend::new(pool);
+    // c=300 > 256: no artifact — must fall back to native and still be right
+    let x = randmat(100, 3, 1);
+    let c = randmat(300, 3, 2);
+    let got = backend.sq_dists(&x, &c);
+    let want = x.sq_dists(&c);
+    assert_eq!(got.data, want.data);
+    assert!(backend.native_calls.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+}

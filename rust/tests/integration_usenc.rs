@@ -1,0 +1,97 @@
+//! Integration: U-SENC end-to-end — robustness over U-SPEC, coordinator
+//! parallelism, consensus over foreign (k-means) ensembles.
+
+use uspec::affinity::NativeBackend;
+use uspec::bipartite::EigSolver;
+use uspec::coordinator::usenc_coordinated;
+use uspec::data::Benchmark;
+use uspec::ensemble_baselines::generate_kmeans_ensemble;
+use uspec::metrics::nmi;
+use uspec::usenc::{consensus_bipartite, usenc, UsencParams};
+use uspec::uspec::{uspec, UspecParams};
+
+fn params(k: usize, m: usize, p: usize) -> UsencParams {
+    UsencParams {
+        k,
+        m,
+        k_min: (2 * k).max(4),
+        k_max: (6 * k).max(8),
+        base: UspecParams { p, ..Default::default() },
+    }
+}
+
+#[test]
+fn usenc_more_stable_than_uspec_across_seeds() {
+    // The robustness claim: variance of U-SENC quality across seeds is no
+    // worse than U-SPEC's on a noisy nonlinear dataset.
+    let ds = Benchmark::Tb1m.generate(0.0015, 5); // 1500 points
+    let mut us_scores = Vec::new();
+    let mut ue_scores = Vec::new();
+    for seed in 0..4 {
+        let us = uspec(&ds.x, &UspecParams { k: 2, p: 120, ..Default::default() }, seed).unwrap();
+        us_scores.push(nmi(&us.labels, &ds.y));
+        let ue = usenc(&ds.x, &params(2, 10, 120), seed, &NativeBackend).unwrap();
+        ue_scores.push(nmi(&ue.labels, &ds.y));
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    assert!(
+        mean(&ue_scores) > mean(&us_scores) - 0.12,
+        "usenc {ue_scores:?} vs uspec {us_scores:?}"
+    );
+    assert!(mean(&ue_scores) > 0.8, "{ue_scores:?}");
+}
+
+#[test]
+fn coordinated_equals_sequential_and_scales_workers() {
+    let ds = Benchmark::Cc5m.generate(0.0002, 7);
+    let p = params(3, 6, 100);
+    let seq = usenc(&ds.x, &p, 42, &NativeBackend).unwrap();
+    for workers in [1usize, 2, 5] {
+        let par = usenc_coordinated(&ds.x, &p, 42, &NativeBackend, workers, None).unwrap();
+        assert_eq!(seq.labels, par.labels, "workers={workers}");
+    }
+}
+
+#[test]
+fn consensus_works_on_kmeans_ensembles_too() {
+    // The consensus function is generic over ensembles (used by the
+    // ensemble baselines comparison).
+    let ds = Benchmark::Tb1m.generate(0.001, 9);
+    let ens = generate_kmeans_ensemble(&ds.x, 8, 6, 14, 3).unwrap();
+    let (labels, _) = consensus_bipartite(&ens, 2, EigSolver::Auto, 11).unwrap();
+    let score = nmi(&labels, &ds.y);
+    assert!(score > 0.3, "consensus over k-means ensemble: {score}");
+}
+
+#[test]
+fn incidence_invariants_hold_after_generation() {
+    let ds = Benchmark::Sf2m.generate(0.0003, 11);
+    let res = usenc(&ds.x, &params(4, 5, 80), 13, &NativeBackend).unwrap();
+    let b = res.ensemble.incidence();
+    assert_eq!(b.rows, ds.n());
+    assert_eq!(b.nnz(), ds.n() * 5); // exactly m per row (Eq. 19)
+    let ks = res.ensemble.ks();
+    assert_eq!(b.cols, ks.iter().sum::<usize>());
+    // every column non-empty (k-means repair guarantees no empty clusters)
+    for (j, s) in b.col_sums().iter().enumerate() {
+        assert!(*s > 0.0, "empty cluster column {j}");
+    }
+}
+
+#[test]
+fn ensemble_diversity_nonzero() {
+    // Diversity of base clusterings is what makes the ensemble useful —
+    // distinct seeds/k draws must give distinct partitions.
+    let ds = Benchmark::Tb1m.generate(0.001, 15);
+    let res = usenc(&ds.x, &params(2, 6, 100), 17, &NativeBackend).unwrap();
+    let mut distinct_pairs = 0;
+    let m = res.ensemble.m();
+    for i in 0..m {
+        for j in 0..i {
+            if nmi(&res.ensemble.labelings[i], &res.ensemble.labelings[j]) < 0.999 {
+                distinct_pairs += 1;
+            }
+        }
+    }
+    assert!(distinct_pairs >= m * (m - 1) / 4, "ensemble not diverse enough");
+}

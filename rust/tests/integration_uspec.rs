@@ -1,0 +1,108 @@
+//! Integration: the full U-SPEC pipeline across datasets, parameter ranges,
+//! selection strategies and KNR modes — the qualitative claims of
+//! Tables 4–5, 10–11, 13, 15 at test scale.
+
+use uspec::affinity::SelectStrategy;
+use uspec::data::{Benchmark, Dataset};
+use uspec::kmeans::{kmeans, KmeansParams};
+use uspec::metrics::{ca, nmi};
+use uspec::uspec::{uspec, KnrMode, UspecParams};
+
+fn gen(b: Benchmark, scale: f64) -> Dataset {
+    b.generate(scale, 1234)
+}
+
+#[test]
+fn beats_kmeans_on_every_nonlinear_synthetic() {
+    // The paper's core qualitative claim across the synthetic suite.
+    for b in [Benchmark::Tb1m, Benchmark::Cc5m, Benchmark::Cg10m, Benchmark::Flower20m] {
+        let ds = gen(b, 0.0002);
+        let params = UspecParams { k: ds.k, p: (ds.n() / 8).max(ds.k), ..Default::default() };
+        let us = uspec(&ds.x, &params, 5).unwrap();
+        let km = kmeans(&ds.x, &KmeansParams { k: ds.k, ..Default::default() }, 5).unwrap();
+        let us_nmi = nmi(&us.labels, &ds.y);
+        let km_nmi = nmi(&km.labels, &ds.y);
+        assert!(
+            us_nmi > km_nmi + 0.05,
+            "{}: U-SPEC {us_nmi:.3} should beat k-means {km_nmi:.3}",
+            b.name()
+        );
+    }
+}
+
+#[test]
+fn quality_improves_with_p() {
+    // Table 10's trend: larger p → better approximation.
+    let ds = gen(Benchmark::Sf2m, 0.001); // 2000 points
+    let mut scores = Vec::new();
+    for p in [20usize, 80, 300] {
+        let params = UspecParams { k: ds.k, p, ..Default::default() };
+        // average over seeds to damp variance
+        let mut s = 0.0;
+        for seed in 0..3 {
+            s += nmi(&uspec(&ds.x, &params, seed).unwrap().labels, &ds.y);
+        }
+        scores.push(s / 3.0);
+    }
+    assert!(
+        scores[2] > scores[0] - 0.02,
+        "p sweep should not degrade strongly: {scores:?}"
+    );
+    assert!(scores[2] > 0.6, "p=300 should work well: {scores:?}");
+}
+
+#[test]
+fn all_selection_strategies_work() {
+    let ds = gen(Benchmark::Tb1m, 0.001);
+    for sel in [
+        SelectStrategy::Random,
+        SelectStrategy::KmeansFull,
+        SelectStrategy::Hybrid { candidate_factor: 10 },
+    ] {
+        let params =
+            UspecParams { k: 2, p: 150, selection: sel, ..Default::default() };
+        let res = uspec(&ds.x, &params, 9).unwrap();
+        let score = ca(&res.labels, &ds.y);
+        assert!(score > 0.7, "{sel:?}: ca={score}");
+    }
+}
+
+#[test]
+fn approx_knr_matches_exact_quality() {
+    // Table 15's claim: approximation preserves quality.
+    let ds = gen(Benchmark::Cc5m, 0.0004); // 2000 points
+    let mut qa = 0.0;
+    let mut qe = 0.0;
+    for seed in 0..3 {
+        let pa = UspecParams { k: 3, p: 200, knr: KnrMode::Approx, ..Default::default() };
+        let pe = UspecParams { k: 3, p: 200, knr: KnrMode::Exact, ..Default::default() };
+        qa += nmi(&uspec(&ds.x, &pa, seed).unwrap().labels, &ds.y);
+        qe += nmi(&uspec(&ds.x, &pe, seed).unwrap().labels, &ds.y);
+    }
+    assert!((qa - qe).abs() / 3.0 < 0.15, "approx {qa} vs exact {qe}");
+}
+
+#[test]
+fn real_surrogates_reasonable() {
+    // PenDigits-like data should score well; Covertype-like stays low for
+    // everyone (Table 4's pattern).
+    let easy = gen(Benchmark::PenDigits, 0.1);
+    let p1 = UspecParams { k: easy.k, p: 300, ..Default::default() };
+    let s_easy = nmi(&uspec(&easy.x, &p1, 3).unwrap().labels, &easy.y);
+    assert!(s_easy > 0.5, "PenDigits surrogate: {s_easy}");
+
+    let hard = gen(Benchmark::Covertype, 0.002);
+    let p2 = UspecParams { k: hard.k, p: 300, ..Default::default() };
+    let s_hard = nmi(&uspec(&hard.x, &p2, 3).unwrap().labels, &hard.y);
+    assert!(s_hard < 0.35, "Covertype surrogate should stay hard: {s_hard}");
+}
+
+#[test]
+fn phase_timing_accounted() {
+    let ds = gen(Benchmark::Tb1m, 0.001);
+    let res = uspec(&ds.x, &UspecParams { k: 2, p: 100, ..Default::default() }, 1).unwrap();
+    for phase in ["select", "knr_index", "knr_query", "affinity", "transfer_cut", "discretize"] {
+        assert!(res.timer.get(phase) >= 0.0, "missing phase {phase}");
+    }
+    assert!(res.timer.total() > 0.0);
+}

@@ -1,0 +1,210 @@
+//! Randomized property tests over the crate's core invariants (DESIGN.md
+//! "Key invariants"), driven by the in-tree prop harness.
+
+use uspec::affinity::{build_affinity, knr::KnrIndex, select, NativeBackend, SelectStrategy};
+use uspec::bipartite::{full_bipartite_eig, transfer_cut, EigSolver};
+use uspec::linalg::{DMat, Mat};
+use uspec::metrics::{ca, nmi};
+use uspec::prop_assert;
+use uspec::usenc::Ensemble;
+use uspec::util::prop::run_prop;
+use uspec::util::rng::Rng;
+
+fn random_points(rng: &mut Rng, n: usize, d: usize) -> Mat {
+    // clustered blobs so graphs are non-degenerate
+    let k = 2 + rng.usize(3);
+    let centers: Vec<Vec<f64>> =
+        (0..k).map(|_| (0..d).map(|_| rng.normal() * 4.0).collect()).collect();
+    let mut m = Mat::zeros(n, d);
+    for i in 0..n {
+        let c = &centers[rng.usize(k)];
+        for j in 0..d {
+            m.set(i, j, (c[j] + rng.normal() * 0.5) as f32);
+        }
+    }
+    m
+}
+
+fn random_labels(rng: &mut Rng, n: usize, k: usize) -> Vec<u32> {
+    (0..n).map(|_| rng.usize(k) as u32).collect()
+}
+
+#[test]
+fn prop_nmi_symmetry_and_permutation_invariance() {
+    run_prop("nmi-sym", 40, 101, |rng| {
+        let n = 20 + rng.usize(200);
+        let ka = 2 + rng.usize(5);
+        let a = random_labels(rng, n, ka);
+        let kb = 2 + rng.usize(5);
+        let b = random_labels(rng, n, kb);
+        let forward = nmi(&a, &b);
+        let backward = nmi(&b, &a);
+        prop_assert!((forward - backward).abs() < 1e-12, "asymmetric: {forward} vs {backward}");
+        // permute a's label names
+        let perm: Vec<u32> = {
+            let mut p: Vec<u32> = (0..10).collect();
+            rng.shuffle(&mut p);
+            p
+        };
+        let ap: Vec<u32> = a.iter().map(|&l| perm[l as usize]).collect();
+        let permuted = nmi(&ap, &b);
+        prop_assert!((forward - permuted).abs() < 1e-12, "not permutation invariant");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ca_bounds_and_optimality() {
+    run_prop("ca-bounds", 40, 202, |rng| {
+        let n = 10 + rng.usize(100);
+        let k = 2 + rng.usize(4);
+        let truth = random_labels(rng, n, k);
+        let pred = random_labels(rng, n, k);
+        let acc = ca(&pred, &truth);
+        prop_assert!((0.0..=1.0).contains(&acc), "out of range {acc}");
+        // CA under the identity matching is a lower bound of optimal CA
+        let ident_acc = pred
+            .iter()
+            .zip(&truth)
+            .filter(|(a, b)| a == b)
+            .count() as f64
+            / n as f64;
+        prop_assert!(acc + 1e-12 >= ident_acc, "hungarian worse than identity");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_affinity_row_structure() {
+    run_prop("affinity-rows", 12, 303, |rng| {
+        let n = 100 + rng.usize(200);
+        let dd = 1 + rng.usize(4);
+        let x = random_points(rng, n, dd);
+        let p = 10 + rng.usize(20);
+        let k_nn = 1 + rng.usize(4.min(p - 1));
+        let reps = select(&x, SelectStrategy::Hybrid { candidate_factor: 5 }, p, 10, rng.next_u64())
+            .map_err(|e| e.to_string())?;
+        let index = KnrIndex::build(&reps, 3 * k_nn, 10, &NativeBackend).map_err(|e| e.to_string())?;
+        let res = index.approx_knr(&x, k_nn, &NativeBackend);
+        let aff = build_affinity(n, p, res.k, &res);
+        prop_assert!(aff.sigma > 0.0, "sigma must be positive");
+        for i in 0..n {
+            let (cols, vals) = aff.b.row(i);
+            prop_assert!(cols.len() == res.k, "row {i} has {} entries", cols.len());
+            let set: std::collections::HashSet<_> = cols.iter().collect();
+            prop_assert!(set.len() == cols.len(), "duplicate reps in row {i}");
+            for &v in vals {
+                prop_assert!(v > 0.0 && v <= 1.0 + 1e-9, "affinity out of range: {v}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_transfer_cut_equals_full_problem() {
+    // γ of the reduced problem == γ of the (N+p)-node problem (Eq. 10).
+    run_prop("tcut-equivalence", 8, 404, |rng| {
+        let n = 60 + rng.usize(60);
+        let x = random_points(rng, n, 2);
+        let p = 8 + rng.usize(8);
+        let k = 2 + rng.usize(2);
+        let reps = select(&x, SelectStrategy::Random, p, 10, rng.next_u64())
+            .map_err(|e| e.to_string())?;
+        let index = KnrIndex::build(&reps, p - 1, 10, &NativeBackend).map_err(|e| e.to_string())?;
+        let res = index.approx_knr(&x, 3.min(p), &NativeBackend);
+        let aff = build_affinity(n, p, res.k, &res);
+        let tc = transfer_cut(&aff.b, k, EigSolver::Dense, 1).map_err(|e| e.to_string())?;
+        let (full, _) = full_bipartite_eig(&aff.b, k).map_err(|e| e.to_string())?;
+        for (ours, truth) in tc.gammas.iter().zip(&full) {
+            prop_assert!((ours - truth).abs() < 1e-5, "gamma mismatch {ours} vs {truth}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ensemble_incidence_consistency() {
+    run_prop("incidence", 30, 505, |rng| {
+        let n = 20 + rng.usize(100);
+        let m = 1 + rng.usize(6);
+        let mut ens = Ensemble::default();
+        for _ in 0..m {
+            let k = 2 + rng.usize(6);
+            // ensure labels dense 0..k-1
+            let mut l = random_labels(rng, n, k);
+            for c in 0..k {
+                l[c.min(n - 1)] = c as u32;
+            }
+            ens.push(l);
+        }
+        let b = ens.incidence();
+        prop_assert!(b.nnz() == n * m, "nnz {} != n*m", b.nnz());
+        for i in 0..n {
+            prop_assert!(b.row(i).0.len() == m, "row {i} wrong degree");
+        }
+        let cols = b.col_sums();
+        let total: f64 = cols.iter().sum();
+        prop_assert!((total - (n * m) as f64).abs() < 1e-9, "mass mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eigen_residuals_random_laplacians() {
+    run_prop("eigen-laplacian", 10, 606, |rng| {
+        let p = 10 + rng.usize(30);
+        // random affinity → Laplacian
+        let mut e = DMat::zeros(p, p);
+        for i in 0..p {
+            for j in 0..i {
+                let v = rng.f64();
+                e.set(i, j, v);
+                e.set(j, i, v);
+            }
+        }
+        let d: Vec<f64> = (0..p).map(|i| e.row(i).iter().sum::<f64>().max(1e-9)).collect();
+        let mut l = DMat::zeros(p, p);
+        for i in 0..p {
+            for j in 0..p {
+                l.set(i, j, if i == j { d[i] - e.at(i, j) } else { -e.at(i, j) });
+            }
+        }
+        let k = 2 + rng.usize(3.min(p - 2));
+        let (vals, v) = uspec::linalg::eigen::sym_eig_generalized_smallest(&l, &d, k)
+            .map_err(|e| e.to_string())?;
+        prop_assert!(vals[0].abs() < 1e-7, "first eigenvalue should be ~0, got {}", vals[0]);
+        let lv = l.matmul(&v);
+        for c in 0..k {
+            for r in 0..p {
+                let resid = (lv.at(r, c) - vals[c] * d[r] * v.at(r, c)).abs();
+                prop_assert!(resid < 1e-6, "residual {resid} at ({r},{c})");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kmeans_inertia_and_labels() {
+    run_prop("kmeans", 20, 707, |rng| {
+        let n = 30 + rng.usize(150);
+        let d = 1 + rng.usize(4);
+        let k = 1 + rng.usize(6.min(n - 1));
+        let x = random_points(rng, n, d);
+        let res = uspec::kmeans::kmeans(
+            &x,
+            &uspec::kmeans::KmeansParams { k, ..Default::default() },
+            rng.next_u64(),
+        )
+        .map_err(|e| e.to_string())?;
+        prop_assert!(res.inertia >= 0.0, "negative inertia");
+        let mut seen = vec![false; k];
+        for &l in &res.labels {
+            prop_assert!((l as usize) < k, "label out of range");
+            seen[l as usize] = true;
+        }
+        prop_assert!(seen.iter().all(|&s| s), "empty cluster survived repair");
+        Ok(())
+    });
+}

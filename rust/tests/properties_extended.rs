@@ -1,0 +1,365 @@
+//! Randomized property tests over the extended subsystems: the multilevel
+//! graph partitioner, hypergraph consensus functions, similarity kernels,
+//! extra metrics, the Hungarian solver (vs brute force), CSR algebra, and
+//! the out-of-core streaming format. Complements `properties.rs` (core
+//! pipeline invariants).
+
+use uspec::affinity::kernel::{build_affinity_kernel, SigmaRule, SimKernel};
+use uspec::affinity::knr::KnrResult;
+use uspec::graphpart::{partition, Graph, PartitionParams};
+use uspec::linalg::{Csr, DMat, Mat};
+use uspec::metrics::{
+    ari, ca, hungarian, jaccard_index, nmi, pair_counts, pairwise_f, purity, rand_index,
+    v_measure,
+};
+use uspec::prop_assert;
+use uspec::usenc::Ensemble;
+use uspec::util::prop::run_prop;
+use uspec::util::rng::Rng;
+
+fn random_graph(rng: &mut Rng, n: usize, avg_deg: usize) -> Graph {
+    let mut edges = Vec::new();
+    let m = n * avg_deg / 2;
+    for _ in 0..m {
+        let a = rng.usize(n) as u32;
+        let b = rng.usize(n) as u32;
+        if a != b {
+            edges.push((a, b, 0.1 + rng.f64()));
+        }
+    }
+    // ensure connectivity-ish: chain
+    for v in 1..n {
+        edges.push(((v - 1) as u32, v as u32, 0.05));
+    }
+    Graph::from_edges(n, &edges)
+}
+
+fn random_labels(rng: &mut Rng, n: usize, k: usize) -> Vec<u32> {
+    (0..n).map(|_| rng.usize(k) as u32).collect()
+}
+
+#[test]
+fn prop_partition_valid_and_balanced() {
+    run_prop("graphpart-valid", 15, 11, |rng| {
+        let n = 40 + rng.usize(160);
+        let k = 2 + rng.usize(5);
+        let g = random_graph(rng, n, 6);
+        let part = partition(&g, k, &PartitionParams::default(), rng.next_u64())
+            .map_err(|e| e.to_string())?;
+        prop_assert!(part.len() == n, "len {} != {n}", part.len());
+        prop_assert!(part.iter().all(|&p| (p as usize) < k), "label out of range");
+        let cut = g.edge_cut(&part);
+        let total: f64 = g.adjwgt.iter().sum::<f64>() / 2.0;
+        prop_assert!(cut >= -1e-9 && cut <= total + 1e-9, "cut {cut} vs total {total}");
+        // balance within the partitioner's contract (ε=0.10 + merge slack)
+        let imb = g.imbalance(&part, k);
+        prop_assert!(imb <= 1.8, "imbalance {imb}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partition_beats_random_assignment() {
+    run_prop("graphpart-cut-quality", 10, 23, |rng| {
+        let n = 60 + rng.usize(100);
+        let k = 2 + rng.usize(3);
+        let g = random_graph(rng, n, 8);
+        let part = partition(&g, k, &PartitionParams::default(), rng.next_u64())
+            .map_err(|e| e.to_string())?;
+        // average cut of random balanced labelings
+        let mut rand_cut = 0.0;
+        const TRIALS: usize = 5;
+        for _ in 0..TRIALS {
+            let labels: Vec<u32> = (0..n).map(|v| ((v + rng.usize(n)) % k) as u32).collect();
+            rand_cut += g.edge_cut(&labels);
+        }
+        rand_cut /= TRIALS as f64;
+        let cut = g.edge_cut(&part);
+        prop_assert!(
+            cut <= rand_cut * 1.05 + 1e-9,
+            "partitioned cut {cut} worse than random {rand_cut}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hungarian_matches_bruteforce() {
+    run_prop("hungarian-optimal", 60, 31, |rng| {
+        let n = 2 + rng.usize(5); // up to 6 → 720 permutations
+        let cost: Vec<i64> = (0..n * n).map(|_| rng.usize(100) as i64).collect();
+        let assign = hungarian::solve(&cost, n);
+        // validity: a permutation
+        let mut seen = vec![false; n];
+        for &j in &assign {
+            prop_assert!(j < n && !seen[j], "not a permutation: {assign:?}");
+            seen[j] = true;
+        }
+        let got: i64 = assign.iter().enumerate().map(|(i, &j)| cost[i * n + j]).sum();
+        // brute force
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut best = i64::MAX;
+        permute(&mut perm, 0, &mut |p| {
+            let c: i64 = p.iter().enumerate().map(|(i, &j)| cost[i * n + j]).sum();
+            best = best.min(c);
+        });
+        prop_assert!(got == best, "hungarian {got} != brute force {best} (n={n})");
+        Ok(())
+    });
+}
+
+fn permute(p: &mut Vec<usize>, i: usize, f: &mut impl FnMut(&[usize])) {
+    if i == p.len() {
+        f(p);
+        return;
+    }
+    for j in i..p.len() {
+        p.swap(i, j);
+        permute(p, i + 1, f);
+        p.swap(i, j);
+    }
+}
+
+#[test]
+fn prop_metric_identities() {
+    run_prop("metric-identities", 50, 41, |rng| {
+        let n = 30 + rng.usize(200);
+        let ka = 2 + rng.usize(5);
+        let kb = 2 + rng.usize(5);
+        let a = random_labels(rng, n, ka);
+        let b = random_labels(rng, n, kb);
+        // pair counts partition C(n,2)
+        let (pa, pb, pc, pd) = pair_counts(&a, &b);
+        let total = (n * (n - 1) / 2) as f64;
+        prop_assert!((pa + pb + pc + pd - total).abs() < 1e-6, "pair counts don't sum");
+        // rand index symmetry, bounds
+        let ri = rand_index(&a, &b);
+        prop_assert!((ri - rand_index(&b, &a)).abs() < 1e-12, "rand not symmetric");
+        prop_assert!((0.0..=1.0).contains(&ri), "rand {ri}");
+        // jaccard ≤ rand ≤ 1 when d ≥ 0
+        let ji = jaccard_index(&a, &b);
+        prop_assert!(ji <= ri + 1e-12, "jaccard {ji} > rand {ri}");
+        // F1 between precision and recall
+        let (p, r, f1) = pairwise_f(&a, &b);
+        prop_assert!(f1 <= p.max(r) + 1e-12 && f1 >= (p.min(r) - 1e-12).min(f1), "f1 order");
+        // v-measure symmetric in its arguments
+        prop_assert!(
+            (v_measure(&a, &b) - v_measure(&b, &a)).abs() < 1e-12,
+            "v-measure asymmetric"
+        );
+        // identity fixed points
+        prop_assert!((rand_index(&a, &a) - 1.0).abs() < 1e-12, "rand(a,a)");
+        prop_assert!((purity(&a, &a) - 1.0).abs() < 1e-12, "purity(a,a)");
+        prop_assert!((ari(&a, &a) - 1.0).abs() < 1e-12, "ari(a,a)");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_metrics_invariant_under_relabeling() {
+    run_prop("metric-relabel", 40, 43, |rng| {
+        let n = 50 + rng.usize(100);
+        let k = 2 + rng.usize(4);
+        let a = random_labels(rng, n, k);
+        let b = random_labels(rng, n, k);
+        // random permutation of a's label ids
+        let mut perm: Vec<u32> = (0..k as u32).collect();
+        rng.shuffle(&mut perm);
+        let a2: Vec<u32> = a.iter().map(|&l| perm[l as usize]).collect();
+        for (name, f) in [
+            ("nmi", nmi as fn(&[u32], &[u32]) -> f64),
+            ("ca", ca),
+            ("ari", ari),
+            ("rand", rand_index),
+            ("jaccard", jaccard_index),
+            ("purity", purity),
+            ("v", v_measure),
+        ] {
+            let d = (f(&a, &b) - f(&a2, &b)).abs();
+            prop_assert!(d < 1e-9, "{name} not relabel-invariant (diff {d})");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kernels_bounded_and_finite() {
+    run_prop("kernel-bounds", 25, 53, |rng| {
+        let n = 20 + rng.usize(80);
+        let p = 8 + rng.usize(24);
+        let k = 1 + rng.usize(4.min(p));
+        // synthetic KNR result: ascending distances per row, distinct cols
+        let mut idx = Vec::with_capacity(n * k);
+        let mut d2 = Vec::with_capacity(n * k);
+        for _ in 0..n {
+            let cols = rng.sample_indices(p, k);
+            let mut ds: Vec<f32> = (0..k).map(|_| rng.f32() * 10.0).collect();
+            ds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for (c, dist) in cols.iter().zip(&ds) {
+                idx.push(*c as u32);
+                d2.push(*dist);
+            }
+        }
+        let knr = KnrResult { idx, d2, k };
+        for kern in [
+            SimKernel::Gaussian(SigmaRule::MeanKnr),
+            SimKernel::Gaussian(SigmaRule::MedianKnr),
+            SimKernel::Gaussian(SigmaRule::Scaled(2.0)),
+            SimKernel::Gaussian(SigmaRule::Fixed(0.7)),
+            SimKernel::Laplacian(SigmaRule::MeanKnr),
+            SimKernel::SelfTuning,
+            SimKernel::InverseQuadratic { eps: 1.0 },
+        ] {
+            let aff = build_affinity_kernel(n, p, k, &knr, kern);
+            prop_assert!(aff.b.nnz() == n * k, "{}: nnz", kern.name());
+            prop_assert!(aff.sigma > 0.0, "{}: sigma", kern.name());
+            let bounded = matches!(
+                kern,
+                SimKernel::Gaussian(_) | SimKernel::Laplacian(_) | SimKernel::SelfTuning
+            );
+            for &v in &aff.b.values {
+                prop_assert!(v.is_finite() && v > 0.0, "{}: value {v}", kern.name());
+                if bounded {
+                    prop_assert!(v <= 1.0 + 1e-12, "{}: value {v} > 1", kern.name());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_csr_tdb_matches_dense() {
+    // E_R = Bᵀ diag(w) B — the transfer cut's fused product vs the naive
+    // dense evaluation.
+    run_prop("csr-tdb", 25, 61, |rng| {
+        let n = 10 + rng.usize(40);
+        let p = 4 + rng.usize(12);
+        let k = 1 + rng.usize(3.min(p));
+        let mut rows = Vec::with_capacity(n);
+        for _ in 0..n {
+            let cols = rng.sample_indices(p, k);
+            let mut entries: Vec<(u32, f64)> =
+                cols.into_iter().map(|c| (c as u32, 0.1 + rng.f64())).collect();
+            entries.sort_by_key(|&(c, _)| c);
+            rows.push(entries);
+        }
+        let b = Csr::from_rows(n, p, &rows);
+        let w: Vec<f64> = (0..n).map(|_| 0.1 + rng.f64()).collect();
+        let fused = b.tdb(&w);
+        // dense reference
+        let bd = b.to_dense();
+        let mut want = DMat::zeros(p, p);
+        for i in 0..p {
+            for j in 0..p {
+                let mut s = 0.0;
+                for r in 0..n {
+                    s += bd.at(r, i) * w[r] * bd.at(r, j);
+                }
+                want.set(i, j, s);
+            }
+        }
+        for i in 0..p {
+            for j in 0..p {
+                prop_assert!(
+                    (fused.at(i, j) - want.at(i, j)).abs() < 1e-9,
+                    "tdb mismatch at ({i},{j})"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_consensus_functions_relabel_invariant() {
+    use uspec::ensemble_baselines::strehl::{hbgf, mcla};
+    run_prop("consensus-relabel", 12, 71, |rng| {
+        let n = 40 + rng.usize(60);
+        let m = 3 + rng.usize(3);
+        let k = 2 + rng.usize(2);
+        // balanced ground truth (round-robin, shuffled) — keeps the optimal
+        // consensus inside the partitioner's balance envelope
+        let mut truth: Vec<u32> = (0..n).map(|i| (i % k) as u32).collect();
+        rng.shuffle(&mut truth);
+        let mut ens_a = Ensemble::default();
+        let mut ens_b = Ensemble::default();
+        for _ in 0..m {
+            let noisy: Vec<u32> = truth
+                .iter()
+                .map(|&l| if rng.f64() < 0.15 { rng.usize(k) as u32 } else { l })
+                .collect();
+            // permuted copy for ens_b
+            let kk = noisy.iter().copied().max().unwrap() as usize + 1;
+            let mut perm: Vec<u32> = (0..kk as u32).collect();
+            rng.shuffle(&mut perm);
+            let permuted: Vec<u32> = noisy.iter().map(|&l| perm[l as usize]).collect();
+            ens_a.push(noisy);
+            ens_b.push(permuted);
+        }
+        let seed = rng.next_u64();
+        for (name, f) in [
+            ("mcla", mcla as fn(&Ensemble, usize, u64) -> uspec::Result<Vec<u32>>),
+            ("hbgf", hbgf),
+        ] {
+            let la = f(&ens_a, k, seed).map_err(|e| e.to_string())?;
+            let lb = f(&ens_b, k, seed).map_err(|e| e.to_string())?;
+            // Relabeling permutes incidence columns, which shifts the
+            // multilevel partitioner's tie-breaking — so demand that BOTH
+            // runs recover the planted consensus, not bit equality.
+            let qa = nmi(&la, &truth);
+            let qb = nmi(&lb, &truth);
+            prop_assert!(
+                qa > 0.6 && qb > 0.6,
+                "{name}: planted consensus lost under relabeling (nmi {qa:.3} / {qb:.3})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_uspec_deterministic_per_seed() {
+    run_prop("uspec-deterministic", 6, 83, |rng| {
+        let n = 300 + rng.usize(300);
+        let ds = uspec::data::synthetic::two_moons(n, 0.06, rng.next_u64());
+        let params = uspec::uspec::UspecParams {
+            k: 2,
+            p: 60,
+            ..Default::default()
+        };
+        let seed = rng.next_u64();
+        let a = uspec::uspec::uspec(&ds.x, &params, seed).map_err(|e| e.to_string())?;
+        let b = uspec::uspec::uspec(&ds.x, &params, seed).map_err(|e| e.to_string())?;
+        prop_assert!(a.labels == b.labels, "same seed produced different labels");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bin_dataset_roundtrip_random_shapes() {
+    use uspec::streaming::BinDataset;
+    run_prop("bin-roundtrip", 15, 97, |rng| {
+        let n = 1 + rng.usize(400);
+        let d = 1 + rng.usize(12);
+        let mut x = Mat::zeros(n, d);
+        for v in x.data.iter_mut() {
+            *v = rng.f32() * 100.0 - 50.0;
+        }
+        let dir = std::env::temp_dir().join("uspec_prop_bin");
+        std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
+        let path = dir.join(format!("case_{}.bin", rng.next_u64()));
+        let bin = BinDataset::write_mat(&path, &x).map_err(|e| e.to_string())?;
+        prop_assert!(bin.n() == n && bin.d() == d, "shape mismatch");
+        let chunk = 1 + rng.usize(n);
+        let mut collected = Vec::with_capacity(n * d);
+        bin.for_each_chunk(chunk, |_, m| {
+            collected.extend_from_slice(&m.data);
+            Ok(())
+        })
+        .map_err(|e| e.to_string())?;
+        let _ = std::fs::remove_file(&path);
+        prop_assert!(collected == x.data, "chunked read differs from written data");
+        Ok(())
+    });
+}
