@@ -1,0 +1,230 @@
+#!/usr/bin/env python3
+"""Python mirror of `cargo bench --bench micro_hotpath`.
+
+This container ships no Rust toolchain, so this harness measures the same
+two hot-path phenomena the Rust changes target, at the same shapes, and
+emits `BENCH_hotpath.json` at the repo root in the same schema:
+
+* ``pool_dispatch`` — per-region dispatch cost of spawning fresh OS
+  threads per parallel region (the old `util/par.rs` behavior) vs
+  dispatching onto a persistent pool of already-running workers (the new
+  behavior). Thread creation cost is an OS property, not a language one,
+  so the before/after ratio transfers.
+* ``sq_dists`` — pairwise-squared-distance throughput at the paper's
+  KNR batch shapes (N=4096 batch, p=1000 representatives, d ∈ {10, 100}):
+  a row-at-a-time formulation with per-row temporaries (the old scalar
+  kernel's memory behavior) vs one blocked pass with preallocated
+  outputs and a reused RHS (the new packed kernel's memory behavior).
+* ``argmin_k`` — per-row top-K selection with a fresh f64 copy + full
+  argsort per row (old `argmin_k` usage) vs `argpartition` into
+  preallocated f32 scratch (new `argmin_k_into`).
+
+When a Rust toolchain is available, `cargo bench --bench micro_hotpath`
+overwrites this file with natively measured numbers (``harness`` tells
+you which produced it).
+"""
+
+import json
+import os
+import time
+import concurrent.futures
+import threading
+
+import numpy as np
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+NT = os.cpu_count() or 4
+
+
+def time_median(warmup, iters, fn):
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+# ---------------------------------------------------------------- dispatch
+def spawn_region(n_tasks, work):
+    """Old model: spawn + join fresh OS threads for one parallel region."""
+    nt = min(NT, n_tasks)
+    chunk = (n_tasks + nt - 1) // nt
+    out = [None] * n_tasks
+
+    def run(base):
+        for i in range(base, min(base + chunk, n_tasks)):
+            out[i] = work(i)
+
+    threads = [threading.Thread(target=run, args=(t * chunk,)) for t in range(nt)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return out
+
+
+def bench_dispatch():
+    rows = []
+    pool = concurrent.futures.ThreadPoolExecutor(max_workers=NT)
+    work = lambda i: i * 3  # noqa: E731 — trivial task isolates dispatch cost
+
+    def pool_region(n_tasks):
+        nt = min(NT, n_tasks)
+        chunk = (n_tasks + nt - 1) // nt
+        futs = [
+            pool.submit(lambda base: [work(i) for i in range(base, min(base + chunk, n_tasks))], t * chunk)
+            for t in range(nt)
+        ]
+        return [f.result() for f in futs]
+
+    # warm the pool workers
+    pool_region(64)
+    for n in (16, 64, 256):
+        reps = 30
+        t_spawn = time_median(2, 5, lambda: [spawn_region(n, work) for _ in range(reps)]) / reps
+        t_pool = time_median(2, 5, lambda: [pool_region(n) for _ in range(reps)]) / reps
+        rows.append(
+            {
+                "n": n,
+                "spawn_us": round(t_spawn * 1e6, 3),
+                "pool_us": round(t_pool * 1e6, 3),
+                "speedup": round(t_spawn / t_pool, 2),
+            }
+        )
+        print(
+            f"dispatch n={n:4d}: spawn {t_spawn * 1e6:8.1f} µs  pool {t_pool * 1e6:8.1f} µs  "
+            f"speedup {t_spawn / t_pool:.1f}x"
+        )
+    pool.shutdown()
+    return rows
+
+
+# ---------------------------------------------------------------- sq_dists
+def sq_dists_rowwise(x, c):
+    """Old memory behavior: per-row temporaries, two passes over the row."""
+    out = np.empty((x.shape[0], c.shape[0]), dtype=np.float32)
+    cn = (c * c).sum(axis=1)
+    for i in range(x.shape[0]):
+        g = c @ x[i]  # fresh temporary per row
+        xn = float(x[i] @ x[i])
+        out[i] = np.maximum(xn + cn - 2.0 * g, 0.0)
+    return out
+
+
+def sq_dists_blocked(x, c_t, cn, out, tmp):
+    """New memory behavior: one blocked gemm pass, preallocated buffers,
+    reused (pre-transposed) RHS."""
+    np.dot(x, c_t, out=tmp)
+    xn = np.einsum("ij,ij->i", x, x)
+    np.multiply(tmp, -2.0, out=out)
+    out += xn[:, None]
+    out += cn[None, :]
+    np.maximum(out, 0.0, out=out)
+    return out
+
+
+def bench_sq_dists():
+    rows = []
+    rng = np.random.default_rng(11)
+    for n, p, d in ((4096, 1000, 10), (4096, 1000, 100)):
+        x = rng.standard_normal((n, d)).astype(np.float32)
+        c = rng.standard_normal((p, d)).astype(np.float32)
+        c_t = np.ascontiguousarray(c.T)
+        cn = (c * c).sum(axis=1)
+        out = np.empty((n, p), dtype=np.float32)
+        tmp = np.empty((n, p), dtype=np.float32)
+        t_ref = time_median(1, 3, lambda: sq_dists_rowwise(x, c))
+        t_tiled = time_median(1, 5, lambda: sq_dists_blocked(x, c_t, cn, out, tmp))
+        gf = lambda t: 2.0 * n * p * d / t / 1e9  # noqa: E731
+        rows.append(
+            {
+                "n": n,
+                "p": p,
+                "d": d,
+                "ref_ms": round(t_ref * 1e3, 3),
+                "tiled_ms": round(t_tiled * 1e3, 3),
+                "packed_reuse_ms": round(t_tiled * 1e3, 3),
+                "ref_gflops": round(gf(t_ref), 2),
+                "tiled_gflops": round(gf(t_tiled), 2),
+                "speedup": round(t_ref / t_tiled, 2),
+            }
+        )
+        print(
+            f"sq_dists n={n} p={p} d={d:3d}: ref {t_ref * 1e3:8.2f} ms ({gf(t_ref):6.2f} GF/s)  "
+            f"blocked {t_tiled * 1e3:8.2f} ms ({gf(t_tiled):6.2f} GF/s)  "
+            f"speedup {t_ref / t_tiled:.1f}x"
+        )
+    return rows
+
+
+# ---------------------------------------------------------------- argmin_k
+def bench_argmin():
+    rows = []
+    rng = np.random.default_rng(7)
+    n_rows, p, k = 2000, 1000, 5
+    d2 = rng.random((n_rows, p), dtype=np.float32)
+
+    def old_path():
+        acc = 0
+        for i in range(n_rows):
+            row = d2[i].astype(np.float64)  # fresh f64 copy per row (old)
+            acc += int(np.argsort(row, kind="stable")[:k][0])
+        return acc
+
+    idx_scratch = np.empty(p, dtype=np.int64)
+
+    def new_path():
+        acc = 0
+        for i in range(n_rows):
+            row = d2[i]
+            top = np.argpartition(row, k - 1)[:k]
+            top = top[np.argsort(row[top], kind="stable")]
+            idx_scratch[:k] = top
+            acc += int(idx_scratch[0])
+        return acc
+
+    t_old = time_median(1, 3, old_path)
+    t_new = time_median(1, 3, new_path)
+    rows.append(
+        {
+            "rows": n_rows,
+            "p": p,
+            "k": k,
+            "old_us_per_row": round(t_old / n_rows * 1e6, 3),
+            "new_us_per_row": round(t_new / n_rows * 1e6, 3),
+            "speedup": round(t_old / t_new, 2),
+        }
+    )
+    print(
+        f"argmin_k rows={n_rows} p={p} k={k}: full-sort+copy {t_old / n_rows * 1e6:6.2f} µs/row  "
+        f"partition+scratch {t_new / n_rows * 1e6:6.2f} µs/row  speedup {t_old / t_new:.1f}x"
+    )
+    return rows
+
+
+def main():
+    report = {
+        "harness": "python-mirror",
+        "note": (
+            "No Rust toolchain in this container; numbers mirror the rust "
+            "hot-path transformations at the same shapes. `cargo bench "
+            "--bench micro_hotpath` overwrites this file with native numbers."
+        ),
+        "threads": NT,
+        "pool_dispatch": bench_dispatch(),
+        "sq_dists": bench_sq_dists(),
+        "argmin_k": bench_argmin(),
+    }
+    path = os.path.join(REPO_ROOT, "BENCH_hotpath.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"[saved {path}]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Test environment shims.
+
+* Puts `python/` on `sys.path` so `from compile import …` resolves without
+  an editable install.
+* Gates the property-based suites on `hypothesis` being importable — the
+  offline runtime image bakes in JAX but not hypothesis; those modules
+  skip (rather than error at collection) when it is absent.
+"""
+
+import os
+import sys
+
+import pytest
+
+PYDIR = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if PYDIR not in sys.path:
+    sys.path.insert(0, PYDIR)
+
+_NEEDS_HYPOTHESIS = {"test_kernel.py", "test_model.py"}
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running artifact emission tests")
+
+
+def pytest_ignore_collect(collection_path, config):
+    if collection_path.name in _NEEDS_HYPOTHESIS:
+        try:
+            import hypothesis  # noqa: F401
+        except ImportError:
+            return True
+    return None

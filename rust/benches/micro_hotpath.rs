@@ -1,7 +1,12 @@
-//! Hot-path microbenchmarks (the §Perf instrumentation): native vs PJRT
-//! pdist throughput, kernel-pool dispatch overhead and coalescing, and the
-//! approximate-KNR pipeline throughput. Prints GFLOP/s and rows/s; saved
-//! to results/micro_hotpath.txt.
+//! Hot-path microbenchmarks (the §Perf instrumentation): persistent-pool
+//! dispatch overhead vs spawn-per-call, the tiled packed distance kernel
+//! vs the pre-tiling scalar reference, native vs PJRT pdist throughput,
+//! and the approximate-KNR pipeline throughput.
+//!
+//! Prints GFLOP/s and rows/s; saves the text report to
+//! `results/micro_hotpath.txt` and the machine-readable trajectory to
+//! `BENCH_hotpath.json` at the repo root (before/after numbers are
+//! measured in the same run so later PRs can track real deltas).
 
 use std::sync::Arc;
 use uspec::affinity::{knr::KnrIndex, select, NativeBackend, SelectStrategy};
@@ -9,6 +14,7 @@ use uspec::bench::time_median;
 use uspec::data::Benchmark;
 use uspec::linalg::Mat;
 use uspec::runtime::{default_artifact_dir, KernelPool, PjrtBackend, Runtime};
+use uspec::util::par;
 use uspec::util::rng::Rng;
 
 fn randmat(r: usize, c: usize, seed: u64) -> Mat {
@@ -21,6 +27,92 @@ fn gflops(n: usize, c: usize, d: usize, secs: f64) -> f64 {
     (2.0 * n as f64 * c as f64 * d as f64) / secs / 1e9
 }
 
+/// The pre-pool dispatch path: spawn + join fresh scoped threads per call
+/// (verbatim shape of the old `par_map`) — the "before" of the worker-pool
+/// change, measured in the same run.
+fn spawn_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
+    let nt = par::num_threads().min(n.max(1));
+    if nt <= 1 || n < 2 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let chunk = n.div_ceil(nt);
+    std::thread::scope(|s| {
+        for (t, slot) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                let base = t * chunk;
+                for (i, o) in slot.iter_mut().enumerate() {
+                    *o = Some(f(base + i));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// The pre-tiling distance kernel: 4-way j-unrolled scalar dot products
+/// plus a separate epilogue pass (verbatim shape of the old
+/// `matmul_nt`/`sq_dists`) — the "before" of the microkernel change.
+fn sq_dists_reference(x: &Mat, c: &Mat) -> Mat {
+    let m = x.rows;
+    let n = c.rows;
+    let d = x.cols;
+    let xn: Vec<f32> = (0..m).map(|i| x.row(i).iter().map(|&v| v * v).sum()).collect();
+    let cn: Vec<f32> = (0..n).map(|j| c.row(j).iter().map(|&v| v * v).sum()).collect();
+    let mut out = Mat::zeros(m, n);
+    par::par_for_chunks(&mut out.data, n * 64, |start, chunk| {
+        let row0 = start / n;
+        let nrows = chunk.len() / n;
+        for bi in 0..nrows {
+            let i = row0 + bi;
+            let a = x.row(i);
+            let orow = &mut chunk[bi * n..(bi + 1) * n];
+            let mut j = 0;
+            while j + 4 <= n {
+                let (b0, b1, b2, b3) = (c.row(j), c.row(j + 1), c.row(j + 2), c.row(j + 3));
+                let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
+                for t in 0..d {
+                    let av = a[t];
+                    s0 += av * b0[t];
+                    s1 += av * b1[t];
+                    s2 += av * b2[t];
+                    s3 += av * b3[t];
+                }
+                orow[j] = s0;
+                orow[j + 1] = s1;
+                orow[j + 2] = s2;
+                orow[j + 3] = s3;
+                j += 4;
+            }
+            while j < n {
+                let b = c.row(j);
+                let mut s = 0.0f32;
+                for t in 0..d {
+                    s += a[t] * b[t];
+                }
+                orow[j] = s;
+                j += 1;
+            }
+        }
+    });
+    par::par_for_chunks(&mut out.data, n, |start, chunk| {
+        let i = start / n;
+        for (j, v) in chunk.iter_mut().enumerate() {
+            *v = (xn[i] + cn[j] - 2.0 * *v).max(0.0);
+        }
+    });
+    out
+}
+
+fn json_escape_free(v: f64) -> f64 {
+    if v.is_finite() {
+        v
+    } else {
+        0.0
+    }
+}
+
 fn main() {
     let mut out = String::new();
     let mut emit = |s: String| {
@@ -28,8 +120,82 @@ fn main() {
         out.push_str(&s);
         out.push('\n');
     };
+    let mut json_sections: Vec<String> = Vec::new();
 
-    emit("== pdist throughput (native vs PJRT artifact) ==".into());
+    // ---- pool dispatch overhead: spawn-per-call vs persistent pool -------
+    emit("== parallel-region dispatch overhead (spawn-per-call vs pool) ==".into());
+    // warm the pool so one-time worker spawn is outside the measurement
+    let _ = par::par_map(64, |i| i);
+    let mut pool_rows: Vec<String> = Vec::new();
+    for n in [16usize, 64, 256] {
+        let reps = 200usize;
+        let t_spawn = time_median(2, 5, || {
+            for _ in 0..reps {
+                std::hint::black_box(spawn_map(n, |i| i.wrapping_mul(3)));
+            }
+        }) / reps as f64;
+        let t_pool = time_median(2, 5, || {
+            for _ in 0..reps {
+                std::hint::black_box(par::par_map(n, |i| i.wrapping_mul(3)));
+            }
+        }) / reps as f64;
+        let speedup = t_spawn / t_pool;
+        emit(format!(
+            "dispatch n={n:4}: spawn {:8.2} µs   pool {:8.2} µs   speedup {:.1}x",
+            t_spawn * 1e6,
+            t_pool * 1e6,
+            speedup
+        ));
+        pool_rows.push(format!(
+            "{{\"n\": {n}, \"spawn_us\": {:.3}, \"pool_us\": {:.3}, \"speedup\": {:.2}}}",
+            t_spawn * 1e6,
+            t_pool * 1e6,
+            json_escape_free(speedup)
+        ));
+    }
+    json_sections.push(format!("\"pool_dispatch\": [{}]", pool_rows.join(", ")));
+
+    // ---- sq_dists: tiled packed microkernel vs scalar reference ----------
+    emit("\n== sq_dists at paper shapes (tiled packed vs scalar reference) ==".into());
+    let mut sq_rows: Vec<String> = Vec::new();
+    for (n, p, d) in [(4096usize, 1000usize, 10usize), (4096, 1000, 100)] {
+        let x = randmat(n, d, 11);
+        let cm = randmat(p, d, 12);
+        let t_ref = time_median(1, 5, || {
+            std::hint::black_box(sq_dists_reference(&x, &cm));
+        });
+        let t_tiled = time_median(1, 5, || {
+            std::hint::black_box(x.sq_dists(&cm));
+        });
+        // packed-reuse flavor: RHS packed once outside the timed region
+        let packed = cm.pack_rhs();
+        let t_packed = time_median(1, 5, || {
+            std::hint::black_box(x.sq_dists_packed(&packed));
+        });
+        let speedup = t_ref / t_tiled;
+        emit(format!(
+            "sq_dists n={n} p={p} d={d:3}: ref {:7.2} ms ({:6.2} GF/s)  tiled {:7.2} ms ({:6.2} GF/s)  packed-reuse {:7.2} ms  speedup {:.2}x",
+            t_ref * 1e3,
+            gflops(n, p, d, t_ref),
+            t_tiled * 1e3,
+            gflops(n, p, d, t_tiled),
+            t_packed * 1e3,
+            speedup
+        ));
+        sq_rows.push(format!(
+            "{{\"n\": {n}, \"p\": {p}, \"d\": {d}, \"ref_ms\": {:.3}, \"tiled_ms\": {:.3}, \"packed_reuse_ms\": {:.3}, \"ref_gflops\": {:.2}, \"tiled_gflops\": {:.2}, \"speedup\": {:.2}}}",
+            t_ref * 1e3,
+            t_tiled * 1e3,
+            t_packed * 1e3,
+            gflops(n, p, d, t_ref),
+            gflops(n, p, d, t_tiled),
+            json_escape_free(speedup)
+        ));
+    }
+    json_sections.push(format!("\"sq_dists\": [{}]", sq_rows.join(", ")));
+
+    // ---- native vs PJRT pdist throughput ---------------------------------
+    emit("\n== pdist throughput (native vs PJRT artifact) ==".into());
     let shapes = [(8192usize, 64usize, 2usize), (8192, 64, 16), (8192, 256, 64), (4096, 256, 784)];
     let have_artifacts = default_artifact_dir().join("manifest.json").exists();
     let mut rt = if have_artifacts { Runtime::load(default_artifact_dir()).ok() } else { None };
@@ -87,7 +253,9 @@ fn main() {
         ));
     }
 
+    // ---- approx/exact KNR pipeline throughput (native) -------------------
     emit("\n== approx-KNR pipeline throughput (native) ==".into());
+    let mut knr_rows: Vec<String> = Vec::new();
     for scale in [0.01f64, 0.05] {
         let ds = Benchmark::Tb1m.generate(scale, 5);
         let p = 1000.min(ds.n() / 2);
@@ -107,9 +275,18 @@ fn main() {
             t_e * 1e3,
             t_e / t_a
         ));
+        knr_rows.push(format!(
+            "{{\"n\": {}, \"p\": {p}, \"approx_ms\": {:.2}, \"exact_ms\": {:.2}, \"approx_objs_per_s\": {:.0}}}",
+            ds.n(),
+            t_a * 1e3,
+            t_e * 1e3,
+            ds.n() as f64 / t_a
+        ));
     }
+    json_sections.push(format!("\"approx_knr\": [{}]", knr_rows.join(", ")));
 
     emit("\n== U-SPEC end-to-end (native) ==".into());
+    let mut uspec_rows: Vec<String> = Vec::new();
     for scale in [0.01f64, 0.1] {
         let ds = Benchmark::Tb1m.generate(scale, 9);
         let params =
@@ -123,9 +300,29 @@ fn main() {
             t,
             ds.n() as f64 / t
         ));
+        uspec_rows.push(format!(
+            "{{\"n\": {}, \"seconds\": {:.3}, \"objs_per_s\": {:.0}}}",
+            ds.n(),
+            t,
+            ds.n() as f64 / t
+        ));
     }
+    json_sections.push(format!("\"uspec_end_to_end\": [{}]", uspec_rows.join(", ")));
 
     let _ = std::fs::create_dir_all("results");
-    let _ = std::fs::write("results/micro_hotpath.txt", out);
+    let _ = std::fs::write("results/micro_hotpath.txt", &out);
     eprintln!("[saved results/micro_hotpath.txt]");
+
+    // machine-readable perf trajectory at the repo root
+    let json = format!(
+        "{{\n  \"harness\": \"cargo-bench\",\n  \"threads\": {},\n  \"pool_dispatches\": {},\n  {}\n}}\n",
+        par::num_threads(),
+        par::pool_dispatch_count(),
+        json_sections.join(",\n  ")
+    );
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_hotpath.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => eprintln!("[saved {}]", path.display()),
+        Err(e) => eprintln!("[failed to save {}: {e}]", path.display()),
+    }
 }

@@ -123,15 +123,13 @@ pub fn build_affinity_kernel(
         }
         SimKernel::SelfTuning => {
             // σᵢ: K-th (= furthest kept) representative distance per object.
-            let sig_obj: Vec<f64> = (0..n)
-                .map(|i| {
-                    knr.d2[i * k..(i + 1) * k]
-                        .iter()
-                        .map(|&v| (v.max(0.0) as f64).sqrt())
-                        .fold(0.0, f64::max)
-                        .max(1e-12)
-                })
-                .collect();
+            let sig_obj: Vec<f64> = par::par_map(n, |i| {
+                knr.d2[i * k..(i + 1) * k]
+                    .iter()
+                    .map(|&v| (v.max(0.0) as f64).sqrt())
+                    .fold(0.0, f64::max)
+                    .max(1e-12)
+            });
             // σⱼ: mean incoming distance per representative.
             let mut sum = vec![0.0f64; p];
             let mut cnt = vec![0u64; p];

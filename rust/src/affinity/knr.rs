@@ -10,12 +10,27 @@
 //! neighborhood. All distance blocks go through the [`DistanceBackend`],
 //! batched per rep-cluster / per anchor so the compiled kernel sees dense
 //! rectangular work (the paper's "batch processing manner").
+//!
+//! The query path is allocation-free per row: top-K selection goes through
+//! [`argmin_k_into`] with per-group scratch, gather buffers are reused
+//! across buckets, and on the native backend the representative panel is
+//! packed **once** ([`Mat::pack_rhs`]) and shared by every batch
+//! (`exact_knr` additionally parallelizes across batches, with the
+//! per-batch gemm running inline on the claiming worker).
 
 use super::DistanceBackend;
 use crate::kmeans::{kmeans, KmeansParams};
-use crate::linalg::Mat;
-use crate::util::{argmin_k, par};
+use crate::linalg::{nearest_packed, sq_dists_into, DistScratch, Mat};
+use crate::util::{argmin_k_into, par};
 use crate::{ensure_arg, Result};
+
+/// Buckets handled per parallel work item in the grouped stages: as many
+/// as possible (so one worker reuses its gather/selection buffers across
+/// buckets) while still leaving ~4 work items per thread for load
+/// balancing. Grouping never changes results — buckets are independent.
+fn bucket_group(nbuckets: usize) -> usize {
+    nbuckets.div_ceil(par::num_threads() * 4).max(1)
+}
 
 /// Preprocessed index over the representative set.
 #[derive(Debug, Clone)]
@@ -86,21 +101,25 @@ impl KnrIndex {
         // Pre-step 2: K′-NN among representatives (exact, O(p²d) — p ≪ N).
         let nbr_len = k_prime + 1;
         let d2 = backend.sq_dists(reps, reps);
-        let neighbors: Vec<u32> = par::par_map(p, |i| {
-            let row: Vec<f64> = d2.data[i * p..(i + 1) * p].iter().map(|&v| v as f64).collect();
-            let mut order = argmin_k(&row, nbr_len);
-            // ensure self first
-            if let Some(pos) = order.iter().position(|&j| j == i) {
-                order.swap(0, pos);
-            } else {
-                order.insert(0, i);
-                order.truncate(nbr_len);
+        let mut neighbors = vec![0u32; p * nbr_len];
+        par::par_for_chunks(&mut neighbors, nbr_len * 32, |start, chunk| {
+            let row0 = start / nbr_len;
+            let rows = chunk.len() / nbr_len;
+            let mut scratch: Vec<u32> = Vec::new();
+            let mut order: Vec<u32> = Vec::new();
+            for bi in 0..rows {
+                let i = row0 + bi;
+                argmin_k_into(&d2.data[i * p..(i + 1) * p], nbr_len, &mut scratch, &mut order);
+                // ensure self first
+                if let Some(pos) = order.iter().position(|&j| j == i as u32) {
+                    order.swap(0, pos);
+                } else {
+                    order.insert(0, i as u32);
+                    order.truncate(nbr_len);
+                }
+                chunk[bi * nbr_len..(bi + 1) * nbr_len].copy_from_slice(&order);
             }
-            order.into_iter().map(|j| j as u32).collect::<Vec<u32>>()
-        })
-        .into_iter()
-        .flatten()
-        .collect();
+        });
         Ok(KnrIndex { reps: reps.clone(), rc_centers, members, neighbors, nbr_len })
     }
 
@@ -122,83 +141,130 @@ impl KnrIndex {
         let nearest_rc = nearest_row_batched(x, &self.rc_centers, backend);
 
         // ---- Step 2: nearest representative inside that rep-cluster ------
-        // Bucket objects by rep-cluster so each bucket runs one dense block.
+        // Bucket objects by rep-cluster so each bucket runs one dense block;
+        // buckets are processed in groups so a worker reuses its gather
+        // buffers across buckets.
         let z1 = self.z1();
         let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); z1];
         for (i, &c) in nearest_rc.iter().enumerate() {
             buckets[c as usize].push(i as u32);
         }
         let mut anchor = vec![0u32; n]; // r_l per object
-        let per_bucket: Vec<(u32, Vec<u32>)> = par::par_map(z1, |c| {
-            let objs = &buckets[c];
-            if objs.is_empty() {
-                return (c as u32, Vec::new());
-            }
-            let mem = &self.members[c];
-            let xb = gather_rows_u32(x, objs);
-            let rb = gather_rows_u32(&self.reps, mem);
-            let d2 = backend.sq_dists(&xb, &rb);
-            let winners: Vec<u32> = (0..objs.len())
-                .map(|bi| {
-                    let row = &d2.data[bi * mem.len()..(bi + 1) * mem.len()];
-                    let mut best = 0usize;
-                    for (j, &v) in row.iter().enumerate().skip(1) {
-                        if v < row[best] {
-                            best = j;
+        let group = bucket_group(z1);
+        let ngroups = z1.div_ceil(group);
+        let per_group: Vec<Vec<(u32, Vec<u32>)>> = par::par_map(ngroups, |g| {
+            let lo = g * group;
+            let hi = (lo + group).min(z1);
+            let mut xb = Mat::zeros(0, x.cols);
+            let mut rb = Mat::zeros(0, x.cols);
+            let mut out = Vec::new();
+            for c in lo..hi {
+                let objs = &buckets[c];
+                if objs.is_empty() {
+                    continue;
+                }
+                let mem = &self.members[c];
+                gather_rows_u32_into(x, objs, &mut xb);
+                gather_rows_u32_into(&self.reps, mem, &mut rb);
+                let d2 = backend.sq_dists(&xb, &rb);
+                let winners: Vec<u32> = (0..objs.len())
+                    .map(|bi| {
+                        let row = &d2.data[bi * mem.len()..(bi + 1) * mem.len()];
+                        let mut best = 0usize;
+                        for (j, &v) in row.iter().enumerate().skip(1) {
+                            if v < row[best] {
+                                best = j;
+                            }
                         }
-                    }
-                    mem[best]
-                })
-                .collect();
-            (c as u32, winners)
+                        mem[best]
+                    })
+                    .collect();
+                out.push((c as u32, winners));
+            }
+            out
         });
-        for (c, winners) in per_bucket {
-            for (bi, &obj) in buckets[c as usize].iter().enumerate() {
-                anchor[obj as usize] = winners[bi];
+        for group in per_group {
+            for (c, winners) in group {
+                for (bi, &obj) in buckets[c as usize].iter().enumerate() {
+                    anchor[obj as usize] = winners[bi];
+                }
             }
         }
 
         // ---- Step 3: top-K among the anchor's K′ neighborhood -------------
-        // Bucket objects by anchor representative.
+        // Bucket objects by anchor representative; same group-of-buckets
+        // structure so scratch and gather buffers amortize across anchors.
         let mut by_anchor: Vec<Vec<u32>> = vec![Vec::new(); p];
         for (i, &a) in anchor.iter().enumerate() {
             by_anchor[a as usize].push(i as u32);
         }
         let mut idx = vec![0u32; n * k];
         let mut d2out = vec![0f32; n * k];
-        let results: Vec<(u32, Vec<u32>, Vec<f32>)> = par::par_map(p, |a| {
-            let objs = &by_anchor[a];
-            if objs.is_empty() {
-                return (a as u32, Vec::new(), Vec::new());
-            }
-            let cand = &self.neighbors[a * self.nbr_len..(a + 1) * self.nbr_len];
-            let xb = gather_rows_u32(x, objs);
-            let rb = gather_rows_u32(&self.reps, cand);
-            let d2 = backend.sq_dists(&xb, &rb);
-            let m = cand.len();
-            let mut ids = Vec::with_capacity(objs.len() * k);
-            let mut ds = Vec::with_capacity(objs.len() * k);
-            for bi in 0..objs.len() {
-                let row: Vec<f64> =
-                    d2.data[bi * m..(bi + 1) * m].iter().map(|&v| v as f64).collect();
-                let top = argmin_k(&row, k);
-                for &t in &top {
-                    ids.push(cand[t]);
-                    ds.push(row[t] as f32);
+        let group = bucket_group(p);
+        let ngroups = p.div_ceil(group);
+        let groups: Vec<Vec<(u32, Vec<u32>, Vec<f32>)>> = par::par_map(ngroups, |g| {
+            let lo = g * group;
+            let hi = (lo + group).min(p);
+            let mut xb = Mat::zeros(0, x.cols);
+            let mut rb = Mat::zeros(0, x.cols);
+            let mut scratch: Vec<u32> = Vec::new();
+            let mut order: Vec<u32> = Vec::new();
+            let mut out = Vec::new();
+            for a in lo..hi {
+                let objs = &by_anchor[a];
+                if objs.is_empty() {
+                    continue;
                 }
-                // if neighborhood smaller than k (tiny p), pad with last
-                for _ in top.len()..k {
-                    ids.push(cand[top[top.len() - 1]]);
-                    ds.push(row[top[top.len() - 1]] as f32);
+                let cand = &self.neighbors[a * self.nbr_len..(a + 1) * self.nbr_len];
+                gather_rows_u32_into(x, objs, &mut xb);
+                gather_rows_u32_into(&self.reps, cand, &mut rb);
+                let d2 = backend.sq_dists(&xb, &rb);
+                let m = cand.len();
+                // If the candidate neighborhood is smaller than K, pad every
+                // row with *distinct* fallback representatives (lowest ids
+                // not already candidates) so the per-row uniqueness
+                // invariant holds; their distances are computed exactly.
+                let pad: Vec<u32> = if m < k {
+                    let mut in_cand = vec![false; p];
+                    for &cj in cand {
+                        in_cand[cj as usize] = true;
+                    }
+                    (0..p as u32).filter(|&r| !in_cand[r as usize]).take(k - m).collect()
+                } else {
+                    Vec::new()
+                };
+                let mut ids = Vec::with_capacity(objs.len() * k);
+                let mut ds = Vec::with_capacity(objs.len() * k);
+                for bi in 0..objs.len() {
+                    let row = &d2.data[bi * m..(bi + 1) * m];
+                    argmin_k_into(row, k, &mut scratch, &mut order);
+                    for &t in &order {
+                        ids.push(cand[t as usize]);
+                        ds.push(row[t as usize]);
+                    }
+                    let xrow = xb.row(bi);
+                    for &r in &pad {
+                        let rrow = self.reps.row(r as usize);
+                        let mut s = 0.0f32;
+                        for (xv, rv) in xrow.iter().zip(rrow) {
+                            let diff = xv - rv;
+                            s += diff * diff;
+                        }
+                        ids.push(r);
+                        ds.push(s);
+                    }
                 }
+                out.push((a as u32, ids, ds));
             }
-            (a as u32, ids, ds)
+            out
         });
-        for (a, ids, ds) in results {
-            for (bi, &obj) in by_anchor[a as usize].iter().enumerate() {
-                let o = obj as usize * k;
-                idx[o..o + k].copy_from_slice(&ids[bi * k..(bi + 1) * k]);
-                d2out[o..o + k].copy_from_slice(&ds[bi * k..(bi + 1) * k]);
+        for group in groups {
+            for (a, ids, ds) in group {
+                for (bi, &obj) in by_anchor[a as usize].iter().enumerate() {
+                    let o = obj as usize * k;
+                    idx[o..o + k].copy_from_slice(&ids[bi * k..(bi + 1) * k]);
+                    d2out[o..o + k].copy_from_slice(&ds[bi * k..(bi + 1) * k]);
+                }
             }
         }
         KnrResult { idx, d2: d2out, k }
@@ -211,41 +277,66 @@ impl KnrIndex {
     }
 }
 
-/// Exact K-nearest rows of `reps` for every row of `x`.
+/// Exact K-nearest rows of `reps` for every row of `x`. Batches run in
+/// parallel; on the native backend each batch reuses one packed
+/// representative panel and allocation-free selection scratch.
 pub fn exact_knr(x: &Mat, reps: &Mat, k: usize, backend: &dyn DistanceBackend) -> KnrResult {
     let n = x.rows;
     let p = reps.rows;
+    let d = x.cols;
     let k = k.min(p);
-    let batch = 4096usize;
+    if n == 0 || k == 0 {
+        return KnrResult { idx: Vec::new(), d2: Vec::new(), k };
+    }
+    // Pack the representative panel once; every batch reads the same warm
+    // panels (native fast path — other backends go through their own
+    // sq_dists so compiled-kernel batching still applies).
+    let packed = if backend.is_native() { Some(reps.pack_rhs()) } else { None };
+    // Batches are the unit of outer parallelism and each batch's gemm runs
+    // inline on its claiming worker, so on the native path shrink batches
+    // until there are ~4 per thread (floor keeps the gemm tile-efficient).
+    // Other backends keep the fixed compiled-kernel batch shape. Batch
+    // size never changes results — rows are independent.
+    let batch = if packed.is_some() {
+        n.div_ceil(par::num_threads() * 4).clamp(512, 4096)
+    } else {
+        4096usize
+    };
     let nb = n.div_ceil(batch);
-    let parts: Vec<(Vec<u32>, Vec<f32>)> = (0..nb)
-        .map(|b| {
-            let lo = b * batch;
-            let hi = ((b + 1) * batch).min(n);
-            let xb = Mat {
-                rows: hi - lo,
-                cols: x.cols,
-                data: x.data[lo * x.cols..hi * x.cols].to_vec(),
-            };
-            let d2 = backend.sq_dists(&xb, reps);
-            let rows: Vec<(Vec<u32>, Vec<f32>)> = par::par_map(hi - lo, |bi| {
-                let row: Vec<f64> =
-                    d2.data[bi * p..(bi + 1) * p].iter().map(|&v| v as f64).collect();
-                let top = argmin_k(&row, k);
-                (
-                    top.iter().map(|&t| t as u32).collect(),
-                    top.iter().map(|&t| row[t] as f32).collect(),
-                )
-            });
-            let mut ids = Vec::with_capacity((hi - lo) * k);
-            let mut ds = Vec::with_capacity((hi - lo) * k);
-            for (a, b) in rows {
-                ids.extend(a);
-                ds.extend(b);
+    let parts: Vec<(Vec<u32>, Vec<f32>)> = par::par_map(nb, |b| {
+        let lo = b * batch;
+        let hi = ((b + 1) * batch).min(n);
+        let rows = hi - lo;
+        let dbuf: Vec<f32> = match &packed {
+            Some(pk) => {
+                let mut scratch = DistScratch::default();
+                let mut out = Vec::new();
+                sq_dists_into(&x.data[lo * d..hi * d], rows, pk, &mut scratch, &mut out);
+                out
             }
-            (ids, ds)
-        })
-        .collect();
+            None => {
+                let xb = Mat {
+                    rows,
+                    cols: d,
+                    data: x.data[lo * d..hi * d].to_vec(),
+                };
+                backend.sq_dists(&xb, reps).data
+            }
+        };
+        let mut ids = Vec::with_capacity(rows * k);
+        let mut ds = Vec::with_capacity(rows * k);
+        let mut scratch: Vec<u32> = Vec::new();
+        let mut order: Vec<u32> = Vec::new();
+        for bi in 0..rows {
+            let row = &dbuf[bi * p..(bi + 1) * p];
+            argmin_k_into(row, k, &mut scratch, &mut order);
+            for &t in &order {
+                ids.push(t);
+                ds.push(row[t as usize]);
+            }
+        }
+        (ids, ds)
+    });
     let mut idx = Vec::with_capacity(n * k);
     let mut d2 = Vec::with_capacity(n * k);
     for (a, b) in parts {
@@ -255,8 +346,14 @@ pub fn exact_knr(x: &Mat, reps: &Mat, k: usize, backend: &dyn DistanceBackend) -
     KnrResult { idx, d2, k }
 }
 
-/// Nearest row of `c` for every row of `x`, processed in fixed batches.
+/// Nearest row of `c` for every row of `x`. On the native backend this is
+/// the fused packed argmin kernel (no distance block is materialized);
+/// other backends fall back to fixed-size batches through `sq_dists`.
 fn nearest_row_batched(x: &Mat, c: &Mat, backend: &dyn DistanceBackend) -> Vec<u32> {
+    if backend.is_native() {
+        let packed = c.pack_rhs();
+        return nearest_packed(x, &packed).0;
+    }
     let n = x.rows;
     let m = c.rows;
     let batch = 8192usize;
@@ -282,12 +379,15 @@ fn nearest_row_batched(x: &Mat, c: &Mat, backend: &dyn DistanceBackend) -> Vec<u
     out
 }
 
-fn gather_rows_u32(m: &Mat, idx: &[u32]) -> Mat {
-    let mut out = Mat::zeros(idx.len(), m.cols);
-    for (o, &i) in idx.iter().enumerate() {
-        out.row_mut(o).copy_from_slice(m.row(i as usize));
+/// Gather rows of `m` into `out`, reusing `out`'s allocation.
+fn gather_rows_u32_into(m: &Mat, idx: &[u32], out: &mut Mat) {
+    out.rows = idx.len();
+    out.cols = m.cols;
+    out.data.clear();
+    out.data.reserve(idx.len() * m.cols);
+    for &i in idx {
+        out.data.extend_from_slice(m.row(i as usize));
     }
-    out
 }
 
 /// Recall@K of an approximate KNR against the exact answer (mean fraction
@@ -313,6 +413,7 @@ mod tests {
     use super::*;
     use crate::affinity::{select, NativeBackend, SelectStrategy};
     use crate::data::synthetic::{concentric_circles, two_moons};
+    use crate::util::argmin_k;
 
     #[test]
     fn index_structure() {
@@ -402,5 +503,29 @@ mod tests {
         let index = KnrIndex::build(&reps, 10, 5, &NativeBackend).unwrap();
         let res = index.approx_knr(&ds.x, 5, &NativeBackend);
         assert_eq!(res.k, 3); // clamped to p
+    }
+
+    #[test]
+    fn padding_with_small_neighborhood_keeps_rows_unique() {
+        // Regression: K′+1 < K used to pad rows by repeating one candidate,
+        // breaking per-row uniqueness. Build an index whose neighborhood
+        // (K′=2 ⇒ nbr_len=3) is smaller than the K=5 query.
+        let ds = two_moons(300, 0.06, 12);
+        let reps = select(&ds.x, SelectStrategy::Random, 20, 10, 13).unwrap();
+        let index = KnrIndex::build(&reps, 2, 10, &NativeBackend).unwrap();
+        assert_eq!(index.nbr_len, 3);
+        let res = index.approx_knr(&ds.x, 5, &NativeBackend);
+        assert_eq!(res.k, 5);
+        for i in 0..ds.n() {
+            let ids = &res.idx[i * 5..(i + 1) * 5];
+            let set: std::collections::HashSet<_> = ids.iter().collect();
+            assert_eq!(set.len(), 5, "row {i} not unique: {ids:?}");
+            assert!(ids.iter().all(|&r| (r as usize) < 20));
+            // padded distances are real distances, not copies of the last
+            // candidate's — all entries finite and non-negative
+            for &dv in &res.d2[i * 5..(i + 1) * 5] {
+                assert!(dv.is_finite() && dv >= 0.0);
+            }
+        }
     }
 }

@@ -10,6 +10,24 @@
 //! All distance evaluations go through a [`DistanceBackend`] so the same
 //! pipeline runs on the pure-Rust path or on the AOT-compiled Pallas kernel
 //! served by [`crate::runtime`].
+//!
+//! # Complexity and constant factors
+//!
+//! Asymptotics are the paper's: approximate KNR costs
+//! O(N·(z₁ + z₂ + K′)·d) = **O(N·p^½·d)** time and O(N·p^½) memory, exact
+//! KNR O(N·p·d). The constant factors are where this module earns the
+//! "ultra-scalable" claim:
+//!
+//! * every distance block runs on the packed register-tiled microkernel
+//!   ([`crate::linalg::PackedMat`]), with the representative panel packed
+//!   **once** per query (not per batch) on the native backend;
+//! * per-row top-K selection is allocation-free
+//!   ([`crate::util::argmin_k_into`] with per-group scratch, f32 keys —
+//!   no f64 round-trip);
+//! * parallel regions dispatch onto the persistent worker pool
+//!   ([`crate::util::par`]) — no thread spawn/join inside the per-batch
+//!   loop. Step 1's nearest-rep-cluster search is a fused argmin kernel
+//!   that never materializes its N×z₁ distance block.
 
 pub mod select;
 pub mod knr;
@@ -34,6 +52,15 @@ pub trait DistanceBackend: Sync {
     fn name(&self) -> &str {
         "native"
     }
+
+    /// True when `sq_dists` is exactly the in-process packed kernel, so
+    /// hot paths may bypass this trait with pre-packed panels
+    /// ([`crate::linalg::PackedMat`]). Defaults to `false`: a wrapper or
+    /// instrumented backend is never silently skipped just because it
+    /// kept the default cosmetic [`Self::name`].
+    fn is_native(&self) -> bool {
+        false
+    }
 }
 
 /// Pure-Rust backend (blocked/threaded gemm formulation).
@@ -43,6 +70,10 @@ pub struct NativeBackend;
 impl DistanceBackend for NativeBackend {
     fn sq_dists(&self, x: &Mat, c: &Mat) -> Mat {
         x.sq_dists(c)
+    }
+
+    fn is_native(&self) -> bool {
+        true
     }
 }
 

@@ -25,6 +25,7 @@
 
 use super::{init_plusplus, init_random, Init, KmeansParams, KmeansResult};
 use crate::linalg::Mat;
+use crate::util::par;
 use crate::util::rng::Rng;
 use crate::{ensure_arg, Result};
 
@@ -52,26 +53,33 @@ pub fn kmeans_hamerly(x: &Mat, params: &KmeansParams, seed: u64) -> Result<Kmean
         Init::PlusPlus => init_plusplus(x, k, &mut rng),
     };
 
-    // ---- initial exact assignment (one full scan) -------------------------
+    // ---- initial exact assignment (one full scan, pool-parallel) ----------
     let mut labels = vec![0u32; n];
     let mut u = vec![0f32; n]; // distance (not squared) upper bound
     let mut l = vec![0f32; n]; // second-closest lower bound
-    for i in 0..n {
-        let row = x.row(i);
-        let (mut b1, mut d1, mut d2s) = (0usize, f32::INFINITY, f32::INFINITY);
-        for c in 0..k {
-            let dd = dist2(row, centers.row(c));
-            if dd < d1 {
-                d2s = d1;
-                d1 = dd;
-                b1 = c;
-            } else if dd < d2s {
-                d2s = dd;
+    {
+        let centers = &centers;
+        let init: Vec<(u32, f32, f32)> = par::par_map(n, |i| {
+            let row = x.row(i);
+            let (mut b1, mut d1, mut d2s) = (0usize, f32::INFINITY, f32::INFINITY);
+            for c in 0..k {
+                let dd = dist2(row, centers.row(c));
+                if dd < d1 {
+                    d2s = d1;
+                    d1 = dd;
+                    b1 = c;
+                } else if dd < d2s {
+                    d2s = dd;
+                }
             }
+            let lb = if d2s.is_finite() { d2s.max(0.0).sqrt() } else { f32::INFINITY };
+            (b1 as u32, d1.max(0.0).sqrt(), lb)
+        });
+        for (i, (b1, ui, li)) in init.into_iter().enumerate() {
+            labels[i] = b1;
+            u[i] = ui;
+            l[i] = li;
         }
-        labels[i] = b1 as u32;
-        u[i] = d1.max(0.0).sqrt();
-        l[i] = if d2s.is_finite() { d2s.max(0.0).sqrt() } else { f32::INFINITY };
     }
 
     let mut s_half = vec![0f32; k];
@@ -82,20 +90,22 @@ pub fn kmeans_hamerly(x: &Mat, params: &KmeansParams, seed: u64) -> Result<Kmean
 
     for it in 0..params.max_iter {
         iterations = it + 1;
-        // ---- s[c]: half-distance to nearest other center ------------------
+        // ---- s[c]: half-distance to nearest other center (O(k²d), pooled) -
         if k > 1 {
-            for c in 0..k {
+            let centers_ref = &centers;
+            let halves: Vec<f32> = par::par_map(k, |c| {
                 let mut best = f32::INFINITY;
                 for c2 in 0..k {
                     if c2 != c {
-                        let dd = dist2(centers.row(c), centers.row(c2));
+                        let dd = dist2(centers_ref.row(c), centers_ref.row(c2));
                         if dd < best {
                             best = dd;
                         }
                     }
                 }
-                s_half[c] = 0.5 * best.max(0.0).sqrt();
-            }
+                0.5 * best.max(0.0).sqrt()
+            });
+            s_half.copy_from_slice(&halves);
         }
 
         // ---- bounded reassignment -----------------------------------------

@@ -5,7 +5,6 @@
 //! base clusterer of every ensemble baseline (§4.4).
 
 use crate::linalg::Mat;
-use crate::util::par;
 pub mod hamerly;
 
 pub use hamerly::kmeans_hamerly;
@@ -48,109 +47,26 @@ pub struct KmeansResult {
 }
 
 /// Assign every row of `x` to its nearest row of `centers`.
-/// Returns (labels, squared distance to the winner).
+/// Returns (labels, squared distance to the winner). Runs on the fused
+/// packed argmin kernel — the N×k distance block is never materialized.
 pub fn assign(x: &Mat, centers: &Mat) -> (Vec<u32>, Vec<f32>) {
-    let d2 = x.sq_dists(centers);
-    let k = centers.rows;
-    let mut labels = vec![0u32; x.rows];
-    let mut dists = vec![0f32; x.rows];
-    let out: Vec<(u32, f32)> = par::par_map(x.rows, |i| {
-        let row = &d2.data[i * k..(i + 1) * k];
-        let mut best = 0usize;
-        let mut bd = row[0];
-        for (j, &v) in row.iter().enumerate().skip(1) {
-            if v < bd {
-                bd = v;
-                best = j;
-            }
-        }
-        (best as u32, bd)
-    });
-    for (i, (l, d)) in out.into_iter().enumerate() {
-        labels[i] = l;
-        dists[i] = d;
-    }
-    (labels, dists)
+    let packed = centers.pack_rhs();
+    crate::linalg::nearest_packed(x, &packed)
 }
 
-/// Fused, cache-blocked assignment: computes distances block-by-block into
-/// a thread-local scratch tile and reduces to (argmin, min) immediately —
-/// the full N×k distance matrix (40 MB at the selection shape
-/// n=10⁴, k=10³) never exists. ~2× faster than [`assign`] at large k
-/// (§Perf L3 iteration 1); exact same results.
+/// Fused assignment against an already-packed center panel, for callers
+/// that assign several batches against the same centers (the Lloyd loop
+/// packs once per iteration, [`assign_batched`] once per call). Exact
+/// same results as [`assign`] (identical accumulation order and
+/// lowest-index tie-breaking).
+pub fn assign_packed(x: &Mat, packed: &crate::linalg::PackedMat) -> (Vec<u32>, Vec<f32>) {
+    crate::linalg::nearest_packed(x, packed)
+}
+
+/// Historical alias for the fused path ([`assign`] now fuses too); kept
+/// because perf notes and older callers reference it by name.
 pub fn assign_fused(x: &Mat, centers: &Mat) -> (Vec<u32>, Vec<f32>) {
-    const BLOCK: usize = 256;
-    let n = x.rows;
-    let k = centers.rows;
-    let d = x.cols;
-    debug_assert_eq!(d, centers.cols);
-    let cn = centers.row_sqnorms();
-    let mut labels = vec![0u32; n];
-    let mut dists = vec![0f32; n];
-    // one (label, dist) pair per row, produced block-parallel
-    let nblocks = n.div_ceil(BLOCK);
-    let out: Vec<Vec<(u32, f32)>> = par::par_map(nblocks, |b| {
-        let lo = b * BLOCK;
-        let hi = (lo + BLOCK).min(n);
-        let rows = hi - lo;
-        let mut result = vec![(0u32, f32::INFINITY); rows];
-        // gemm tile: rows × k, reused across the j-loop below
-        for (bi, res) in result.iter_mut().enumerate() {
-            let i = lo + bi;
-            let a = x.row(i);
-            let xn: f32 = a.iter().map(|&v| v * v).sum();
-            let mut best = 0u32;
-            let mut bd = f32::INFINITY;
-            // 4-way unrolled dot products against all centers
-            let mut j = 0;
-            while j + 4 <= k {
-                let (c0, c1, c2, c3) = (
-                    centers.row(j),
-                    centers.row(j + 1),
-                    centers.row(j + 2),
-                    centers.row(j + 3),
-                );
-                let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
-                for t in 0..d {
-                    let av = a[t];
-                    s0 += av * c0[t];
-                    s1 += av * c1[t];
-                    s2 += av * c2[t];
-                    s3 += av * c3[t];
-                }
-                for (off, s) in [s0, s1, s2, s3].into_iter().enumerate() {
-                    let dist = (xn + cn[j + off] - 2.0 * s).max(0.0);
-                    if dist < bd {
-                        bd = dist;
-                        best = (j + off) as u32;
-                    }
-                }
-                j += 4;
-            }
-            while j < k {
-                let c = centers.row(j);
-                let mut s = 0.0f32;
-                for t in 0..d {
-                    s += a[t] * c[t];
-                }
-                let dist = (xn + cn[j] - 2.0 * s).max(0.0);
-                if dist < bd {
-                    bd = dist;
-                    best = j as u32;
-                }
-                j += 1;
-            }
-            *res = (best, bd);
-        }
-        result
-    });
-    for (b, block) in out.into_iter().enumerate() {
-        for (bi, (l, dd)) in block.into_iter().enumerate() {
-            labels[b * BLOCK + bi] = l;
-            dists[b * BLOCK + bi] = dd;
-        }
-    }
-    (labels, dists)
+    assign(x, centers)
 }
 
 /// Batched assignment that avoids materializing the full N×k distance
@@ -158,6 +74,7 @@ pub fn assign_fused(x: &Mat, centers: &Mat) -> (Vec<u32>, Vec<f32>) {
 /// kernel path mirrors.
 pub fn assign_batched(x: &Mat, centers: &Mat, batch: usize) -> (Vec<u32>, Vec<f32>) {
     let n = x.rows;
+    let packed = centers.pack_rhs(); // one packing shared by every batch
     let mut labels = vec![0u32; n];
     let mut dists = vec![0f32; n];
     let mut start = 0;
@@ -168,7 +85,7 @@ pub fn assign_batched(x: &Mat, centers: &Mat, batch: usize) -> (Vec<u32>, Vec<f3
             cols: x.cols,
             data: x.data[start * x.cols..end * x.cols].to_vec(),
         };
-        let (lb, db) = assign(&xb, centers);
+        let (lb, db) = assign_packed(&xb, &packed);
         labels[start..end].copy_from_slice(&lb);
         dists[start..end].copy_from_slice(&db);
         start = end;
@@ -248,7 +165,7 @@ pub fn kmeans(x: &Mat, params: &KmeansParams, seed: u64) -> Result<KmeansResult>
     let mut iterations = 0;
     for it in 0..params.max_iter {
         iterations = it + 1;
-        let (new_labels, dists) = assign_fused(x, &centers);
+        let (new_labels, dists) = assign_packed(x, &centers.pack_rhs());
         let new_inertia: f64 = dists.iter().map(|&v| v as f64).sum();
         labels = new_labels;
         // Update step: mean of members; repair empties with farthest points.

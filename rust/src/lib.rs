@@ -57,23 +57,49 @@ pub mod bench;
 pub mod config;
 pub mod cli;
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Crate-wide error type (hand-rolled Display/Error impls — `thiserror`
+/// is unavailable in this offline build).
+#[derive(Debug)]
 pub enum Error {
-    #[error("invalid argument: {0}")]
     InvalidArg(String),
-    #[error("numerical failure: {0}")]
     Numerical(String),
-    #[error("memory budget exceeded: need {need} bytes, budget {budget} bytes ({what})")]
     MemoryBudget { need: u64, budget: u64, what: String },
-    #[error("runtime: {0}")]
     Runtime(String),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("xla: {0}")]
+    Io(std::io::Error),
     Xla(String),
-    #[error("config: {0}")]
     Config(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::InvalidArg(m) => write!(f, "invalid argument: {m}"),
+            Error::Numerical(m) => write!(f, "numerical failure: {m}"),
+            Error::MemoryBudget { need, budget, what } => write!(
+                f,
+                "memory budget exceeded: need {need} bytes, budget {budget} bytes ({what})"
+            ),
+            Error::Runtime(m) => write!(f, "runtime: {m}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Xla(m) => write!(f, "xla: {m}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {

@@ -1,8 +1,299 @@
 //! Row-major dense matrices: `Mat` (f32, data-scale) and `DMat` (f64,
 //! eigen-scale) plus the blocked, threaded kernels the clustering hot
 //! paths need (gemm with transposed RHS, row norms, pairwise distances).
+//!
+//! # The packed distance microkernel
+//!
+//! `matmul_nt` / `sq_dists` run on a cache-blocked, register-tiled
+//! microkernel: the RHS (representatives / centers) is packed once into
+//! [`NR`]-wide column panels ([`PackedMat`]) laid out so the innermost
+//! loop reads one contiguous `NR`-vector per feature step, and each
+//! [`MR`]×[`NR`] output tile is accumulated in registers across the full
+//! feature dimension (f32 ops shaped so LLVM emits FMA/SIMD). The squared
+//! distance `‖x‖² + ‖c‖² − 2·x·c` is fused into the tile epilogue — the
+//! gemm block never makes a second memory pass.
+//!
+//! Batched callers (`exact_knr`, `nearest_row_batched`, k-means assign)
+//! should pack the RHS **once** via [`Mat::pack_rhs`] and feed batches
+//! through [`sq_dists_into`] / [`nearest_packed`], which also lets them
+//! reuse output buffers across batches (zero allocation per batch).
+//!
+//! The full packed RHS is held in cache across a row tile
+//! (`rows·cols·4` bytes — ≤ ~0.4 MB at the paper's p=1000, d≤100 shapes,
+//! comfortably L2-resident). Shapes far beyond that would want an extra
+//! column-blocking level, which the paper's pipeline never produces.
 
 use crate::util::par;
+
+/// Microkernel tile height (rows of the LHS per register tile).
+pub const MR: usize = 4;
+/// Microkernel tile width (packed RHS panel width).
+pub const NR: usize = 8;
+
+/// Output rows processed per parallel work item in the gemm drivers.
+const ROWS_PER_CHUNK: usize = 16;
+
+/// RHS matrix packed into `NR`-wide panels for the distance microkernel.
+///
+/// Panel `q` covers RHS rows `q·NR .. q·NR+NR` (zero-padded past the end)
+/// and stores them feature-major: element `[t·NR + r]` is RHS row
+/// `q·NR + r`, feature `t`. Row squared norms ride along so the fused
+/// squared-distance epilogue needs no extra lookups.
+#[derive(Debug, Clone)]
+pub struct PackedMat {
+    /// Logical RHS rows (output columns of `A·Bᵀ`).
+    pub rows: usize,
+    /// Feature dimension.
+    pub cols: usize,
+    panels: Vec<f32>,
+    sqnorms: Vec<f32>,
+}
+
+impl PackedMat {
+    /// Row squared norms of the packed matrix.
+    pub fn sqnorms(&self) -> &[f32] {
+        &self.sqnorms
+    }
+}
+
+/// Pack `rows`×`cols` row-major `data` into NR-wide panels (see
+/// [`PackedMat`]).
+pub fn pack_rhs_slice(data: &[f32], rows: usize, cols: usize) -> PackedMat {
+    debug_assert_eq!(data.len(), rows * cols);
+    let npanels = rows.div_ceil(NR).max(1);
+    let mut panels = vec![0f32; npanels * cols * NR];
+    let mut sqnorms = vec![0f32; rows];
+    for q in 0..npanels {
+        let panel = &mut panels[q * cols * NR..(q + 1) * cols * NR];
+        let base = q * NR;
+        let live = NR.min(rows.saturating_sub(base));
+        for r in 0..live {
+            let row = &data[(base + r) * cols..(base + r + 1) * cols];
+            let mut s = 0.0f32;
+            for (t, &v) in row.iter().enumerate() {
+                panel[t * NR + r] = v;
+                s += v * v;
+            }
+            sqnorms[base + r] = s;
+        }
+    }
+    PackedMat { rows, cols, panels, sqnorms }
+}
+
+/// `MR`-row register tile: dot products of four LHS rows against one
+/// packed panel. The per-feature loop reads one contiguous `NR`-vector of
+/// the panel and broadcasts four LHS scalars — the shape LLVM turns into
+/// FMA/SIMD.
+#[inline(always)]
+fn tile_4xnr(a0: &[f32], a1: &[f32], a2: &[f32], a3: &[f32], panel: &[f32]) -> [[f32; NR]; MR] {
+    let mut acc = [[0f32; NR]; MR];
+    for ((((pb, &x0), &x1), &x2), &x3) in
+        panel.chunks_exact(NR).zip(a0).zip(a1).zip(a2).zip(a3)
+    {
+        for c in 0..NR {
+            acc[0][c] += x0 * pb[c];
+            acc[1][c] += x1 * pb[c];
+            acc[2][c] += x2 * pb[c];
+            acc[3][c] += x3 * pb[c];
+        }
+    }
+    acc
+}
+
+/// Single-row tail tile.
+#[inline(always)]
+fn tile_1xnr(a: &[f32], panel: &[f32]) -> [f32; NR] {
+    let mut acc = [0f32; NR];
+    for (pb, &x) in panel.chunks_exact(NR).zip(a) {
+        for c in 0..NR {
+            acc[c] += x * pb[c];
+        }
+    }
+    acc
+}
+
+/// Blocked, threaded `A·Bᵀ` against a packed RHS, writing into `out`
+/// (`m`×`packed.rows` row-major). With `FUSE`, the epilogue rewrites each
+/// tile as clamped squared distances using `xn` (LHS row squared norms)
+/// and the packed row norms.
+fn gemm_nt_packed_into<const FUSE: bool>(
+    a: &[f32],
+    m: usize,
+    d: usize,
+    packed: &PackedMat,
+    xn: &[f32],
+    out: &mut [f32],
+) {
+    let n = packed.rows;
+    debug_assert_eq!(packed.cols, d);
+    debug_assert_eq!(a.len(), m * d);
+    debug_assert_eq!(out.len(), m * n);
+    if FUSE {
+        debug_assert_eq!(xn.len(), m);
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    let npanels = n.div_ceil(NR).max(1);
+    let cn = &packed.sqnorms;
+    par::par_for_chunks(out, n * ROWS_PER_CHUNK, |start, chunk| {
+        let row0 = start / n;
+        let nrows = chunk.len() / n;
+        let mut r = 0;
+        // MR-row register tiles over the band.
+        while r + MR <= nrows {
+            let i0 = row0 + r;
+            let a0 = &a[i0 * d..(i0 + 1) * d];
+            let a1 = &a[(i0 + 1) * d..(i0 + 2) * d];
+            let a2 = &a[(i0 + 2) * d..(i0 + 3) * d];
+            let a3 = &a[(i0 + 3) * d..(i0 + 4) * d];
+            for q in 0..npanels {
+                let panel = &packed.panels[q * d * NR..(q + 1) * d * NR];
+                let acc = tile_4xnr(a0, a1, a2, a3, panel);
+                let jb = q * NR;
+                let cr = NR.min(n - jb);
+                for (rr, accr) in acc.iter().enumerate() {
+                    let orow = &mut chunk[(r + rr) * n + jb..(r + rr) * n + jb + cr];
+                    if FUSE {
+                        let x = xn[i0 + rr];
+                        for (c, o) in orow.iter_mut().enumerate() {
+                            *o = (x + cn[jb + c] - 2.0 * accr[c]).max(0.0);
+                        }
+                    } else {
+                        orow.copy_from_slice(&accr[..cr]);
+                    }
+                }
+            }
+            r += MR;
+        }
+        // Tail rows.
+        while r < nrows {
+            let i0 = row0 + r;
+            let arow = &a[i0 * d..(i0 + 1) * d];
+            for q in 0..npanels {
+                let panel = &packed.panels[q * d * NR..(q + 1) * d * NR];
+                let acc = tile_1xnr(arow, panel);
+                let jb = q * NR;
+                let cr = NR.min(n - jb);
+                let orow = &mut chunk[r * n + jb..r * n + jb + cr];
+                if FUSE {
+                    let x = xn[i0];
+                    for (c, o) in orow.iter_mut().enumerate() {
+                        *o = (x + cn[jb + c] - 2.0 * acc[c]).max(0.0);
+                    }
+                } else {
+                    orow.copy_from_slice(&acc[..cr]);
+                }
+            }
+            r += 1;
+        }
+    });
+}
+
+/// Reusable scratch for batched packed-distance calls — holds the LHS row
+/// norms so per-batch calls allocate nothing once warm.
+#[derive(Debug, Default)]
+pub struct DistScratch {
+    xn: Vec<f32>,
+}
+
+/// Squared distances of `rows` row-major LHS rows (`x`, length
+/// `rows·packed.cols`) against a pre-packed RHS, written into `out`
+/// (resized to `rows·packed.rows`). Batched callers keep `packed`,
+/// `scratch` and `out` across batches so the steady state is
+/// allocation-free and never re-touches cold RHS memory.
+pub fn sq_dists_into(
+    x: &[f32],
+    rows: usize,
+    packed: &PackedMat,
+    scratch: &mut DistScratch,
+    out: &mut Vec<f32>,
+) {
+    let d = packed.cols;
+    debug_assert_eq!(x.len(), rows * d);
+    scratch.xn.clear();
+    scratch.xn.extend((0..rows).map(|i| {
+        x[i * d..(i + 1) * d].iter().map(|&v| v * v).sum::<f32>()
+    }));
+    // Every element is overwritten by the kernel; only grow/shrink when the
+    // shape actually changed so warm batches skip the memset.
+    if out.len() != rows * packed.rows {
+        out.clear();
+        out.resize(rows * packed.rows, 0.0);
+    }
+    gemm_nt_packed_into::<true>(x, rows, d, packed, &scratch.xn, out);
+}
+
+/// Fused nearest-row search against a packed RHS: per LHS row, the argmin
+/// index and min squared distance — the distance block itself is never
+/// materialized. Ties resolve to the lowest index (same contract as a
+/// forward scan over `sq_dists`).
+pub fn nearest_packed(x: &Mat, packed: &PackedMat) -> (Vec<u32>, Vec<f32>) {
+    let m = x.rows;
+    let d = x.cols;
+    let n = packed.rows;
+    assert_eq!(d, packed.cols, "nearest_packed dim mismatch");
+    assert!(n >= 1, "nearest_packed: empty RHS");
+    let xn = x.row_sqnorms();
+    let npanels = n.div_ceil(NR).max(1);
+    let cn = &packed.sqnorms;
+    let a = &x.data;
+    let mut best: Vec<(u32, f32)> = vec![(0, f32::INFINITY); m];
+    par::par_for_chunks(&mut best, ROWS_PER_CHUNK * MR, |start, chunk| {
+        let mut r = 0;
+        while r + MR <= chunk.len() {
+            let i0 = start + r;
+            let a0 = &a[i0 * d..(i0 + 1) * d];
+            let a1 = &a[(i0 + 1) * d..(i0 + 2) * d];
+            let a2 = &a[(i0 + 2) * d..(i0 + 3) * d];
+            let a3 = &a[(i0 + 3) * d..(i0 + 4) * d];
+            let mut bests = [(0u32, f32::INFINITY); MR];
+            for q in 0..npanels {
+                let panel = &packed.panels[q * d * NR..(q + 1) * d * NR];
+                let acc = tile_4xnr(a0, a1, a2, a3, panel);
+                let jb = q * NR;
+                let cr = NR.min(n - jb);
+                for (rr, accr) in acc.iter().enumerate() {
+                    let xv = xn[i0 + rr];
+                    for c in 0..cr {
+                        let v = (xv + cn[jb + c] - 2.0 * accr[c]).max(0.0);
+                        if v < bests[rr].1 {
+                            bests[rr] = ((jb + c) as u32, v);
+                        }
+                    }
+                }
+            }
+            chunk[r..r + MR].copy_from_slice(&bests);
+            r += MR;
+        }
+        while r < chunk.len() {
+            let i0 = start + r;
+            let arow = &a[i0 * d..(i0 + 1) * d];
+            let mut bi = (0u32, f32::INFINITY);
+            for q in 0..npanels {
+                let panel = &packed.panels[q * d * NR..(q + 1) * d * NR];
+                let acc = tile_1xnr(arow, panel);
+                let jb = q * NR;
+                let cr = NR.min(n - jb);
+                for c in 0..cr {
+                    let v = (xn[i0] + cn[jb + c] - 2.0 * acc[c]).max(0.0);
+                    if v < bi.1 {
+                        bi = ((jb + c) as u32, v);
+                    }
+                }
+            }
+            chunk[r] = bi;
+            r += 1;
+        }
+    });
+    let mut labels = Vec::with_capacity(m);
+    let mut dists = Vec::with_capacity(m);
+    for (l, v) in best {
+        labels.push(l);
+        dists.push(v);
+    }
+    (labels, dists)
+}
 
 /// f32 row-major matrix. The workhorse container for datasets,
 /// representatives, eigenvector embeddings.
@@ -59,72 +350,45 @@ impl Mat {
         })
     }
 
-    /// `self · otherᵀ` (m×d · (n×d)ᵀ = m×n), blocked and threaded. The RHS
-    /// is given row-major with rows as the *output columns*, which is the
-    /// natural layout for pairwise-distance style products (both operands
-    /// are collections of d-vectors) and is unit-stride in the inner loop.
+    /// Pack this matrix as the RHS of the distance microkernel (see
+    /// [`PackedMat`]). Batched callers pack once and reuse across batches.
+    pub fn pack_rhs(&self) -> PackedMat {
+        pack_rhs_slice(&self.data, self.rows, self.cols)
+    }
+
+    /// `self · otherᵀ` (m×d · (n×d)ᵀ = m×n) on the packed register-tiled
+    /// microkernel. The RHS is given row-major with rows as the *output
+    /// columns*, the natural layout for pairwise-distance style products.
     pub fn matmul_nt(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.cols, "matmul_nt inner dim mismatch");
-        let m = self.rows;
-        let n = other.rows;
-        let d = self.cols;
-        let mut out = Mat::zeros(m, n);
-        // Each thread owns a contiguous band of output rows.
-        par::par_for_chunks(&mut out.data, n * 64.max(1), |start, chunk| {
-            let row0 = start / n;
-            let nrows = chunk.len() / n;
-            for bi in 0..nrows {
-                let i = row0 + bi;
-                let a = self.row(i);
-                let orow = &mut chunk[bi * n..(bi + 1) * n];
-                // 4-way j-unrolled dot products; LLVM vectorizes the d loop.
-                let mut j = 0;
-                while j + 4 <= n {
-                    let (b0, b1, b2, b3) =
-                        (other.row(j), other.row(j + 1), other.row(j + 2), other.row(j + 3));
-                    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
-                    for t in 0..d {
-                        let av = a[t];
-                        s0 += av * b0[t];
-                        s1 += av * b1[t];
-                        s2 += av * b2[t];
-                        s3 += av * b3[t];
-                    }
-                    orow[j] = s0;
-                    orow[j + 1] = s1;
-                    orow[j + 2] = s2;
-                    orow[j + 3] = s3;
-                    j += 4;
-                }
-                while j < n {
-                    let b = other.row(j);
-                    let mut s = 0.0f32;
-                    for t in 0..d {
-                        s += a[t] * b[t];
-                    }
-                    orow[j] = s;
-                    j += 1;
-                }
-            }
-        });
+        let packed = other.pack_rhs();
+        self.matmul_nt_packed(&packed)
+    }
+
+    /// `self · packedᵀ` against an already-packed RHS.
+    pub fn matmul_nt_packed(&self, packed: &PackedMat) -> Mat {
+        assert_eq!(self.cols, packed.cols, "matmul_nt inner dim mismatch");
+        let mut out = Mat::zeros(self.rows, packed.rows);
+        gemm_nt_packed_into::<false>(&self.data, self.rows, self.cols, packed, &[], &mut out.data);
         out
     }
 
     /// Pairwise squared Euclidean distances `‖xᵢ − cⱼ‖²` (m×n), computed as
     /// ‖x‖² + ‖c‖² − 2·x·cᵀ — the same formulation the L1 Pallas kernel
-    /// uses. Negative values from cancellation are clamped to 0.
+    /// uses, fused into the gemm tile epilogue (no second memory pass).
+    /// Negative values from cancellation are clamped to 0.
     pub fn sq_dists(&self, centers: &Mat) -> Mat {
+        let packed = centers.pack_rhs();
+        self.sq_dists_packed(&packed)
+    }
+
+    /// [`Mat::sq_dists`] against an already-packed RHS.
+    pub fn sq_dists_packed(&self, packed: &PackedMat) -> Mat {
+        assert_eq!(self.cols, packed.cols, "sq_dists dim mismatch");
         let xn = self.row_sqnorms();
-        let cn = centers.row_sqnorms();
-        let mut g = self.matmul_nt(centers);
-        let n = centers.rows;
-        par::par_for_chunks(&mut g.data, n, |start, chunk| {
-            let i = start / n;
-            for (j, v) in chunk.iter_mut().enumerate() {
-                *v = (xn[i] + cn[j] - 2.0 * *v).max(0.0);
-            }
-        });
-        g
+        let mut out = Mat::zeros(self.rows, packed.rows);
+        gemm_nt_packed_into::<true>(&self.data, self.rows, self.cols, packed, &xn, &mut out.data);
+        out
     }
 
     /// Convert to f64.
@@ -312,6 +576,95 @@ mod tests {
         let g = a.gram();
         let want = a.transpose().matmul(&a);
         assert!(g.frob_dist(&want) < 1e-12);
+    }
+
+    #[test]
+    fn packed_matches_unpacked_at_awkward_shapes() {
+        // shapes straddling the MR/NR tile boundaries, including d=0-free
+        // tiny cases and single-row/column extremes
+        let mut rng = Rng::new(21);
+        for &(m, n, d) in &[
+            (1usize, 1usize, 1usize),
+            (3, 7, 5),
+            (4, 8, 16),
+            (5, 9, 3),
+            (16, 33, 10),
+            (65, 100, 100),
+            (130, 17, 1),
+        ] {
+            let a = randmat(m, d, &mut rng);
+            let b = randmat(n, d, &mut rng);
+            let packed = b.pack_rhs();
+            assert_eq!(packed.rows, n);
+            assert_eq!(packed.cols, d);
+            // packed sqnorms match direct
+            for (j, &s) in packed.sqnorms().iter().enumerate() {
+                let want: f32 = b.row(j).iter().map(|&v| v * v).sum();
+                assert!((s - want).abs() <= 1e-4 * want.abs().max(1.0));
+            }
+            let g = a.matmul_nt_packed(&packed);
+            let d2 = a.sq_dists_packed(&packed);
+            for i in 0..m {
+                for j in 0..n {
+                    let want: f32 = (0..d).map(|t| a.at(i, t) * b.at(j, t)).sum();
+                    assert!((g.at(i, j) - want).abs() < 1e-3, "gemm ({i},{j}) m={m} n={n} d={d}");
+                    let wd: f32 = (0..d)
+                        .map(|t| {
+                            let diff = a.at(i, t) - b.at(j, t);
+                            diff * diff
+                        })
+                        .sum();
+                    assert!(
+                        (d2.at(i, j) - wd).abs() < 1e-3,
+                        "sqd ({i},{j}) m={m} n={n} d={d}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sq_dists_into_reuses_buffers() {
+        let mut rng = Rng::new(22);
+        let x = randmat(37, 9, &mut rng);
+        let c = randmat(11, 9, &mut rng);
+        let packed = c.pack_rhs();
+        let mut scratch = DistScratch::default();
+        let mut out = Vec::new();
+        // two batches through the same scratch/out
+        for (lo, hi) in [(0usize, 20usize), (20, 37)] {
+            sq_dists_into(&x.data[lo * 9..hi * 9], hi - lo, &packed, &mut scratch, &mut out);
+            assert_eq!(out.len(), (hi - lo) * 11);
+            let full = x.sq_dists(&c);
+            for bi in 0..hi - lo {
+                for j in 0..11 {
+                    assert!((out[bi * 11 + j] - full.at(lo + bi, j)).abs() < 1e-5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nearest_packed_matches_scan() {
+        let mut rng = Rng::new(23);
+        for &(m, n, d) in &[(1usize, 1usize, 2usize), (9, 5, 3), (70, 23, 12), (128, 8, 4)] {
+            let x = randmat(m, d, &mut rng);
+            let c = randmat(n, d, &mut rng);
+            let packed = c.pack_rhs();
+            let (labels, dists) = nearest_packed(&x, &packed);
+            let d2 = x.sq_dists(&c);
+            for i in 0..m {
+                let row = d2.row(i);
+                let mut best = 0usize;
+                for (j, &v) in row.iter().enumerate().skip(1) {
+                    if v < row[best] {
+                        best = j;
+                    }
+                }
+                assert_eq!(labels[i] as usize, best, "row {i} m={m} n={n} d={d}");
+                assert!((dists[i] - row[best]).abs() < 1e-6);
+            }
+        }
     }
 
     #[test]

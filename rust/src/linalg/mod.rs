@@ -10,5 +10,7 @@ pub mod sparse;
 pub mod eigen;
 pub mod lobpcg;
 
-pub use dense::{DMat, Mat};
+pub use dense::{
+    nearest_packed, pack_rhs_slice, sq_dists_into, DMat, DistScratch, Mat, PackedMat,
+};
 pub use sparse::Csr;

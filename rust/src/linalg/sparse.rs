@@ -88,39 +88,56 @@ impl Csr {
     }
 
     /// The transfer-cut core product `E = Bᵀ · diag(w) · B` (cols×cols,
-    /// dense output). Parallelized over row blocks with thread-local
-    /// accumulators; cost O(nnz · K) = O(N·K²) for uniform degree K.
+    /// dense output). Parallelized over *output* rows through a transient
+    /// column index, so each E row is accumulated by exactly one worker in
+    /// ascending input-row order — the result is bit-identical for every
+    /// thread count (the old row-block-partial scheme folded partials in a
+    /// thread-count-dependent grouping). Cost O(nnz · K) = O(N·K²) for
+    /// uniform degree K, plus one O(nnz) transpose pass.
     pub fn tdb(&self, w: &[f64]) -> DMat {
         assert_eq!(w.len(), self.rows);
         let p = self.cols;
-        let nt = par::num_threads();
-        let chunk = self.rows.div_ceil(nt).max(1);
-        let partials: Vec<DMat> = par::par_map(nt, |t| {
-            let lo = t * chunk;
-            let hi = ((t + 1) * chunk).min(self.rows);
-            let mut acc = DMat::zeros(p, p);
-            for i in lo..hi {
-                let (cols, vals) = self.row(i);
-                let wi = w[i];
-                if wi == 0.0 {
-                    continue;
-                }
-                for (a, &ca) in cols.iter().enumerate() {
-                    let va = vals[a] * wi;
-                    let arow = &mut acc.data[ca as usize * p..(ca as usize + 1) * p];
-                    for (b, &cb) in cols.iter().enumerate() {
-                        arow[cb as usize] += va * vals[b];
-                    }
-                }
-            }
-            acc
-        });
-        let mut e = DMat::zeros(p, p);
-        for part in partials {
-            for (o, v) in e.data.iter_mut().zip(part.data) {
-                *o += v;
+        let nnz = self.nnz();
+        // CSC-style column index: for column c, the (row, value) pairs of
+        // its non-zeros, rows ascending (built by a row-major sweep).
+        let mut col_ptr = vec![0usize; p + 1];
+        for &c in &self.indices {
+            col_ptr[c as usize + 1] += 1;
+        }
+        for j in 0..p {
+            col_ptr[j + 1] += col_ptr[j];
+        }
+        // 8 bytes/nnz transient (row id + flat nnz offset); the value
+        // itself is re-read from `self.values` so it is not duplicated.
+        assert!(nnz <= u32::MAX as usize, "tdb: nnz exceeds u32 index space");
+        let mut col_rows = vec![0u32; nnz];
+        let mut col_pos = vec![0u32; nnz];
+        let mut cursor = col_ptr.clone();
+        for i in 0..self.rows {
+            let lo = self.indptr[i];
+            for (off, c) in self.indices[lo..self.indptr[i + 1]].iter().enumerate() {
+                let dst = cursor[*c as usize];
+                col_rows[dst] = i as u32;
+                col_pos[dst] = (lo + off) as u32;
+                cursor[*c as usize] += 1;
             }
         }
+        let mut e = DMat::zeros(p, p);
+        par::par_for_chunks(&mut e.data, p, |start, chunk| {
+            let ca = start / p;
+            // E[ca, cb] = Σ_i w[i] · B[i,ca] · B[i,cb]
+            for idx in col_ptr[ca]..col_ptr[ca + 1] {
+                let i = col_rows[idx] as usize;
+                let va = self.values[col_pos[idx] as usize] * w[i];
+                if va == 0.0 {
+                    continue;
+                }
+                let (cols, vals) = self.row(i);
+                for (cb, vb) in cols.iter().zip(vals) {
+                    chunk[*cb as usize] += va * vb;
+                }
+            }
+        });
         e
     }
 

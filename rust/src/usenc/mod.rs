@@ -17,6 +17,7 @@ use crate::bipartite::{transfer_cut, EigSolver};
 use crate::kmeans::{kmeans, KmeansParams};
 use crate::linalg::{Csr, Mat};
 use crate::uspec::{uspec_with_backend, UspecParams};
+use crate::util::par;
 use crate::util::rng::Rng;
 use crate::util::timer::PhaseTimer;
 use crate::{ensure_arg, Result};
@@ -58,7 +59,10 @@ impl Ensemble {
     }
 
     /// The object×cluster incidence matrix B̃ (N×k_c, one 1 per base
-    /// clustering per row — Eq. 18–19).
+    /// clustering per row — Eq. 18–19). The N×m column array is filled
+    /// pool-parallel over row bands from a single `ks()` resolution (the
+    /// cluster-count scan is O(N·m) itself, so recomputing it per use was
+    /// measurable at ensemble scale).
     pub fn incidence(&self) -> Csr {
         let n = self.n();
         let m = self.m();
@@ -73,11 +77,17 @@ impl Ensemble {
         }
         let mut cols = vec![0u32; n * m];
         let vals = vec![1.0f64; n * m];
-        for i in 0..n {
-            for (b, labeling) in self.labelings.iter().enumerate() {
-                cols[i * m + b] = (offsets[b] + labeling[i] as usize) as u32;
+        par::par_for_chunks(&mut cols, m * 1024, |start, chunk| {
+            let row0 = start / m;
+            let rows = chunk.len() / m;
+            for r in 0..rows {
+                let i = row0 + r;
+                let orow = &mut chunk[r * m..(r + 1) * m];
+                for (b, v) in orow.iter_mut().enumerate() {
+                    *v = (offsets[b] + self.labelings[b][i] as usize) as u32;
+                }
             }
-        }
+        });
         Csr::from_uniform(n, kc, m, cols, vals)
     }
 }

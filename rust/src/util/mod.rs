@@ -49,6 +49,35 @@ pub fn argmin_k(keys: &[f64], k: usize) -> Vec<usize> {
     idx
 }
 
+/// Allocation-free [`argmin_k`] over `f32` keys: fills `out` with the
+/// indices of the `min(k, keys.len())` smallest keys, ascending by key.
+/// `scratch` is the working index buffer; both vectors are cleared and
+/// their capacity reused, so a caller looping over rows allocates nothing
+/// once warm. This is the KNR per-row hot path — it skips both the
+/// per-call `Vec` of [`argmin_k`] and the f32→f64 key round-trip.
+pub fn argmin_k_into(keys: &[f32], k: usize, scratch: &mut Vec<u32>, out: &mut Vec<u32>) {
+    let n = keys.len();
+    let k = k.min(n);
+    out.clear();
+    if k == 0 {
+        return;
+    }
+    scratch.clear();
+    scratch.extend(0..n as u32);
+    if k < n {
+        scratch.select_nth_unstable_by(k - 1, |&a, &b| {
+            keys[a as usize]
+                .partial_cmp(&keys[b as usize])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        scratch.truncate(k);
+    }
+    scratch.sort_by(|&a, &b| {
+        keys[a as usize].partial_cmp(&keys[b as usize]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    out.extend_from_slice(scratch);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -74,5 +103,26 @@ mod tests {
         assert_eq!(argmin_k(&keys, 3), vec![5, 1, 3]);
         assert_eq!(argmin_k(&keys, 0), Vec::<usize>::new());
         assert_eq!(argmin_k(&keys, 99), argsort_by_f64(&keys));
+    }
+
+    #[test]
+    fn argmin_k_into_matches_argmin_k() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let mut scratch = Vec::new();
+        let mut out = Vec::new();
+        for _ in 0..50 {
+            let n = 1 + rng.usize(40);
+            let keys32: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            let keys64: Vec<f64> = keys32.iter().map(|&v| v as f64).collect();
+            for k in [0usize, 1, 3, n / 2, n, n + 7] {
+                argmin_k_into(&keys32, k, &mut scratch, &mut out);
+                let want = argmin_k(&keys64, k);
+                assert_eq!(
+                    out.iter().map(|&v| v as usize).collect::<Vec<_>>(),
+                    want,
+                    "n={n} k={k}"
+                );
+            }
+        }
     }
 }

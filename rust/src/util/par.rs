@@ -1,16 +1,76 @@
-//! Scoped data parallelism over std threads (rayon replacement).
+//! Persistent data-parallel runtime (rayon replacement).
 //!
-//! `par_map` / `par_for_chunks` split an index range into contiguous chunks
-//! and run them on `num_threads()` scoped threads. Work is CPU-bound and
-//! chunk costs are near-uniform in this crate, so static partitioning is
-//! within noise of work stealing while being far simpler and allocation
-//! free on the dispatch path.
+//! # Why persistent
+//!
+//! The hot paths dispatch *many small* parallel regions: several per KNR
+//! batch inside [`crate::affinity::knr::KnrIndex::approx_knr`], one per
+//! k-means iteration, one per Lanczos matvec. The original implementation
+//! spawned and joined fresh OS threads on every call, which put tens of
+//! microseconds of `clone(2)`/join latency on every region — more than the
+//! region's useful work at batch sizes the paper's "batch processing
+//! manner" (§3.1.4) prescribes. This module instead keeps one lazily
+//! initialized pool of parked workers alive for the process lifetime; a
+//! parallel region is now one mutex push + condvar broadcast, and work is
+//! claimed from an atomic-cursor chunk queue (dynamic load balancing for
+//! ragged tails at no extra allocation).
+//!
+//! # Execution model
+//!
+//! * A region is split into `chunks` (≈ 4 per thread); each chunk is
+//!   claimed by `fetch_add` on the job's cursor.
+//! * The dispatching thread always participates, so progress never depends
+//!   on the workers (concurrent top-level dispatches share one broadcast
+//!   slot; late dispatches may receive less help but always complete).
+//! * **Nesting**: a parallel call from inside a parallel region runs
+//!   inline (sequentially) on the calling thread. This keeps nested
+//!   `par_map`/`par_for_chunks` deadlock-free and means callers never need
+//!   to care whether they are already on a pool thread.
+//! * **Panics** in a task are caught per chunk, the region completes, and
+//!   the dispatcher re-raises a `"par: parallel task panicked"` panic.
+//!
+//! # Determinism
+//!
+//! All three primitives produce results that are *bit-identical for any
+//! thread count* (including 1): `par_map` and `par_for_chunks` write
+//! disjoint index ranges, and `par_reduce` folds a fixed bucket partition
+//! (a function of `n` only — never of the thread count). This is what lets
+//! `uspec`/`usenc` promise fixed-seed reproducibility regardless of
+//! `USPEC_THREADS`. `par_reduce` requires `combine(identity, x) == x`.
+//!
+//! # Env knobs
+//!
+//! * `USPEC_THREADS` — worker budget (default: available parallelism).
+//!   Read once; the pool spawns `USPEC_THREADS − 1` workers on first use.
+//! * [`set_thread_override`] — runtime override for tests/benches; caps
+//!   how many threads may enter a region but never changes results.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicIsize, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Chunks per participating thread: enough slack for dynamic balancing of
+/// ragged workloads without shrinking chunks into dispatch noise.
+const OVERSUB: usize = 4;
+
+/// Fixed upper bound on `par_reduce` buckets (partition depends on `n`
+/// only, keeping reductions independent of the thread count).
+const REDUCE_BUCKETS: usize = 256;
+
+static OVERRIDE: AtomicUsize = AtomicUsize::new(0);
 
 /// Number of worker threads to use (env `USPEC_THREADS` overrides; defaults
-/// to available parallelism).
+/// to available parallelism). An active [`set_thread_override`] wins.
 pub fn num_threads() -> usize {
+    let o = OVERRIDE.load(Ordering::Relaxed);
+    if o != 0 {
+        return o;
+    }
+    configured_threads()
+}
+
+/// The env/hardware thread budget (ignores [`set_thread_override`]); also
+/// the size the pool is built with on first use.
+fn configured_threads() -> usize {
     static CACHED: AtomicUsize = AtomicUsize::new(0);
     let c = CACHED.load(Ordering::Relaxed);
     if c != 0 {
@@ -27,26 +87,249 @@ pub fn num_threads() -> usize {
     n
 }
 
+/// Override the thread count at runtime (`0` clears the override, falling
+/// back to `USPEC_THREADS`/hardware). Intended for tests and benches that
+/// compare thread counts inside one process. The override caps how many
+/// threads may enter a parallel region; it cannot grow the pool beyond the
+/// worker count spawned on first use. Results are unaffected either way —
+/// see the module docs on determinism.
+pub fn set_thread_override(n: usize) {
+    OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+thread_local! {
+    /// True while this thread is executing inside a parallel region —
+    /// nested parallel calls then run inline.
+    static IN_REGION: Cell<bool> = Cell::new(false);
+}
+
+fn in_region() -> bool {
+    IN_REGION.with(|f| f.get())
+}
+
+/// RAII flag toggle so the dispatcher restores its state even if a chunk
+/// panic propagates in a way we did not anticipate.
+struct RegionGuard(bool);
+
+impl RegionGuard {
+    fn enter() -> RegionGuard {
+        let prev = IN_REGION.with(|f| f.replace(true));
+        RegionGuard(prev)
+    }
+}
+
+impl Drop for RegionGuard {
+    fn drop(&mut self) {
+        let prev = self.0;
+        IN_REGION.with(|f| f.set(prev));
+    }
+}
+
+/// One parallel region. `task` is the caller's closure with its lifetime
+/// erased; it is only ever dereferenced for a successfully claimed chunk
+/// (`cursor` < `nchunks`), which can only happen while the dispatching
+/// caller is still blocked inside [`dispatch`] — so the borrow is live.
+struct Job {
+    task: *const (dyn Fn(usize) + Sync),
+    nchunks: usize,
+    cursor: AtomicUsize,
+    done: AtomicUsize,
+    /// Remaining worker-entry budget (enforces the thread cap).
+    helpers: AtomicIsize,
+    panicked: AtomicBool,
+    done_mx: Mutex<()>,
+    done_cv: Condvar,
+}
+
+// SAFETY: the raw task pointer is only dereferenced under the claimed-chunk
+// protocol described on `Job`; all other fields are Sync primitives.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+struct PoolState {
+    job: Option<Arc<Job>>,
+    epoch: u64,
+}
+
+struct Pool {
+    state: Mutex<PoolState>,
+    wake: Condvar,
+}
+
+static POOL: OnceLock<&'static Pool> = OnceLock::new();
+
+/// Total parallel regions dispatched through the pool (perf counter for
+/// the micro benches).
+static DISPATCHES: AtomicUsize = AtomicUsize::new(0);
+
+/// Number of parallel regions dispatched to the pool so far.
+pub fn pool_dispatch_count() -> usize {
+    DISPATCHES.load(Ordering::Relaxed)
+}
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        let p: &'static Pool = Box::leak(Box::new(Pool {
+            state: Mutex::new(PoolState { job: None, epoch: 0 }),
+            wake: Condvar::new(),
+        }));
+        let workers = configured_threads().saturating_sub(1);
+        for w in 0..workers {
+            std::thread::Builder::new()
+                .name(format!("uspec-par-{w}"))
+                .spawn(move || worker_loop(p))
+                .expect("par: failed to spawn pool worker");
+        }
+        p
+    })
+}
+
+fn worker_loop(pool: &'static Pool) {
+    // Everything a worker runs is already inside a region: nested parallel
+    // calls from tasks must execute inline.
+    IN_REGION.with(|f| f.set(true));
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = pool.state.lock().unwrap();
+            loop {
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    break st.job.clone();
+                }
+                st = pool.wake.wait(st).unwrap();
+            }
+        };
+        if let Some(job) = job {
+            if job.helpers.fetch_sub(1, Ordering::Relaxed) > 0 {
+                run_chunks(&job);
+            }
+        }
+    }
+}
+
+/// Claim and execute chunks until the cursor is exhausted.
+fn run_chunks(job: &Job) {
+    loop {
+        let i = job.cursor.fetch_add(1, Ordering::Relaxed);
+        if i >= job.nchunks {
+            return;
+        }
+        // SAFETY: chunk `i` was claimed, so the dispatcher is still blocked
+        // waiting for it — the closure behind `task` is alive.
+        let task = unsafe { &*job.task };
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task(i))).is_err() {
+            job.panicked.store(true, Ordering::Relaxed);
+        }
+        // AcqRel: publishes this chunk's writes to the dispatcher's final
+        // Acquire load of `done`.
+        let done = job.done.fetch_add(1, Ordering::AcqRel) + 1;
+        if done == job.nchunks {
+            let _g = job.done_mx.lock().unwrap();
+            job.done_cv.notify_all();
+        }
+    }
+}
+
+/// Run `task(chunk_id)` for every `chunk_id in 0..nchunks` across the pool,
+/// participating from the calling thread. Blocks until all chunks finished.
+fn dispatch(nchunks: usize, nt: usize, task: &(dyn Fn(usize) + Sync)) {
+    debug_assert!(nchunks >= 1 && nt >= 2);
+    // Erase the caller's lifetime; see `Job` for the validity argument.
+    let task: *const (dyn Fn(usize) + Sync) = unsafe {
+        std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(task)
+    };
+    let job = Arc::new(Job {
+        task,
+        nchunks,
+        cursor: AtomicUsize::new(0),
+        done: AtomicUsize::new(0),
+        helpers: AtomicIsize::new(nt as isize - 1),
+        panicked: AtomicBool::new(false),
+        done_mx: Mutex::new(()),
+        done_cv: Condvar::new(),
+    });
+    DISPATCHES.fetch_add(1, Ordering::Relaxed);
+    let pl = pool();
+    {
+        let mut st = pl.state.lock().unwrap();
+        st.job = Some(job.clone());
+        st.epoch = st.epoch.wrapping_add(1);
+        pl.wake.notify_all();
+    }
+    // Participate; nested calls made by `task` on this thread run inline.
+    {
+        let _guard = RegionGuard::enter();
+        run_chunks(&job);
+    }
+    // Wait for straggler chunks still running on workers.
+    {
+        let mut g = job.done_mx.lock().unwrap();
+        while job.done.load(Ordering::Acquire) < job.nchunks {
+            g = job.done_cv.wait(g).unwrap();
+        }
+    }
+    // Drop the broadcast slot so the erased closure pointer cannot be
+    // observed past this call (unless a newer dispatch already replaced it).
+    {
+        let mut st = pl.state.lock().unwrap();
+        if let Some(cur) = &st.job {
+            if Arc::ptr_eq(cur, &job) {
+                st.job = None;
+            }
+        }
+    }
+    if job.panicked.load(Ordering::Relaxed) {
+        panic!("par: parallel task panicked");
+    }
+}
+
+/// Raw-pointer wrapper so disjoint-range writers can share a base pointer
+/// across threads.
+struct SendPtr<T>(*mut T);
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        SendPtr(self.0)
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+
+// SAFETY: used only for writes to provably disjoint index ranges while the
+// owning allocation outlives the dispatch.
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
 /// Map `f` over `0..n` in parallel, collecting results in index order.
 pub fn par_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
     let nt = num_threads().min(n.max(1));
-    if nt <= 1 || n < 2 {
+    if nt <= 1 || n < 2 || in_region() {
         return (0..n).map(f).collect();
     }
-    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    let chunk = n.div_ceil(nt);
-    std::thread::scope(|s| {
-        for (t, slot) in out.chunks_mut(chunk).enumerate() {
-            let f = &f;
-            s.spawn(move || {
-                let base = t * chunk;
-                for (i, o) in slot.iter_mut().enumerate() {
-                    *o = Some(f(base + i));
-                }
-            });
+    let chunk_len = n.div_ceil(nt * OVERSUB).max(1);
+    let nchunks = n.div_ceil(chunk_len);
+    let mut out: Vec<std::mem::MaybeUninit<T>> = Vec::with_capacity(n);
+    // SAFETY: MaybeUninit slots need no initialization; every slot is
+    // written exactly once by the disjoint chunk ranges below.
+    unsafe { out.set_len(n) };
+    let ptr = SendPtr(out.as_mut_ptr());
+    dispatch(nchunks, nt, &move |ci: usize| {
+        let lo = ci * chunk_len;
+        let hi = (lo + chunk_len).min(n);
+        for i in lo..hi {
+            // SAFETY: disjoint ranges; `out` outlives the blocking dispatch.
+            unsafe {
+                (*ptr.0.add(i)).write(f(i));
+            }
         }
     });
-    out.into_iter().map(|o| o.unwrap()).collect()
+    // SAFETY: dispatch returned without panicking, so all `n` slots are
+    // initialized. (On panic the MaybeUninit vec is dropped instead, which
+    // frees the buffer without running destructors — leaks, never UB.)
+    unsafe {
+        let mut out = std::mem::ManuallyDrop::new(out);
+        Vec::from_raw_parts(out.as_mut_ptr() as *mut T, n, out.capacity())
+    }
 }
 
 /// Run `f(chunk_start, chunk)` over disjoint mutable chunks of `data`
@@ -61,8 +344,9 @@ pub fn par_for_chunks<T: Send, F: Fn(usize, &mut [T]) + Sync>(
         return;
     }
     let chunk_len = chunk_len.max(1);
+    let nchunks = n.div_ceil(chunk_len);
     let nt = num_threads();
-    if nt <= 1 || n <= chunk_len {
+    if nt <= 1 || nchunks <= 1 || in_region() {
         // Sequential path still honors the ≤chunk_len contract — callers
         // rely on it to recover (row, col) coordinates from chunk offsets.
         let mut start = 0;
@@ -73,80 +357,67 @@ pub fn par_for_chunks<T: Send, F: Fn(usize, &mut [T]) + Sync>(
         }
         return;
     }
-    // Atomic cursor over chunk ids gives dynamic load balancing for the
-    // (rare) skewed workloads — e.g. ragged last batches.
-    let nchunks = n.div_ceil(chunk_len);
-    let cursor = AtomicUsize::new(0);
-    // SAFETY-free approach: split into chunk list first.
-    let mut chunks: Vec<(usize, &mut [T])> = Vec::with_capacity(nchunks);
-    let mut rest = data;
-    let mut start = 0;
-    while !rest.is_empty() {
-        let take = chunk_len.min(rest.len());
-        let (head, tail) = rest.split_at_mut(take);
-        chunks.push((start, head));
-        start += take;
-        rest = tail;
-    }
-    let chunks = std::sync::Mutex::new(chunks.into_iter().map(Some).collect::<Vec<_>>());
-    std::thread::scope(|s| {
-        for _ in 0..nt.min(nchunks) {
-            let f = &f;
-            let cursor = &cursor;
-            let chunks = &chunks;
-            s.spawn(move || loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= nchunks {
-                    break;
-                }
-                let item = chunks.lock().unwrap()[i].take();
-                if let Some((st, ch)) = item {
-                    f(st, ch);
-                }
-            });
-        }
+    let ptr = SendPtr(data.as_mut_ptr());
+    dispatch(nchunks, nt.min(nchunks), &move |ci: usize| {
+        let lo = ci * chunk_len;
+        let hi = (lo + chunk_len).min(n);
+        // SAFETY: chunk ranges are disjoint views into `data`, which the
+        // blocked caller keeps alive.
+        let ch = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(lo), hi - lo) };
+        f(lo, ch);
     });
 }
 
 /// Parallel reduce: `f(i)` mapped over `0..n`, combined with `combine`.
+///
+/// The reduction folds a **fixed bucket partition** of `0..n` (at most
+/// [`REDUCE_BUCKETS`] contiguous ranges, a function of `n` only), then
+/// folds the bucket results in order — so the result is bit-identical for
+/// every thread count, provided `combine(identity, x) == x`.
 pub fn par_reduce<T: Send + Clone, F, C>(n: usize, identity: T, f: F, combine: C) -> T
 where
     F: Fn(usize) -> T + Sync,
     C: Fn(T, T) -> T + Send + Sync,
 {
-    let nt = num_threads().min(n.max(1));
-    if nt <= 1 || n < 2 {
-        let mut acc = identity;
-        for i in 0..n {
+    if n == 0 {
+        return identity;
+    }
+    let nbuckets = n.min(REDUCE_BUCKETS);
+    let chunk = n.div_ceil(nbuckets);
+    let nchunks = n.div_ceil(chunk);
+    let bucket = |b: usize| -> T {
+        let lo = b * chunk;
+        let hi = (lo + chunk).min(n);
+        let mut acc = f(lo);
+        for i in lo + 1..hi {
             acc = combine(acc, f(i));
         }
-        return acc;
-    }
-    let chunk = n.div_ceil(nt);
-    let partials: Vec<T> = std::thread::scope(|s| {
-        let mut handles = Vec::new();
-        for t in 0..nt {
-            let f = &f;
-            let combine = &combine;
-            let identity = identity.clone();
-            handles.push(s.spawn(move || {
-                let lo = t * chunk;
-                let hi = ((t + 1) * chunk).min(n);
-                let mut acc = identity;
-                for i in lo..hi {
-                    acc = combine(acc, f(i));
-                }
-                acc
-            }));
-        }
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    });
+        acc
+    };
+    let partials: Vec<T> = if num_threads() <= 1 || nchunks < 2 || in_region() {
+        (0..nchunks).map(bucket).collect()
+    } else {
+        par_map(nchunks, bucket)
+    };
     partials.into_iter().fold(identity, combine)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Serializes the tests that mutate the global thread override, and
+    /// guarantees restoration even when the body panics.
+    static OVERRIDE_LOCK: Mutex<()> = Mutex::new(());
+
+    fn with_override_lock(f: impl FnOnce()) {
+        let _g = OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+        set_thread_override(0);
+        if let Err(p) = r {
+            std::panic::resume_unwind(p);
+        }
+    }
 
     #[test]
     fn par_map_order() {
@@ -161,6 +432,16 @@ mod tests {
     fn par_map_empty_and_one() {
         assert_eq!(par_map(0, |i| i), Vec::<usize>::new());
         assert_eq!(par_map(1, |i| i + 5), vec![5]);
+    }
+
+    #[test]
+    fn par_map_nonclone_results() {
+        // results only need Send — exercise with a non-Copy, non-Clone type
+        struct NoClone(usize);
+        let v = par_map(257, NoClone);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(x.0, i);
+        }
     }
 
     #[test]
@@ -180,5 +461,58 @@ mod tests {
     fn par_reduce_sum() {
         let s = par_reduce(10_000, 0u64, |i| i as u64, |a, b| a + b);
         assert_eq!(s, 9999 * 10_000 / 2);
+    }
+
+    #[test]
+    fn nested_calls_run_inline() {
+        // A parallel region that itself calls every primitive — must not
+        // deadlock and must produce sequential-identical values.
+        let v = par_map(64, |i| {
+            let inner = par_map(50, move |j| (i * j) as u64);
+            let s1: u64 = inner.iter().sum();
+            let s2 = par_reduce(50, 0u64, |j| (i * j) as u64, |a, b| a + b);
+            assert_eq!(s1, s2);
+            let mut buf = vec![0u64; 40];
+            par_for_chunks(&mut buf, 7, |start, ch| {
+                for (o, x) in ch.iter_mut().enumerate() {
+                    *x = (start + o) as u64;
+                }
+            });
+            s1 + buf.iter().sum::<u64>()
+        });
+        for (i, &x) in v.iter().enumerate() {
+            let expect = (0..50).map(|j| (i * j) as u64).sum::<u64>() + (0..40u64).sum::<u64>();
+            assert_eq!(x, expect);
+        }
+    }
+
+    #[test]
+    fn reduce_is_thread_count_invariant() {
+        with_override_lock(|| {
+            // float sum must be bit-identical across overrides
+            let f = |i: usize| ((i as f64) * 0.1).sin();
+            let baseline = par_reduce(12_345, 0.0f64, f, |a, b| a + b);
+            for nt in [1usize, 2, 3, 8, 64] {
+                set_thread_override(nt);
+                let s = par_reduce(12_345, 0.0f64, f, |a, b| a + b);
+                assert_eq!(s.to_bits(), baseline.to_bits(), "nt={nt}");
+            }
+        });
+    }
+
+    #[test]
+    fn task_panic_propagates() {
+        with_override_lock(|| {
+            set_thread_override(2);
+            let r = std::panic::catch_unwind(|| {
+                par_map(64, |i| {
+                    if i == 13 {
+                        panic!("boom");
+                    }
+                    i
+                })
+            });
+            assert!(r.is_err(), "panic in a parallel task must propagate");
+        });
     }
 }

@@ -1,0 +1,148 @@
+//! Runtime tests for the persistent worker pool (`uspec::util::par`):
+//! pooled primitives must match the sequential path exactly — including
+//! nested calls and ragged chunk tails — and the clustering pipelines must
+//! stay bit-identical for a fixed seed at any thread count.
+
+use std::sync::Mutex;
+
+use uspec::data::synthetic::two_moons;
+use uspec::usenc::{usenc, UsencParams};
+use uspec::uspec::{uspec, UspecParams};
+use uspec::util::par;
+
+/// Serializes tests that flip the global thread override. (Results are
+/// thread-count invariant by design, but serializing keeps each test's
+/// configuration honest.)
+static OVERRIDE_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[test]
+fn par_map_matches_sequential_across_thread_counts() {
+    let _g = lock();
+    for &n in &[0usize, 1, 2, 7, 64, 1000, 4097] {
+        par::set_thread_override(1);
+        let seq: Vec<u64> = par::par_map(n, |i| (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        for nt in [2usize, 3, 8] {
+            par::set_thread_override(nt);
+            let got = par::par_map(n, |i| (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            assert_eq!(got, seq, "n={n} nt={nt}");
+        }
+    }
+    par::set_thread_override(0);
+}
+
+#[test]
+fn par_for_chunks_ragged_tails_cover_everything() {
+    let _g = lock();
+    // sizes chosen to leave ragged last chunks for every chunk_len
+    for &(n, chunk_len) in &[(1usize, 3usize), (10, 3), (1000, 128), (4097, 64), (513, 512)] {
+        par::set_thread_override(1);
+        let mut seq = vec![0usize; n];
+        par::par_for_chunks(&mut seq, chunk_len, |start, ch| {
+            for (o, v) in ch.iter_mut().enumerate() {
+                *v = (start + o) * 3 + ch.len();
+            }
+        });
+        for nt in [2usize, 8] {
+            par::set_thread_override(nt);
+            let mut got = vec![0usize; n];
+            par::par_for_chunks(&mut got, chunk_len, |start, ch| {
+                for (o, v) in ch.iter_mut().enumerate() {
+                    *v = (start + o) * 3 + ch.len();
+                }
+            });
+            assert_eq!(got, seq, "n={n} chunk_len={chunk_len} nt={nt}");
+        }
+    }
+    par::set_thread_override(0);
+}
+
+#[test]
+fn par_reduce_bitwise_invariant_across_thread_counts() {
+    let _g = lock();
+    let f = |i: usize| (1.0 + i as f64).ln() * if i % 2 == 0 { 1.0 } else { -1.0 };
+    par::set_thread_override(1);
+    let baseline = par::par_reduce(54_321, 0.0f64, f, |a, b| a + b);
+    for nt in [2usize, 3, 8, 32] {
+        par::set_thread_override(nt);
+        let got = par::par_reduce(54_321, 0.0f64, f, |a, b| a + b);
+        assert_eq!(got.to_bits(), baseline.to_bits(), "nt={nt}");
+    }
+    par::set_thread_override(0);
+}
+
+#[test]
+fn nested_parallel_calls_match_sequential() {
+    let _g = lock();
+    par::set_thread_override(8);
+    // outer par_map whose tasks use all three primitives
+    let got = par::par_map(40, |i| {
+        let inner = par::par_map(30, move |j| ((i + 1) * (j + 3)) as u64);
+        let rsum = par::par_reduce(30, 0u64, move |j| ((i + 1) * (j + 3)) as u64, |a, b| a + b);
+        assert_eq!(inner.iter().sum::<u64>(), rsum);
+        let mut buf = vec![0u64; 25];
+        par::par_for_chunks(&mut buf, 4, |start, ch| {
+            for (o, v) in ch.iter_mut().enumerate() {
+                *v = ((start + o) * i) as u64;
+            }
+        });
+        rsum + buf.iter().sum::<u64>()
+    });
+    par::set_thread_override(1);
+    let want = par::par_map(40, |i| {
+        let rsum: u64 = (0..30).map(|j| ((i + 1) * (j + 3)) as u64).sum();
+        let bsum: u64 = (0..25).map(|o| (o * i) as u64).sum();
+        rsum + bsum
+    });
+    assert_eq!(got, want);
+    par::set_thread_override(0);
+}
+
+#[test]
+fn uspec_bit_identical_across_thread_counts() {
+    let _g = lock();
+    let ds = two_moons(900, 0.06, 41);
+    let params = UspecParams { k: 2, p: 90, ..Default::default() };
+    par::set_thread_override(1);
+    let base = uspec(&ds.x, &params, 1234).unwrap();
+    for nt in [2usize, 8] {
+        par::set_thread_override(nt);
+        let run = uspec(&ds.x, &params, 1234).unwrap();
+        assert_eq!(run.labels, base.labels, "labels differ at nt={nt}");
+        assert_eq!(
+            run.sigma.to_bits(),
+            base.sigma.to_bits(),
+            "sigma differs at nt={nt}"
+        );
+        assert_eq!(run.embedding.rows, base.embedding.rows);
+        for (a, b) in run.embedding.data.iter().zip(&base.embedding.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "embedding differs at nt={nt}");
+        }
+    }
+    par::set_thread_override(0);
+}
+
+#[test]
+fn usenc_deterministic_across_thread_counts() {
+    let _g = lock();
+    let ds = two_moons(500, 0.06, 17);
+    let params = UsencParams {
+        k: 2,
+        m: 4,
+        k_min: 4,
+        k_max: 9,
+        base: UspecParams { p: 60, ..Default::default() },
+    };
+    par::set_thread_override(1);
+    let base = usenc(&ds.x, &params, 777, &uspec::affinity::NativeBackend).unwrap();
+    for nt in [2usize, 8] {
+        par::set_thread_override(nt);
+        let run = usenc(&ds.x, &params, 777, &uspec::affinity::NativeBackend).unwrap();
+        assert_eq!(run.labels, base.labels, "consensus labels differ at nt={nt}");
+        assert_eq!(run.ensemble.labelings, base.ensemble.labelings);
+    }
+    par::set_thread_override(0);
+}
