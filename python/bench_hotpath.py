@@ -18,6 +18,11 @@ emits `BENCH_hotpath.json` at the repo root in the same schema:
 * ``argmin_k`` — per-row top-K selection with a fresh f64 copy + full
   argsort per row (old `argmin_k` usage) vs `argpartition` into
   preallocated f32 scratch (new `argmin_k_into`).
+* ``chunk_sweep`` — overhead of the staged pipeline's chunked KNR pass
+  (read chunk → distance block → per-row top-K, one reused chunk buffer)
+  relative to one monolithic N-row pass, across chunk sizes. The engine
+  is chunk-size *invariant* in results; this tracks what the chunking
+  costs in time so the default chunk stays in the flat region.
 
 When a Rust toolchain is available, `cargo bench --bench micro_hotpath`
 overwrites this file with natively measured numbers (``harness`` tells
@@ -206,6 +211,53 @@ def bench_argmin():
     return rows
 
 
+# ------------------------------------------------------------- chunk sweep
+def bench_chunk_sweep():
+    """Chunked pipeline pass-2 (sq_dists + per-row top-K per chunk, one
+    reused chunk buffer) vs the monolithic full-N pass, at the paper's
+    KNR shape (p=1000 representatives, K=5)."""
+    rows = []
+    rng = np.random.default_rng(23)
+    n, p, d, k = 65_536, 1000, 10, 5
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    c = rng.standard_normal((p, d)).astype(np.float32)
+    c_t = np.ascontiguousarray(c.T)
+    cn = (c * c).sum(axis=1)
+
+    def chunked_pass(chunk):
+        out = np.empty((chunk, p), dtype=np.float32)
+        tmp = np.empty((chunk, p), dtype=np.float32)
+        acc = 0
+        for lo in range(0, n, chunk):
+            hi = min(lo + chunk, n)
+            xb = x[lo:hi]
+            o, t = out[: hi - lo], tmp[: hi - lo]
+            sq_dists_blocked(xb, c_t, cn, o, t)
+            top = np.argpartition(o, k - 1, axis=1)[:, :k]
+            acc += int(top[0, 0])
+        return acc
+
+    t_full = time_median(1, 3, lambda: chunked_pass(n))
+    for chunk in (1024, 4096, 8192, 32768, n):
+        t = time_median(1, 3, lambda: chunked_pass(chunk))
+        rows.append(
+            {
+                "n": n,
+                "p": p,
+                "d": d,
+                "k": k,
+                "chunk": chunk,
+                "ms": round(t * 1e3, 3),
+                "overhead_vs_full": round(t / t_full, 3),
+            }
+        )
+        print(
+            f"chunk_sweep n={n} chunk={chunk:6d}: {t * 1e3:8.2f} ms  "
+            f"overhead vs monolithic {t / t_full:.2f}x"
+        )
+    return rows
+
+
 def main():
     report = {
         "harness": "python-mirror",
@@ -218,6 +270,7 @@ def main():
         "pool_dispatch": bench_dispatch(),
         "sq_dists": bench_sq_dists(),
         "argmin_k": bench_argmin(),
+        "chunk_sweep": bench_chunk_sweep(),
     }
     path = os.path.join(REPO_ROOT, "BENCH_hotpath.json")
     with open(path, "w") as f:

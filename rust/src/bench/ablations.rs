@@ -51,7 +51,7 @@ pub fn consensus_ablation(h: &Harness) -> Result<String> {
         // part of what this ablation shows, so fix m at the paper's 20.
         params.m = params.m.max(20);
         type F = fn(&crate::usenc::Ensemble, usize, u64) -> Result<Vec<u32>>;
-        let tc_fn: F = |e, k, s| consensus_bipartite(e, k, EigSolver::Auto, s).map(|(l, _)| l);
+        let tc_fn: F = |e, k, s| consensus_bipartite(e, k, EigSolver::Auto, s);
         let fns: [(&str, F); 5] = [
             ("TC", tc_fn),
             ("CSPA", strehl::cspa),

@@ -213,11 +213,11 @@ fn subspace_iteration_largest(
         let delta: f64 =
             nvals.iter().zip(&prev_vals).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
         prev_vals = nvals;
-        if std::env::var("USPEC_EIG_TRACE").is_ok() {
+        if crate::util::eig_trace() {
             eprintln!("[eig] outer {it} (deg {DEG}, bound {a:.3e}) delta {delta:.3e}");
         }
         if delta < tol {
-            if std::env::var("USPEC_EIG_DEBUG").is_ok() {
+            if crate::util::eig_debug() {
                 eprintln!(
                     "[eig] chebyshev subspace converged at outer {it} ({} matmuls, delta {delta:.2e})",
                     4 + (it + 1) * (DEG + 1)
@@ -233,13 +233,13 @@ fn subspace_iteration_largest(
     // spectral embedding; only give up when clearly unconverged.
     match best {
         Some((vals, w, delta)) if delta < 1e-4 => {
-            if std::env::var("USPEC_EIG_DEBUG").is_ok() {
+            if crate::util::eig_debug() {
                 eprintln!("[eig] chebyshev subspace best-effort (delta {delta:.2e})");
             }
             Some((vals, w))
         }
         _ => {
-            if std::env::var("USPEC_EIG_DEBUG").is_ok() {
+            if crate::util::eig_debug() {
                 eprintln!("[eig] chebyshev subspace failed; dense fallback");
             }
             None
@@ -347,6 +347,43 @@ pub fn row_normalize(emb: &mut Mat) {
             for v in chunk.iter_mut() {
                 *v /= norm;
             }
+        }
+    });
+}
+
+/// [`row_normalize`], additionally returning the norm each row was divided
+/// by (1.0 for near-zero rows that were left untouched). Feeding the norms
+/// back through [`row_scale`] restores the original matrix up to float
+/// rounding, which lets callers reuse one buffer for the normalized view
+/// instead of cloning an N×k matrix.
+pub fn row_normalize_norms(emb: &mut Mat) -> Vec<f32> {
+    let k = emb.cols;
+    let data = &emb.data;
+    let norms: Vec<f32> = par::par_map(emb.rows, |i| {
+        let norm: f32 = data[i * k..(i + 1) * k].iter().map(|v| v * v).sum::<f32>().sqrt();
+        if norm > 1e-12 {
+            norm
+        } else {
+            1.0
+        }
+    });
+    par::par_for_chunks(&mut emb.data, k, |start, chunk| {
+        let norm = norms[start / k];
+        for v in chunk.iter_mut() {
+            *v /= norm;
+        }
+    });
+    norms
+}
+
+/// Multiply each row by its scale (inverse of [`row_normalize_norms`]).
+pub fn row_scale(emb: &mut Mat, scales: &[f32]) {
+    debug_assert_eq!(scales.len(), emb.rows);
+    let k = emb.cols;
+    par::par_for_chunks(&mut emb.data, k, |start, chunk| {
+        let s = scales[start / k];
+        for v in chunk.iter_mut() {
+            *v *= s;
         }
     });
 }

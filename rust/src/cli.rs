@@ -27,9 +27,10 @@ COMMANDS:
                                 ablation-streaming)
   estimate-k --dataset D [--k_max N]
                                 eigengap estimate of the cluster count
-  stream   --dataset D|F.bin    out-of-core U-SPEC over an on-disk dataset
-                                (USPECB01 file, or a benchmark spilled to
-                                a temp file)
+  stream   --dataset D|F.bin    out-of-core clustering over an on-disk
+                                dataset (USPECB01 file, or a benchmark
+                                spilled to a temp file); --method u-spec
+                                (default) or u-senc
   info                          print config + artifact status
 
 COMMON FLAGS (any config key):
@@ -230,24 +231,54 @@ pub fn execute(inv: Invocation) -> Result<String> {
                 k_nn: inv.cfg.k_nn.min(p),
                 ..Default::default()
             };
-            let sp = crate::streaming::StreamParams { chunk: 8192, base };
+            if !inv.cfg.method.eq_ignore_ascii_case("u-spec")
+                && !inv.cfg.method.eq_ignore_ascii_case("u-senc")
+            {
+                return Err(Error::Config(format!(
+                    "stream supports --method u-spec or u-senc (got '{}')",
+                    inv.cfg.method
+                )));
+            }
+            let chunk = crate::pipeline::DEFAULT_CHUNK;
             let t0 = std::time::Instant::now();
-            let res = crate::streaming::stream_uspec(&bin, &sp, inv.cfg.seed, h.backend())?;
+            let (method, labels, timer_summary, peak) =
+                if inv.cfg.method.eq_ignore_ascii_case("u-senc") {
+                    let params = crate::usenc::UsencParams {
+                        k,
+                        m: inv.cfg.m,
+                        k_min: inv.cfg.k_min,
+                        k_max: inv.cfg.k_max,
+                        base,
+                    };
+                    let res = crate::streaming::stream_usenc(
+                        &bin,
+                        &params,
+                        chunk,
+                        inv.cfg.seed,
+                        h.backend(),
+                    )?;
+                    ("U-SENC", res.labels, res.timer.summary(), None)
+                } else {
+                    let sp = crate::streaming::StreamParams { chunk, base };
+                    let res =
+                        crate::streaming::stream_uspec(&bin, &sp, inv.cfg.seed, h.backend())?;
+                    ("U-SPEC", res.labels, res.timer.summary(), Some(res.peak_bytes))
+                };
             let secs = t0.elapsed().as_secs_f64();
+            let peak = peak
+                .map(|b| format!(", resident model {:.1} MB", b as f64 / 1e6))
+                .unwrap_or_default();
             let mut out = format!(
-                "streamed U-SPEC over {} (n={} d={}, k={k}): {:.2}s, resident model {:.1} MB\n[{}]\n",
+                "streamed {method} over {} (n={} d={}, k={k}): {secs:.2}s{peak}\n[{timer_summary}]\n",
                 inv.cfg.dataset,
                 bin.n(),
                 bin.d(),
-                secs,
-                res.peak_bytes as f64 / 1e6,
-                res.timer.summary()
             );
             if let Some(ds) = truth {
                 out.push_str(&format!(
                     "NMI={:.4} CA={:.4}\n",
-                    nmi(&res.labels, &ds.y),
-                    ca(&res.labels, &ds.y)
+                    nmi(&labels, &ds.y),
+                    ca(&labels, &ds.y)
                 ));
             }
             Ok(out)
@@ -313,6 +344,17 @@ mod tests {
         let inv = parse(&argv("stream --dataset TB-1M --scale 0.001 --seed 7")).unwrap();
         let out = execute(inv).unwrap();
         assert!(out.contains("streamed U-SPEC"), "{out}");
+        assert!(out.contains("NMI="), "{out}");
+    }
+
+    #[test]
+    fn stream_usenc_on_benchmark() {
+        let inv = parse(&argv(
+            "stream --dataset TB-1M --scale 0.001 --method u-senc --m 3 --p 60 --seed 7",
+        ))
+        .unwrap();
+        let out = execute(inv).unwrap();
+        assert!(out.contains("streamed U-SENC"), "{out}");
         assert!(out.contains("NMI="), "{out}");
     }
 

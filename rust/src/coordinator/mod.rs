@@ -1,28 +1,29 @@
 //! Leader/worker coordinator for ensemble generation (L3's orchestration
 //! role). The leader materializes the m base-clusterer job specs up front
-//! (so seeds — and therefore results — are identical no matter how many
-//! workers run or how jobs interleave), workers claim jobs from an atomic
-//! cursor, and all kernel work funnels through the shared
-//! [`crate::runtime::KernelPool`], whose dynamic batcher coalesces
-//! concurrent distance requests.
+//! via [`crate::usenc::derive_jobs`] (so seeds — and therefore results —
+//! are identical no matter how many workers run or how jobs interleave)
+//! and runs the shared candidate sweeps (one pass over the source per
+//! group of [`crate::usenc::sweep_group_size`] jobs — usually one pass
+//! for all m selections). Workers claim jobs from an atomic cursor and
+//! resume each from its pre-swept candidates; all kernel work funnels through
+//! the shared [`crate::runtime::KernelPool`], whose dynamic batcher
+//! coalesces concurrent distance requests.
+//!
+//! The source is any [`DataSource`]: a resident `Mat` or an on-disk
+//! `BinDataset` — workers stream their own KNR passes, so out-of-core
+//! ensembles never materialize the full N×d matrix.
 
 use crate::affinity::DistanceBackend;
-use crate::usenc::{consensus_bipartite, draw_base_k, Ensemble, UsencParams, UsencResult};
-use crate::uspec::{uspec_with_backend, UspecParams};
-use crate::linalg::Mat;
-use crate::util::rng::Rng;
+use crate::pipeline::{DataSource, Pipeline};
+use crate::usenc::{
+    consensus_bipartite, run_job, sweep_job_candidates, Ensemble, UsencParams, UsencResult,
+};
 use crate::util::timer::PhaseTimer;
 use crate::{ensure_arg, Error, Result};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-/// One base-clusterer job, fully specified before any worker starts.
-#[derive(Debug, Clone)]
-pub struct JobSpec {
-    pub id: usize,
-    pub k: usize,
-    pub seed: u64,
-}
+pub use crate::usenc::{derive_jobs, JobSpec};
 
 /// Per-job outcome (kept for the coordinator's state/metrics report).
 #[derive(Debug, Clone)]
@@ -32,27 +33,13 @@ pub struct JobResult {
     pub secs: f64,
 }
 
-/// Leader-side job derivation. MUST match
-/// [`crate::usenc::generate_ensemble`]'s seed stream exactly — the
-/// determinism tests pin this equivalence.
-pub fn derive_jobs(params: &UsencParams, n: usize, seed: u64) -> Vec<JobSpec> {
-    let mut rng = Rng::new(seed);
-    (0..params.m)
-        .map(|i| {
-            let k = draw_base_k(&mut rng, params.k_min, params.k_max, n);
-            let seed = rng.fork(i as u64).next_u64();
-            JobSpec { id: i, k, seed }
-        })
-        .collect()
-}
-
 /// Progress observer (job_done, total).
 pub type Progress<'a> = &'a (dyn Fn(usize, usize) + Sync);
 
 /// Run the base clusterers across `workers` threads.
 /// Results are ordered by job id; identical for any worker count.
 pub fn run_base_clusterers(
-    x: &Mat,
+    source: &dyn DataSource,
     params: &UsencParams,
     seed: u64,
     backend: &dyn DistanceBackend,
@@ -61,48 +48,61 @@ pub fn run_base_clusterers(
 ) -> Result<Ensemble> {
     ensure_arg!(params.m >= 1, "coordinator: m must be >= 1");
     let workers = workers.clamp(1, params.m);
-    let jobs = derive_jobs(params, x.rows, seed);
+    let pipe = Pipeline::new(backend);
+    let jobs = derive_jobs(params, source.n(), seed);
     let total = jobs.len();
-    let cursor = AtomicUsize::new(0);
+    let group = crate::usenc::sweep_group_size(params, source.n(), source.d()).max(1);
     let abort = AtomicBool::new(false);
     let results: Mutex<Vec<Option<JobResult>>> = Mutex::new((0..total).map(|_| None).collect());
     let first_error: Mutex<Option<Error>> = Mutex::new(None);
     let done = AtomicUsize::new(0);
 
-    std::thread::scope(|s| {
-        for _ in 0..workers {
-            s.spawn(|| loop {
-                if abort.load(Ordering::Relaxed) {
-                    break;
-                }
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= total {
-                    break;
-                }
-                let job = &jobs[i];
-                let base = UspecParams { k: job.k, ..params.base.clone() };
-                let t0 = std::time::Instant::now();
-                match uspec_with_backend(x, &base, job.seed, backend) {
-                    Ok(res) => {
-                        results.lock().unwrap()[i] = Some(JobResult {
-                            id: job.id,
-                            labels: res.labels,
-                            secs: t0.elapsed().as_secs_f64(),
-                        });
-                        let d = done.fetch_add(1, Ordering::Relaxed) + 1;
-                        if let Some(p) = progress {
-                            p(d, total);
-                        }
-                    }
-                    Err(e) => {
-                        *first_error.lock().unwrap() = Some(e);
-                        abort.store(true, Ordering::Relaxed);
+    // Groups bound the resident candidate sets (see
+    // [`crate::usenc::SWEEP_BUDGET_BYTES`]): the leader sweeps one group's
+    // reservoirs in a single pass, workers drain that group's jobs from an
+    // atomic cursor, then the next group is swept. Results are ordered by
+    // job id and identical for any worker count or group size.
+    for (g, group_jobs) in jobs.chunks(group).enumerate() {
+        if abort.load(Ordering::Relaxed) {
+            break;
+        }
+        let cands = sweep_job_candidates(&pipe, source, params, group_jobs)?;
+        let base_idx = g * group;
+        let cursor = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..workers.min(group_jobs.len()) {
+                s.spawn(|| loop {
+                    if abort.load(Ordering::Relaxed) {
                         break;
                     }
-                }
-            });
-        }
-    });
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= group_jobs.len() {
+                        break;
+                    }
+                    let job = &group_jobs[i];
+                    let t0 = std::time::Instant::now();
+                    match run_job(&pipe, source, params, job, cands.as_ref().map(|c| &c[i])) {
+                        Ok(labels) => {
+                            results.lock().unwrap()[base_idx + i] = Some(JobResult {
+                                id: job.id,
+                                labels,
+                                secs: t0.elapsed().as_secs_f64(),
+                            });
+                            let d = done.fetch_add(1, Ordering::Relaxed) + 1;
+                            if let Some(p) = progress {
+                                p(d, total);
+                            }
+                        }
+                        Err(e) => {
+                            *first_error.lock().unwrap() = Some(e);
+                            abort.store(true, Ordering::Relaxed);
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+    }
 
     if let Some(e) = first_error.into_inner().unwrap() {
         return Err(e);
@@ -118,7 +118,7 @@ pub fn run_base_clusterers(
 /// Full U-SENC through the coordinator: scheduled ensemble generation +
 /// bipartite consensus. Equivalent to [`crate::usenc::usenc`] output-wise.
 pub fn usenc_coordinated(
-    x: &Mat,
+    source: &dyn DataSource,
     params: &UsencParams,
     seed: u64,
     backend: &dyn DistanceBackend,
@@ -127,9 +127,9 @@ pub fn usenc_coordinated(
 ) -> Result<UsencResult> {
     let mut timer = PhaseTimer::new();
     let ensemble = timer.time("generation", || {
-        run_base_clusterers(x, params, seed, backend, workers, progress)
+        run_base_clusterers(source, params, seed, backend, workers, progress)
     })?;
-    let (labels, _emb) = timer.time("consensus", || {
+    let labels = timer.time("consensus", || {
         consensus_bipartite(&ensemble, params.k, params.base.solver, seed ^ 0xC075)
     })?;
     Ok(UsencResult { labels, ensemble, timer })
@@ -141,6 +141,7 @@ mod tests {
     use crate::affinity::NativeBackend;
     use crate::data::synthetic::two_moons;
     use crate::usenc::generate_ensemble;
+    use crate::uspec::UspecParams;
 
     fn params() -> UsencParams {
         UsencParams {

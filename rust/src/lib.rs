@@ -45,6 +45,7 @@ pub mod metrics;
 pub mod data;
 pub mod affinity;
 pub mod bipartite;
+pub mod pipeline;
 pub mod uspec;
 pub mod usenc;
 pub mod baselines;

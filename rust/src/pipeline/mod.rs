@@ -1,0 +1,451 @@
+//! The staged U-SPEC execution engine — **one core for in-memory,
+//! out-of-core, and ensemble runs**.
+//!
+//! The paper's pipeline (§3.1) decomposes into four stages, each of which
+//! only needs chunked row access to the data ([`DataSource`]):
+//!
+//! 1. [`SelectStage`] — representative selection. Random and hybrid
+//!    selection run as a single-pass reservoir sweep (plus k-means
+//!    refinement of the candidates for hybrid); k-means-full needs the
+//!    resident matrix ([`DataSource::as_mat`]).
+//! 2. [`KnrStage`] — K-nearest-representative search: build the
+//!    [`KnrIndex`] over the p representatives once, then stream the
+//!    objects chunk-by-chunk through the packed-panel query path.
+//! 3. [`AffinityStage`] — the sparse Gaussian cross-affinity `B` from the
+//!    KNR result (σ = mean object↔KNR distance).
+//! 4. [`PartitionStage`] — transfer-cut bipartite partitioning plus the
+//!    NJW k-means discretization of the row-normalized embedding.
+//!
+//! [`Pipeline::run`] drives the stages with one seed schedule, so the
+//! *same* code produces the labels whether the source is a resident
+//! [`Mat`], an on-disk [`crate::streaming::BinDataset`], or any future
+//! shard. Every stage is chunk-size invariant (chunked iteration is
+//! sequential and per-row; distance rows are computed independently), so
+//! for a fixed seed the labels are bit-identical across sources and chunk
+//! sizes — `rust/tests/pipeline_equivalence.rs` pins this.
+//!
+//! For ensembles, [`Pipeline::sweep_candidates`] runs the selection
+//! sweeps of all m base clusterers in **one** pass over the data
+//! ([`reservoir_multi`]) and [`Pipeline::run_from_candidates`] resumes a
+//! per-clusterer run from its pre-swept candidate set — m base clusterers
+//! cost one selection read of the data instead of m.
+//!
+//! Resident peak of a full out-of-core run is
+//! `O(N·K + chunk·d + p·d)` — independent of `N·d`, which only ever
+//! streams through the chunk buffer.
+
+pub mod source;
+
+pub use source::{for_each_chunk, reservoir_multi, DataSource};
+
+use crate::affinity::{
+    build_affinity, knr::KnrIndex, knr::KnrResult, select, Affinity, DistanceBackend,
+    SelectStrategy,
+};
+use crate::bipartite::{row_normalize, row_normalize_norms, row_scale, transfer_cut, EigSolver};
+use crate::kmeans::{kmeans, Init, KmeansParams};
+use crate::linalg::{Csr, Mat};
+use crate::uspec::{KnrMode, UspecParams, UspecResult};
+use crate::util::rng::Rng;
+use crate::util::timer::PhaseTimer;
+use crate::{ensure_arg, Error, Result};
+
+/// Default rows per chunk (the resident working set is `chunk × d` f32s).
+pub const DEFAULT_CHUNK: usize = 8192;
+
+/// Stage 1 — representative selection over chunks (paper §3.1.1).
+#[derive(Debug, Clone, Copy)]
+pub struct SelectStage {
+    pub strategy: SelectStrategy,
+    /// Number of representatives p (already clamped to the source size).
+    pub p: usize,
+    /// k-means refinement cap (the paper's small `t`).
+    pub kmeans_iters: usize,
+}
+
+impl SelectStage {
+    /// Derive the stage from (clamped) U-SPEC parameters. Selection only
+    /// needs a coarse vector quantization, so its k-means budget is capped
+    /// independently of the discretization budget.
+    pub fn from_params(params: &UspecParams) -> SelectStage {
+        SelectStage {
+            strategy: params.selection,
+            p: params.p,
+            kmeans_iters: params.kmeans_iters.min(20),
+        }
+    }
+
+    /// True when this strategy runs as a chunked reservoir sweep (random /
+    /// hybrid); false for k-means-full, which needs the resident matrix.
+    pub fn sweeps(&self) -> bool {
+        !matches!(self.strategy, SelectStrategy::KmeansFull)
+    }
+
+    /// Rows the candidate sweep must retain for a source of `n` objects.
+    pub fn candidate_size(&self, n: usize) -> usize {
+        match self.strategy {
+            SelectStrategy::Random => self.p.min(n),
+            SelectStrategy::Hybrid { candidate_factor } => {
+                (candidate_factor.max(1) * self.p).min(n)
+            }
+            SelectStrategy::KmeansFull => 0,
+        }
+    }
+
+    /// Refine a swept candidate set into the p representatives (`rng` is
+    /// the sweep's RNG, advanced past the reservoir draws). Candidate sets
+    /// already at p rows pass through unchanged — the random strategy and
+    /// the hybrid strategy at `p′ == p`.
+    pub fn refine(&self, candidates: &Mat, rng: &mut Rng) -> Result<Mat> {
+        if candidates.rows <= self.p {
+            return Ok(candidates.clone());
+        }
+        let km = kmeans(
+            candidates,
+            &KmeansParams {
+                k: self.p,
+                max_iter: self.kmeans_iters,
+                tol: 1e-3,
+                init: Init::Random,
+            },
+            rng.next_u64(),
+        )?;
+        Ok(km.centers)
+    }
+
+    /// Full selection: sweep (or resident k-means) → p representatives.
+    pub fn run(&self, src: &dyn DataSource, chunk: usize, seed: u64) -> Result<Mat> {
+        if !self.sweeps() {
+            let x = src.as_mat().ok_or_else(|| {
+                Error::InvalidArg(
+                    "k-means-full selection needs a resident dataset (DataSource::as_mat); \
+                     use random or hybrid selection for out-of-core sources"
+                        .into(),
+                )
+            })?;
+            return select(x, self.strategy, self.p, self.kmeans_iters, seed);
+        }
+        let mut specs = vec![(self.candidate_size(src.n()), Rng::new(seed))];
+        let mut outs = reservoir_multi(src, chunk, &mut specs)?;
+        let candidates = outs.pop().expect("one sweep target");
+        let (_, mut rng) = specs.pop().expect("one sweep target");
+        self.refine(&candidates, &mut rng)
+    }
+}
+
+/// Stage 2 — chunked K-nearest-representative queries (paper §3.1.2).
+#[derive(Debug, Clone, Copy)]
+pub struct KnrStage {
+    pub k_nn: usize,
+    pub mode: KnrMode,
+}
+
+impl KnrStage {
+    /// Stream all rows of `src` through the index, concatenating the
+    /// per-chunk answers. Rows are queried independently, so the result is
+    /// identical for any chunk size.
+    pub fn query(
+        &self,
+        src: &dyn DataSource,
+        index: &KnrIndex,
+        chunk: usize,
+        backend: &dyn DistanceBackend,
+    ) -> Result<KnrResult> {
+        let k = self.k_nn.min(index.p());
+        let n = src.n();
+        let mut idx = Vec::with_capacity(n * k);
+        let mut d2 = Vec::with_capacity(n * k);
+        for_each_chunk(src, chunk, |_, m| {
+            let r = match self.mode {
+                KnrMode::Approx => index.approx_knr(m, k, backend),
+                KnrMode::Exact => index.exact_knr(m, k, backend),
+            };
+            idx.extend_from_slice(&r.idx);
+            d2.extend_from_slice(&r.d2);
+            Ok(())
+        })?;
+        Ok(KnrResult { idx, d2, k })
+    }
+}
+
+/// Stage 3 — sparse Gaussian cross-affinity from a KNR result (Eq. 5–6).
+#[derive(Debug, Clone, Copy)]
+pub struct AffinityStage;
+
+impl AffinityStage {
+    pub fn run(&self, n: usize, p: usize, knr: &KnrResult) -> Affinity {
+        build_affinity(n, p, knr.k, knr)
+    }
+}
+
+/// Stage 4 — transfer cut + NJW k-means discretization (paper §3.1.3–4).
+#[derive(Debug, Clone, Copy)]
+pub struct PartitionStage {
+    /// Output cluster count for the discretization.
+    pub k: usize,
+    pub solver: EigSolver,
+    pub kmeans_iters: usize,
+}
+
+impl PartitionStage {
+    /// Partition the bipartite graph `b`, probing `tc_k` eigenpairs.
+    /// Returns the labels and the un-normalized spectral embedding. The
+    /// embedding buffer is reused in place (normalize → discretize →
+    /// rescale) instead of cloned, so the returned rows may differ from
+    /// the raw transfer-cut output by float rounding (≤ 1–2 ulp).
+    pub fn run(
+        &self,
+        b: &Csr,
+        tc_k: usize,
+        tc_seed: u64,
+        km_seed: u64,
+        timer: &mut PhaseTimer,
+    ) -> Result<(Vec<u32>, Mat)> {
+        let tc = timer.time("transfer_cut", || transfer_cut(b, tc_k, self.solver, tc_seed))?;
+        let mut emb = tc.embedding;
+        let norms = row_normalize_norms(&mut emb);
+        let km = timer.time("discretize", || {
+            kmeans(
+                &emb,
+                &KmeansParams { k: self.k, max_iter: self.kmeans_iters, ..Default::default() },
+                km_seed,
+            )
+        })?;
+        row_scale(&mut emb, &norms);
+        Ok((km.labels, emb))
+    }
+
+    /// Same partition, discarding the embedding (skips the rescale pass).
+    pub fn run_labels(
+        &self,
+        b: &Csr,
+        tc_k: usize,
+        tc_seed: u64,
+        km_seed: u64,
+        timer: &mut PhaseTimer,
+    ) -> Result<Vec<u32>> {
+        let tc = timer.time("transfer_cut", || transfer_cut(b, tc_k, self.solver, tc_seed))?;
+        let mut emb = tc.embedding;
+        row_normalize(&mut emb);
+        let km = timer.time("discretize", || {
+            kmeans(
+                &emb,
+                &KmeansParams { k: self.k, max_iter: self.kmeans_iters, ..Default::default() },
+                km_seed,
+            )
+        })?;
+        Ok(km.labels)
+    }
+}
+
+/// A swept candidate set: the reservoir output plus the RNG state a
+/// resumed run needs for the k-means refinement seed.
+#[derive(Debug, Clone)]
+pub struct CandidateSet {
+    pub candidates: Mat,
+    rng: Rng,
+}
+
+/// The engine: one chunk size + distance backend driving the four stages.
+#[derive(Clone, Copy)]
+pub struct Pipeline<'a> {
+    /// Rows per chunk for every sweep (selection and KNR queries).
+    pub chunk: usize,
+    pub backend: &'a dyn DistanceBackend,
+}
+
+impl<'a> Pipeline<'a> {
+    pub fn new(backend: &'a dyn DistanceBackend) -> Pipeline<'a> {
+        Pipeline { chunk: DEFAULT_CHUNK, backend }
+    }
+
+    pub fn with_chunk(mut self, chunk: usize) -> Pipeline<'a> {
+        self.chunk = chunk.max(1);
+        self
+    }
+
+    /// The selection-stage seed a run derives from its pipeline seed
+    /// (first draw of the run's seed schedule). Exposed so ensemble
+    /// drivers can sweep candidates for jobs they have not started yet.
+    pub fn selection_seed(seed: u64) -> u64 {
+        Rng::new(seed).next_u64()
+    }
+
+    /// Run the full U-SPEC pipeline on any source.
+    pub fn run(
+        &self,
+        src: &dyn DataSource,
+        params: &UspecParams,
+        seed: u64,
+    ) -> Result<UspecResult> {
+        let params = self.validate(src, params)?;
+        let mut rng = Rng::new(seed);
+        let mut timer = PhaseTimer::new();
+        let sel_seed = rng.next_u64();
+        let stage = SelectStage::from_params(&params);
+        let reps = timer.time("select", || stage.run(src, self.chunk, sel_seed))?;
+        self.finish(src, &params, rng, timer, reps)
+    }
+
+    /// One shared pass over the data filling the candidate reservoirs of
+    /// many runs: `specs` pairs each run's candidate size with its
+    /// selection seed ([`Pipeline::selection_seed`] of the run seed).
+    /// Per run, the result is identical to the sweep [`Pipeline::run`]
+    /// would have done itself.
+    pub fn sweep_candidates(
+        &self,
+        src: &dyn DataSource,
+        specs: &[(usize, u64)],
+    ) -> Result<Vec<CandidateSet>> {
+        let mut pairs: Vec<(usize, Rng)> =
+            specs.iter().map(|&(size, seed)| (size, Rng::new(seed))).collect();
+        let outs = reservoir_multi(src, self.chunk, &mut pairs)?;
+        Ok(outs
+            .into_iter()
+            .zip(pairs)
+            .map(|(candidates, (_, rng))| CandidateSet { candidates, rng })
+            .collect())
+    }
+
+    /// Resume a run whose selection sweep was already done by
+    /// [`Pipeline::sweep_candidates`]. Produces exactly the labels
+    /// [`Pipeline::run`] would for the same `(params, seed)`.
+    pub fn run_from_candidates(
+        &self,
+        src: &dyn DataSource,
+        params: &UspecParams,
+        seed: u64,
+        cand: &CandidateSet,
+    ) -> Result<UspecResult> {
+        let params = self.validate(src, params)?;
+        let mut rng = Rng::new(seed);
+        let mut timer = PhaseTimer::new();
+        let _sel_seed = rng.next_u64(); // consumed by the shared sweep
+        let stage = SelectStage::from_params(&params);
+        let reps = timer.time("select", || {
+            let mut sel_rng = cand.rng.clone();
+            stage.refine(&cand.candidates, &mut sel_rng)
+        })?;
+        self.finish(src, &params, rng, timer, reps)
+    }
+
+    fn validate(&self, src: &dyn DataSource, params: &UspecParams) -> Result<UspecParams> {
+        let n = src.n();
+        ensure_arg!(n >= 2, "pipeline: need at least 2 objects");
+        let params = params.clamped(n);
+        ensure_arg!(params.k >= 1 && params.k <= n, "pipeline: bad k={}", params.k);
+        ensure_arg!(params.k <= params.p, "pipeline: k={} > p={}", params.k, params.p);
+        Ok(params)
+    }
+
+    /// Stages 2–4, shared by every entry point.
+    fn finish(
+        &self,
+        src: &dyn DataSource,
+        params: &UspecParams,
+        mut rng: Rng,
+        mut timer: PhaseTimer,
+        reps: Mat,
+    ) -> Result<UspecResult> {
+        let n = src.n();
+        let k_prime = (params.k_nn * params.k_prime_factor).max(params.k_nn + 1);
+        let index = timer.time("knr_index", || {
+            KnrIndex::build(&reps, k_prime, params.kmeans_iters.min(30), self.backend)
+        })?;
+        let knr_stage = KnrStage { k_nn: params.k_nn, mode: params.knr };
+        let knr =
+            timer.time("knr_query", || knr_stage.query(src, &index, self.chunk, self.backend))?;
+        let aff = timer.time("affinity", || AffinityStage.run(n, index.p(), &knr));
+        let tc_seed = rng.next_u64();
+        let km_seed = rng.next_u64();
+        let stage = PartitionStage {
+            k: params.k,
+            solver: params.solver,
+            kmeans_iters: params.kmeans_iters,
+        };
+        let (labels, embedding) =
+            stage.run(&aff.b, params.k.min(index.p()), tc_seed, km_seed, &mut timer)?;
+        Ok(UspecResult { labels, embedding, timer, sigma: aff.sigma })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::affinity::NativeBackend;
+    use crate::data::synthetic::two_moons;
+    use crate::metrics::nmi;
+
+    #[test]
+    fn engine_clusters_from_a_mat_source() {
+        let ds = two_moons(1200, 0.06, 5);
+        let params = UspecParams { k: 2, p: 150, ..Default::default() };
+        let res = Pipeline::new(&NativeBackend).run(&ds.x, &params, 42).unwrap();
+        assert!(nmi(&res.labels, &ds.y) > 0.9);
+        assert!(res.sigma > 0.0);
+        for phase in ["select", "knr_index", "knr_query", "affinity", "transfer_cut", "discretize"]
+        {
+            assert!(
+                res.timer.phases.iter().any(|(n, _)| n == phase),
+                "missing phase {phase}"
+            );
+        }
+    }
+
+    #[test]
+    fn chunk_size_is_operational_not_semantic() {
+        // A resident Mat takes the zero-copy single-chunk fast path, so
+        // exercise real chunking through the on-disk source.
+        let ds = two_moons(900, 0.06, 6);
+        let dir = std::env::temp_dir().join("uspec_pipeline_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bin =
+            crate::streaming::BinDataset::write_mat(&dir.join("chunks.bin"), &ds.x).unwrap();
+        let params = UspecParams { k: 2, p: 100, ..Default::default() };
+        let a = Pipeline::new(&NativeBackend).with_chunk(64).run(&bin, &params, 9).unwrap();
+        let b = Pipeline::new(&NativeBackend).with_chunk(8192).run(&bin, &params, 9).unwrap();
+        let c = Pipeline::new(&NativeBackend).run(&ds.x, &params, 9).unwrap();
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.labels, c.labels);
+        assert_eq!(a.sigma.to_bits(), b.sigma.to_bits());
+        assert_eq!(a.sigma.to_bits(), c.sigma.to_bits());
+    }
+
+    #[test]
+    fn shared_sweep_resumes_identically() {
+        let ds = two_moons(700, 0.06, 7);
+        let params = UspecParams { k: 2, p: 90, ..Default::default() };
+        let pipe = Pipeline::new(&NativeBackend).with_chunk(256);
+        let direct = pipe.run(&ds.x, &params, 33).unwrap();
+        let clamped = params.clamped(ds.x.rows);
+        let stage = SelectStage::from_params(&clamped);
+        let specs = vec![(stage.candidate_size(ds.x.rows), Pipeline::selection_seed(33))];
+        let cands = pipe.sweep_candidates(&ds.x, &specs).unwrap();
+        let resumed = pipe.run_from_candidates(&ds.x, &params, 33, &cands[0]).unwrap();
+        assert_eq!(direct.labels, resumed.labels);
+        assert_eq!(direct.sigma.to_bits(), resumed.sigma.to_bits());
+    }
+
+    #[test]
+    fn kmeans_full_requires_resident_data() {
+        let ds = two_moons(300, 0.05, 8);
+        let params = UspecParams {
+            k: 2,
+            p: 40,
+            selection: SelectStrategy::KmeansFull,
+            ..Default::default()
+        };
+        // resident: fine
+        assert!(Pipeline::new(&NativeBackend).run(&ds.x, &params, 1).is_ok());
+    }
+
+    #[test]
+    fn rejects_degenerate_inputs() {
+        let ds = two_moons(10, 0.05, 9);
+        let pipe = Pipeline::new(&NativeBackend);
+        assert!(pipe.run(&ds.x, &UspecParams { k: 0, ..Default::default() }, 1).is_err());
+        assert!(pipe.run(&ds.x, &UspecParams { k: 11, ..Default::default() }, 1).is_err());
+        let one = Mat::from_vec(1, 2, vec![0.0, 0.0]);
+        assert!(pipe.run(&one, &UspecParams::default(), 1).is_err());
+    }
+}

@@ -1,0 +1,245 @@
+//! The data-access layer of the staged pipeline: a [`DataSource`] is
+//! anything that can report its shape and hand out contiguous row chunks
+//! into a caller-provided buffer. The engine never assumes the data is
+//! resident — an in-memory [`Mat`], an on-disk
+//! [`crate::streaming::BinDataset`], a loader-produced
+//! [`crate::data::Dataset`], and (later) a remote shard all drive the
+//! same stages.
+//!
+//! Chunked iteration is strictly sequential and row-ordered, so every
+//! algorithm built on it (reservoir sampling, chunked KNR queries) is
+//! *chunk-size invariant*: the chunk is an operational knob (resident
+//! working set, I/O granularity), never a semantic one. That invariance
+//! is what lets one engine serve in-memory and out-of-core execution
+//! with bit-identical results — see `rust/tests/pipeline_equivalence.rs`.
+
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+use crate::{ensure_arg, Result};
+
+/// A clustering input: `n` rows of dimension `d`, readable in contiguous
+/// row chunks. Implementations must be cheap to query for shape and must
+/// fill the caller's buffer (reusing its allocation) on `read_rows`.
+pub trait DataSource: Sync {
+    /// Number of objects (rows).
+    fn n(&self) -> usize;
+
+    /// Feature dimension (columns).
+    fn d(&self) -> usize;
+
+    /// Fill `buf` with rows `[start, start+len)`. `buf` is resized to
+    /// `len × d` and its allocation is reused across calls.
+    fn read_rows(&self, start: usize, len: usize, buf: &mut Mat) -> Result<()>;
+
+    /// Zero-copy access to the full matrix when the data is resident.
+    /// Stages that genuinely need all rows at once (e.g. k-means-full
+    /// selection) use this; everything else goes through `read_rows`.
+    fn as_mat(&self) -> Option<&Mat> {
+        None
+    }
+}
+
+impl DataSource for Mat {
+    fn n(&self) -> usize {
+        self.rows
+    }
+
+    fn d(&self) -> usize {
+        self.cols
+    }
+
+    fn read_rows(&self, start: usize, len: usize, buf: &mut Mat) -> Result<()> {
+        ensure_arg!(start + len <= self.rows, "read_rows: out of range");
+        buf.rows = len;
+        buf.cols = self.cols;
+        buf.data.clear();
+        buf.data.extend_from_slice(&self.data[start * self.cols..(start + len) * self.cols]);
+        Ok(())
+    }
+
+    fn as_mat(&self) -> Option<&Mat> {
+        Some(self)
+    }
+}
+
+impl DataSource for crate::data::Dataset {
+    fn n(&self) -> usize {
+        self.x.rows
+    }
+
+    fn d(&self) -> usize {
+        self.x.cols
+    }
+
+    fn read_rows(&self, start: usize, len: usize, buf: &mut Mat) -> Result<()> {
+        self.x.read_rows(start, len, buf)
+    }
+
+    fn as_mat(&self) -> Option<&Mat> {
+        Some(&self.x)
+    }
+}
+
+/// Sequentially visit `src` in chunks of at most `chunk` rows, reusing a
+/// single `chunk × d` buffer for the whole sweep. A resident source
+/// ([`DataSource::as_mat`]) is delivered zero-copy as one full chunk:
+/// every algorithm the engine builds on this iterator is row-ordered and
+/// chunk-size invariant, so the fast path changes no result — only the
+/// N×d memcpy an in-memory pass would otherwise pay.
+pub fn for_each_chunk(
+    src: &dyn DataSource,
+    chunk: usize,
+    mut f: impl FnMut(usize, &Mat) -> Result<()>,
+) -> Result<()> {
+    if let Some(m) = src.as_mat() {
+        if m.rows == 0 {
+            return Ok(());
+        }
+        return f(0, m);
+    }
+    let chunk = chunk.max(1);
+    let n = src.n();
+    let mut buf = Mat::zeros(0, src.d());
+    let mut start = 0;
+    while start < n {
+        let len = chunk.min(n - start);
+        src.read_rows(start, len, &mut buf)?;
+        f(start, &buf)?;
+        start += len;
+    }
+    Ok(())
+}
+
+/// Multi-target single-pass reservoir sample (Vitter's Algorithm R): one
+/// sequential sweep over `src` fills one independent reservoir per spec,
+/// each driven by its own RNG. Per target, the draw stream is exactly
+/// what an independent single-target sweep would consume, so sharing the
+/// pass never changes any sample — this is how an ensemble amortizes its
+/// m candidate sweeps into one read of the data.
+///
+/// Each `(size, rng)` spec is advanced in place; sizes are clamped to
+/// `src.n()`.
+pub fn reservoir_multi(
+    src: &dyn DataSource,
+    chunk: usize,
+    specs: &mut [(usize, Rng)],
+) -> Result<Vec<Mat>> {
+    let n = src.n();
+    let d = src.d();
+    let sizes: Vec<usize> = specs.iter().map(|(s, _)| (*s).min(n)).collect();
+    ensure_arg!(sizes.iter().all(|&s| s >= 1), "reservoir: empty sample");
+    let mut outs: Vec<Mat> = sizes.iter().map(|&s| Mat::zeros(s, d)).collect();
+    let mut seen = 0usize;
+    for_each_chunk(src, chunk, |_, m| {
+        for i in 0..m.rows {
+            let row = m.row(i);
+            for (t, (_, rng)) in specs.iter_mut().enumerate() {
+                let size = sizes[t];
+                if seen < size {
+                    outs[t].row_mut(seen).copy_from_slice(row);
+                } else {
+                    let j = rng.usize(seen + 1);
+                    if j < size {
+                        outs[t].row_mut(j).copy_from_slice(row);
+                    }
+                }
+            }
+            seen += 1;
+        }
+        Ok(())
+    })?;
+    Ok(outs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::two_moons;
+
+    /// A `Mat` stripped of its resident fast path, so tests exercise the
+    /// chunked `read_rows` iteration.
+    struct NonResident<'a>(&'a Mat);
+
+    impl DataSource for NonResident<'_> {
+        fn n(&self) -> usize {
+            self.0.rows
+        }
+
+        fn d(&self) -> usize {
+            self.0.cols
+        }
+
+        fn read_rows(&self, start: usize, len: usize, buf: &mut Mat) -> Result<()> {
+            self.0.read_rows(start, len, buf)
+        }
+    }
+
+    #[test]
+    fn chunks_cover_all_rows() {
+        let ds = two_moons(257, 0.05, 1);
+        let src = NonResident(&ds.x);
+        let mut rows = 0usize;
+        let mut calls = 0usize;
+        for_each_chunk(&src, 100, |start, m| {
+            for i in 0..m.rows {
+                assert_eq!(m.row(i), ds.x.row(start + i));
+            }
+            rows += m.rows;
+            calls += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(rows, 257);
+        assert_eq!(calls, 3); // 100 + 100 + 57
+
+        // a resident Mat is delivered zero-copy as one full chunk
+        let mut calls = 0usize;
+        for_each_chunk(&ds.x, 100, |start, m| {
+            assert_eq!(start, 0);
+            assert_eq!(m.rows, 257);
+            calls += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(calls, 1);
+        assert_eq!(ds.x.as_mat().unwrap().rows, 257);
+    }
+
+    #[test]
+    fn dataset_source_delegates() {
+        let ds = two_moons(64, 0.05, 2);
+        assert_eq!(DataSource::n(&ds), 64);
+        assert_eq!(DataSource::d(&ds), 2);
+        let mut buf = Mat::zeros(0, 2);
+        ds.read_rows(10, 5, &mut buf).unwrap();
+        assert_eq!(buf.row(0), ds.x.row(10));
+    }
+
+    #[test]
+    fn shared_sweep_matches_independent_sweeps() {
+        let ds = two_moons(500, 0.05, 3);
+        let src = NonResident(&ds.x);
+        let mut shared = vec![(40usize, Rng::new(7)), (25usize, Rng::new(8))];
+        let outs = reservoir_multi(&src, 128, &mut shared).unwrap();
+        for (i, &(size, seed)) in [(40usize, 7u64), (25, 8)].iter().enumerate() {
+            let mut solo = vec![(size, Rng::new(seed))];
+            let alone = reservoir_multi(&src, 128, &mut solo).unwrap();
+            assert_eq!(outs[i].data, alone[0].data, "target {i} diverged");
+        }
+    }
+
+    #[test]
+    fn reservoir_chunk_size_and_residency_invariant() {
+        let ds = two_moons(300, 0.05, 4);
+        let src = NonResident(&ds.x);
+        let sample = |src: &dyn DataSource, chunk: usize| {
+            let mut specs = vec![(50usize, Rng::new(11))];
+            reservoir_multi(src, chunk, &mut specs).unwrap().pop().unwrap()
+        };
+        let a = sample(&src, 17);
+        let b = sample(&src, 300);
+        let c = sample(&ds.x, 17); // resident fast path
+        assert_eq!(a.data, b.data);
+        assert_eq!(a.data, c.data);
+    }
+}

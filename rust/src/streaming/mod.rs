@@ -1,27 +1,25 @@
-//! Out-of-core U-SPEC: cluster datasets that do not fit in memory.
+//! Out-of-core execution: the on-disk dataset format plus thin wrappers
+//! over the staged engine in [`crate::pipeline`].
 //!
-//! The paper's motivation is "ten-million-level datasets on a PC with
-//! 64 GB memory" (§1). This module takes the limited-resource premise one
-//! step further: the dataset lives **on disk** ([`BinDataset`], a flat
-//! row-major f32 file) and the whole U-SPEC pipeline runs in two
-//! bounded-memory passes —
+//! This module owns [`BinDataset`] — a flat row-major f32 file — and its
+//! [`DataSource`] implementation. The clustering itself contains **no
+//! pipeline logic of its own** anymore: [`stream_uspec`] is
+//! `Pipeline::run` with the caller's chunk size, and [`stream_usenc`] is
+//! [`crate::usenc::usenc_chunked`]. Because the engine's sweeps are
+//! chunk-size invariant and source-agnostic, an on-disk run produces
+//! labels bit-identical to the in-memory run for the same seed
+//! (`rust/tests/pipeline_equivalence.rs`).
 //!
-//! 1. **Pass 1** (selection): reservoir-sample the p′ candidate
-//!    representatives in one sequential sweep (`O(p′·d)` resident), then
-//!    k-means them down to the p representatives and build the
-//!    [`KnrIndex`] (both `O(p·d)`).
-//! 2. **Pass 2** (affinity): stream objects chunk-by-chunk through the
-//!    approximate-KNR search, appending to the sparse `B` (`O(N·K)` —
-//!    the algorithm's intrinsic memory floor, see §3.1.4) and then run the
-//!    transfer cut and the k-means discretization on the `N×k` embedding.
-//!
-//! Resident peak is `O(N·K + chunk·d + p·d)` — independent of `N·d`,
-//! which only ever streams off disk.
+//! Resident peak of an out-of-core run is `O(N·K + chunk·d + p·d)` —
+//! independent of `N·d`, which only ever streams off disk. The paper's
+//! motivation is "ten-million-level datasets on a PC with 64 GB memory"
+//! (§1); the on-disk path takes the limited-resource premise one step
+//! further.
 
-use crate::affinity::{build_affinity, knr::KnrIndex, select::SelectStrategy, DistanceBackend};
-use crate::bipartite::{row_normalize, transfer_cut};
-use crate::kmeans::{kmeans, KmeansParams};
+use crate::affinity::DistanceBackend;
 use crate::linalg::Mat;
+use crate::pipeline::{reservoir_multi, DataSource, Pipeline};
+use crate::usenc::{usenc_chunked, UsencParams, UsencResult};
 use crate::uspec::UspecParams;
 use crate::util::rng::Rng;
 use crate::util::timer::PhaseTimer;
@@ -86,33 +84,18 @@ impl BinDataset {
 
     /// Read rows `[start, start+len)` into a dense matrix.
     pub fn read_chunk(&self, start: usize, len: usize) -> Result<Mat> {
-        ensure_arg!(start + len <= self.n, "read_chunk: out of range");
-        let mut f = std::fs::File::open(&self.path)?;
-        f.seek(SeekFrom::Start(24 + (start * self.d * 4) as u64))?;
-        let mut buf = vec![0u8; len * self.d * 4];
-        f.read_exact(&mut buf)?;
-        let data: Vec<f32> = buf
-            .chunks_exact(4)
-            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
-            .collect();
-        Ok(Mat::from_vec(len, self.d, data))
+        let mut m = Mat::zeros(0, self.d);
+        self.read_rows(start, len, &mut m)?;
+        Ok(m)
     }
 
     /// Sequentially visit the dataset in chunks of `chunk` rows.
     pub fn for_each_chunk(
         &self,
         chunk: usize,
-        mut f: impl FnMut(usize, &Mat) -> Result<()>,
+        f: impl FnMut(usize, &Mat) -> Result<()>,
     ) -> Result<()> {
-        let chunk = chunk.max(1);
-        let mut start = 0;
-        while start < self.n {
-            let len = chunk.min(self.n - start);
-            let m = self.read_chunk(start, len)?;
-            f(start, &m)?;
-            start += len;
-        }
-        Ok(())
+        crate::pipeline::for_each_chunk(self, chunk, f)
     }
 
     /// Write an in-memory matrix to disk (test/example helper).
@@ -122,6 +105,31 @@ impl BinDataset {
             w.push_row(x.row(i))?;
         }
         w.finish()
+    }
+}
+
+impl DataSource for BinDataset {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn read_rows(&self, start: usize, len: usize, buf: &mut Mat) -> Result<()> {
+        ensure_arg!(start + len <= self.n, "read_rows: out of range");
+        let mut f = std::fs::File::open(&self.path)?;
+        f.seek(SeekFrom::Start(24 + (start * self.d * 4) as u64))?;
+        let mut bytes = vec![0u8; len * self.d * 4];
+        f.read_exact(&mut bytes)?;
+        buf.rows = len;
+        buf.cols = self.d;
+        buf.data.clear();
+        buf.data.extend(
+            bytes.chunks_exact(4).map(|b| f32::from_le_bytes(b.try_into().unwrap())),
+        );
+        Ok(())
     }
 }
 
@@ -156,21 +164,21 @@ impl BinWriter {
     }
 }
 
-/// Resource limits for the streaming pipeline.
+/// Resource limits for the streaming wrappers.
 #[derive(Debug, Clone)]
 pub struct StreamParams {
-    /// Rows per chunk in pass 2 (the resident working set is
+    /// Rows per chunk in every sweep (the resident working set is
     /// `chunk × d` f32s plus the growing sparse B).
     pub chunk: usize,
-    /// U-SPEC hyper-parameters (p, K, k, solver, ...). The `selection`
-    /// field is ignored: streaming always uses reservoir + k-means (the
-    /// hybrid strategy's out-of-core form).
+    /// U-SPEC hyper-parameters (p, K, k, solver, ...). Random and hybrid
+    /// selection sweep the disk; k-means-full needs resident data and is
+    /// rejected for on-disk sources.
     pub base: UspecParams,
 }
 
 impl Default for StreamParams {
     fn default() -> Self {
-        StreamParams { chunk: 8192, base: UspecParams::default() }
+        StreamParams { chunk: crate::pipeline::DEFAULT_CHUNK, base: UspecParams::default() }
     }
 }
 
@@ -184,102 +192,53 @@ pub struct StreamResult {
 }
 
 /// Single-pass reservoir sample of `size` rows (Vitter's Algorithm R),
-/// reading the dataset sequentially in `chunk`-row blocks.
-pub fn reservoir_sample(
-    ds: &BinDataset,
-    size: usize,
-    chunk: usize,
-    seed: u64,
-) -> Result<Mat> {
+/// reading the dataset sequentially in `chunk`-row blocks. Thin wrapper
+/// over [`crate::pipeline::reservoir_multi`].
+pub fn reservoir_sample(ds: &BinDataset, size: usize, chunk: usize, seed: u64) -> Result<Mat> {
     let size = size.min(ds.n());
     ensure_arg!(size >= 1, "reservoir_sample: empty sample");
-    let mut rng = Rng::new(seed ^ 0x9E5E_2B01);
-    let mut sample = Mat::zeros(size, ds.d());
-    let mut seen = 0usize;
-    ds.for_each_chunk(chunk, |_, m| {
-        for i in 0..m.rows {
-            if seen < size {
-                sample.row_mut(seen).copy_from_slice(m.row(i));
-            } else {
-                let j = rng.usize(seen + 1);
-                if j < size {
-                    sample.row_mut(j).copy_from_slice(m.row(i));
-                }
-            }
-            seen += 1;
-        }
-        Ok(())
-    })?;
-    Ok(sample)
+    let mut specs = vec![(size, Rng::new(seed ^ 0x9E5E_2B01))];
+    let mut outs = reservoir_multi(ds, chunk, &mut specs)?;
+    Ok(outs.pop().expect("one reservoir"))
 }
 
-/// Out-of-core U-SPEC over an on-disk dataset.
+/// Modeled resident peak of an out-of-core run: sparse B
+/// (idx u32 + d2 f32 + csr f64) + chunk buffer + representative index +
+/// embedding.
+fn peak_model(n: usize, d: usize, chunk: usize, base: &UspecParams) -> u64 {
+    let k_nn = base.k_nn.min(base.p);
+    (n * k_nn) as u64 * (4 + 4 + 8 + 4)
+        + (chunk * d) as u64 * 4
+        + (base.p * d) as u64 * 4
+        + (n * base.k) as u64 * 4
+}
+
+/// Out-of-core U-SPEC over an on-disk dataset: [`Pipeline::run`] with the
+/// caller's chunk size.
 pub fn stream_uspec(
     ds: &BinDataset,
     params: &StreamParams,
     seed: u64,
     backend: &dyn DistanceBackend,
 ) -> Result<StreamResult> {
-    let n = ds.n();
-    let base = params.base.clamped(n);
-    let p = base.p;
-    let k_nn = base.k_nn.min(p);
-    ensure_arg!(n >= 2, "stream_uspec: need at least 2 objects");
-    let mut timer = PhaseTimer::new();
+    let base = params.base.clamped(ds.n());
+    let res = Pipeline::new(backend).with_chunk(params.chunk).run(ds, &base, seed)?;
+    let peak_bytes = peak_model(ds.n(), ds.d(), params.chunk, &base);
+    Ok(StreamResult { labels: res.labels, peak_bytes, timer: res.timer })
+}
 
-    // ---- Pass 1: selection ------------------------------------------------
-    let candidate_factor = match base.selection {
-        SelectStrategy::Hybrid { candidate_factor } => candidate_factor,
-        _ => 10,
-    };
-    let p_prime = (p * candidate_factor).min(n);
-    let candidates = timer.time("reservoir", || {
-        reservoir_sample(ds, p_prime, params.chunk, seed ^ 0x5E1)
-    })?;
-    let reps = timer.time("selection", || {
-        let km = kmeans(
-            &candidates,
-            &KmeansParams { k: p, max_iter: base.kmeans_iters, tol: 1e-3, ..Default::default() },
-            seed ^ 0x5E2,
-        )?;
-        Ok::<Mat, Error>(km.centers)
-    })?;
-    let index = timer.time("knr_index", || {
-        KnrIndex::build(&reps, base.k_prime_factor * k_nn, base.kmeans_iters, backend)
-    })?;
-
-    // ---- Pass 2: streamed affinity ----------------------------------------
-    let mut idx = Vec::with_capacity(n * k_nn);
-    let mut d2 = Vec::with_capacity(n * k_nn);
-    timer.time("knr_stream", || {
-        ds.for_each_chunk(params.chunk, |_, m| {
-            let res = index.approx_knr(m, k_nn, backend);
-            idx.extend_from_slice(&res.idx);
-            d2.extend_from_slice(&res.d2);
-            Ok(())
-        })
-    })?;
-    let knr = crate::affinity::knr::KnrResult { idx, d2, k: k_nn };
-    let aff = timer.time("affinity", || Ok::<_, Error>(build_affinity(n, p, k_nn, &knr)))?;
-
-    // ---- Transfer cut + discretization -------------------------------------
-    let tc = timer.time("eigen", || transfer_cut(&aff.b, base.k, base.solver, seed ^ 0x5E3))?;
-    let mut emb = tc.embedding;
-    row_normalize(&mut emb);
-    let km = timer.time("discretize", || {
-        kmeans(
-            &emb,
-            &KmeansParams { k: base.k, max_iter: base.kmeans_iters, ..Default::default() },
-            seed ^ 0x5E4,
-        )
-    })?;
-
-    // Peak model: sparse B (idx u32 + d2 f32 + csr f64) + chunk + index.
-    let peak_bytes = (n * k_nn) as u64 * (4 + 4 + 8 + 4)
-        + (params.chunk * ds.d()) as u64 * 4
-        + (p * ds.d()) as u64 * 4
-        + (n * base.k) as u64 * 4;
-    Ok(StreamResult { labels: km.labels, peak_bytes, timer })
+/// Out-of-core U-SENC over an on-disk dataset:
+/// [`crate::usenc::usenc_chunked`] with the caller's chunk size. The m
+/// candidate sweeps share one disk pass; each base clusterer streams its
+/// own KNR pass, so the resident peak stays at single-clusterer scale.
+pub fn stream_usenc(
+    ds: &BinDataset,
+    params: &UsencParams,
+    chunk: usize,
+    seed: u64,
+    backend: &dyn DistanceBackend,
+) -> Result<UsencResult> {
+    usenc_chunked(ds, params, seed, backend, chunk)
 }
 
 #[cfg(test)]
@@ -357,7 +316,7 @@ mod tests {
         let path = tmp("circles.bin");
         let bin = BinDataset::write_mat(&path, &ds.x).unwrap();
         let params = StreamParams {
-            chunk: 700, // force multiple pass-2 chunks
+            chunk: 700, // force multiple chunks per sweep
             base: UspecParams { k: 3, p: 250, ..Default::default() },
         };
         let res = stream_uspec(&bin, &params, 42, &NativeBackend).unwrap();
@@ -369,7 +328,9 @@ mod tests {
     }
 
     #[test]
-    fn streamed_matches_in_memory_quality() {
+    fn streamed_equals_in_memory() {
+        // The wrapper claim made precise: one engine, so the on-disk run
+        // IS the in-memory run for a fixed seed.
         let ds = two_moons(2000, 0.06, 9);
         let path = tmp("moons.bin");
         let bin = BinDataset::write_mat(&path, &ds.x).unwrap();
@@ -384,10 +345,27 @@ mod tests {
             7,
         )
         .unwrap();
+        assert_eq!(streamed.labels, in_mem.labels);
         let s_nmi = nmi(&streamed.labels, &ds.y);
-        let m_nmi = nmi(&in_mem.labels, &ds.y);
         assert!(s_nmi > 0.85, "streamed nmi={s_nmi}");
-        assert!(s_nmi > m_nmi - 0.15, "streamed {s_nmi} vs in-mem {m_nmi}");
+    }
+
+    #[test]
+    fn streamed_usenc_runs_from_disk() {
+        let ds = two_moons(900, 0.06, 12);
+        let path = tmp("usenc.bin");
+        let bin = BinDataset::write_mat(&path, &ds.x).unwrap();
+        let params = UsencParams {
+            k: 2,
+            m: 4,
+            k_min: 4,
+            k_max: 9,
+            base: UspecParams { p: 90, ..Default::default() },
+        };
+        let res = stream_usenc(&bin, &params, 256, 21, &NativeBackend).unwrap();
+        assert_eq!(res.ensemble.m(), 4);
+        let score = nmi(&res.labels, &ds.y);
+        assert!(score > 0.8, "streamed usenc nmi={score}");
     }
 
     #[test]

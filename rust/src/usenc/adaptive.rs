@@ -3,13 +3,18 @@
 //! and stop once the consensus stabilizes, measured by the NMI between
 //! consecutive consensus clusterings. Spends base-clusterer budget only
 //! while it still changes the answer.
+//!
+//! Runs on any [`DataSource`] (in-memory or on-disk). Each growth batch
+//! sweeps its base clusterers' candidate reservoirs in one pass over the
+//! source, so an adaptive run that converges after r rounds costs r
+//! selection passes — not one per base clusterer.
 
 use crate::affinity::DistanceBackend;
-use crate::linalg::Mat;
 use crate::metrics::nmi;
-use crate::usenc::{consensus_bipartite, draw_base_k, Ensemble, UsencParams};
-use crate::uspec::{uspec_with_backend, UspecParams};
-use crate::util::rng::Rng;
+use crate::pipeline::{DataSource, Pipeline, DEFAULT_CHUNK};
+use crate::usenc::{
+    consensus_bipartite, derive_jobs, run_job, sweep_job_candidates, Ensemble, UsencParams,
+};
 use crate::{ensure_arg, Result};
 
 /// Stopping policy for [`usenc_adaptive`].
@@ -45,11 +50,12 @@ pub struct AdaptiveResult {
     pub converged: bool,
 }
 
-/// U-SENC with adaptive ensemble size. Base clusterers are derived from
-/// the same seed stream as [`crate::usenc::generate_ensemble`], so a
-/// converged adaptive run is a prefix of the fixed-m run.
+/// U-SENC with adaptive ensemble size. Base clusterers come from the same
+/// job stream as [`crate::usenc::generate_ensemble`]
+/// ([`crate::usenc::derive_jobs`]), so a converged adaptive run is a
+/// prefix of the fixed-m run.
 pub fn usenc_adaptive(
-    x: &Mat,
+    source: &dyn DataSource,
     params: &UsencParams,
     adaptive: &AdaptiveParams,
     seed: u64,
@@ -65,25 +71,32 @@ pub fn usenc_adaptive(
     // stability > 1.0 is allowed: NMI never reaches it, so it disables
     // early stopping (run exactly to m_max).
     ensure_arg!(adaptive.stability > 0.0, "adaptive: stability must be > 0");
-    let mut rng = Rng::new(seed);
+    let pipe = Pipeline::new(backend).with_chunk(DEFAULT_CHUNK);
+    // Job i is fixed by the draws before it, so deriving the full m_max
+    // stream up front consumes exactly the fixed-m seed schedule.
+    let all_jobs = derive_jobs(
+        &UsencParams { m: adaptive.m_max, ..params.clone() },
+        source.n(),
+        seed,
+    );
     let mut ens = Ensemble::default();
     let mut prev_labels: Option<Vec<u32>> = None;
     let mut trace = Vec::new();
     let mut stable_rounds = 0usize;
-    let mut i = 0usize;
     loop {
-        // grow the ensemble by one batch (same seed stream as fixed-m)
+        // grow the ensemble by one batch (one shared candidate sweep per
+        // budget-bounded group — usually one per batch)
         let grow_to = (ens.m() + adaptive.batch).min(adaptive.m_max);
-        while ens.m() < grow_to {
-            let ki = draw_base_k(&mut rng, params.k_min, params.k_max, x.rows);
-            let base = UspecParams { k: ki, ..params.base.clone() };
-            let job_seed = rng.fork(i as u64).next_u64();
-            let res = uspec_with_backend(x, &base, job_seed, backend)?;
-            ens.push(res.labels);
-            i += 1;
+        let batch_jobs = &all_jobs[ens.m()..grow_to];
+        let group = crate::usenc::sweep_group_size(params, source.n(), source.d()).max(1);
+        for group_jobs in batch_jobs.chunks(group) {
+            let cands = sweep_job_candidates(&pipe, source, params, group_jobs)?;
+            for (i, job) in group_jobs.iter().enumerate() {
+                let labels = run_job(&pipe, source, params, job, cands.as_ref().map(|c| &c[i]))?;
+                ens.push(labels);
+            }
         }
-        let (labels, _) =
-            consensus_bipartite(&ens, params.k, params.base.solver, seed ^ 0xC075)?;
+        let labels = consensus_bipartite(&ens, params.k, params.base.solver, seed ^ 0xC075)?;
         if let Some(prev) = &prev_labels {
             let s = nmi(prev, &labels);
             trace.push(s);
@@ -106,6 +119,7 @@ mod tests {
     use super::*;
     use crate::affinity::NativeBackend;
     use crate::data::synthetic::{concentric_circles, two_moons};
+    use crate::uspec::UspecParams;
 
     fn base_params(k: usize, p: usize) -> UsencParams {
         UsencParams {

@@ -6,6 +6,17 @@
 //! bipartite graph B̃ (exactly m ones per row) and partitions it with the
 //! same transfer cut. Complexity O(N·m·p^½·d) time, O(N·p^½) memory.
 //!
+//! Every entry point takes a [`DataSource`], so the ensemble runs
+//! in-memory (`&Mat`) and out-of-core (`&BinDataset`) through the same
+//! staged engine ([`crate::pipeline`]). The m per-clusterer candidate
+//! sweeps are amortized into shared passes over the data
+//! ([`Pipeline::sweep_candidates`]) — one pass per group of
+//! [`sweep_group_size`] jobs (usually one pass total; the grouping only
+//! bounds the m·p′·d candidate residency under [`SWEEP_BUDGET_BYTES`]).
+//! Each base clusterer then streams its own KNR pass, so the resident
+//! peak stays at single-clusterer scale plus one sweep group's
+//! candidates.
+//!
 //! Base clusterers can be driven sequentially ([`usenc`]), by the
 //! leader/worker scheduler in [`crate::coordinator`], or with an adaptive
 //! ensemble size ([`adaptive::usenc_adaptive`]).
@@ -13,10 +24,10 @@
 pub mod adaptive;
 
 use crate::affinity::DistanceBackend;
-use crate::bipartite::{transfer_cut, EigSolver};
-use crate::kmeans::{kmeans, KmeansParams};
-use crate::linalg::{Csr, Mat};
-use crate::uspec::{uspec_with_backend, UspecParams};
+use crate::bipartite::EigSolver;
+use crate::linalg::Csr;
+use crate::pipeline::{CandidateSet, DataSource, Pipeline, SelectStage, DEFAULT_CHUNK};
+use crate::uspec::UspecParams;
 use crate::util::par;
 use crate::util::rng::Rng;
 use crate::util::timer::PhaseTimer;
@@ -120,29 +131,141 @@ pub struct UsencResult {
     pub timer: PhaseTimer,
 }
 
-/// Draw the i-th base clusterer's cluster count kⁱ (Eq. 14), clamped to n.
+/// Draw the i-th base clusterer's cluster count kⁱ uniformly from the
+/// **inclusive** range [k_min, k_max] (Eq. 14), floored at 2 and clamped
+/// to n.
 pub fn draw_base_k(rng: &mut Rng, k_min: usize, k_max: usize, n: usize) -> usize {
     let (lo, hi) = (k_min.min(k_max), k_max.max(k_min));
-    let tau = rng.f64();
-    let k = ((tau * (hi - lo) as f64).floor() as usize + lo).max(2);
+    let k = (lo + rng.usize(hi - lo + 1)).max(2);
     k.min(n)
 }
 
-/// Generate the ensemble of m base clusterings via m U-SPEC runs.
+/// One base-clusterer job, fully specified before any worker starts.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub id: usize,
+    pub k: usize,
+    pub seed: u64,
+}
+
+/// The ensemble's job stream: kⁱ draws and per-job seeds. Every driver —
+/// sequential ([`generate_ensemble`]), scheduled
+/// ([`crate::coordinator::run_base_clusterers`]) and adaptive
+/// ([`adaptive::usenc_adaptive`]) — derives its jobs from this one
+/// function, so their ensembles are prefixes of each other by
+/// construction. Job `i` depends only on draws before it, so deriving
+/// more jobs never changes an earlier job.
+pub fn derive_jobs(params: &UsencParams, n: usize, seed: u64) -> Vec<JobSpec> {
+    let mut rng = Rng::new(seed);
+    (0..params.m)
+        .map(|i| {
+            let k = draw_base_k(&mut rng, params.k_min, params.k_max, n);
+            let seed = rng.fork(i as u64).next_u64();
+            JobSpec { id: i, k, seed }
+        })
+        .collect()
+}
+
+/// Per-job U-SPEC parameters (the base params with the job's k).
+pub fn job_params(params: &UsencParams, job: &JobSpec) -> UspecParams {
+    UspecParams { k: job.k, ..params.base.clone() }
+}
+
+/// Byte budget for candidate sets held resident during a shared sweep.
+/// A sweep keeps every in-flight job's p′×d reservoir in memory at once,
+/// so ensembles are swept in groups of at most
+/// [`sweep_group_size`] jobs — amortizing disk passes without letting the
+/// m·p′·d candidate term outgrow the single-clusterer working set the
+/// out-of-core path promises.
+pub const SWEEP_BUDGET_BYTES: usize = 256 << 20;
+
+/// How many jobs one shared candidate sweep may carry for a source of
+/// `n`×`d` under [`SWEEP_BUDGET_BYTES`] (at least 1 — a single job's
+/// candidates are the pipeline's own working set).
+pub fn sweep_group_size(params: &UsencParams, n: usize, d: usize) -> usize {
+    // Upper bound on a job's candidate rows: clamping can raise p to the
+    // job's kⁱ ≤ k_max, so model with the larger of base-p and k_max.
+    let p_bound = params.base.p.max(params.k_max).min(n.max(1));
+    let stage = SelectStage {
+        p: p_bound,
+        ..SelectStage::from_params(&params.base)
+    };
+    let per_job = stage.candidate_size(n).max(1) * d.max(1) * 4;
+    (SWEEP_BUDGET_BYTES / per_job).max(1)
+}
+
+/// Sweep the candidate reservoirs of `jobs` in one pass over the source
+/// (None when the selection strategy cannot sweep, i.e. k-means-full —
+/// those jobs select per-run from the resident matrix instead).
+pub fn sweep_job_candidates(
+    pipe: &Pipeline,
+    source: &dyn DataSource,
+    params: &UsencParams,
+    jobs: &[JobSpec],
+) -> Result<Option<Vec<CandidateSet>>> {
+    let n = source.n();
+    if jobs.is_empty() || !SelectStage::from_params(&params.base).sweeps() {
+        return Ok(None);
+    }
+    let specs: Vec<(usize, u64)> = jobs
+        .iter()
+        .map(|job| {
+            let clamped = job_params(params, job).clamped(n);
+            let stage = SelectStage::from_params(&clamped);
+            (stage.candidate_size(n), Pipeline::selection_seed(job.seed))
+        })
+        .collect();
+    pipe.sweep_candidates(source, &specs).map(Some)
+}
+
+/// Run one job through the engine, resuming from its swept candidates
+/// when available.
+pub fn run_job(
+    pipe: &Pipeline,
+    source: &dyn DataSource,
+    params: &UsencParams,
+    job: &JobSpec,
+    cand: Option<&CandidateSet>,
+) -> Result<Vec<u32>> {
+    let base = job_params(params, job);
+    let res = match cand {
+        Some(c) => pipe.run_from_candidates(source, &base, job.seed, c)?,
+        None => pipe.run(source, &base, job.seed)?,
+    };
+    Ok(res.labels)
+}
+
+/// Generate the ensemble of m base clusterings via m U-SPEC runs over any
+/// source, with all m candidate sweeps amortized into one data pass.
 pub fn generate_ensemble(
-    x: &Mat,
+    source: &dyn DataSource,
     params: &UsencParams,
     seed: u64,
     backend: &dyn DistanceBackend,
 ) -> Result<Ensemble> {
-    let mut rng = Rng::new(seed);
+    generate_ensemble_chunked(source, params, seed, backend, DEFAULT_CHUNK)
+}
+
+/// [`generate_ensemble`] with an explicit chunk size (rows resident per
+/// sweep step). The chunk never changes the labels — only the working-set
+/// size of the passes over the source.
+pub fn generate_ensemble_chunked(
+    source: &dyn DataSource,
+    params: &UsencParams,
+    seed: u64,
+    backend: &dyn DistanceBackend,
+    chunk: usize,
+) -> Result<Ensemble> {
+    let pipe = Pipeline::new(backend).with_chunk(chunk);
+    let jobs = derive_jobs(params, source.n(), seed);
+    let group = sweep_group_size(params, source.n(), source.d());
     let mut ens = Ensemble::default();
-    for i in 0..params.m {
-        let ki = draw_base_k(&mut rng, params.k_min, params.k_max, x.rows);
-        let base = UspecParams { k: ki, ..params.base.clone() };
-        let job_seed = rng.fork(i as u64).next_u64();
-        let res = uspec_with_backend(x, &base, job_seed, backend)?;
-        ens.push(res.labels);
+    for group_jobs in jobs.chunks(group.max(1)) {
+        let cands = sweep_job_candidates(&pipe, source, params, group_jobs)?;
+        for (i, job) in group_jobs.iter().enumerate() {
+            let labels = run_job(&pipe, source, params, job, cands.as_ref().map(|c| &c[i]))?;
+            ens.push(labels);
+        }
     }
     Ok(ens)
 }
@@ -155,35 +278,42 @@ pub fn consensus_bipartite(
     k: usize,
     solver: EigSolver,
     seed: u64,
-) -> Result<(Vec<u32>, Mat)> {
+) -> Result<Vec<u32>> {
     ensure_arg!(ensemble.m() >= 1, "consensus: empty ensemble");
     let n = ensemble.n();
     ensure_arg!(k >= 1 && k <= n, "consensus: bad k={k}");
     let b = ensemble.incidence();
     ensure_arg!(k <= b.cols, "consensus: k={k} > total clusters {}", b.cols);
-    let tc = transfer_cut(&b, k, solver, seed)?;
-    let mut emb = tc.embedding.clone();
-    crate::bipartite::row_normalize(&mut emb);
-    let km = kmeans(
-        &emb,
-        &KmeansParams { k, max_iter: 100, ..Default::default() },
-        seed ^ 0xD15C,
-    )?;
-    Ok((km.labels, tc.embedding))
+    let stage = crate::pipeline::PartitionStage { k, solver, kmeans_iters: 100 };
+    let mut timer = PhaseTimer::new();
+    stage.run_labels(&b, k, seed, seed ^ 0xD15C, &mut timer)
 }
 
 /// Full U-SENC: ensemble generation + bipartite consensus (sequential
 /// base-clusterer execution; see [`crate::coordinator`] for the scheduled
-/// parallel path).
+/// parallel path). Runs out-of-core when `source` is not resident.
 pub fn usenc(
-    x: &Mat,
+    source: &dyn DataSource,
     params: &UsencParams,
     seed: u64,
     backend: &dyn DistanceBackend,
 ) -> Result<UsencResult> {
+    usenc_chunked(source, params, seed, backend, DEFAULT_CHUNK)
+}
+
+/// [`usenc`] with an explicit chunk size for the data sweeps.
+pub fn usenc_chunked(
+    source: &dyn DataSource,
+    params: &UsencParams,
+    seed: u64,
+    backend: &dyn DistanceBackend,
+    chunk: usize,
+) -> Result<UsencResult> {
     let mut timer = PhaseTimer::new();
-    let ensemble = timer.time("generation", || generate_ensemble(x, params, seed, backend))?;
-    let (labels, _emb) = timer.time("consensus", || {
+    let ensemble = timer.time("generation", || {
+        generate_ensemble_chunked(source, params, seed, backend, chunk)
+    })?;
+    let labels = timer.time("consensus", || {
         consensus_bipartite(&ensemble, params.k, params.base.solver, seed ^ 0xC075)
     })?;
     Ok(UsencResult { labels, ensemble, timer })
@@ -233,8 +363,8 @@ mod tests {
         // same partitions, permuted labels
         b.push(vec![2, 2, 2, 0, 0, 0, 1, 1, 1]);
         b.push(vec![1, 1, 2, 2, 2, 0, 0, 0, 1]);
-        let (la, _) = consensus_bipartite(&a, 3, EigSolver::Dense, 5).unwrap();
-        let (lb, _) = consensus_bipartite(&b, 3, EigSolver::Dense, 5).unwrap();
+        let la = consensus_bipartite(&a, 3, EigSolver::Dense, 5).unwrap();
+        let lb = consensus_bipartite(&b, 3, EigSolver::Dense, 5).unwrap();
         assert!((nmi(&la, &lb) - 1.0).abs() < 1e-9);
     }
 
@@ -270,15 +400,32 @@ mod tests {
     }
 
     #[test]
-    fn draw_base_k_in_range() {
+    fn draw_base_k_covers_inclusive_range() {
         let mut rng = Rng::new(1);
-        for _ in 0..200 {
+        let (mut saw_min, mut saw_max) = (false, false);
+        for _ in 0..2000 {
             let k = draw_base_k(&mut rng, 20, 60, 10_000);
             assert!((20..=60).contains(&k));
+            saw_min |= k == 20;
+            saw_max |= k == 60;
         }
+        // the inclusive draw must reach both endpoints (the old draw never
+        // produced k_max)
+        assert!(saw_min && saw_max, "min seen: {saw_min}, max seen: {saw_max}");
         // clamped by n
         let k = draw_base_k(&mut rng, 20, 60, 10);
         assert!(k <= 10);
+        // degenerate range
+        assert_eq!(draw_base_k(&mut rng, 7, 7, 100), 7);
+    }
+
+    #[test]
+    fn chunked_generation_matches_default() {
+        let ds = two_moons(500, 0.06, 8);
+        let params = small_params(2, 3, 60);
+        let a = generate_ensemble(&ds.x, &params, 5, &NativeBackend).unwrap();
+        let b = generate_ensemble_chunked(&ds.x, &params, 5, &NativeBackend, 128).unwrap();
+        assert_eq!(a.labelings, b.labelings);
     }
 
     #[test]

@@ -4,16 +4,19 @@
 //! representatives → sparse Gaussian cross-affinity `B` → transfer-cut
 //! bipartite partitioning → k-means discretization. Dominant complexity
 //! O(N·p^½·d) time and O(N·p^½) memory.
+//!
+//! [`uspec_with_backend`] is a thin wrapper over the staged engine in
+//! [`crate::pipeline`] — the same stages run the out-of-core path
+//! ([`crate::streaming`]) and the ensemble layer ([`crate::usenc`]), so
+//! in-memory and on-disk sources produce bit-identical labels for a
+//! fixed seed.
 
-use crate::affinity::{
-    build_affinity, knr::KnrIndex, select, DistanceBackend, NativeBackend, SelectStrategy,
-};
-use crate::bipartite::{transfer_cut, EigSolver};
-use crate::kmeans::{kmeans, KmeansParams};
+use crate::affinity::{DistanceBackend, NativeBackend, SelectStrategy};
+use crate::bipartite::EigSolver;
 use crate::linalg::Mat;
-use crate::util::rng::Rng;
+use crate::pipeline::Pipeline;
 use crate::util::timer::PhaseTimer;
-use crate::{ensure_arg, Result};
+use crate::Result;
 
 pub mod estimate;
 
@@ -85,59 +88,16 @@ pub struct UspecResult {
 }
 
 /// Run U-SPEC with an explicit distance backend (native or PJRT).
+/// Thin wrapper over [`Pipeline::run`] with the default chunk size — the
+/// engine's chunked sweeps are chunk-size invariant, so this matches the
+/// out-of-core path bit-for-bit.
 pub fn uspec_with_backend(
     x: &Mat,
     params: &UspecParams,
     seed: u64,
     backend: &dyn DistanceBackend,
 ) -> Result<UspecResult> {
-    let n = x.rows;
-    ensure_arg!(n >= 2, "uspec: need at least 2 objects");
-    let params = params.clamped(n);
-    ensure_arg!(params.k >= 1 && params.k <= n, "uspec: bad k={}", params.k);
-    ensure_arg!(params.k <= params.p, "uspec: k={} > p={}", params.k, params.p);
-    let mut rng = Rng::new(seed);
-    let mut timer = PhaseTimer::new();
-
-    // Phase 1: representative selection (§3.1.1). Selection only needs a
-    // coarse vector quantization — cap its k-means iterations (the paper's
-    // small `t`), independent of the discretization budget.
-    let sel_seed = rng.next_u64();
-    let sel_iters = params.kmeans_iters.min(20);
-    let reps = timer.time("select", || {
-        select(x, params.selection, params.p, sel_iters, sel_seed)
-    })?;
-
-    // Phase 2: K-nearest representatives + sparse affinity (§3.1.2).
-    let k_prime = (params.k_nn * params.k_prime_factor).max(params.k_nn + 1);
-    let index = timer.time("knr_index", || {
-        KnrIndex::build(&reps, k_prime, params.kmeans_iters.min(30), backend)
-    })?;
-    let knr = timer.time("knr_query", || match params.knr {
-        KnrMode::Approx => index.approx_knr(x, params.k_nn, backend),
-        KnrMode::Exact => index.exact_knr(x, params.k_nn, backend),
-    });
-    let aff = timer.time("affinity", || build_affinity(n, index.p(), knr.k, &knr));
-
-    // Phase 3: transfer-cut bipartite partitioning (§3.1.3).
-    let tc_seed = rng.next_u64();
-    let tc = timer.time("transfer_cut", || {
-        transfer_cut(&aff.b, params.k.min(index.p()), params.solver, tc_seed)
-    })?;
-
-    // Phase 4: k-means discretization (row-normalized, NJW-style).
-    let km_seed = rng.next_u64();
-    let mut emb = tc.embedding.clone();
-    crate::bipartite::row_normalize(&mut emb);
-    let km = timer.time("discretize", || {
-        kmeans(
-            &emb,
-            &KmeansParams { k: params.k, max_iter: params.kmeans_iters, ..Default::default() },
-            km_seed,
-        )
-    })?;
-
-    Ok(UspecResult { labels: km.labels, embedding: tc.embedding, timer, sigma: aff.sigma })
+    Pipeline::new(backend).run(x, params, seed)
 }
 
 /// Run U-SPEC on the pure-Rust backend.

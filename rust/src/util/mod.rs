@@ -7,6 +7,22 @@ pub mod par;
 pub mod prop;
 pub mod timer;
 
+/// True when `USPEC_EIG_TRACE` was set at first use (per-iteration eigen
+/// solver tracing). Read once and cached — the solvers consult this in
+/// their outer loops, where a `std::env::var` lookup per iteration is
+/// measurable.
+pub fn eig_trace() -> bool {
+    static FLAG: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *FLAG.get_or_init(|| std::env::var("USPEC_EIG_TRACE").is_ok())
+}
+
+/// True when `USPEC_EIG_DEBUG` was set at first use (eigen solver
+/// convergence diagnostics). Read once and cached, like [`eig_trace`].
+pub fn eig_debug() -> bool {
+    static FLAG: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *FLAG.get_or_init(|| std::env::var("USPEC_EIG_DEBUG").is_ok())
+}
+
 /// Binary search into a sorted `Vec<f64>` of cumulative weights; returns the
 /// first index whose cumulative weight exceeds `x`.
 pub fn searchsorted(cum: &[f64], x: f64) -> usize {

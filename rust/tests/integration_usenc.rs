@@ -58,7 +58,7 @@ fn consensus_works_on_kmeans_ensembles_too() {
     // ensemble baselines comparison).
     let ds = Benchmark::Tb1m.generate(0.001, 9);
     let ens = generate_kmeans_ensemble(&ds.x, 8, 6, 14, 3).unwrap();
-    let (labels, _) = consensus_bipartite(&ens, 2, EigSolver::Auto, 11).unwrap();
+    let labels = consensus_bipartite(&ens, 2, EigSolver::Auto, 11).unwrap();
     let score = nmi(&labels, &ds.y);
     assert!(score > 0.3, "consensus over k-means ensemble: {score}");
 }

@@ -1,0 +1,182 @@
+//! Pipeline-equivalence guarantees of the staged engine
+//! (`uspec::pipeline`): an in-memory `Mat` source and an on-disk
+//! `BinDataset` source must produce **bit-identical** labels for a fixed
+//! seed — for U-SPEC and for out-of-core U-SENC, at any thread count —
+//! and out-of-core runs must never materialize the full N×d matrix.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use uspec::affinity::NativeBackend;
+use uspec::data::synthetic::two_moons;
+use uspec::linalg::Mat;
+use uspec::pipeline::{DataSource, Pipeline};
+use uspec::streaming::BinDataset;
+use uspec::usenc::{usenc_chunked, UsencParams};
+use uspec::uspec::{uspec, UspecParams};
+use uspec::util::par;
+use uspec::Result;
+
+/// Serializes tests that flip the global thread override.
+static OVERRIDE_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Restores the default thread override even when an assertion unwinds,
+/// so one failing test cannot leak a stale override into the next.
+struct OverrideGuard;
+
+impl Drop for OverrideGuard {
+    fn drop(&mut self) {
+        par::set_thread_override(0);
+    }
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("uspec_pipeline_eq");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn uspec_mat_and_bin_sources_bit_identical_across_threads() {
+    let _g = lock();
+    let _restore = OverrideGuard;
+    let ds = two_moons(1500, 0.06, 21);
+    let bin = BinDataset::write_mat(&tmp("eq_uspec.bin"), &ds.x).unwrap();
+    let params = UspecParams { k: 2, p: 150, ..Default::default() };
+    let mut baseline: Option<Vec<u32>> = None;
+    for nt in [1usize, 4] {
+        par::set_thread_override(nt);
+        let pipe = Pipeline::new(&NativeBackend).with_chunk(700);
+        let mem = pipe.run(&ds.x, &params, 77).unwrap();
+        let disk = pipe.run(&bin, &params, 77).unwrap();
+        assert_eq!(mem.labels, disk.labels, "sources diverged at nt={nt}");
+        assert_eq!(mem.sigma.to_bits(), disk.sigma.to_bits(), "sigma at nt={nt}");
+        for (a, b) in mem.embedding.data.iter().zip(&disk.embedding.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "embedding at nt={nt}");
+        }
+        match &baseline {
+            Some(b) => assert_eq!(&mem.labels, b, "thread count changed labels (nt={nt})"),
+            None => baseline = Some(mem.labels.clone()),
+        }
+    }
+}
+
+#[test]
+fn uspec_wrapper_equals_engine_at_any_chunk() {
+    let _g = lock();
+    let ds = two_moons(1100, 0.06, 22);
+    let bin = BinDataset::write_mat(&tmp("eq_chunk.bin"), &ds.x).unwrap();
+    let params = UspecParams { k: 2, p: 120, ..Default::default() };
+    let wrapped = uspec(&ds.x, &params, 5).unwrap();
+    for chunk in [97usize, 512, 8192] {
+        let run = Pipeline::new(&NativeBackend).with_chunk(chunk).run(&bin, &params, 5).unwrap();
+        assert_eq!(wrapped.labels, run.labels, "chunk={chunk}");
+    }
+}
+
+#[test]
+fn usenc_out_of_core_bit_identical_across_threads() {
+    let _g = lock();
+    let _restore = OverrideGuard;
+    let ds = two_moons(800, 0.06, 23);
+    let bin = BinDataset::write_mat(&tmp("eq_usenc.bin"), &ds.x).unwrap();
+    let params = UsencParams {
+        k: 2,
+        m: 4,
+        k_min: 4,
+        k_max: 9,
+        base: UspecParams { p: 80, ..Default::default() },
+    };
+    let mut baseline: Option<Vec<u32>> = None;
+    for nt in [1usize, 4] {
+        par::set_thread_override(nt);
+        let mem = usenc_chunked(&ds.x, &params, 13, &NativeBackend, 300).unwrap();
+        let disk = usenc_chunked(&bin, &params, 13, &NativeBackend, 300).unwrap();
+        assert_eq!(mem.labels, disk.labels, "consensus diverged at nt={nt}");
+        assert_eq!(
+            mem.ensemble.labelings, disk.ensemble.labelings,
+            "base clusterings diverged at nt={nt}"
+        );
+        match &baseline {
+            Some(b) => assert_eq!(&mem.labels, b, "thread count changed labels (nt={nt})"),
+            None => baseline = Some(mem.labels.clone()),
+        }
+    }
+}
+
+/// A `DataSource` wrapper that records how much of the dataset each read
+/// materializes: proof that the engine streams bounded chunks rather than
+/// loading the full N×d matrix.
+struct TrackingSource<'a> {
+    inner: &'a BinDataset,
+    max_read_rows: AtomicUsize,
+    reads: AtomicUsize,
+}
+
+impl<'a> TrackingSource<'a> {
+    fn new(inner: &'a BinDataset) -> Self {
+        TrackingSource { inner, max_read_rows: AtomicUsize::new(0), reads: AtomicUsize::new(0) }
+    }
+}
+
+impl DataSource for TrackingSource<'_> {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn d(&self) -> usize {
+        self.inner.d()
+    }
+
+    fn read_rows(&self, start: usize, len: usize, buf: &mut Mat) -> Result<()> {
+        self.max_read_rows.fetch_max(len, Ordering::Relaxed);
+        self.reads.fetch_add(1, Ordering::Relaxed);
+        DataSource::read_rows(self.inner, start, len, buf)
+    }
+    // as_mat stays None: the engine can never see the resident matrix.
+}
+
+#[test]
+fn usenc_from_disk_has_bounded_resident_chunks_and_one_shared_sweep() {
+    let _g = lock();
+    let ds = two_moons(1200, 0.06, 24);
+    let bin = BinDataset::write_mat(&tmp("eq_bounded.bin"), &ds.x).unwrap();
+    let chunk = 256usize;
+    let m = 3usize;
+    let params = UsencParams {
+        k: 2,
+        m,
+        k_min: 4,
+        k_max: 8,
+        base: UspecParams { p: 70, ..Default::default() },
+    };
+    let tracked = TrackingSource::new(&bin);
+    let res = usenc_chunked(&tracked, &params, 31, &NativeBackend, chunk).unwrap();
+    assert_eq!(res.ensemble.m(), m);
+    assert_eq!(res.labels.len(), bin.n());
+
+    // Bounded residency: no read ever materialized more than one chunk,
+    // so no full N×d Mat was ever built from the source.
+    let max_rows = tracked.max_read_rows.load(Ordering::Relaxed);
+    assert!(max_rows <= chunk, "read {max_rows} rows > chunk {chunk}");
+    assert!(bin.n() > 4 * chunk, "test must force multi-chunk sweeps");
+
+    // Pass accounting: one shared candidate sweep for all m base
+    // clusterers plus one KNR pass per clusterer — not one selection pass
+    // per clusterer.
+    let chunks_per_pass = bin.n().div_ceil(chunk);
+    let reads = tracked.reads.load(Ordering::Relaxed);
+    assert_eq!(
+        reads,
+        (1 + m) * chunks_per_pass,
+        "expected 1 shared sweep + {m} KNR passes of {chunks_per_pass} chunks"
+    );
+
+    // and it is still the same clustering the in-memory path produces
+    let mem = usenc_chunked(&ds.x, &params, 31, &NativeBackend, chunk).unwrap();
+    assert_eq!(mem.labels, res.labels);
+}
