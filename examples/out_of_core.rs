@@ -38,6 +38,7 @@ fn main() {
     // chunks stream through the fitted representative graph.
     let params = StreamParams {
         chunk: 4096,
+        shards: 2, // two row ranges stream the file concurrently
         base: UspecParams { k: ds.k, p: 1000, ..Default::default() },
     };
     let t0 = std::time::Instant::now();

@@ -13,6 +13,7 @@
 use uspec::affinity::NativeBackend;
 use uspec::data::Benchmark;
 use uspec::metrics::nmi;
+use uspec::pipeline::ExecOpts;
 use uspec::streaming::{stream_usenc, BinDataset};
 use uspec::usenc::{usenc, UsencParams};
 use uspec::uspec::UspecParams;
@@ -34,15 +35,19 @@ fn main() {
         base: UspecParams { p: 300, ..Default::default() },
     };
 
-    // Out-of-core: 2048-row chunks — resident working set is the chunk
-    // buffer + per-clusterer candidates/index, independent of N·d.
-    let chunk = 2048;
+    // Out-of-core: 2048-row chunks, two row-range shards walking the file
+    // concurrently (each prefetching its next chunk while computing) —
+    // resident working set is shards × chunk buffers + per-clusterer
+    // candidates/index, independent of N·d. Shards never change labels.
+    let opts = ExecOpts { chunk: 2048, shards: 2 };
     let t0 = std::time::Instant::now();
-    let ooc = stream_usenc(&bin, &params, chunk, 42, &NativeBackend).expect("stream usenc");
+    let ooc = stream_usenc(&bin, &params, opts, 42, &NativeBackend).expect("stream usenc");
     let ooc_secs = t0.elapsed().as_secs_f64();
     println!(
-        "out-of-core U-SENC (m={}, chunk={chunk}): {ooc_secs:.2}s  NMI={:.4}",
+        "out-of-core U-SENC (m={}, chunk={}, shards={}): {ooc_secs:.2}s  NMI={:.4}",
         params.m,
+        opts.chunk,
+        opts.shards,
         nmi(&ooc.labels, &ds.y)
     );
 

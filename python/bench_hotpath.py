@@ -23,6 +23,15 @@ emits `BENCH_hotpath.json` at the repo root in the same schema:
   relative to one monolithic N-row pass, across chunk sizes. The engine
   is chunk-size *invariant* in results; this tracks what the chunking
   costs in time so the default chunk stays in the flat region.
+* ``shard_sweep`` — the sharded-DataSource walk: an out-of-core KNR pass
+  over an on-disk file, alternating read↔compute in one sequential
+  walker vs splitting the rows into row-range shards, each walked by a
+  worker that prefetches its next chunk (double buffering) while
+  computing on the current one — I/O overlaps compute, results
+  identical. Mirrors `pipeline::shard::for_each_chunk_sharded`.
+
+Pass ``--smoke`` for a fast CI sanity run (smaller shapes, fewer
+iterations, same schema).
 
 When a Rust toolchain is available, `cargo bench --bench micro_hotpath`
 overwrites this file with natively measured numbers (``harness`` tells
@@ -31,6 +40,8 @@ you which produced it).
 
 import json
 import os
+import sys
+import tempfile
 import time
 import concurrent.futures
 import threading
@@ -72,7 +83,7 @@ def spawn_region(n_tasks, work):
     return out
 
 
-def bench_dispatch():
+def bench_dispatch(smoke=False):
     rows = []
     pool = concurrent.futures.ThreadPoolExecutor(max_workers=NT)
     work = lambda i: i * 3  # noqa: E731 — trivial task isolates dispatch cost
@@ -88,8 +99,8 @@ def bench_dispatch():
 
     # warm the pool workers
     pool_region(64)
-    for n in (16, 64, 256):
-        reps = 30
+    for n in (16, 64) if smoke else (16, 64, 256):
+        reps = 10 if smoke else 30
         t_spawn = time_median(2, 5, lambda: [spawn_region(n, work) for _ in range(reps)]) / reps
         t_pool = time_median(2, 5, lambda: [pool_region(n) for _ in range(reps)]) / reps
         rows.append(
@@ -132,10 +143,11 @@ def sq_dists_blocked(x, c_t, cn, out, tmp):
     return out
 
 
-def bench_sq_dists():
+def bench_sq_dists(smoke=False):
     rows = []
     rng = np.random.default_rng(11)
-    for n, p, d in ((4096, 1000, 10), (4096, 1000, 100)):
+    shapes = ((1024, 500, 10),) if smoke else ((4096, 1000, 10), (4096, 1000, 100))
+    for n, p, d in shapes:
         x = rng.standard_normal((n, d)).astype(np.float32)
         c = rng.standard_normal((p, d)).astype(np.float32)
         c_t = np.ascontiguousarray(c.T)
@@ -167,10 +179,10 @@ def bench_sq_dists():
 
 
 # ---------------------------------------------------------------- argmin_k
-def bench_argmin():
+def bench_argmin(smoke=False):
     rows = []
     rng = np.random.default_rng(7)
-    n_rows, p, k = 2000, 1000, 5
+    n_rows, p, k = (500 if smoke else 2000), 1000, 5
     d2 = rng.random((n_rows, p), dtype=np.float32)
 
     def old_path():
@@ -212,13 +224,13 @@ def bench_argmin():
 
 
 # ------------------------------------------------------------- chunk sweep
-def bench_chunk_sweep():
+def bench_chunk_sweep(smoke=False):
     """Chunked pipeline pass-2 (sq_dists + per-row top-K per chunk, one
     reused chunk buffer) vs the monolithic full-N pass, at the paper's
     KNR shape (p=1000 representatives, K=5)."""
     rows = []
     rng = np.random.default_rng(23)
-    n, p, d, k = 65_536, 1000, 10, 5
+    n, p, d, k = (16_384 if smoke else 65_536), 1000, 10, 5
     x = rng.standard_normal((n, d)).astype(np.float32)
     c = rng.standard_normal((p, d)).astype(np.float32)
     c_t = np.ascontiguousarray(c.T)
@@ -238,7 +250,7 @@ def bench_chunk_sweep():
         return acc
 
     t_full = time_median(1, 3, lambda: chunked_pass(n))
-    for chunk in (1024, 4096, 8192, 32768, n):
+    for chunk in (1024, 4096, n) if smoke else (1024, 4096, 8192, 32768, n):
         t = time_median(1, 3, lambda: chunked_pass(chunk))
         rows.append(
             {
@@ -258,19 +270,115 @@ def bench_chunk_sweep():
     return rows
 
 
+# ------------------------------------------------------------- shard sweep
+def bench_shard_sweep(smoke=False):
+    """Sharded out-of-core pass (mirror of
+    `pipeline::shard::for_each_chunk_sharded`): an on-disk KNR pass
+    (read chunk → sq_dists → per-row top-K) walked (a) sequentially,
+    alternating read and compute, vs (b) split into row-range shards,
+    each walked by a worker whose next chunk is prefetched (double
+    buffering) while it computes on the current one. Shards/prefetch are
+    operational only — both walks visit every row once."""
+    rows = []
+    rng = np.random.default_rng(31)
+    n, p, d, k, chunk = (32_768 if smoke else 131_072), 1000, 16, 5, 4096
+    c = rng.standard_normal((p, d)).astype(np.float32)
+    c_t = np.ascontiguousarray(c.T)
+    cn = (c * c).sum(axis=1)
+    path = os.path.join(tempfile.gettempdir(), f"uspec_shard_sweep_{os.getpid()}.bin")
+    rng.standard_normal((n, d)).astype(np.float32).tofile(path)
+
+    def read_chunk(lo, hi):
+        cnt = (hi - lo) * d
+        buf = np.fromfile(path, dtype=np.float32, count=cnt, offset=lo * d * 4)
+        return buf.reshape(hi - lo, d)
+
+    def compute(xb):
+        out = np.empty((xb.shape[0], p), dtype=np.float32)
+        tmp = np.empty_like(out)
+        sq_dists_blocked(xb, c_t, cn, out, tmp)
+        np.argpartition(out, k - 1, axis=1)  # per-row top-K (the KNR work)
+        # Walkers accumulate the row count: an exact, partition-independent
+        # coverage check (kernel outputs can differ in rounding across
+        # chunk shapes, so they are workload, not checksum).
+        return xb.shape[0]
+
+    def sequential():
+        acc = 0
+        for lo in range(0, n, chunk):
+            acc += compute(read_chunk(lo, min(lo + chunk, n)))
+        return acc
+
+    def sharded(shards):
+        bounds = [(i * n) // shards for i in range(shards + 1)]
+        readers = concurrent.futures.ThreadPoolExecutor(max_workers=shards)
+        workers = concurrent.futures.ThreadPoolExecutor(max_workers=shards)
+
+        def walk(lo, hi):
+            if lo >= hi:
+                return 0
+            fut = readers.submit(read_chunk, lo, min(lo + chunk, hi))
+            acc, t = 0, lo
+            while t < hi:
+                nxt = min(t + chunk, hi)
+                buf = fut.result()
+                if nxt < hi:  # prefetch chunk i+1 while computing on chunk i
+                    fut = readers.submit(read_chunk, nxt, min(nxt + chunk, hi))
+                acc += compute(buf)
+                t = nxt
+            return acc
+
+        futs = [workers.submit(walk, bounds[i], bounds[i + 1]) for i in range(shards)]
+        acc = sum(f.result() for f in futs)
+        readers.shutdown()
+        workers.shutdown()
+        return acc
+
+    try:
+        assert sequential() == n, "sequential walk must cover every row"
+        iters = 2 if smoke else 3
+        t_seq = time_median(1, iters, sequential)
+        for shards in (1, 2) if smoke else (1, 2, 4, 8):
+            assert sharded(shards) == n, "sharded walk must cover every row"
+            t = time_median(1, iters, lambda: sharded(shards))
+            rows.append(
+                {
+                    "n": n,
+                    "p": p,
+                    "d": d,
+                    "k": k,
+                    "chunk": chunk,
+                    "shards": shards,
+                    "sequential_ms": round(t_seq * 1e3, 3),
+                    "sharded_ms": round(t * 1e3, 3),
+                    "speedup_vs_sequential": round(t_seq / t, 2),
+                }
+            )
+            print(
+                f"shard_sweep n={n} shards={shards}: sequential {t_seq * 1e3:8.2f} ms  "
+                f"sharded+prefetch {t * 1e3:8.2f} ms  speedup {t_seq / t:.2f}x"
+            )
+    finally:
+        os.remove(path)
+    return rows
+
+
 def main():
+    smoke = "--smoke" in sys.argv[1:]
     report = {
         "harness": "python-mirror",
+        "mode": "smoke" if smoke else "full",
         "note": (
             "No Rust toolchain in this container; numbers mirror the rust "
             "hot-path transformations at the same shapes. `cargo bench "
             "--bench micro_hotpath` overwrites this file with native numbers."
         ),
         "threads": NT,
-        "pool_dispatch": bench_dispatch(),
-        "sq_dists": bench_sq_dists(),
-        "argmin_k": bench_argmin(),
-        "chunk_sweep": bench_chunk_sweep(),
+        "pool_dispatch": bench_dispatch(smoke),
+        "sq_dists": bench_sq_dists(smoke),
+        "argmin_k": bench_argmin(smoke),
+        "chunk_sweep": bench_chunk_sweep(smoke),
+        "shard_sweep": bench_shard_sweep(smoke),
     }
     path = os.path.join(REPO_ROOT, "BENCH_hotpath.json")
     with open(path, "w") as f:

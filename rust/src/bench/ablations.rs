@@ -250,7 +250,11 @@ pub fn streaming_ablation(h: &Harness) -> Result<String> {
 
         let path = dir.join(format!("{}.bin", b.name().replace('/', "_")));
         let bin = crate::streaming::BinDataset::write_mat(&path, &ds.x)?;
-        let sp = crate::streaming::StreamParams { chunk: 8192, base: params.clone() };
+        let sp = crate::streaming::StreamParams {
+            chunk: 8192,
+            shards: 1,
+            base: params.clone(),
+        };
         let t1 = std::time::Instant::now();
         let st = crate::streaming::stream_uspec(&bin, &sp, h.cfg.seed, h.backend())?;
         let st_s = t1.elapsed().as_secs_f64();

@@ -30,7 +30,8 @@ COMMANDS:
   stream   --dataset D|F.bin    out-of-core clustering over an on-disk
                                 dataset (USPECB01 file, or a benchmark
                                 spilled to a temp file); --method u-spec
-                                (default) or u-senc
+                                (default) or u-senc; --shards S walks S
+                                row ranges in parallel per pass
   info                          print config + artifact status
 
 COMMON FLAGS (any config key):
@@ -44,6 +45,8 @@ COMMON FLAGS (any config key):
   --m          ensemble size (paper: 20)
   --backend    native | pjrt (AOT kernels; needs `make artifacts`)
   --workers    coordinator worker threads
+  --shards     row-range shards per streaming pass, 1..=n (I/O overlap
+               only — labels never depend on it)  [1]
   --runs       repetitions for mean±std
   --seed       master seed
   --config     JSON config file (flags override it)
@@ -211,17 +214,45 @@ pub fn execute(inv: Invocation) -> Result<String> {
         }
         "stream" => {
             // cluster an on-disk USPECB01 file (or spill a benchmark first)
+            if !inv.cfg.method.eq_ignore_ascii_case("u-spec")
+                && !inv.cfg.method.eq_ignore_ascii_case("u-senc")
+            {
+                return Err(Error::Config(format!(
+                    "stream supports --method u-spec or u-senc (got '{}')",
+                    inv.cfg.method
+                )));
+            }
+            /// Deletes a spilled scratch dataset on every exit path
+            /// (later validation and the runs themselves bail with `?`).
+            struct SpillGuard(Option<std::path::PathBuf>);
+
+            impl Drop for SpillGuard {
+                fn drop(&mut self) {
+                    if let Some(p) = self.0.take() {
+                        std::fs::remove_file(p).ok();
+                    }
+                }
+            }
+
             let h = Harness::new(inv.cfg.clone())?;
             let path = Path::new(&inv.cfg.dataset);
-            let owned;
+            let mut spill = SpillGuard(None);
             let (bin, truth) = if path.exists() && path.extension().map(|e| e == "bin").unwrap_or(false) {
                 (crate::streaming::BinDataset::open(path)?, None)
             } else {
                 let ds = resolve_dataset(&inv.cfg)?;
+                // Unique per invocation (pid alone races parallel tests
+                // spilling concurrently in one process).
+                static SPILL_ID: std::sync::atomic::AtomicUsize =
+                    std::sync::atomic::AtomicUsize::new(0);
+                let id = SPILL_ID.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 let tmp = std::env::temp_dir()
-                    .join(format!("uspec_stream_{}.bin", std::process::id()));
-                owned = crate::streaming::BinDataset::write_mat(&tmp, &ds.x)?;
-                (owned, Some(ds))
+                    .join(format!("uspec_stream_{}_{id}.bin", std::process::id()));
+                // Arm the guard first so a failed spill removes the
+                // partial file too.
+                spill.0 = Some(tmp.clone());
+                let bin = crate::streaming::BinDataset::write_mat(&tmp, &ds.x)?;
+                (bin, Some(ds))
             };
             let k = inv.cfg.k.or(truth.as_ref().map(|d| d.k)).unwrap_or(2);
             let p = inv.cfg.p.min(bin.n() / 2).max(k.min(bin.n()));
@@ -231,15 +262,17 @@ pub fn execute(inv: Invocation) -> Result<String> {
                 k_nn: inv.cfg.k_nn.min(p),
                 ..Default::default()
             };
-            if !inv.cfg.method.eq_ignore_ascii_case("u-spec")
-                && !inv.cfg.method.eq_ignore_ascii_case("u-senc")
-            {
+            let shards = inv.cfg.shards;
+            if shards == 0 || shards > bin.n() {
                 return Err(Error::Config(format!(
-                    "stream supports --method u-spec or u-senc (got '{}')",
-                    inv.cfg.method
+                    "--shards must be in 1..={} for this dataset (got {shards})",
+                    bin.n()
                 )));
             }
-            let chunk = crate::pipeline::DEFAULT_CHUNK;
+            let opts = crate::pipeline::ExecOpts {
+                chunk: crate::pipeline::DEFAULT_CHUNK,
+                shards,
+            };
             let t0 = std::time::Instant::now();
             let (method, labels, timer_summary, peak) =
                 if inv.cfg.method.eq_ignore_ascii_case("u-senc") {
@@ -253,13 +286,13 @@ pub fn execute(inv: Invocation) -> Result<String> {
                     let res = crate::streaming::stream_usenc(
                         &bin,
                         &params,
-                        chunk,
+                        opts,
                         inv.cfg.seed,
                         h.backend(),
                     )?;
                     ("U-SENC", res.labels, res.timer.summary(), None)
                 } else {
-                    let sp = crate::streaming::StreamParams { chunk, base };
+                    let sp = crate::streaming::StreamParams { chunk: opts.chunk, shards, base };
                     let res =
                         crate::streaming::stream_uspec(&bin, &sp, inv.cfg.seed, h.backend())?;
                     ("U-SPEC", res.labels, res.timer.summary(), Some(res.peak_bytes))
@@ -269,7 +302,8 @@ pub fn execute(inv: Invocation) -> Result<String> {
                 .map(|b| format!(", resident model {:.1} MB", b as f64 / 1e6))
                 .unwrap_or_default();
             let mut out = format!(
-                "streamed {method} over {} (n={} d={}, k={k}): {secs:.2}s{peak}\n[{timer_summary}]\n",
+                "streamed {method} over {} (n={} d={}, k={k}, shards={shards}): \
+                 {secs:.2}s{peak}\n[{timer_summary}]\n",
                 inv.cfg.dataset,
                 bin.n(),
                 bin.d(),
@@ -345,6 +379,29 @@ mod tests {
         let out = execute(inv).unwrap();
         assert!(out.contains("streamed U-SPEC"), "{out}");
         assert!(out.contains("NMI="), "{out}");
+    }
+
+    #[test]
+    fn stream_shards_flag_parses_runs_and_validates() {
+        // a sharded run matches the unsharded labels (same seed → same NMI line)
+        let base = parse(&argv("stream --dataset TB-1M --scale 0.001 --seed 7")).unwrap();
+        let plain = execute(base).unwrap();
+        let inv =
+            parse(&argv("stream --dataset TB-1M --scale 0.001 --seed 7 --shards 3")).unwrap();
+        assert_eq!(inv.cfg.shards, 3);
+        let sharded = execute(inv).unwrap();
+        assert!(sharded.contains("shards=3"), "{sharded}");
+        let nmi_line = |s: &str| s.lines().find(|l| l.starts_with("NMI=")).map(String::from);
+        assert_eq!(nmi_line(&plain), nmi_line(&sharded), "sharding changed the labels");
+
+        // zero is rejected at flag-parse time, over-n at execution time
+        assert!(parse(&argv("stream --dataset TB-1M --shards 0")).is_err());
+        let over = parse(&argv(
+            "stream --dataset TB-1M --scale 0.001 --seed 7 --shards 99999999",
+        ))
+        .unwrap();
+        let err = execute(over).unwrap_err();
+        assert!(err.to_string().contains("--shards"), "{err}");
     }
 
     #[test]

@@ -56,6 +56,10 @@ pub struct RunConfig {
     pub backend: BackendKind,
     /// Coordinator worker threads for ensemble generation.
     pub workers: usize,
+    /// Row-range shards walked concurrently per streaming pass
+    /// (operational only — labels never depend on it). Must be >= 1;
+    /// `stream` additionally rejects values above the dataset size.
+    pub shards: usize,
     /// Repetitions for mean±std reporting.
     pub runs: usize,
     /// Master seed.
@@ -78,6 +82,7 @@ impl Default for RunConfig {
             k_max: 60,
             backend: BackendKind::Native,
             workers: crate::util::par::num_threads(),
+            shards: 1,
             runs: 3,
             seed: 42,
             budget_bytes: 64 * (1 << 30),
@@ -99,6 +104,7 @@ impl RunConfig {
             ("k_max", Json::Num(self.k_max as f64)),
             ("backend", Json::Str(self.backend.name().into())),
             ("workers", Json::Num(self.workers as f64)),
+            ("shards", Json::Num(self.shards as f64)),
             ("runs", Json::Num(self.runs as f64)),
             ("seed", Json::Num(self.seed as f64)),
             ("budget_bytes", Json::Num(self.budget_bytes as f64)),
@@ -139,6 +145,13 @@ impl RunConfig {
             "k_max" => self.k_max = parse_usize(value)?,
             "backend" => self.backend = BackendKind::parse(value)?,
             "workers" => self.workers = parse_usize(value)?.max(1),
+            "shards" => {
+                let s = parse_usize(value)?;
+                if s == 0 {
+                    return Err(Error::Config("shards: must be >= 1".into()));
+                }
+                self.shards = s;
+            }
             "runs" => self.runs = parse_usize(value)?.max(1),
             "seed" => {
                 self.seed = value.parse().map_err(|e| Error::Config(format!("seed: {e}")))?
@@ -189,5 +202,18 @@ mod tests {
         assert!(cfg.set("nope", "1").is_err());
         assert!(cfg.set("scale", "abc").is_err());
         assert!(BackendKind::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn shards_key_roundtrips_and_rejects_zero() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.shards, 1);
+        cfg.set("shards", "4").unwrap();
+        assert_eq!(cfg.shards, 4);
+        assert!(cfg.set("shards", "0").is_err());
+        assert!(cfg.set("shards", "x").is_err());
+        let j = cfg.to_json().to_string();
+        let back = RunConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.shards, 4);
     }
 }

@@ -14,7 +14,7 @@
 //! ensembles never materialize the full N×d matrix.
 
 use crate::affinity::DistanceBackend;
-use crate::pipeline::{DataSource, Pipeline};
+use crate::pipeline::{DataSource, ExecOpts, Pipeline};
 use crate::usenc::{
     consensus_bipartite, run_job, sweep_job_candidates, Ensemble, UsencParams, UsencResult,
 };
@@ -46,9 +46,25 @@ pub fn run_base_clusterers(
     workers: usize,
     progress: Option<Progress>,
 ) -> Result<Ensemble> {
+    run_base_clusterers_opts(source, params, seed, backend, workers, progress, ExecOpts::default())
+}
+
+/// [`run_base_clusterers`] with explicit execution knobs: every sweep a
+/// worker's job streams uses `opts.chunk` rows per chunk and walks the
+/// source across `opts.shards` row-range shards (operational only — the
+/// ensemble is identical for any knob values).
+pub fn run_base_clusterers_opts(
+    source: &dyn DataSource,
+    params: &UsencParams,
+    seed: u64,
+    backend: &dyn DistanceBackend,
+    workers: usize,
+    progress: Option<Progress>,
+    opts: ExecOpts,
+) -> Result<Ensemble> {
     ensure_arg!(params.m >= 1, "coordinator: m must be >= 1");
     let workers = workers.clamp(1, params.m);
-    let pipe = Pipeline::new(backend);
+    let pipe = Pipeline::new(backend).with_opts(opts);
     let jobs = derive_jobs(params, source.n(), seed);
     let total = jobs.len();
     let group = crate::usenc::sweep_group_size(params, source.n(), source.d()).max(1);
@@ -125,9 +141,22 @@ pub fn usenc_coordinated(
     workers: usize,
     progress: Option<Progress>,
 ) -> Result<UsencResult> {
+    usenc_coordinated_opts(source, params, seed, backend, workers, progress, ExecOpts::default())
+}
+
+/// [`usenc_coordinated`] with explicit execution knobs for the sweeps.
+pub fn usenc_coordinated_opts(
+    source: &dyn DataSource,
+    params: &UsencParams,
+    seed: u64,
+    backend: &dyn DistanceBackend,
+    workers: usize,
+    progress: Option<Progress>,
+    opts: ExecOpts,
+) -> Result<UsencResult> {
     let mut timer = PhaseTimer::new();
     let ensemble = timer.time("generation", || {
-        run_base_clusterers(source, params, seed, backend, workers, progress)
+        run_base_clusterers_opts(source, params, seed, backend, workers, progress, opts)
     })?;
     let labels = timer.time("consensus", || {
         consensus_bipartite(&ensemble, params.k, params.base.solver, seed ^ 0xC075)
@@ -172,6 +201,10 @@ mod tests {
         let a = run_base_clusterers(&ds.x, &p, 5, &NativeBackend, 1, None).unwrap();
         let b = run_base_clusterers(&ds.x, &p, 5, &NativeBackend, 4, None).unwrap();
         assert_eq!(a.labelings, b.labelings);
+        // sharded sweeps under the scheduler change nothing either
+        let opts = ExecOpts { chunk: 64, shards: 3 };
+        let c = run_base_clusterers_opts(&ds.x, &p, 5, &NativeBackend, 4, None, opts).unwrap();
+        assert_eq!(a.labelings, c.labelings);
     }
 
     #[test]

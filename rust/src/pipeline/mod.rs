@@ -30,13 +30,25 @@
 //! per-clusterer run from its pre-swept candidate set — m base clusterers
 //! cost one selection read of the data instead of m.
 //!
+//! Execution knobs ([`ExecOpts`]) are *operational, never semantic*: the
+//! chunk size bounds the resident working set, and the shard count
+//! ([`ShardPlan`]) decides how many row ranges walk the source
+//! concurrently — KNR passes run shard-parallel with double-buffered
+//! prefetch per shard, selection sweeps stay row-ordered but prefetch
+//! their next chunk while merging the current one. Labels are
+//! bit-identical for any `{source, chunk, shards, threads}` combination
+//! (`rust/tests/pipeline_equivalence.rs`,
+//! `rust/tests/sharded_equivalence.rs`).
+//!
 //! Resident peak of a full out-of-core run is
-//! `O(N·K + chunk·d + p·d)` — independent of `N·d`, which only ever
-//! streams through the chunk buffer.
+//! `O(N·K + shards·chunk·d + p·d)` — independent of `N·d`, which only
+//! ever streams through the chunk buffers.
 
+pub mod shard;
 pub mod source;
 
-pub use source::{for_each_chunk, reservoir_multi, DataSource};
+pub use shard::{for_each_chunk_sharded, ShardPlan, ShardView};
+pub use source::{for_each_chunk, for_each_chunk_prefetch, reservoir_multi, DataSource};
 
 use crate::affinity::{
     build_affinity, knr::KnrIndex, knr::KnrResult, select, Affinity, DistanceBackend,
@@ -46,12 +58,40 @@ use crate::bipartite::{row_normalize, row_normalize_norms, row_scale, transfer_c
 use crate::kmeans::{kmeans, Init, KmeansParams};
 use crate::linalg::{Csr, Mat};
 use crate::uspec::{KnrMode, UspecParams, UspecResult};
+use crate::util::par;
 use crate::util::rng::Rng;
 use crate::util::timer::PhaseTimer;
 use crate::{ensure_arg, Error, Result};
 
 /// Default rows per chunk (the resident working set is `chunk × d` f32s).
 pub const DEFAULT_CHUNK: usize = 8192;
+
+/// Execution knobs shared by every pass over a source: rows per chunk,
+/// and how many row-range shards walk the source concurrently. Both are
+/// operational — neither ever changes a label. `chunk == 0` or
+/// `shards == 0` is rejected when a run validates; a shard count above
+/// the source size is clamped by [`ShardPlan::new`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecOpts {
+    /// Rows per chunk for every sweep (selection and KNR queries).
+    pub chunk: usize,
+    /// Row-range shards walked concurrently per pass (1 = sequential
+    /// walk with prefetch).
+    pub shards: usize,
+}
+
+impl Default for ExecOpts {
+    fn default() -> Self {
+        ExecOpts { chunk: DEFAULT_CHUNK, shards: 1 }
+    }
+}
+
+impl ExecOpts {
+    /// Opts with a custom chunk size and no sharding.
+    pub fn with_chunk(chunk: usize) -> ExecOpts {
+        ExecOpts { chunk, ..ExecOpts::default() }
+    }
+}
 
 /// Stage 1 — representative selection over chunks (paper §3.1.1).
 #[derive(Debug, Clone, Copy)]
@@ -141,27 +181,47 @@ pub struct KnrStage {
 }
 
 impl KnrStage {
-    /// Stream all rows of `src` through the index, concatenating the
-    /// per-chunk answers. Rows are queried independently, so the result is
-    /// identical for any chunk size.
+    /// Stream all rows of `src` through the index, **shard-parallel**:
+    /// every shard of `plan` walks its row range with double-buffered
+    /// prefetch, and each chunk's answers land in their global row slots
+    /// of the flattened n×K result. Rows are queried independently, so
+    /// the assembled result is byte-identical for any chunk size and any
+    /// shard count (including the sequential `shards == 1` walk).
     pub fn query(
         &self,
         src: &dyn DataSource,
         index: &KnrIndex,
+        plan: &ShardPlan,
         chunk: usize,
         backend: &dyn DistanceBackend,
     ) -> Result<KnrResult> {
         let k = self.k_nn.min(index.p());
         let n = src.n();
-        let mut idx = Vec::with_capacity(n * k);
-        let mut d2 = Vec::with_capacity(n * k);
-        for_each_chunk(src, chunk, |_, m| {
+        let mut idx = vec![0u32; n * k];
+        let mut d2 = vec![0.0f32; n * k];
+        let idx_ptr = par::SendPtr(idx.as_mut_ptr());
+        let d2_ptr = par::SendPtr(d2.as_mut_ptr());
+        for_each_chunk_sharded(src, plan, chunk, |start, m| {
             let r = match self.mode {
                 KnrMode::Approx => index.approx_knr(m, k, backend),
                 KnrMode::Exact => index.exact_knr(m, k, backend),
             };
-            idx.extend_from_slice(&r.idx);
-            d2.extend_from_slice(&r.d2);
+            // Hard checks (not debug-only): the raw slot writes below rely
+            // on the chunk staying inside [0, n) — the walkers enforce the
+            // read_rows contract, this is the last line of defense — and
+            // on the KNR result being exactly m.rows × k.
+            assert!(start + m.rows <= n, "chunk [{start}, {}) > n={n}", start + m.rows);
+            assert_eq!(r.idx.len(), m.rows * k, "knr result shape");
+            assert_eq!(r.d2.len(), m.rows * k, "knr result shape");
+            // SAFETY: shards are disjoint row ranges and chunks within a
+            // shard are disjoint too, so rows [start, start + m.rows) are
+            // written exactly once; both vecs outlive the blocking walk.
+            unsafe {
+                let islots = idx_ptr.0.add(start * k);
+                std::ptr::copy_nonoverlapping(r.idx.as_ptr(), islots, r.idx.len());
+                let dslots = d2_ptr.0.add(start * k);
+                std::ptr::copy_nonoverlapping(r.d2.as_ptr(), dslots, r.d2.len());
+            }
             Ok(())
         })?;
         Ok(KnrResult { idx, d2, k })
@@ -246,21 +306,42 @@ pub struct CandidateSet {
     rng: Rng,
 }
 
-/// The engine: one chunk size + distance backend driving the four stages.
+/// The engine: execution knobs + distance backend driving the four
+/// stages.
 #[derive(Clone, Copy)]
 pub struct Pipeline<'a> {
     /// Rows per chunk for every sweep (selection and KNR queries).
     pub chunk: usize,
+    /// Row-range shards walked concurrently per order-free pass.
+    pub shards: usize,
     pub backend: &'a dyn DistanceBackend,
 }
 
 impl<'a> Pipeline<'a> {
     pub fn new(backend: &'a dyn DistanceBackend) -> Pipeline<'a> {
-        Pipeline { chunk: DEFAULT_CHUNK, backend }
+        Pipeline { chunk: DEFAULT_CHUNK, shards: 1, backend }
     }
 
+    /// Set the chunk size. Stored verbatim; `chunk == 0` is rejected with
+    /// a proper `Err` when the run validates (it used to be silently
+    /// clamped to 1).
     pub fn with_chunk(mut self, chunk: usize) -> Pipeline<'a> {
-        self.chunk = chunk.max(1);
+        self.chunk = chunk;
+        self
+    }
+
+    /// Set the shard count for order-free passes. Stored verbatim;
+    /// `shards == 0` is rejected when the run validates, and a count
+    /// above the source size is clamped by [`ShardPlan::new`].
+    pub fn with_shards(mut self, shards: usize) -> Pipeline<'a> {
+        self.shards = shards;
+        self
+    }
+
+    /// Set both execution knobs at once.
+    pub fn with_opts(mut self, opts: ExecOpts) -> Pipeline<'a> {
+        self.chunk = opts.chunk;
+        self.shards = opts.shards;
         self
     }
 
@@ -297,6 +378,7 @@ impl<'a> Pipeline<'a> {
         src: &dyn DataSource,
         specs: &[(usize, u64)],
     ) -> Result<Vec<CandidateSet>> {
+        self.validate_opts()?;
         let mut pairs: Vec<(usize, Rng)> =
             specs.iter().map(|&(size, seed)| (size, Rng::new(seed))).collect();
         let outs = reservoir_multi(src, self.chunk, &mut pairs)?;
@@ -329,7 +411,14 @@ impl<'a> Pipeline<'a> {
         self.finish(src, &params, rng, timer, reps)
     }
 
+    fn validate_opts(&self) -> Result<()> {
+        ensure_arg!(self.chunk >= 1, "pipeline: chunk must be >= 1 (got 0)");
+        ensure_arg!(self.shards >= 1, "pipeline: shards must be >= 1 (got 0)");
+        Ok(())
+    }
+
     fn validate(&self, src: &dyn DataSource, params: &UspecParams) -> Result<UspecParams> {
+        self.validate_opts()?;
         let n = src.n();
         ensure_arg!(n >= 2, "pipeline: need at least 2 objects");
         let params = params.clamped(n);
@@ -353,8 +442,10 @@ impl<'a> Pipeline<'a> {
             KnrIndex::build(&reps, k_prime, params.kmeans_iters.min(30), self.backend)
         })?;
         let knr_stage = KnrStage { k_nn: params.k_nn, mode: params.knr };
-        let knr =
-            timer.time("knr_query", || knr_stage.query(src, &index, self.chunk, self.backend))?;
+        let plan = ShardPlan::new(n, self.shards)?;
+        let knr = timer.time("knr_query", || {
+            knr_stage.query(src, &index, &plan, self.chunk, self.backend)
+        })?;
         let aff = timer.time("affinity", || AffinityStage.run(n, index.p(), &knr));
         let tc_seed = rng.next_u64();
         let km_seed = rng.next_u64();
@@ -366,6 +457,31 @@ impl<'a> Pipeline<'a> {
         let (labels, embedding) =
             stage.run(&aff.b, params.k.min(index.p()), tc_seed, km_seed, &mut timer)?;
         Ok(UspecResult { labels, embedding, timer, sigma: aff.sigma })
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::source::DataSource;
+    use crate::linalg::Mat;
+    use crate::Result;
+
+    /// A `Mat` stripped of its resident fast path, so tests exercise the
+    /// chunked `read_rows` iteration instead of the zero-copy shortcut.
+    pub(crate) struct NonResident<'a>(pub(crate) &'a Mat);
+
+    impl DataSource for NonResident<'_> {
+        fn n(&self) -> usize {
+            self.0.rows
+        }
+
+        fn d(&self) -> usize {
+            self.0.cols
+        }
+
+        fn read_rows(&self, start: usize, len: usize, buf: &mut Mat) -> Result<()> {
+            self.0.read_rows(start, len, buf)
+        }
     }
 }
 
@@ -447,5 +563,42 @@ mod tests {
         assert!(pipe.run(&ds.x, &UspecParams { k: 11, ..Default::default() }, 1).is_err());
         let one = Mat::from_vec(1, 2, vec![0.0, 0.0]);
         assert!(pipe.run(&one, &UspecParams::default(), 1).is_err());
+    }
+
+    #[test]
+    fn zero_exec_knobs_are_proper_errors() {
+        let ds = two_moons(100, 0.05, 10);
+        let params = UspecParams { k: 2, p: 30, ..Default::default() };
+        let chunk0 = Pipeline::new(&NativeBackend).with_chunk(0);
+        let err = chunk0.run(&ds.x, &params, 1).unwrap_err();
+        assert!(err.to_string().contains("chunk"), "{err}");
+        let shards0 = Pipeline::new(&NativeBackend).with_shards(0);
+        let err = shards0.run(&ds.x, &params, 1).unwrap_err();
+        assert!(err.to_string().contains("shards"), "{err}");
+        // the shared-sweep entry validates the same knobs
+        assert!(chunk0.sweep_candidates(&ds.x, &[(10, 7)]).is_err());
+        assert!(shards0.sweep_candidates(&ds.x, &[(10, 7)]).is_err());
+    }
+
+    #[test]
+    fn shard_count_is_operational_not_semantic() {
+        // Real sharding needs a non-resident source; pin {1, 2, 7} shards
+        // against each other and the resident run.
+        let ds = two_moons(900, 0.06, 11);
+        let dir = std::env::temp_dir().join("uspec_pipeline_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bin =
+            crate::streaming::BinDataset::write_mat(&dir.join("shards.bin"), &ds.x).unwrap();
+        let params = UspecParams { k: 2, p: 100, ..Default::default() };
+        let resident = Pipeline::new(&NativeBackend).run(&ds.x, &params, 9).unwrap();
+        for shards in [1usize, 2, 7] {
+            let opts = ExecOpts { chunk: 128, shards };
+            let run = Pipeline::new(&NativeBackend).with_opts(opts).run(&bin, &params, 9).unwrap();
+            assert_eq!(run.labels, resident.labels, "shards={shards}");
+            assert_eq!(run.sigma.to_bits(), resident.sigma.to_bits(), "shards={shards}");
+        }
+        // over-n shard counts clamp instead of erroring at the API level
+        let many = Pipeline::new(&NativeBackend).with_shards(10_000);
+        assert_eq!(many.run(&bin, &params, 9).unwrap().labels, resident.labels);
     }
 }

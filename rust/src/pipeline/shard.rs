@@ -1,0 +1,443 @@
+//! Sharded execution over any [`DataSource`] — the row-range layer
+//! between the chunk walkers ([`crate::pipeline::source`]) and multi-node
+//! execution.
+//!
+//! A [`ShardPlan`] splits a source's `n` rows into contiguous row ranges;
+//! a [`ShardView`] is a `DataSource` over one such range of a parent
+//! source, translating local row offsets to global ones. The engine runs
+//! its order-free passes shard-parallel through
+//! [`for_each_chunk_sharded`]: scoped walker threads claim shards from an
+//! atomic cursor, each walking its range with the double-buffered
+//! prefetch of [`for_each_chunk_prefetch`] — so I/O on every shard
+//! overlaps with compute on every other, while each chunk's kernel work
+//! still fans out across the PR-1 worker pool (walkers are not pool
+//! tasks, so the pool's nested-inline rule never serializes the compute).
+//!
+//! # The shard-invariance contract
+//!
+//! The shard count is an **operational knob, never a semantic one** —
+//! exactly like the chunk size and the thread count before it
+//! (`rust/tests/sharded_equivalence.rs` pins all three at once):
+//!
+//! * **Order-free passes** (KNR queries: each row's answer depends only
+//!   on that row and the shared index) run shard-parallel; every chunk
+//!   callback receives its *global* start row, so per-shard results land
+//!   in their global row slots and the assembled output is byte-identical
+//!   to the sequential walk's, for any shard count.
+//! * **Order-dependent passes** (the reservoir sweeps: each draw
+//!   conditions on the rows seen before it) keep their per-range merge
+//!   order — ranges are contiguous and processed in ascending row order,
+//!   so the sweep sees the same row stream regardless of how the plan
+//!   cuts it, and only the prefetch (not the merge) is concurrent.
+//!
+//! A `ShardView` is also the unit a future remote executor ships: a
+//! remote shard is just a `DataSource` whose `read_rows` crosses the
+//! network, and the contract above already guarantees the merged result
+//! is independent of how many such shards serve a pass.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::linalg::Mat;
+use crate::util::par;
+use crate::{ensure_arg, Error, Result};
+
+use super::source::{for_each_chunk_prefetch, DataSource};
+
+/// Process-wide count of live shard walkers, capping the *total* number
+/// of concurrent walker threads at the `USPEC_THREADS` budget even when
+/// many sharded passes run at once (e.g. coordinator workers each
+/// streaming their own KNR pass). Every pass is still granted at least
+/// one walker, so the cap degrades concurrency, never progress.
+static ACTIVE_WALKERS: AtomicUsize = AtomicUsize::new(0);
+
+/// Reserve up to `desired` walkers from the process budget (≥ 1 always).
+fn reserve_walkers(desired: usize, budget: usize) -> usize {
+    let mut cur = ACTIVE_WALKERS.load(Ordering::Relaxed);
+    loop {
+        let free = budget.saturating_sub(cur);
+        let take = desired.min(free).max(1);
+        match ACTIVE_WALKERS.compare_exchange_weak(
+            cur,
+            cur + take,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        ) {
+            Ok(_) => return take,
+            Err(now) => cur = now,
+        }
+    }
+}
+
+/// Error message of the cancellation sentinel a walker raises to unwind
+/// its own walk once another shard failed. Cancellation is detected via
+/// a walker-local flag — never by matching this text — so a genuine
+/// callback error with identical wording can't be swallowed, and the
+/// sentinel itself is never surfaced to callers.
+const ABORTED: &str = "sharded walk aborted";
+
+/// A partition of `n` rows into contiguous, non-empty row ranges.
+///
+/// Ranges differ in length by at most one row (the first `n % shards`
+/// ranges take the extra row), and a request for more shards than rows is
+/// clamped to one row per shard — a plan never contains an empty shard.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    n: usize,
+    ranges: Vec<(usize, usize)>,
+}
+
+impl ShardPlan {
+    /// Plan `shards` row ranges over `n` rows. `shards == 0` is an error;
+    /// `shards > n` is clamped to `n` (for `n == 0` the plan is empty).
+    pub fn new(n: usize, shards: usize) -> Result<ShardPlan> {
+        ensure_arg!(shards >= 1, "shard plan: shards must be >= 1 (got 0)");
+        let s = shards.min(n);
+        let mut ranges = Vec::with_capacity(s);
+        if n > 0 {
+            let base = n / s;
+            let rem = n % s;
+            let mut start = 0;
+            for i in 0..s {
+                let len = base + usize::from(i < rem);
+                ranges.push((start, len));
+                start += len;
+            }
+            debug_assert_eq!(start, n);
+        }
+        Ok(ShardPlan { n, ranges })
+    }
+
+    /// Total rows the plan covers.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of shards (≤ the requested count; 0 only when `n == 0`).
+    pub fn shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// The `(start, len)` row ranges, ascending and contiguous.
+    pub fn ranges(&self) -> &[(usize, usize)] {
+        &self.ranges
+    }
+
+    /// The `i`-th shard as a [`DataSource`] view over `src`.
+    pub fn view<'a>(&self, src: &'a dyn DataSource, i: usize) -> Result<ShardView<'a>> {
+        ensure_arg!(i < self.ranges.len(), "shard plan: shard {i} of {}", self.ranges.len());
+        let (start, len) = self.ranges[i];
+        ShardView::new(src, start, len)
+    }
+}
+
+/// A [`DataSource`] over rows `[start, start + len)` of a parent source.
+///
+/// Local row `r` maps to parent row `start + r`; reads outside the range
+/// are rejected, so a shard can never observe another shard's rows. The
+/// view never exposes the parent's resident matrix (`as_mat` stays
+/// `None`) — a shard is the unit of *streaming*, and the sharded walk
+/// takes the parent-level zero-copy fast path itself when the whole
+/// source is resident.
+pub struct ShardView<'a> {
+    parent: &'a dyn DataSource,
+    start: usize,
+    len: usize,
+}
+
+impl<'a> ShardView<'a> {
+    /// View rows `[start, start + len)` of `parent`.
+    pub fn new(parent: &'a dyn DataSource, start: usize, len: usize) -> Result<ShardView<'a>> {
+        ensure_arg!(
+            start + len <= parent.n(),
+            "shard view: rows [{start}, {}) out of range (parent n={})",
+            start + len,
+            parent.n()
+        );
+        Ok(ShardView { parent, start, len })
+    }
+
+    /// First parent row of this view (the local→global offset).
+    pub fn global_start(&self) -> usize {
+        self.start
+    }
+}
+
+impl DataSource for ShardView<'_> {
+    fn n(&self) -> usize {
+        self.len
+    }
+
+    fn d(&self) -> usize {
+        self.parent.d()
+    }
+
+    fn read_rows(&self, start: usize, len: usize, buf: &mut Mat) -> Result<()> {
+        ensure_arg!(
+            start + len <= self.len,
+            "shard view: read_rows [{start}, {}) out of shard range (len={})",
+            start + len,
+            self.len
+        );
+        self.parent.read_rows(self.start + start, len, buf)
+    }
+}
+
+/// Walk `src` **shard-parallel**: dedicated walker threads claim shards
+/// of `plan` from an atomic cursor (the coordinator's scheduling idiom),
+/// each walking its row range with double-buffered prefetch. `f` receives
+/// *global* chunk start rows and may be invoked concurrently from
+/// different shards, so it must only touch state owned by its own rows
+/// (disjoint global row slots) — order-dependent algorithms belong on
+/// [`for_each_chunk_prefetch`] instead.
+///
+/// Walkers are scoped OS threads, **not** pool tasks: a pool task would
+/// trip the pool's nested-inline rule and serialize the chunk compute,
+/// whereas from a walker thread each chunk callback still dispatches its
+/// kernels across the whole PR-1 pool. At most
+/// [`crate::util::par::num_threads`] *walkers* run at once process-wide
+/// (every pass keeps at least one), so arbitrarily many concurrent
+/// sharded passes — e.g. coordinator workers — stay bounded and an
+/// over-wide plan degrades gracefully. Thread accounting: each walker
+/// pairs with one prefetch reader (I/O-blocked), and a walker computing
+/// a chunk participates in its own pool dispatch alongside the pool's
+/// workers — so compute threads can reach walkers + pool ≈ 2× the budget
+/// when every shard is compute-bound at once. Sharding targets
+/// I/O-dominated out-of-core passes, where walkers spend most of their
+/// time blocked on reads; for compute-bound resident data, leave
+/// `shards` at 1 (the resident fast path ignores it anyway).
+///
+/// Resident sources take the zero-copy single-chunk fast path (there is
+/// no I/O to parallelize); a single-shard plan degrades to one prefetched
+/// walk. The first error encountered cancels the walk — unclaimed shards
+/// are skipped and in-flight shards stop at their next chunk — and is
+/// the error returned.
+pub fn for_each_chunk_sharded(
+    src: &dyn DataSource,
+    plan: &ShardPlan,
+    chunk: usize,
+    f: impl Fn(usize, &Mat) -> Result<()> + Sync,
+) -> Result<()> {
+    ensure_arg!(chunk >= 1, "for_each_chunk_sharded: chunk must be >= 1 (got 0)");
+    ensure_arg!(
+        plan.n() == src.n(),
+        "shard plan covers {} rows but source has {}",
+        plan.n(),
+        src.n()
+    );
+    if let Some(m) = src.as_mat() {
+        if m.rows == 0 {
+            return Ok(());
+        }
+        return f(0, m);
+    }
+    if plan.ranges.is_empty() {
+        return Ok(()); // n == 0
+    }
+    if plan.shards() == 1 {
+        return for_each_chunk_prefetch(src, chunk, f);
+    }
+    /// Walk one shard; `Ok` covers both completion and cancellation (a
+    /// cancelled walker rechecks `abort` at its loop head and exits).
+    fn walk_shard(
+        plan: &ShardPlan,
+        src: &dyn DataSource,
+        chunk: usize,
+        f: &(impl Fn(usize, &Mat) -> Result<()> + Sync),
+        abort: &AtomicBool,
+        i: usize,
+    ) -> Result<()> {
+        let (start, _) = plan.ranges[i];
+        let view = plan.view(src, i)?;
+        // Out-of-band cancellation marker: only the check below sets it,
+        // so a genuine `f` error can never be mistaken for cancellation.
+        let cancelled = Cell::new(false);
+        let r = for_each_chunk_prefetch(&view, chunk, |local, m| {
+            // Stop at the next chunk once any shard failed: the sentinel
+            // unwinds this walk but is never reported (the real error is).
+            if abort.load(Ordering::Relaxed) {
+                cancelled.set(true);
+                return Err(Error::Runtime(ABORTED.into()));
+            }
+            f(start + local, m)
+        });
+        match r {
+            Err(_) if cancelled.get() => Ok(()),
+            other => other,
+        }
+    }
+
+    /// Returns the reservation even when a walker panic unwinds the scope.
+    struct WalkerLease(usize);
+
+    impl Drop for WalkerLease {
+        fn drop(&mut self) {
+            ACTIVE_WALKERS.fetch_sub(self.0, Ordering::Relaxed);
+        }
+    }
+
+    let nshards = plan.shards();
+    let desired = nshards.min(par::num_threads()).max(1);
+    let walkers = reserve_walkers(desired, par::num_threads().max(1));
+    let _lease = WalkerLease(walkers);
+    let cursor = AtomicUsize::new(0);
+    let abort = AtomicBool::new(false);
+    let first_error: Mutex<Option<Error>> = Mutex::new(None);
+    std::thread::scope(|s| {
+        for _ in 0..walkers {
+            s.spawn(|| loop {
+                if abort.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= nshards {
+                    break;
+                }
+                if let Err(e) = walk_shard(plan, src, chunk, &f, &abort, i) {
+                    abort.store(true, Ordering::Relaxed);
+                    let mut fe = first_error.lock().unwrap();
+                    if fe.is_none() {
+                        *fe = Some(e);
+                    }
+                    break;
+                }
+            });
+        }
+    });
+    if let Some(e) = first_error.into_inner().unwrap() {
+        return Err(e);
+    }
+    // The sentinel can only trail a recorded real error, so reaching here
+    // means no shard failed and the cursor drained every shard.
+    debug_assert!(!abort.load(Ordering::Relaxed));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::two_moons;
+    use crate::pipeline::testutil::NonResident;
+
+    #[test]
+    fn plan_covers_rows_contiguously_with_balanced_tails() {
+        for (n, shards) in [(10usize, 3usize), (7, 7), (100, 1), (9, 4), (257, 8)] {
+            let plan = ShardPlan::new(n, shards).unwrap();
+            assert_eq!(plan.shards(), shards.min(n));
+            let mut next = 0;
+            let mut lens: Vec<usize> = Vec::new();
+            for &(start, len) in plan.ranges() {
+                assert_eq!(start, next, "ranges must be contiguous");
+                assert!(len >= 1, "no empty shards");
+                lens.push(len);
+                next = start + len;
+            }
+            assert_eq!(next, n, "ranges must cover all rows");
+            let (min, max) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(max - min <= 1, "uneven tail must differ by at most one row");
+        }
+    }
+
+    #[test]
+    fn plan_edge_cases() {
+        // shards == 0 is a configuration error
+        assert!(ShardPlan::new(100, 0).is_err());
+        // n smaller than the shard count: clamp to one row per shard
+        let plan = ShardPlan::new(3, 8).unwrap();
+        assert_eq!(plan.shards(), 3);
+        assert_eq!(plan.ranges(), &[(0, 1), (1, 1), (2, 1)]);
+        // single-row shards by request
+        let plan = ShardPlan::new(5, 5).unwrap();
+        assert_eq!(plan.ranges(), &[(0, 1), (1, 1), (2, 1), (3, 1), (4, 1)]);
+        // empty source: an empty (but valid) plan
+        let plan = ShardPlan::new(0, 4).unwrap();
+        assert_eq!(plan.shards(), 0);
+        assert_eq!(plan.n(), 0);
+    }
+
+    #[test]
+    fn view_translates_ranges_at_shard_boundaries() {
+        let mut x = Mat::zeros(20, 1);
+        for i in 0..20 {
+            x.set(i, 0, i as f32);
+        }
+        let src = NonResident(&x);
+        let plan = ShardPlan::new(20, 3).unwrap(); // ranges 7 + 7 + 6
+        assert_eq!(plan.ranges(), &[(0, 7), (7, 7), (14, 6)]);
+        let view = plan.view(&src, 1).unwrap();
+        assert_eq!((view.n(), view.d(), view.global_start()), (7, 1, 7));
+        let mut buf = Mat::zeros(0, 1);
+        // first local row is the parent row at the shard boundary
+        view.read_rows(0, 1, &mut buf).unwrap();
+        assert_eq!(buf.at(0, 0), 7.0);
+        // last local row maps to the row just before the next boundary
+        view.read_rows(6, 1, &mut buf).unwrap();
+        assert_eq!(buf.at(0, 0), 13.0);
+        // a read spanning the whole shard translates every row
+        view.read_rows(0, 7, &mut buf).unwrap();
+        let got: Vec<f32> = (0..7).map(|i| buf.at(i, 0)).collect();
+        assert_eq!(got, vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0, 13.0]);
+        // reads past the shard end are rejected, even though the parent
+        // has those rows
+        assert!(view.read_rows(6, 2, &mut buf).is_err());
+        assert!(view.read_rows(7, 1, &mut buf).is_err());
+        // views past the parent end are rejected at construction
+        assert!(ShardView::new(&src, 15, 6).is_err());
+    }
+
+    #[test]
+    fn sharded_walk_covers_every_row_once_at_global_offsets() {
+        let ds = two_moons(257, 0.05, 31);
+        let src = NonResident(&ds.x);
+        for shards in [1usize, 2, 3, 7, 257] {
+            let plan = ShardPlan::new(257, shards).unwrap();
+            let seen = Mutex::new(vec![0u32; 257]);
+            for_each_chunk_sharded(&src, &plan, 50, |start, m| {
+                let mut seen = seen.lock().unwrap();
+                for i in 0..m.rows {
+                    assert_eq!(m.row(i), ds.x.row(start + i), "row {} content", start + i);
+                    seen[start + i] += 1;
+                }
+                Ok(())
+            })
+            .unwrap();
+            assert!(
+                seen.into_inner().unwrap().iter().all(|&c| c == 1),
+                "every row exactly once (shards={shards})"
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_walk_takes_resident_fast_path_and_validates() {
+        let ds = two_moons(64, 0.05, 32);
+        let plan = ShardPlan::new(64, 4).unwrap();
+        let calls = Mutex::new(0usize);
+        for_each_chunk_sharded(&ds.x, &plan, 10, |start, m| {
+            assert_eq!((start, m.rows), (0, 64));
+            *calls.lock().unwrap() += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(calls.into_inner().unwrap(), 1);
+        // chunk == 0 and a mismatched plan are errors
+        let src = NonResident(&ds.x);
+        assert!(for_each_chunk_sharded(&src, &plan, 0, |_, _| Ok(())).is_err());
+        let wrong = ShardPlan::new(63, 4).unwrap();
+        assert!(for_each_chunk_sharded(&src, &wrong, 10, |_, _| Ok(())).is_err());
+    }
+
+    #[test]
+    fn sharded_walk_propagates_the_first_failing_shard() {
+        let ds = two_moons(100, 0.05, 33);
+        let src = NonResident(&ds.x);
+        let plan = ShardPlan::new(100, 4).unwrap();
+        let err = for_each_chunk_sharded(&src, &plan, 10, |start, _| {
+            crate::ensure_arg!(start < 50, "shard failure at {start}");
+            Ok(())
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("shard failure"), "{err}");
+    }
+}

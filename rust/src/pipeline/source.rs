@@ -12,6 +12,23 @@
 //! working set, I/O granularity), never a semantic one. That invariance
 //! is what lets one engine serve in-memory and out-of-core execution
 //! with bit-identical results — see `rust/tests/pipeline_equivalence.rs`.
+//!
+//! Two walkers deliver chunks:
+//!
+//! * [`for_each_chunk`] — plain sequential read-then-compute alternation.
+//! * [`for_each_chunk_prefetch`] — same chunk sequence and callback
+//!   order, but a background reader fills the *next* chunk while the
+//!   callback computes on the current one (double buffering), so a pass
+//!   over a slow source overlaps I/O with compute. Because the delivered
+//!   `(start, chunk)` sequence is identical, swapping walkers never
+//!   changes any result.
+//!
+//! [`crate::pipeline::shard`] extends the same contract across row-range
+//! shards: order-free per-row passes (KNR queries) run shard-parallel,
+//! order-dependent ones (the reservoir sweeps here) stay row-ordered —
+//! either way the *shard count is operational, never semantic*, which is
+//! the shard-invariance contract `rust/tests/sharded_equivalence.rs`
+//! pins.
 
 use crate::linalg::Mat;
 use crate::util::rng::Rng;
@@ -86,28 +103,116 @@ impl DataSource for crate::data::Dataset {
 /// every algorithm the engine builds on this iterator is row-ordered and
 /// chunk-size invariant, so the fast path changes no result — only the
 /// N×d memcpy an in-memory pass would otherwise pay.
+///
+/// `chunk == 0` is rejected with an error (it used to be silently
+/// clamped, which hid misconfigured callers).
 pub fn for_each_chunk(
     src: &dyn DataSource,
     chunk: usize,
     mut f: impl FnMut(usize, &Mat) -> Result<()>,
 ) -> Result<()> {
+    ensure_arg!(chunk >= 1, "for_each_chunk: chunk must be >= 1 (got 0)");
     if let Some(m) = src.as_mat() {
         if m.rows == 0 {
             return Ok(());
         }
         return f(0, m);
     }
-    let chunk = chunk.max(1);
     let n = src.n();
     let mut buf = Mat::zeros(0, src.d());
     let mut start = 0;
     while start < n {
         let len = chunk.min(n - start);
         src.read_rows(start, len, &mut buf)?;
+        // Enforce the DataSource contract at the boundary: consumers
+        // (including unsafe global-slot writers) size work by buf.rows.
+        ensure_arg!(
+            buf.rows == len,
+            "read_rows returned {} rows, requested {len}",
+            buf.rows
+        );
         f(start, &buf)?;
         start += len;
     }
     Ok(())
+}
+
+/// [`for_each_chunk`] with **double-buffered prefetch**: a scoped reader
+/// thread fills chunk `i + 1` while the caller's `f` computes on chunk
+/// `i`, so a pass over a slow source (disk, network) overlaps I/O with
+/// compute instead of alternating. Two buffers cycle between the reader
+/// and the consumer; the callback still runs on the calling thread, in
+/// strict row order, over exactly the chunk sequence [`for_each_chunk`]
+/// would deliver — results are bit-identical by construction.
+///
+/// Resident sources take the same zero-copy single-chunk fast path (there
+/// is no I/O to hide). Errors surface in callback order: an `f` error on
+/// chunk `i` wins over a read error on any later chunk.
+pub fn for_each_chunk_prefetch(
+    src: &dyn DataSource,
+    chunk: usize,
+    mut f: impl FnMut(usize, &Mat) -> Result<()>,
+) -> Result<()> {
+    ensure_arg!(chunk >= 1, "for_each_chunk: chunk must be >= 1 (got 0)");
+    let n = src.n();
+    if src.as_mat().is_some() || n <= chunk {
+        // Nothing to overlap: zero-copy fast path or a single chunk.
+        return for_each_chunk(src, chunk, f);
+    }
+    // Buffers cycle: free → reader fills → full → consumer computes → free.
+    let (free_tx, free_rx) = std::sync::mpsc::channel::<Mat>();
+    let (full_tx, full_rx) = std::sync::mpsc::sync_channel::<(usize, Mat)>(2);
+    for _ in 0..2 {
+        free_tx.send(Mat::zeros(0, src.d())).expect("free channel open");
+    }
+    let mut result: Result<()> = Ok(());
+    std::thread::scope(|s| {
+        let reader = s.spawn(move || -> Result<()> {
+            let mut start = 0;
+            while start < n {
+                // A closed channel means the consumer bailed; just stop.
+                let Ok(mut buf) = free_rx.recv() else { return Ok(()) };
+                let len = chunk.min(n - start);
+                src.read_rows(start, len, &mut buf)?;
+                // Same DataSource-contract check as the sequential walker.
+                ensure_arg!(
+                    buf.rows == len,
+                    "read_rows returned {} rows, requested {len}",
+                    buf.rows
+                );
+                if full_tx.send((start, buf)).is_err() {
+                    return Ok(());
+                }
+                start += len;
+            }
+            Ok(())
+        });
+        let mut consumed = 0;
+        while consumed < n {
+            // A closed channel means the reader stopped early on an error
+            // (picked up from the join below).
+            let Ok((start, buf)) = full_rx.recv() else { break };
+            consumed += buf.rows;
+            if let Err(e) = f(start, &buf) {
+                result = Err(e);
+                break;
+            }
+            let _ = free_tx.send(buf);
+        }
+        // Close both channels so a still-running reader exits, then join.
+        drop(free_tx);
+        drop(full_rx);
+        match reader.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                if result.is_ok() {
+                    result = Err(e);
+                }
+            }
+            Err(p) => std::panic::resume_unwind(p),
+        }
+    });
+    result
 }
 
 /// Multi-target single-pass reservoir sample (Vitter's Algorithm R): one
@@ -117,8 +222,12 @@ pub fn for_each_chunk(
 /// pass never changes any sample — this is how an ensemble amortizes its
 /// m candidate sweeps into one read of the data.
 ///
-/// Each `(size, rng)` spec is advanced in place; sizes are clamped to
-/// `src.n()`.
+/// The reservoir update is order-dependent (each draw conditions on the
+/// number of rows seen so far), so the sweep is row-ordered and cannot
+/// run shard-parallel — but its I/O can hide: the walk goes through
+/// [`for_each_chunk_prefetch`], merging ranges in order while the next
+/// chunk streams in. Each `(size, rng)` spec is advanced in place; sizes
+/// are clamped to `src.n()`.
 pub fn reservoir_multi(
     src: &dyn DataSource,
     chunk: usize,
@@ -130,7 +239,7 @@ pub fn reservoir_multi(
     ensure_arg!(sizes.iter().all(|&s| s >= 1), "reservoir: empty sample");
     let mut outs: Vec<Mat> = sizes.iter().map(|&s| Mat::zeros(s, d)).collect();
     let mut seen = 0usize;
-    for_each_chunk(src, chunk, |_, m| {
+    for_each_chunk_prefetch(src, chunk, |_, m| {
         for i in 0..m.rows {
             let row = m.row(i);
             for (t, (_, rng)) in specs.iter_mut().enumerate() {
@@ -155,24 +264,7 @@ pub fn reservoir_multi(
 mod tests {
     use super::*;
     use crate::data::synthetic::two_moons;
-
-    /// A `Mat` stripped of its resident fast path, so tests exercise the
-    /// chunked `read_rows` iteration.
-    struct NonResident<'a>(&'a Mat);
-
-    impl DataSource for NonResident<'_> {
-        fn n(&self) -> usize {
-            self.0.rows
-        }
-
-        fn d(&self) -> usize {
-            self.0.cols
-        }
-
-        fn read_rows(&self, start: usize, len: usize, buf: &mut Mat) -> Result<()> {
-            self.0.read_rows(start, len, buf)
-        }
-    }
+    use crate::pipeline::testutil::NonResident;
 
     #[test]
     fn chunks_cover_all_rows() {
@@ -203,6 +295,97 @@ mod tests {
         .unwrap();
         assert_eq!(calls, 1);
         assert_eq!(ds.x.as_mat().unwrap().rows, 257);
+    }
+
+    #[test]
+    fn chunk_zero_is_an_error_not_a_panic() {
+        let ds = two_moons(64, 0.05, 17);
+        let src = NonResident(&ds.x);
+        assert!(for_each_chunk(&src, 0, |_, _| Ok(())).is_err());
+        assert!(for_each_chunk_prefetch(&src, 0, |_, _| Ok(())).is_err());
+        // resident sources validate too — the knob is wrong either way
+        assert!(for_each_chunk(&ds.x, 0, |_, _| Ok(())).is_err());
+        let mut specs = vec![(10usize, Rng::new(1))];
+        assert!(reservoir_multi(&src, 0, &mut specs).is_err());
+    }
+
+    #[test]
+    fn prefetch_delivers_the_sequential_chunk_stream() {
+        let ds = two_moons(257, 0.05, 18);
+        let src = NonResident(&ds.x);
+        let mut seq: Vec<(usize, usize)> = Vec::new();
+        for_each_chunk(&src, 100, |start, m| {
+            seq.push((start, m.rows));
+            Ok(())
+        })
+        .unwrap();
+        let mut pre: Vec<(usize, usize)> = Vec::new();
+        for_each_chunk_prefetch(&src, 100, |start, m| {
+            for i in 0..m.rows {
+                assert_eq!(m.row(i), ds.x.row(start + i));
+            }
+            pre.push((start, m.rows));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seq, pre);
+        // resident fast path: one zero-copy chunk, like for_each_chunk
+        let mut calls = 0;
+        for_each_chunk_prefetch(&ds.x, 100, |start, m| {
+            assert_eq!((start, m.rows), (0, 257));
+            calls += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(calls, 1);
+    }
+
+    /// A source whose reads fail past a row threshold, for error-path
+    /// coverage of the prefetching walker.
+    struct FailingSource {
+        rows: usize,
+        fail_from: usize,
+    }
+
+    impl DataSource for FailingSource {
+        fn n(&self) -> usize {
+            self.rows
+        }
+
+        fn d(&self) -> usize {
+            1
+        }
+
+        fn read_rows(&self, start: usize, len: usize, buf: &mut Mat) -> Result<()> {
+            crate::ensure_arg!(start < self.fail_from, "injected read failure");
+            buf.rows = len;
+            buf.cols = 1;
+            buf.data.clear();
+            buf.data.extend((start..start + len).map(|i| i as f32));
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn prefetch_surfaces_read_and_callback_errors() {
+        let src = FailingSource { rows: 1000, fail_from: 500 };
+        let mut delivered = 0usize;
+        let err = for_each_chunk_prefetch(&src, 100, |_, m| {
+            delivered += m.rows;
+            Ok(())
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("injected read failure"), "{err}");
+        assert_eq!(delivered, 500, "all chunks before the failure delivered");
+
+        // a callback error wins over any later read error and stops the walk
+        let src = FailingSource { rows: 1000, fail_from: 1000 };
+        let err = for_each_chunk_prefetch(&src, 100, |start, _| {
+            crate::ensure_arg!(start < 300, "callback bailed");
+            Ok(())
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("callback bailed"), "{err}");
     }
 
     #[test]

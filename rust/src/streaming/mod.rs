@@ -4,22 +4,27 @@
 //! This module owns [`BinDataset`] — a flat row-major f32 file — and its
 //! [`DataSource`] implementation. The clustering itself contains **no
 //! pipeline logic of its own** anymore: [`stream_uspec`] is
-//! `Pipeline::run` with the caller's chunk size, and [`stream_usenc`] is
-//! [`crate::usenc::usenc_chunked`]. Because the engine's sweeps are
-//! chunk-size invariant and source-agnostic, an on-disk run produces
-//! labels bit-identical to the in-memory run for the same seed
-//! (`rust/tests/pipeline_equivalence.rs`).
+//! `Pipeline::run` with the caller's execution knobs, and
+//! [`stream_usenc`] is [`crate::usenc::usenc_opts`]. Because the engine's
+//! sweeps are chunk-size, shard-count, and source invariant, an on-disk
+//! run produces labels bit-identical to the in-memory run for the same
+//! seed (`rust/tests/pipeline_equivalence.rs`,
+//! `rust/tests/sharded_equivalence.rs`) — with `shards > 1`, the KNR
+//! passes walk disjoint row ranges of the file concurrently, each
+//! prefetching its next chunk while computing on the current one.
 //!
-//! Resident peak of an out-of-core run is `O(N·K + chunk·d + p·d)` —
-//! independent of `N·d`, which only ever streams off disk. The paper's
+//! Resident peak of an out-of-core run is
+//! `O(N·K + shards·chunk·d + p·d)` — independent of `N·d`, which only
+//! ever streams off disk (each of the `shards` concurrent walkers holds
+//! two chunk buffers for its double-buffered prefetch). The paper's
 //! motivation is "ten-million-level datasets on a PC with 64 GB memory"
 //! (§1); the on-disk path takes the limited-resource premise one step
 //! further.
 
 use crate::affinity::DistanceBackend;
 use crate::linalg::Mat;
-use crate::pipeline::{reservoir_multi, DataSource, Pipeline};
-use crate::usenc::{usenc_chunked, UsencParams, UsencResult};
+use crate::pipeline::{reservoir_multi, DataSource, ExecOpts, Pipeline};
+use crate::usenc::{usenc_opts, UsencParams, UsencResult};
 use crate::uspec::UspecParams;
 use crate::util::rng::Rng;
 use crate::util::timer::PhaseTimer;
@@ -168,8 +173,12 @@ impl BinWriter {
 #[derive(Debug, Clone)]
 pub struct StreamParams {
     /// Rows per chunk in every sweep (the resident working set is
-    /// `chunk × d` f32s plus the growing sparse B).
+    /// `shards × chunk × d` f32s plus the growing sparse B).
     pub chunk: usize,
+    /// Row-range shards walked concurrently per order-free pass (KNR
+    /// queries); selection sweeps stay row-ordered but prefetch. Never
+    /// changes the labels.
+    pub shards: usize,
     /// U-SPEC hyper-parameters (p, K, k, solver, ...). Random and hybrid
     /// selection sweep the disk; k-means-full needs resident data and is
     /// rejected for on-disk sources.
@@ -178,7 +187,11 @@ pub struct StreamParams {
 
 impl Default for StreamParams {
     fn default() -> Self {
-        StreamParams { chunk: crate::pipeline::DEFAULT_CHUNK, base: UspecParams::default() }
+        StreamParams {
+            chunk: crate::pipeline::DEFAULT_CHUNK,
+            shards: 1,
+            base: UspecParams::default(),
+        }
     }
 }
 
@@ -203,12 +216,15 @@ pub fn reservoir_sample(ds: &BinDataset, size: usize, chunk: usize, seed: u64) -
 }
 
 /// Modeled resident peak of an out-of-core run: sparse B
-/// (idx u32 + d2 f32 + csr f64) + chunk buffer + representative index +
-/// embedding.
-fn peak_model(n: usize, d: usize, chunk: usize, base: &UspecParams) -> u64 {
+/// (idx u32 + d2 f32 + csr f64) + chunk buffers (two per concurrent
+/// shard walker — double buffering; walkers are capped at the thread
+/// budget, so an over-wide `--shards` never inflates the model) +
+/// representative index + embedding.
+fn peak_model(n: usize, d: usize, chunk: usize, shards: usize, base: &UspecParams) -> u64 {
     let k_nn = base.k_nn.min(base.p);
+    let walkers = shards.clamp(1, crate::util::par::num_threads().max(1));
     (n * k_nn) as u64 * (4 + 4 + 8 + 4)
-        + (chunk * d) as u64 * 4
+        + (2 * walkers * chunk * d) as u64 * 4
         + (base.p * d) as u64 * 4
         + (n * base.k) as u64 * 4
 }
@@ -222,23 +238,25 @@ pub fn stream_uspec(
     backend: &dyn DistanceBackend,
 ) -> Result<StreamResult> {
     let base = params.base.clamped(ds.n());
-    let res = Pipeline::new(backend).with_chunk(params.chunk).run(ds, &base, seed)?;
-    let peak_bytes = peak_model(ds.n(), ds.d(), params.chunk, &base);
+    let opts = ExecOpts { chunk: params.chunk, shards: params.shards };
+    let res = Pipeline::new(backend).with_opts(opts).run(ds, &base, seed)?;
+    let peak_bytes = peak_model(ds.n(), ds.d(), params.chunk, params.shards, &base);
     Ok(StreamResult { labels: res.labels, peak_bytes, timer: res.timer })
 }
 
 /// Out-of-core U-SENC over an on-disk dataset:
-/// [`crate::usenc::usenc_chunked`] with the caller's chunk size. The m
+/// [`crate::usenc::usenc_opts`] with the caller's execution knobs. The m
 /// candidate sweeps share one disk pass; each base clusterer streams its
-/// own KNR pass, so the resident peak stays at single-clusterer scale.
+/// own KNR pass (shard-parallel when `opts.shards > 1`), so the resident
+/// peak stays at single-clusterer scale.
 pub fn stream_usenc(
     ds: &BinDataset,
     params: &UsencParams,
-    chunk: usize,
+    opts: ExecOpts,
     seed: u64,
     backend: &dyn DistanceBackend,
 ) -> Result<UsencResult> {
-    usenc_chunked(ds, params, seed, backend, chunk)
+    usenc_opts(ds, params, seed, backend, opts)
 }
 
 #[cfg(test)]
@@ -317,6 +335,7 @@ mod tests {
         let bin = BinDataset::write_mat(&path, &ds.x).unwrap();
         let params = StreamParams {
             chunk: 700, // force multiple chunks per sweep
+            shards: 1,
             base: UspecParams { k: 3, p: 250, ..Default::default() },
         };
         let res = stream_uspec(&bin, &params, 42, &NativeBackend).unwrap();
@@ -336,6 +355,7 @@ mod tests {
         let bin = BinDataset::write_mat(&path, &ds.x).unwrap();
         let params = StreamParams {
             chunk: 512,
+            shards: 3, // sharded walk must still be the in-memory run
             base: UspecParams { k: 2, p: 200, ..Default::default() },
         };
         let streamed = stream_uspec(&bin, &params, 7, &NativeBackend).unwrap();
@@ -362,7 +382,8 @@ mod tests {
             k_max: 9,
             base: UspecParams { p: 90, ..Default::default() },
         };
-        let res = stream_usenc(&bin, &params, 256, 21, &NativeBackend).unwrap();
+        let opts = ExecOpts { chunk: 256, shards: 2 };
+        let res = stream_usenc(&bin, &params, opts, 21, &NativeBackend).unwrap();
         assert_eq!(res.ensemble.m(), 4);
         let score = nmi(&res.labels, &ds.y);
         assert!(score > 0.8, "streamed usenc nmi={score}");

@@ -11,7 +11,7 @@
 
 use crate::affinity::DistanceBackend;
 use crate::metrics::nmi;
-use crate::pipeline::{DataSource, Pipeline, DEFAULT_CHUNK};
+use crate::pipeline::{DataSource, ExecOpts, Pipeline};
 use crate::usenc::{
     consensus_bipartite, derive_jobs, run_job, sweep_job_candidates, Ensemble, UsencParams,
 };
@@ -61,6 +61,21 @@ pub fn usenc_adaptive(
     seed: u64,
     backend: &dyn DistanceBackend,
 ) -> Result<AdaptiveResult> {
+    usenc_adaptive_opts(source, params, adaptive, seed, backend, ExecOpts::default())
+}
+
+/// [`usenc_adaptive`] with explicit execution knobs (chunk size + shard
+/// count) for the sweeps — the same plumbing as the fixed-m entry points
+/// ([`crate::usenc::usenc_opts`]). Operational only: a converged adaptive
+/// run stays a prefix of the fixed-m run for any knob values.
+pub fn usenc_adaptive_opts(
+    source: &dyn DataSource,
+    params: &UsencParams,
+    adaptive: &AdaptiveParams,
+    seed: u64,
+    backend: &dyn DistanceBackend,
+    opts: ExecOpts,
+) -> Result<AdaptiveResult> {
     ensure_arg!(adaptive.batch >= 1, "adaptive: batch must be >= 1");
     ensure_arg!(
         adaptive.m_min >= 2 && adaptive.m_min <= adaptive.m_max,
@@ -71,7 +86,7 @@ pub fn usenc_adaptive(
     // stability > 1.0 is allowed: NMI never reaches it, so it disables
     // early stopping (run exactly to m_max).
     ensure_arg!(adaptive.stability > 0.0, "adaptive: stability must be > 0");
-    let pipe = Pipeline::new(backend).with_chunk(DEFAULT_CHUNK);
+    let pipe = Pipeline::new(backend).with_opts(opts);
     // Job i is fixed by the draws before it, so deriving the full m_max
     // stream up front consumes exactly the fixed-m seed schedule.
     let all_jobs = derive_jobs(

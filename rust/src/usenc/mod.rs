@@ -26,7 +26,7 @@ pub mod adaptive;
 use crate::affinity::DistanceBackend;
 use crate::bipartite::EigSolver;
 use crate::linalg::Csr;
-use crate::pipeline::{CandidateSet, DataSource, Pipeline, SelectStage, DEFAULT_CHUNK};
+use crate::pipeline::{CandidateSet, DataSource, ExecOpts, Pipeline, SelectStage};
 use crate::uspec::UspecParams;
 use crate::util::par;
 use crate::util::rng::Rng;
@@ -243,7 +243,7 @@ pub fn generate_ensemble(
     seed: u64,
     backend: &dyn DistanceBackend,
 ) -> Result<Ensemble> {
-    generate_ensemble_chunked(source, params, seed, backend, DEFAULT_CHUNK)
+    generate_ensemble_opts(source, params, seed, backend, ExecOpts::default())
 }
 
 /// [`generate_ensemble`] with an explicit chunk size (rows resident per
@@ -256,7 +256,22 @@ pub fn generate_ensemble_chunked(
     backend: &dyn DistanceBackend,
     chunk: usize,
 ) -> Result<Ensemble> {
-    let pipe = Pipeline::new(backend).with_chunk(chunk);
+    generate_ensemble_opts(source, params, seed, backend, ExecOpts::with_chunk(chunk))
+}
+
+/// [`generate_ensemble`] with explicit execution knobs ([`ExecOpts`]):
+/// chunk size and shard count for every pass over the source. Both are
+/// operational — the labels never change; with `shards > 1` each base
+/// clusterer's KNR pass walks the source shard-parallel with
+/// double-buffered prefetch.
+pub fn generate_ensemble_opts(
+    source: &dyn DataSource,
+    params: &UsencParams,
+    seed: u64,
+    backend: &dyn DistanceBackend,
+    opts: ExecOpts,
+) -> Result<Ensemble> {
+    let pipe = Pipeline::new(backend).with_opts(opts);
     let jobs = derive_jobs(params, source.n(), seed);
     let group = sweep_group_size(params, source.n(), source.d());
     let mut ens = Ensemble::default();
@@ -298,7 +313,7 @@ pub fn usenc(
     seed: u64,
     backend: &dyn DistanceBackend,
 ) -> Result<UsencResult> {
-    usenc_chunked(source, params, seed, backend, DEFAULT_CHUNK)
+    usenc_opts(source, params, seed, backend, ExecOpts::default())
 }
 
 /// [`usenc`] with an explicit chunk size for the data sweeps.
@@ -309,9 +324,20 @@ pub fn usenc_chunked(
     backend: &dyn DistanceBackend,
     chunk: usize,
 ) -> Result<UsencResult> {
+    usenc_opts(source, params, seed, backend, ExecOpts::with_chunk(chunk))
+}
+
+/// [`usenc`] with explicit execution knobs (chunk size + shard count).
+pub fn usenc_opts(
+    source: &dyn DataSource,
+    params: &UsencParams,
+    seed: u64,
+    backend: &dyn DistanceBackend,
+    opts: ExecOpts,
+) -> Result<UsencResult> {
     let mut timer = PhaseTimer::new();
     let ensemble = timer.time("generation", || {
-        generate_ensemble_chunked(source, params, seed, backend, chunk)
+        generate_ensemble_opts(source, params, seed, backend, opts)
     })?;
     let labels = timer.time("consensus", || {
         consensus_bipartite(&ensemble, params.k, params.base.solver, seed ^ 0xC075)
@@ -426,6 +452,10 @@ mod tests {
         let a = generate_ensemble(&ds.x, &params, 5, &NativeBackend).unwrap();
         let b = generate_ensemble_chunked(&ds.x, &params, 5, &NativeBackend, 128).unwrap();
         assert_eq!(a.labelings, b.labelings);
+        // sharded execution is operational too — same labelings
+        let opts = ExecOpts { chunk: 128, shards: 3 };
+        let c = generate_ensemble_opts(&ds.x, &params, 5, &NativeBackend, opts).unwrap();
+        assert_eq!(a.labelings, c.labelings);
     }
 
     #[test]

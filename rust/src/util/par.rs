@@ -100,7 +100,7 @@ pub fn set_thread_override(n: usize) {
 thread_local! {
     /// True while this thread is executing inside a parallel region —
     /// nested parallel calls then run inline.
-    static IN_REGION: Cell<bool> = Cell::new(false);
+    static IN_REGION: Cell<bool> = const { Cell::new(false) };
 }
 
 fn in_region() -> bool {
@@ -285,8 +285,10 @@ fn dispatch(nchunks: usize, nt: usize, task: &(dyn Fn(usize) + Sync)) {
 }
 
 /// Raw-pointer wrapper so disjoint-range writers can share a base pointer
-/// across threads.
-struct SendPtr<T>(*mut T);
+/// across threads. Crate-visible: the sharded KNR walk
+/// (`crate::pipeline`) uses it to land per-shard rows in their global
+/// row slots under the same disjoint-range protocol.
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 
 impl<T> Clone for SendPtr<T> {
     fn clone(&self) -> Self {

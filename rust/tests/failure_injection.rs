@@ -231,7 +231,11 @@ fn stream_uspec_tiny_dataset_errors_cleanly() {
     let x = Mat::from_vec(1, 2, vec![0.0, 0.0]);
     let path = dir.join("one.bin");
     let bin = BinDataset::write_mat(&path, &x).unwrap();
-    let params = StreamParams { chunk: 8, base: UspecParams { k: 2, p: 4, ..Default::default() } };
+    let params = StreamParams {
+        chunk: 8,
+        shards: 1,
+        base: UspecParams { k: 2, p: 4, ..Default::default() },
+    };
     assert!(stream_uspec(&bin, &params, 1, &NativeBackend).is_err());
 }
 

@@ -37,6 +37,7 @@ fn streaming_through_pjrt_backend() {
     let backend = PjrtBackend::new(pool);
     let params = StreamParams {
         chunk: 1024,
+        shards: 1,
         base: UspecParams { k: 2, p: 200, ..Default::default() },
     };
     let pjrt = stream_uspec(&bin, &params, 11, &backend).unwrap();

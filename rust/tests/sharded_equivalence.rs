@@ -1,0 +1,163 @@
+//! Shard-invariance guarantees of the staged engine: the shard count is
+//! an operational knob — labels, sigma, and embeddings are
+//! **bit-identical** across shard counts {1, 2, 7}, sources
+//! {`Mat`, `BinDataset`}, and thread counts {1, 8}, for U-SPEC and for
+//! out-of-core U-SENC. The CI determinism matrix re-runs this suite
+//! under `USPEC_THREADS` ∈ {1, 2, 8}.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use uspec::affinity::NativeBackend;
+use uspec::data::synthetic::two_moons;
+use uspec::linalg::Mat;
+use uspec::pipeline::{DataSource, ExecOpts, Pipeline};
+use uspec::streaming::{stream_usenc, BinDataset};
+use uspec::usenc::{usenc, UsencParams};
+use uspec::uspec::UspecParams;
+use uspec::util::par;
+use uspec::Result;
+
+/// Serializes tests that flip the global thread override.
+static OVERRIDE_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Restores the default thread override even when an assertion unwinds.
+struct OverrideGuard;
+
+impl Drop for OverrideGuard {
+    fn drop(&mut self) {
+        par::set_thread_override(0);
+    }
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("uspec_sharded_eq");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// The acceptance matrix: labels bit-identical across shard counts
+/// {1, 2, 7} × sources {Mat, BinDataset} × thread counts {1, 8}.
+#[test]
+fn uspec_bit_identical_across_shards_sources_threads() {
+    let _g = lock();
+    let _restore = OverrideGuard;
+    let ds = two_moons(1500, 0.06, 41);
+    let bin = BinDataset::write_mat(&tmp("eq_shards.bin"), &ds.x).unwrap();
+    let params = UspecParams { k: 2, p: 150, ..Default::default() };
+    let mut baseline: Option<(Vec<u32>, u32, Vec<u32>)> = None;
+    for nt in [1usize, 8] {
+        par::set_thread_override(nt);
+        for shards in [1usize, 2, 7] {
+            let pipe =
+                Pipeline::new(&NativeBackend).with_opts(ExecOpts { chunk: 300, shards });
+            let mem = pipe.run(&ds.x, &params, 77).unwrap();
+            let disk = pipe.run(&bin, &params, 77).unwrap();
+            let tag = format!("nt={nt} shards={shards}");
+            assert_eq!(mem.labels, disk.labels, "sources diverged at {tag}");
+            assert_eq!(mem.sigma.to_bits(), disk.sigma.to_bits(), "sigma at {tag}");
+            let emb_bits: Vec<u32> = disk.embedding.data.iter().map(|v| v.to_bits()).collect();
+            match &baseline {
+                Some((labels, sigma, emb)) => {
+                    assert_eq!(&mem.labels, labels, "labels changed at {tag}");
+                    assert_eq!(mem.sigma.to_bits(), *sigma, "sigma changed at {tag}");
+                    assert_eq!(&emb_bits, emb, "embedding changed at {tag}");
+                }
+                None => {
+                    baseline = Some((mem.labels.clone(), mem.sigma.to_bits(), emb_bits));
+                }
+            }
+        }
+    }
+}
+
+/// Out-of-core U-SENC: sharded streaming reproduces the in-memory
+/// ensemble and consensus exactly, at any shard count.
+#[test]
+fn usenc_stream_bit_identical_across_shards() {
+    let _g = lock();
+    let ds = two_moons(800, 0.06, 42);
+    let bin = BinDataset::write_mat(&tmp("eq_shards_usenc.bin"), &ds.x).unwrap();
+    let params = UsencParams {
+        k: 2,
+        m: 4,
+        k_min: 4,
+        k_max: 9,
+        base: UspecParams { p: 80, ..Default::default() },
+    };
+    let mem = usenc(&ds.x, &params, 13, &NativeBackend).unwrap();
+    for shards in [1usize, 2, 7] {
+        let opts = ExecOpts { chunk: 300, shards };
+        let disk = stream_usenc(&bin, &params, opts, 13, &NativeBackend).unwrap();
+        assert_eq!(mem.labels, disk.labels, "consensus diverged at shards={shards}");
+        assert_eq!(
+            mem.ensemble.labelings, disk.ensemble.labelings,
+            "base clusterings diverged at shards={shards}"
+        );
+    }
+}
+
+/// A `DataSource` wrapper counting reads and the largest chunk any read
+/// materialized — proof that sharding keeps residency bounded (shards ×
+/// chunk, never N×d) while reads may come from concurrent shard walkers.
+struct TrackingSource<'a> {
+    inner: &'a BinDataset,
+    max_read_rows: AtomicUsize,
+    reads: AtomicUsize,
+}
+
+impl DataSource for TrackingSource<'_> {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn d(&self) -> usize {
+        self.inner.d()
+    }
+
+    fn read_rows(&self, start: usize, len: usize, buf: &mut Mat) -> Result<()> {
+        self.max_read_rows.fetch_max(len, Ordering::Relaxed);
+        self.reads.fetch_add(1, Ordering::Relaxed);
+        DataSource::read_rows(self.inner, start, len, buf)
+    }
+    // as_mat stays None: the engine can never see the resident matrix.
+}
+
+#[test]
+fn sharded_run_keeps_chunked_residency_and_total_reads() {
+    let _g = lock();
+    let ds = two_moons(1200, 0.06, 43);
+    let bin = BinDataset::write_mat(&tmp("eq_shards_reads.bin"), &ds.x).unwrap();
+    let chunk = 128usize;
+    let shards = 5usize;
+    let params = UspecParams { k: 2, p: 100, ..Default::default() };
+    let tracked = TrackingSource {
+        inner: &bin,
+        max_read_rows: AtomicUsize::new(0),
+        reads: AtomicUsize::new(0),
+    };
+    let pipe = Pipeline::new(&NativeBackend).with_opts(ExecOpts { chunk, shards });
+    let res = pipe.run(&tracked, &params, 51).unwrap();
+    assert_eq!(res.labels.len(), bin.n());
+
+    // No read ever materialized more than one chunk, sharded or not.
+    let max_rows = tracked.max_read_rows.load(Ordering::Relaxed);
+    assert!(max_rows <= chunk, "read {max_rows} rows > chunk {chunk}");
+
+    // Read accounting: the selection sweep is one row-ordered pass
+    // (⌈n/chunk⌉ reads); the KNR pass splits per shard, so its chunk
+    // count is Σ ⌈len_s/chunk⌉ — between ⌈n/chunk⌉ and ⌈n/chunk⌉ + shards.
+    let n = bin.n();
+    let per_pass = n.div_ceil(chunk);
+    let reads = tracked.reads.load(Ordering::Relaxed);
+    assert!(
+        reads >= 2 * per_pass && reads <= 2 * per_pass + shards,
+        "reads={reads}, expected within [{}, {}]",
+        2 * per_pass,
+        2 * per_pass + shards
+    );
+}
