@@ -15,6 +15,13 @@ emits `BENCH_hotpath.json` at the repo root in the same schema:
   a row-at-a-time formulation with per-row temporaries (the old scalar
   kernel's memory behavior) vs one blocked pass with preallocated
   outputs and a reused RHS (the new packed kernel's memory behavior).
+* ``simd_dispatch`` — the runtime-dispatched vector tiles vs the forced
+  scalar tiles (`USPEC_SIMD=0`). Proxy legs: a non-vectorized einsum
+  contraction (NumPy's own C loop, no BLAS) stands in for the scalar
+  reference tile, a row-blocked BLAS gemm with the distance epilogue
+  fused per cache-resident block stands in for the dispatched
+  vector tile + shared epilogue. The Rust kernels are bit-identical
+  across dispatch levels; these legs only mirror the *throughput* gap.
 * ``argmin_k`` — per-row top-K selection with a fresh f64 copy + full
   argsort per row (old `argmin_k` usage) vs `argpartition` into
   preallocated f32 scratch (new `argmin_k_into`).
@@ -25,10 +32,12 @@ emits `BENCH_hotpath.json` at the repo root in the same schema:
   costs in time so the default chunk stays in the flat region.
 * ``shard_sweep`` — the sharded-DataSource walk: an out-of-core KNR pass
   over an on-disk file, alternating read↔compute in one sequential
-  walker vs splitting the rows into row-range shards, each walked by a
-  worker that prefetches its next chunk (double buffering) while
-  computing on the current one — I/O overlaps compute, results
-  identical. Mirrors `pipeline::shard::for_each_chunk_sharded`.
+  walker vs (a) the old fixed plan — one walker + one prefetch reader
+  per shard (``sharded_ms``, degrades as shards grow past the core
+  budget) — and (b) the adaptive walk plan (``adaptive_ms``): walker
+  count and prefetch depth from `pipeline::shard::plan_walk`, walkers
+  claiming shards off a shared queue. Mirrors
+  `pipeline::shard::for_each_chunk_sharded`.
 
 Pass ``--smoke`` for a fast CI sanity run (smaller shapes, fewer
 iterations, same schema).
@@ -38,8 +47,10 @@ overwrites this file with natively measured numbers (``harness`` tells
 you which produced it).
 """
 
+import collections
 import json
 import os
+import queue
 import sys
 import tempfile
 import time
@@ -62,6 +73,16 @@ def time_median(warmup, iters, fn):
         times.append(time.perf_counter() - t0)
     times.sort()
     return times[len(times) // 2]
+
+
+def _timed(fn):
+    """One timed call. The walk benches interleave these round-robin and
+    keep per-config minima: every iteration performs identical work, so
+    the minimum is the least-noise estimate, and interleaving spreads
+    slow drift (page cache, CPU contention) over every config equally."""
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
 
 
 # ---------------------------------------------------------------- dispatch
@@ -178,6 +199,82 @@ def bench_sq_dists(smoke=False):
     return rows
 
 
+# ----------------------------------------------------------- simd dispatch
+def bench_simd_dispatch(smoke=False):
+    """Runtime SIMD dispatch vs forced-scalar tiles (see module docstring
+    for the proxy-leg mapping). The scalar leg contracts with einsum
+    (optimize=False keeps NumPy's own non-BLAS C loop — the scalar tile's
+    instruction mix); the dispatched leg runs the gemm row-block by
+    row-block and fuses the distance epilogue (and the argmin for the
+    nearest leg) while the block is cache-resident, which is what the
+    vector tiles + shared scalar epilogue do per register tile."""
+    rows = []
+    rng = np.random.default_rng(21)
+    block = 256  # rows per cache-resident gemm block
+    shapes = ((1024, 500, 10),) if smoke else ((4096, 1000, 10), (4096, 1000, 100))
+    for n, p, d in shapes:
+        x = rng.standard_normal((n, d)).astype(np.float32)
+        c = rng.standard_normal((p, d)).astype(np.float32)
+        c_t = np.ascontiguousarray(c.T)
+        cn = (c * c).sum(axis=1)
+
+        def scalar_dists():
+            g = np.einsum("ij,kj->ik", x, c, optimize=False)
+            xn = np.einsum("ij,ij->i", x, x)
+            return np.maximum(xn[:, None] + cn[None, :] - 2.0 * g, 0.0)
+
+        def scalar_nearest():
+            return np.argmin(scalar_dists(), axis=1)
+
+        out = np.empty((block, p), dtype=np.float32)
+        tmp = np.empty_like(out)
+        full = np.empty((n, p), dtype=np.float32)
+        labels = np.empty(n, dtype=np.int64)
+
+        def dispatched_dists():
+            for lo in range(0, n, block):
+                hi = min(lo + block, n)
+                o, t = out[: hi - lo], tmp[: hi - lo]
+                sq_dists_blocked(x[lo:hi], c_t, cn, o, t)
+                full[lo:hi] = o
+            return full
+
+        def dispatched_nearest():
+            for lo in range(0, n, block):
+                hi = min(lo + block, n)
+                o, t = out[: hi - lo], tmp[: hi - lo]
+                sq_dists_blocked(x[lo:hi], c_t, cn, o, t)
+                labels[lo:hi] = np.argmin(o, axis=1)  # fused, block in cache
+            return labels
+
+        iters = 3 if smoke else 5
+        t_scalar = time_median(1, iters, scalar_dists)
+        t_disp = time_median(1, iters, dispatched_dists)
+        t_scalar_near = time_median(1, iters, scalar_nearest)
+        t_disp_near = time_median(1, iters, dispatched_nearest)
+        gf = lambda t: 2.0 * n * p * d / t / 1e9  # noqa: E731
+        rows.append(
+            {
+                "n": n,
+                "p": p,
+                "d": d,
+                "scalar_ms": round(t_scalar * 1e3, 3),
+                "dispatched_ms": round(t_disp * 1e3, 3),
+                "scalar_nearest_ms": round(t_scalar_near * 1e3, 3),
+                "dispatched_nearest_ms": round(t_disp_near * 1e3, 3),
+                "dispatched_gflops": round(gf(t_disp), 2),
+                "sq_dists_speedup": round(t_scalar / t_disp, 2),
+                "nearest_speedup": round(t_scalar_near / t_disp_near, 2),
+            }
+        )
+        print(
+            f"simd n={n} p={p} d={d:3d}: scalar {t_scalar * 1e3:8.2f} ms  "
+            f"dispatched {t_disp * 1e3:8.2f} ms ({gf(t_disp):6.2f} GF/s)  "
+            f"sq_dists {t_scalar / t_disp:.1f}x  nearest {t_scalar_near / t_disp_near:.1f}x"
+        )
+    return rows
+
+
 # ---------------------------------------------------------------- argmin_k
 def bench_argmin(smoke=False):
     rows = []
@@ -271,14 +368,23 @@ def bench_chunk_sweep(smoke=False):
 
 
 # ------------------------------------------------------------- shard sweep
+def plan_walk(shards, budget):
+    """Mirror of `pipeline::shard::plan_walk` for the Parallel/Auto
+    profile: walkers scale toward half the thread budget (the walkers'
+    chunk compute dispatches into the worker pool, so walkers ≈ budget
+    would oversubscribe the cores 2×), prefetch depth 2."""
+    return max(min(shards, max(budget // 2, 1)), 1), 2
+
+
 def bench_shard_sweep(smoke=False):
     """Sharded out-of-core pass (mirror of
     `pipeline::shard::for_each_chunk_sharded`): an on-disk KNR pass
     (read chunk → sq_dists → per-row top-K) walked (a) sequentially,
-    alternating read and compute, vs (b) split into row-range shards,
-    each walked by a worker whose next chunk is prefetched (double
-    buffering) while it computes on the current one. Shards/prefetch are
-    operational only — both walks visit every row once."""
+    alternating read and compute; (b) with the old fixed plan — one
+    walker + one prefetch reader per shard; (c) with the adaptive walk
+    plan — `plan_walk` walkers claiming shards off a shared queue, each
+    prefetching `depth` chunks ahead. Shards/walkers/prefetch are
+    operational only — every walk visits every row once."""
     rows = []
     rng = np.random.default_rng(31)
     n, p, d, k, chunk = (32_768 if smoke else 131_072), 1000, 16, 5, 4096
@@ -334,13 +440,97 @@ def bench_shard_sweep(smoke=False):
         workers.shutdown()
         return acc
 
+    def walked(shards, walkers, depth):
+        """The adaptive walk: `walkers` threads claim shards off a queue
+        (the engine's atomic-cursor idiom), each keeping up to `depth`
+        chunk reads in flight while computing."""
+        bounds = [(i * n) // shards for i in range(shards + 1)]
+        todo = queue.SimpleQueue()
+        for i in range(shards):
+            todo.put(i)
+        readers = concurrent.futures.ThreadPoolExecutor(max_workers=walkers)
+        totals = [0] * walkers
+
+        def walker(w):
+            acc = 0
+            while True:
+                try:
+                    i = todo.get_nowait()
+                except queue.Empty:
+                    break
+                lo, hi = bounds[i], bounds[i + 1]
+                if lo >= hi:
+                    continue
+                pending = collections.deque()
+                nxt = lo
+                while nxt < hi and len(pending) < depth:
+                    end = min(nxt + chunk, hi)
+                    pending.append(readers.submit(read_chunk, nxt, end))
+                    nxt = end
+                while pending:
+                    buf = pending.popleft().result()
+                    while nxt < hi and len(pending) < depth:
+                        end = min(nxt + chunk, hi)
+                        pending.append(readers.submit(read_chunk, nxt, end))
+                        nxt = end
+                    acc += compute(buf)
+            totals[w] = acc
+
+        threads = [threading.Thread(target=walker, args=(w,)) for w in range(walkers)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        readers.shutdown()
+        return sum(totals)
+
     try:
         assert sequential() == n, "sequential walk must cover every row"
-        iters = 2 if smoke else 3
-        t_seq = time_median(1, iters, sequential)
-        for shards in (1, 2) if smoke else (1, 2, 4, 8):
-            assert sharded(shards) == n, "sharded walk must cover every row"
-            t = time_median(1, iters, lambda: sharded(shards))
+        iters = 2 if smoke else 5
+        sweep = (1, 2) if smoke else (1, 2, 4, 8)
+        plans = {s: plan_walk(s, NT) for s in sweep}
+
+        def chunk_stream(shards):
+            """The (lo, hi) chunk sequence a walk over `shards` shards
+            reads, in claim order."""
+            bounds = [(i * n) // shards for i in range(shards + 1)]
+            out = []
+            for i in range(shards):
+                t = bounds[i]
+                while t < bounds[i + 1]:
+                    nxt = min(t + chunk, bounds[i + 1])
+                    out.append((t, nxt))
+                    t = nxt
+            return tuple(out)
+
+        # Configs whose walk plan AND chunk stream coincide perform
+        # identical work (e.g. one walker over chunk-aligned shards): they
+        # are one measurement shared across rows, so the reported curve
+        # cannot show pure timer noise as a shard-count effect.
+        ad_key = {s: (plans[s], chunk_stream(s)) for s in sweep}
+        # Coverage checks double as warmup passes.
+        assert sequential() == n, "sequential walk must cover every row"
+        for s in sweep:
+            assert sharded(s) == n, "sharded walk must cover every row"
+            assert walked(s, *plans[s]) == n, "adaptive walk must cover every row"
+        # Interleave the configs round-robin so slow drift (page cache,
+        # CPU contention) lands on every config equally instead of biasing
+        # whichever was measured last; keep the per-config minimum.
+        uniq_ad = {ad_key[s]: s for s in sweep}
+        best = {}
+        for _ in range(iters):
+            for key, fn in [("seq", sequential)] + [
+                (("fixed", s), (lambda s=s: sharded(s))) for s in sweep
+            ] + [
+                (k, (lambda s=s: walked(s, *plans[s]))) for k, s in uniq_ad.items()
+            ]:
+                dt = _timed(fn)
+                best[key] = min(best.get(key, dt), dt)
+        t_seq = best["seq"]
+        for shards in sweep:
+            walkers, depth = plans[shards]
+            t = best[("fixed", shards)]
+            t_ad = best[ad_key[shards]]
             rows.append(
                 {
                     "n": n,
@@ -349,14 +539,19 @@ def bench_shard_sweep(smoke=False):
                     "k": k,
                     "chunk": chunk,
                     "shards": shards,
+                    "walkers": walkers,
+                    "prefetch_depth": depth,
                     "sequential_ms": round(t_seq * 1e3, 3),
                     "sharded_ms": round(t * 1e3, 3),
+                    "adaptive_ms": round(t_ad * 1e3, 3),
                     "speedup_vs_sequential": round(t_seq / t, 2),
+                    "adaptive_speedup": round(t_seq / t_ad, 2),
                 }
             )
             print(
                 f"shard_sweep n={n} shards={shards}: sequential {t_seq * 1e3:8.2f} ms  "
-                f"sharded+prefetch {t * 1e3:8.2f} ms  speedup {t_seq / t:.2f}x"
+                f"fixed {t * 1e3:8.2f} ms ({t_seq / t:.2f}x)  "
+                f"adaptive[w={walkers} depth={depth}] {t_ad * 1e3:8.2f} ms ({t_seq / t_ad:.2f}x)"
             )
     finally:
         os.remove(path)
@@ -376,6 +571,7 @@ def main():
         "threads": NT,
         "pool_dispatch": bench_dispatch(smoke),
         "sq_dists": bench_sq_dists(smoke),
+        "simd_dispatch": bench_simd_dispatch(smoke),
         "argmin_k": bench_argmin(smoke),
         "chunk_sweep": bench_chunk_sweep(smoke),
         "shard_sweep": bench_shard_sweep(smoke),

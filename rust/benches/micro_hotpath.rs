@@ -1,7 +1,8 @@
 //! Hot-path microbenchmarks (the §Perf instrumentation): persistent-pool
 //! dispatch overhead vs spawn-per-call, the tiled packed distance kernel
-//! vs the pre-tiling scalar reference, native vs PJRT pdist throughput,
-//! and the approximate-KNR pipeline throughput.
+//! vs the pre-tiling scalar reference, the runtime-dispatched SIMD tiles
+//! vs the forced-scalar tiles, native vs PJRT pdist throughput, and the
+//! approximate-KNR pipeline throughput.
 //!
 //! Prints GFLOP/s and rows/s; saves the text report to
 //! `results/micro_hotpath.txt` and the machine-readable trajectory to
@@ -193,6 +194,54 @@ fn main() {
         ));
     }
     json_sections.push(format!("\"sq_dists\": [{}]", sq_rows.join(", ")));
+
+    // ---- runtime SIMD dispatch vs forced-scalar tiles --------------------
+    emit("\n== runtime SIMD dispatch (dispatched vs forced-scalar tiles) ==".into());
+    let mut simd_rows: Vec<String> = Vec::new();
+    for (n, p, d) in [(4096usize, 1000usize, 10usize), (4096, 1000, 100)] {
+        let x = randmat(n, d, 21);
+        let cm = randmat(p, d, 22);
+        let packed = cm.pack_rhs();
+        uspec::linalg::set_simd_override(1);
+        let t_scalar = time_median(1, 5, || {
+            std::hint::black_box(x.sq_dists_packed(&packed));
+        });
+        let t_scalar_near = time_median(1, 5, || {
+            std::hint::black_box(uspec::linalg::nearest_packed(&x, &packed));
+        });
+        let scalar_out = x.sq_dists_packed(&packed);
+        uspec::linalg::set_simd_override(0);
+        let t_simd = time_median(1, 5, || {
+            std::hint::black_box(x.sq_dists_packed(&packed));
+        });
+        let t_simd_near = time_median(1, 5, || {
+            std::hint::black_box(uspec::linalg::nearest_packed(&x, &packed));
+        });
+        // the dispatch contract, re-checked where the numbers are made
+        let simd_out = x.sq_dists_packed(&packed);
+        assert!(
+            scalar_out.data.iter().zip(&simd_out.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "scalar and dispatched kernels diverged"
+        );
+        emit(format!(
+            "simd n={n} p={p} d={d:3}: scalar {:7.2} ms  dispatched {:7.2} ms ({:6.2} GF/s)  sq_dists {:.2}x  nearest {:.2}x",
+            t_scalar * 1e3,
+            t_simd * 1e3,
+            gflops(n, p, d, t_simd),
+            t_scalar / t_simd,
+            t_scalar_near / t_simd_near
+        ));
+        simd_rows.push(format!(
+            "{{\"n\": {n}, \"p\": {p}, \"d\": {d}, \"scalar_ms\": {:.3}, \"dispatched_ms\": {:.3}, \"scalar_nearest_ms\": {:.3}, \"dispatched_nearest_ms\": {:.3}, \"sq_dists_speedup\": {:.2}, \"nearest_speedup\": {:.2}}}",
+            t_scalar * 1e3,
+            t_simd * 1e3,
+            t_scalar_near * 1e3,
+            t_simd_near * 1e3,
+            json_escape_free(t_scalar / t_simd),
+            json_escape_free(t_scalar_near / t_simd_near)
+        ));
+    }
+    json_sections.push(format!("\"simd_dispatch\": [{}]", simd_rows.join(", ")));
 
     // ---- native vs PJRT pdist throughput ---------------------------------
     emit("\n== pdist throughput (native vs PJRT artifact) ==".into());

@@ -16,11 +16,14 @@
 //! across buckets, and on the native backend the representative panel is
 //! packed **once** ([`Mat::pack_rhs`]) and shared by every batch
 //! (`exact_knr` additionally parallelizes across batches, with the
-//! per-batch gemm running inline on the claiming worker).
+//! per-batch gemm running inline on the claiming worker). Every packed
+//! kernel below dispatches through the runtime SIMD layer in
+//! [`crate::linalg`] — results are bit-identical whichever tile
+//! implementation is picked.
 
 use super::DistanceBackend;
 use crate::kmeans::{kmeans, KmeansParams};
-use crate::linalg::{nearest_packed, sq_dists_into, DistScratch, Mat};
+use crate::linalg::{nearest_packed_into, sq_dists_into, DistScratch, Mat};
 use crate::util::{argmin_k_into, par};
 use crate::{ensure_arg, Result};
 
@@ -347,12 +350,16 @@ pub fn exact_knr(x: &Mat, reps: &Mat, k: usize, backend: &dyn DistanceBackend) -
 }
 
 /// Nearest row of `c` for every row of `x`. On the native backend this is
-/// the fused packed argmin kernel (no distance block is materialized);
-/// other backends fall back to fixed-size batches through `sq_dists`.
+/// the fused packed argmin kernel (no distance block is materialized),
+/// writing through caller-reusable scratch; other backends fall back to
+/// fixed-size batches through `sq_dists`.
 fn nearest_row_batched(x: &Mat, c: &Mat, backend: &dyn DistanceBackend) -> Vec<u32> {
     if backend.is_native() {
         let packed = c.pack_rhs();
-        return nearest_packed(x, &packed).0;
+        let mut scratch = DistScratch::default();
+        let (mut labels, mut dists) = (Vec::new(), Vec::new());
+        nearest_packed_into(x, &packed, &mut scratch, &mut labels, &mut dists);
+        return labels;
     }
     let n = x.rows;
     let m = c.rows;

@@ -254,6 +254,7 @@ pub fn streaming_ablation(h: &Harness) -> Result<String> {
             chunk: 8192,
             shards: 1,
             base: params.clone(),
+            ..Default::default()
         };
         let t1 = std::time::Instant::now();
         let st = crate::streaming::stream_uspec(&bin, &sp, h.cfg.seed, h.backend())?;

@@ -45,6 +45,26 @@ pub enum EigSolver {
     Lobpcg,
 }
 
+/// The iterative fast path only pays for itself when the reduced problem
+/// is big relative to the block it iterates: the subspace block is
+/// oversampled to ~k+8 columns and each outer step costs O(p²·block), so
+/// below `FAST_EIG_K_FACTOR·k + FAST_EIG_MARGIN` rows the dense O(p³)
+/// solver wins outright (and is exact). The crossover was tuned on the
+/// `ablation_eig` bench shapes.
+pub const FAST_EIG_K_FACTOR: usize = 4;
+/// Additive slack of the crossover — keeps tiny problems (p ≲ 64) dense
+/// even at k=0-ish scales where `FAST_EIG_K_FACTOR·k` alone would be
+/// meaningless.
+pub const FAST_EIG_MARGIN: usize = 64;
+
+/// True when the reduced p×p problem is large enough for the iterative
+/// fast path: `p > FAST_EIG_K_FACTOR·k + FAST_EIG_MARGIN`. Exposed so the
+/// boundary is unit-testable and the bench can report which side a shape
+/// lands on.
+pub fn fast_eig_crossover(p: usize, k: usize) -> bool {
+    p > FAST_EIG_K_FACTOR * k + FAST_EIG_MARGIN
+}
+
 /// Solve the reduced generalized problem `L_R v = λ D_R v` for the
 /// smallest `k` eigenpairs. Returns (λ, V p×k).
 ///
@@ -63,7 +83,22 @@ pub fn reduced_eig(e_r: &DMat, k: usize, solver: EigSolver, seed: u64) -> Result
         d_r.iter().all(|&x| x > 0.0),
         "reduced_eig: isolated representative (zero degree)"
     );
-    let use_fast = matches!(solver, EigSolver::Auto | EigSolver::Lobpcg) && p > 4 * k + 64;
+    let use_fast =
+        matches!(solver, EigSolver::Auto | EigSolver::Lobpcg) && fast_eig_crossover(p, k);
+    if crate::util::eig_trace() {
+        let chosen = if !use_fast {
+            "dense"
+        } else if matches!(solver, EigSolver::Lobpcg) {
+            "lobpcg"
+        } else {
+            "chebyshev-subspace"
+        };
+        eprintln!(
+            "[eig] reduced_eig p={p} k={k} solver={solver:?} -> {chosen} \
+             (crossover p > {})",
+            FAST_EIG_K_FACTOR * k + FAST_EIG_MARGIN
+        );
+    }
     if use_fast {
         let dis: Vec<f64> = d_r.iter().map(|&x| 1.0 / x.sqrt()).collect();
         // Ŝ = D^{-1/2} E D^{-1/2}
@@ -521,6 +556,16 @@ mod tests {
         let tc_l = transfer_cut(&b, 3, EigSolver::Lobpcg, 1).unwrap();
         for (l, d) in tc_l.lambdas.iter().zip(&tc_d.lambdas) {
             assert!((l - d).abs() < 1e-4, "lobpcg {l} vs dense {d}");
+        }
+    }
+
+    #[test]
+    fn fast_eig_crossover_boundary() {
+        // exactly at the threshold: dense; one past it: fast
+        for k in [1usize, 3, 10, 50] {
+            let boundary = FAST_EIG_K_FACTOR * k + FAST_EIG_MARGIN;
+            assert!(!fast_eig_crossover(boundary, k), "p == 4k+64 must stay dense (k={k})");
+            assert!(fast_eig_crossover(boundary + 1, k), "p == 4k+65 must go fast (k={k})");
         }
     }
 

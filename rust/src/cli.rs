@@ -47,6 +47,9 @@ COMMON FLAGS (any config key):
   --workers    coordinator worker threads
   --shards     row-range shards per streaming pass, 1..=n (I/O overlap
                only — labels never depend on it)  [1]
+  --storage    walk-planner hint: auto | serial (hdd) | parallel
+               (ssd/nvme); auto probes the source. Operational only,
+               like --shards  [auto]
   --runs       repetitions for mean±std
   --seed       master seed
   --config     JSON config file (flags override it)
@@ -272,6 +275,7 @@ pub fn execute(inv: Invocation) -> Result<String> {
             let opts = crate::pipeline::ExecOpts {
                 chunk: crate::pipeline::DEFAULT_CHUNK,
                 shards,
+                storage: inv.cfg.storage,
             };
             let t0 = std::time::Instant::now();
             let (method, labels, timer_summary, peak) =
@@ -292,7 +296,12 @@ pub fn execute(inv: Invocation) -> Result<String> {
                     )?;
                     ("U-SENC", res.labels, res.timer.summary(), None)
                 } else {
-                    let sp = crate::streaming::StreamParams { chunk: opts.chunk, shards, base };
+                    let sp = crate::streaming::StreamParams {
+                        chunk: opts.chunk,
+                        shards,
+                        storage: opts.storage,
+                        base,
+                    };
                     let res =
                         crate::streaming::stream_uspec(&bin, &sp, inv.cfg.seed, h.backend())?;
                     ("U-SPEC", res.labels, res.timer.summary(), Some(res.peak_bytes))
@@ -335,6 +344,13 @@ mod tests {
         assert_eq!(inv.command, "cluster");
         assert_eq!(inv.cfg.p, 300);
         assert_eq!(inv.cfg.runs, 2);
+    }
+
+    #[test]
+    fn parse_storage_flag() {
+        let inv = parse(&argv("stream --dataset TB-1M --storage nvme")).unwrap();
+        assert_eq!(inv.cfg.storage, crate::pipeline::StorageProfile::Parallel);
+        assert!(parse(&argv("stream --dataset TB-1M --storage tape")).is_err());
     }
 
     #[test]

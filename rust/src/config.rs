@@ -2,6 +2,7 @@
 //! launcher's single source of truth (serde is unavailable offline; the
 //! in-tree [`crate::util::json`] does the (de)serialization).
 
+use crate::pipeline::StorageProfile;
 use crate::util::json::Json;
 use crate::{Error, Result};
 use std::path::Path;
@@ -60,6 +61,9 @@ pub struct RunConfig {
     /// (operational only — labels never depend on it). Must be >= 1;
     /// `stream` additionally rejects values above the dataset size.
     pub shards: usize,
+    /// Storage profile hint for the sharded walk planner (`auto` probes;
+    /// operational only, like `shards`).
+    pub storage: StorageProfile,
     /// Repetitions for mean±std reporting.
     pub runs: usize,
     /// Master seed.
@@ -83,6 +87,7 @@ impl Default for RunConfig {
             backend: BackendKind::Native,
             workers: crate::util::par::num_threads(),
             shards: 1,
+            storage: StorageProfile::Auto,
             runs: 3,
             seed: 42,
             budget_bytes: 64 * (1 << 30),
@@ -105,6 +110,7 @@ impl RunConfig {
             ("backend", Json::Str(self.backend.name().into())),
             ("workers", Json::Num(self.workers as f64)),
             ("shards", Json::Num(self.shards as f64)),
+            ("storage", Json::Str(self.storage.name().into())),
             ("runs", Json::Num(self.runs as f64)),
             ("seed", Json::Num(self.seed as f64)),
             ("budget_bytes", Json::Num(self.budget_bytes as f64)),
@@ -152,6 +158,7 @@ impl RunConfig {
                 }
                 self.shards = s;
             }
+            "storage" => self.storage = StorageProfile::parse(value)?,
             "runs" => self.runs = parse_usize(value)?.max(1),
             "seed" => {
                 self.seed = value.parse().map_err(|e| Error::Config(format!("seed: {e}")))?
@@ -215,5 +222,19 @@ mod tests {
         let j = cfg.to_json().to_string();
         let back = RunConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
         assert_eq!(back.shards, 4);
+    }
+
+    #[test]
+    fn storage_key_roundtrips_and_rejects_junk() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.storage, StorageProfile::Auto);
+        cfg.set("storage", "serial").unwrap();
+        assert_eq!(cfg.storage, StorageProfile::Serial);
+        cfg.set("storage", "nvme").unwrap();
+        assert_eq!(cfg.storage, StorageProfile::Parallel);
+        assert!(cfg.set("storage", "tape").is_err());
+        let j = cfg.to_json().to_string();
+        let back = RunConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.storage, StorageProfile::Parallel);
     }
 }

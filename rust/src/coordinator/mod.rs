@@ -202,7 +202,7 @@ mod tests {
         let b = run_base_clusterers(&ds.x, &p, 5, &NativeBackend, 4, None).unwrap();
         assert_eq!(a.labelings, b.labelings);
         // sharded sweeps under the scheduler change nothing either
-        let opts = ExecOpts { chunk: 64, shards: 3 };
+        let opts = ExecOpts { chunk: 64, shards: 3, ..ExecOpts::default() };
         let c = run_base_clusterers_opts(&ds.x, &p, 5, &NativeBackend, 4, None, opts).unwrap();
         assert_eq!(a.labelings, c.labelings);
     }

@@ -22,6 +22,13 @@
 //! its current owner and an earlier center, Hamerly keeps the owner while
 //! Lloyd picks the lower index — so labelings can differ on ties (same
 //! inertia). The equality property test uses tie-free shapes.
+//!
+//! This module deliberately does **not** use the fused
+//! [`crate::linalg::nearest_packed_into`] kernel: the initial scan needs
+//! the *second*-closest distance too (for the `l[i]` bound), and every
+//! later scan prunes per point via bounds the fused kernel cannot see.
+//! Its direct-form `dist2` math is load-bearing for the bound
+//! invariants — do not swap it for the dot-product form.
 
 use super::{init_plusplus, init_random, Init, KmeansParams, KmeansResult};
 use crate::linalg::Mat;

@@ -4,7 +4,7 @@
 //! (§3.1.2 pre-step 1), eigenvector discretization (§3.1.3), and as the
 //! base clusterer of every ensemble baseline (§4.4).
 
-use crate::linalg::Mat;
+use crate::linalg::{nearest_packed_into, DistScratch, Mat};
 pub mod hamerly;
 
 pub use hamerly::kmeans_hamerly;
@@ -71,21 +71,24 @@ pub fn assign_fused(x: &Mat, centers: &Mat) -> (Vec<u32>, Vec<f32>) {
 
 /// Batched assignment that avoids materializing the full N×k distance
 /// matrix: processes `batch` rows at a time. This is the shape the AOT
-/// kernel path mirrors.
+/// kernel path mirrors. Scratch buffers (row norms, per-thread winners,
+/// the batch view itself) are reused across batches via
+/// [`nearest_packed_into`].
 pub fn assign_batched(x: &Mat, centers: &Mat, batch: usize) -> (Vec<u32>, Vec<f32>) {
     let n = x.rows;
     let packed = centers.pack_rhs(); // one packing shared by every batch
     let mut labels = vec![0u32; n];
     let mut dists = vec![0f32; n];
+    let mut scratch = DistScratch::default();
+    let (mut lb, mut db) = (Vec::new(), Vec::new());
+    let mut xb = Mat::zeros(0, x.cols);
     let mut start = 0;
     while start < n {
         let end = (start + batch).min(n);
-        let xb = Mat {
-            rows: end - start,
-            cols: x.cols,
-            data: x.data[start * x.cols..end * x.cols].to_vec(),
-        };
-        let (lb, db) = assign_packed(&xb, &packed);
+        xb.rows = end - start;
+        xb.data.clear();
+        xb.data.extend_from_slice(&x.data[start * x.cols..end * x.cols]);
+        nearest_packed_into(&xb, &packed, &mut scratch, &mut lb, &mut db);
         labels[start..end].copy_from_slice(&lb);
         dists[start..end].copy_from_slice(&db);
         start = end;
@@ -161,13 +164,17 @@ pub fn kmeans(x: &Mat, params: &KmeansParams, seed: u64) -> Result<KmeansResult>
         Init::PlusPlus => init_plusplus(x, k, &mut rng),
     };
     let mut labels = vec![0u32; n];
+    // Assignment buffers persist across Lloyd iterations: the row-norm /
+    // winner scratch and the label/distance outputs are allocated once
+    // and refilled by `nearest_packed_into` every round.
+    let mut scratch = DistScratch::default();
+    let mut dists: Vec<f32> = Vec::new();
     let mut inertia = f64::INFINITY;
     let mut iterations = 0;
     for it in 0..params.max_iter {
         iterations = it + 1;
-        let (new_labels, dists) = assign_packed(x, &centers.pack_rhs());
+        nearest_packed_into(x, &centers.pack_rhs(), &mut scratch, &mut labels, &mut dists);
         let new_inertia: f64 = dists.iter().map(|&v| v as f64).sum();
-        labels = new_labels;
         // Update step: mean of members; repair empties with farthest points.
         let mut counts = vec![0u64; k];
         let mut sums = vec![0f64; k * d];

@@ -22,6 +22,38 @@
 //! (`rows·cols·4` bytes — ≤ ~0.4 MB at the paper's p=1000, d≤100 shapes,
 //! comfortably L2-resident). Shapes far beyond that would want an extra
 //! column-blocking level, which the paper's pipeline never produces.
+//!
+//! # Runtime SIMD dispatch and the bit-identity contract
+//!
+//! The tile kernels exist in three interchangeable implementations —
+//! portable scalar, AVX2 (`x86_64`, runtime-detected via
+//! `is_x86_feature_detected!`), and NEON (`aarch64`) — selected once per
+//! process into a cached [`SimdLevel`] and dispatched at tile
+//! granularity, so the blocked drivers stay single-source. `USPEC_SIMD=0`
+//! (once-read, via [`crate::util::simd_allowed`]) forces the scalar
+//! fallback; [`set_simd_override`] is the test/bench hook that can flip
+//! the choice after first use.
+//!
+//! All three paths are **bit-identical by construction**, preserving the
+//! repo's standing invariant that every speed knob is purely operational:
+//!
+//! - The scalar tiles accumulate in a fixed `NR`-lane order: lane `c`
+//!   only ever combines with lane `c`, one IEEE multiply then one IEEE
+//!   add per feature step. One 8-wide AVX2 vector (or two 4-wide NEON
+//!   vectors) per tile row executes exactly that lanewise sequence.
+//! - The vector tiles deliberately use separate `mul` + `add`, **never**
+//!   `fmadd`: a fused multiply-add rounds once where the scalar path
+//!   rounds twice, which would diverge in the last bit. (Detection still
+//!   gates on `avx2 && fma` so the dispatch predicate matches the
+//!   feature set the CI `-C target-feature=+avx2,+fma` check leg
+//!   compiles for.)
+//! - The epilogues — distance fusion `(‖x‖² + ‖c‖² − 2·acc).max(0)` and
+//!   the argmin scan — are shared scalar code over the per-tile
+//!   accumulator array, so clamping and tie-breaking (lowest index win)
+//!   are byte-for-byte the same on every path.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
 use crate::util::par;
 
@@ -32,6 +64,244 @@ pub const NR: usize = 8;
 
 /// Output rows processed per parallel work item in the gemm drivers.
 const ROWS_PER_CHUNK: usize = 16;
+
+/// The vector instruction set the distance tiles dispatch to. Resolved
+/// once per process from CPU detection ∧ `USPEC_SIMD` (see module docs),
+/// then consulted per kernel call so [`set_simd_override`] can still
+/// force the scalar path afterwards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SimdLevel {
+    Scalar,
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+/// `0` = default dispatch, anything else = force the scalar tiles.
+static SIMD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Test/bench hook mirroring `par::set_thread_override`: a non-zero
+/// `mode` forces the scalar tiles from the next kernel call on, `0`
+/// restores the default choice (CPU detection ∧ `USPEC_SIMD`). Unlike
+/// the env knob this is not latched at first use, so A/B comparisons can
+/// flip it mid-process. There is deliberately no "force vector" mode —
+/// that would crash on hardware without the detected feature set.
+pub fn set_simd_override(mode: usize) {
+    SIMD_OVERRIDE.store(mode, Ordering::Relaxed);
+}
+
+/// CPU detection ∧ `USPEC_SIMD`, computed once and cached.
+fn detected_level() -> SimdLevel {
+    static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+    *LEVEL.get_or_init(|| {
+        if !crate::util::simd_allowed() {
+            return SimdLevel::Scalar;
+        }
+        #[cfg(target_arch = "x86_64")]
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return SimdLevel::Avx2;
+        }
+        #[cfg(target_arch = "aarch64")]
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return SimdLevel::Neon;
+        }
+        SimdLevel::Scalar
+    })
+}
+
+/// The level the next kernel call will dispatch to. Drivers hoist this
+/// out of their parallel loops (one relaxed atomic load per call).
+#[inline]
+fn simd_level() -> SimdLevel {
+    if SIMD_OVERRIDE.load(Ordering::Relaxed) != 0 {
+        SimdLevel::Scalar
+    } else {
+        detected_level()
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! AVX2 tiles: one 256-bit vector per tile row holds the full
+    //! `NR = 8` accumulator lane set, stepped one feature at a time with
+    //! a broadcast LHS scalar — the exact lanewise op sequence of the
+    //! scalar tiles. Deliberately `mul` + `add`, **not** `fmadd`: FMA's
+    //! single rounding would break the bit-identity contract (module
+    //! docs) with the scalar fallback's two roundings per step.
+
+    use super::{MR, NR};
+    use std::arch::x86_64::{
+        _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_setzero_ps,
+        _mm256_storeu_ps,
+    };
+
+    /// `MR`-row register tile (vector twin of the scalar `tile_4xnr`).
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support (`is_x86_feature_detected!`,
+    /// cached in `SimdLevel`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn tile_4xnr(
+        a0: &[f32],
+        a1: &[f32],
+        a2: &[f32],
+        a3: &[f32],
+        panel: &[f32],
+    ) -> [[f32; NR]; MR] {
+        let d = a0.len();
+        debug_assert!(a1.len() == d && a2.len() == d && a3.len() == d);
+        debug_assert!(panel.len() >= d * NR);
+        let p = panel.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut acc2 = _mm256_setzero_ps();
+        let mut acc3 = _mm256_setzero_ps();
+        for t in 0..d {
+            let pv = _mm256_loadu_ps(p.add(t * NR));
+            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(_mm256_set1_ps(*a0.get_unchecked(t)), pv));
+            acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(_mm256_set1_ps(*a1.get_unchecked(t)), pv));
+            acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(_mm256_set1_ps(*a2.get_unchecked(t)), pv));
+            acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(_mm256_set1_ps(*a3.get_unchecked(t)), pv));
+        }
+        let mut out = [[0f32; NR]; MR];
+        _mm256_storeu_ps(out[0].as_mut_ptr(), acc0);
+        _mm256_storeu_ps(out[1].as_mut_ptr(), acc1);
+        _mm256_storeu_ps(out[2].as_mut_ptr(), acc2);
+        _mm256_storeu_ps(out[3].as_mut_ptr(), acc3);
+        out
+    }
+
+    /// Single-row tail tile (vector twin of the scalar `tile_1xnr`).
+    ///
+    /// # Safety
+    /// Same AVX2 requirement as [`tile_4xnr`].
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn tile_1xnr(a: &[f32], panel: &[f32]) -> [f32; NR] {
+        let d = a.len();
+        debug_assert!(panel.len() >= d * NR);
+        let p = panel.as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        for t in 0..d {
+            let pv = _mm256_loadu_ps(p.add(t * NR));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(*a.get_unchecked(t)), pv));
+        }
+        let mut out = [0f32; NR];
+        _mm256_storeu_ps(out.as_mut_ptr(), acc);
+        out
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! NEON tiles: two 128-bit vectors per tile row cover the `NR = 8`
+    //! lane set. Same mul-then-add discipline as the AVX2 tiles — no
+    //! `vfmaq` — to stay bit-identical with the scalar fallback.
+
+    use super::{MR, NR};
+    use std::arch::aarch64::{float32x4_t, vaddq_f32, vdupq_n_f32, vld1q_f32, vmulq_f32, vst1q_f32};
+
+    /// `MR`-row register tile (vector twin of the scalar `tile_4xnr`).
+    ///
+    /// # Safety
+    /// Caller must have verified NEON support (cached in `SimdLevel`).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn tile_4xnr(
+        a0: &[f32],
+        a1: &[f32],
+        a2: &[f32],
+        a3: &[f32],
+        panel: &[f32],
+    ) -> [[f32; NR]; MR] {
+        let d = a0.len();
+        debug_assert!(a1.len() == d && a2.len() == d && a3.len() == d);
+        debug_assert!(panel.len() >= d * NR);
+        let p = panel.as_ptr();
+        let zero = vdupq_n_f32(0.0);
+        let mut acc: [[float32x4_t; 2]; MR] = [[zero; 2]; MR];
+        for t in 0..d {
+            let plo = vld1q_f32(p.add(t * NR));
+            let phi = vld1q_f32(p.add(t * NR + 4));
+            let xs = [
+                *a0.get_unchecked(t),
+                *a1.get_unchecked(t),
+                *a2.get_unchecked(t),
+                *a3.get_unchecked(t),
+            ];
+            for (accr, &x) in acc.iter_mut().zip(&xs) {
+                let xv = vdupq_n_f32(x);
+                accr[0] = vaddq_f32(accr[0], vmulq_f32(xv, plo));
+                accr[1] = vaddq_f32(accr[1], vmulq_f32(xv, phi));
+            }
+        }
+        let mut out = [[0f32; NR]; MR];
+        for (orow, accr) in out.iter_mut().zip(&acc) {
+            vst1q_f32(orow.as_mut_ptr(), accr[0]);
+            vst1q_f32(orow.as_mut_ptr().add(4), accr[1]);
+        }
+        out
+    }
+
+    /// Single-row tail tile (vector twin of the scalar `tile_1xnr`).
+    ///
+    /// # Safety
+    /// Same NEON requirement as [`tile_4xnr`].
+    #[target_feature(enable = "neon")]
+    pub unsafe fn tile_1xnr(a: &[f32], panel: &[f32]) -> [f32; NR] {
+        let d = a.len();
+        debug_assert!(panel.len() >= d * NR);
+        let p = panel.as_ptr();
+        let zero = vdupq_n_f32(0.0);
+        let mut lo = zero;
+        let mut hi = zero;
+        for t in 0..d {
+            let xv = vdupq_n_f32(*a.get_unchecked(t));
+            lo = vaddq_f32(lo, vmulq_f32(xv, vld1q_f32(p.add(t * NR))));
+            hi = vaddq_f32(hi, vmulq_f32(xv, vld1q_f32(p.add(t * NR + 4))));
+        }
+        let mut out = [0f32; NR];
+        vst1q_f32(out.as_mut_ptr(), lo);
+        vst1q_f32(out.as_mut_ptr().add(4), hi);
+        out
+    }
+}
+
+/// Tile-level dispatch on a pre-resolved [`SimdLevel`]. The branch is
+/// perfectly predicted (the level never changes inside a kernel call);
+/// the tile bodies amortize the non-inlined `target_feature` call over
+/// `MR·NR·d` flops.
+#[inline(always)]
+fn dtile_4xnr(
+    level: SimdLevel,
+    a0: &[f32],
+    a1: &[f32],
+    a2: &[f32],
+    a3: &[f32],
+    panel: &[f32],
+) -> [[f32; NR]; MR] {
+    match level {
+        // SAFETY: the non-scalar variants are only ever constructed after
+        // runtime feature detection succeeded (see `detected_level`).
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { avx2::tile_4xnr(a0, a1, a2, a3, panel) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::tile_4xnr(a0, a1, a2, a3, panel) },
+        SimdLevel::Scalar => tile_4xnr(a0, a1, a2, a3, panel),
+    }
+}
+
+/// Single-row twin of [`dtile_4xnr`].
+#[inline(always)]
+fn dtile_1xnr(level: SimdLevel, a: &[f32], panel: &[f32]) -> [f32; NR] {
+    match level {
+        // SAFETY: see `dtile_4xnr`.
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { avx2::tile_1xnr(a, panel) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::tile_1xnr(a, panel) },
+        SimdLevel::Scalar => tile_1xnr(a, panel),
+    }
+}
 
 /// RHS matrix packed into `NR`-wide panels for the distance microkernel.
 ///
@@ -82,8 +352,13 @@ pub fn pack_rhs_slice(data: &[f32], rows: usize, cols: usize) -> PackedMat {
 
 /// `MR`-row register tile: dot products of four LHS rows against one
 /// packed panel. The per-feature loop reads one contiguous `NR`-vector of
-/// the panel and broadcasts four LHS scalars — the shape LLVM turns into
-/// FMA/SIMD.
+/// the panel and broadcasts four LHS scalars.
+///
+/// This is the **reference op order** of the bit-identity contract
+/// (module docs): accumulator lane `c` combines only with panel lane `c`,
+/// one multiply rounding then one add rounding per feature step. The
+/// AVX2/NEON tiles replay exactly this sequence 8 (resp. 2×4) lanes at a
+/// time; any reordering here must be mirrored there.
 #[inline(always)]
 fn tile_4xnr(a0: &[f32], a1: &[f32], a2: &[f32], a3: &[f32], panel: &[f32]) -> [[f32; NR]; MR] {
     let mut acc = [[0f32; NR]; MR];
@@ -136,6 +411,7 @@ fn gemm_nt_packed_into<const FUSE: bool>(
     }
     let npanels = n.div_ceil(NR).max(1);
     let cn = &packed.sqnorms;
+    let level = simd_level();
     par::par_for_chunks(out, n * ROWS_PER_CHUNK, |start, chunk| {
         let row0 = start / n;
         let nrows = chunk.len() / n;
@@ -149,7 +425,7 @@ fn gemm_nt_packed_into<const FUSE: bool>(
             let a3 = &a[(i0 + 3) * d..(i0 + 4) * d];
             for q in 0..npanels {
                 let panel = &packed.panels[q * d * NR..(q + 1) * d * NR];
-                let acc = tile_4xnr(a0, a1, a2, a3, panel);
+                let acc = dtile_4xnr(level, a0, a1, a2, a3, panel);
                 let jb = q * NR;
                 let cr = NR.min(n - jb);
                 for (rr, accr) in acc.iter().enumerate() {
@@ -172,7 +448,7 @@ fn gemm_nt_packed_into<const FUSE: bool>(
             let arow = &a[i0 * d..(i0 + 1) * d];
             for q in 0..npanels {
                 let panel = &packed.panels[q * d * NR..(q + 1) * d * NR];
-                let acc = tile_1xnr(arow, panel);
+                let acc = dtile_1xnr(level, arow, panel);
                 let jb = q * NR;
                 let cr = NR.min(n - jb);
                 let orow = &mut chunk[r * n + jb..r * n + jb + cr];
@@ -191,10 +467,12 @@ fn gemm_nt_packed_into<const FUSE: bool>(
 }
 
 /// Reusable scratch for batched packed-distance calls — holds the LHS row
-/// norms so per-batch calls allocate nothing once warm.
+/// norms (and, for [`nearest_packed_into`], the per-row argmin pairs) so
+/// per-batch calls allocate nothing once warm.
 #[derive(Debug, Default)]
 pub struct DistScratch {
     xn: Vec<f32>,
+    best: Vec<(u32, f32)>,
 }
 
 /// Squared distances of `rows` row-major LHS rows (`x`, length
@@ -227,19 +505,49 @@ pub fn sq_dists_into(
 /// Fused nearest-row search against a packed RHS: per LHS row, the argmin
 /// index and min squared distance — the distance block itself is never
 /// materialized. Ties resolve to the lowest index (same contract as a
-/// forward scan over `sq_dists`).
+/// forward scan over `sq_dists`). Allocating convenience wrapper over
+/// [`nearest_packed_into`]; loops (k-means assignment, batched KNR)
+/// should call the `_into` form with persistent buffers instead.
 pub fn nearest_packed(x: &Mat, packed: &PackedMat) -> (Vec<u32>, Vec<f32>) {
+    let mut scratch = DistScratch::default();
+    let mut labels = Vec::new();
+    let mut dists = Vec::new();
+    nearest_packed_into(x, packed, &mut scratch, &mut labels, &mut dists);
+    (labels, dists)
+}
+
+/// [`nearest_packed`] writing into caller buffers: `labels`/`dists` are
+/// cleared and refilled (capacity reused), `scratch` carries the row
+/// norms and argmin pairs across calls. A caller looping over batches or
+/// k-means iterations allocates nothing once warm.
+pub fn nearest_packed_into(
+    x: &Mat,
+    packed: &PackedMat,
+    scratch: &mut DistScratch,
+    labels: &mut Vec<u32>,
+    dists: &mut Vec<f32>,
+) {
     let m = x.rows;
     let d = x.cols;
     let n = packed.rows;
     assert_eq!(d, packed.cols, "nearest_packed dim mismatch");
     assert!(n >= 1, "nearest_packed: empty RHS");
-    let xn = x.row_sqnorms();
+    scratch.xn.clear();
+    scratch
+        .xn
+        .extend((0..m).map(|i| x.row(i).iter().map(|&v| v * v).sum::<f32>()));
+    // Every element is overwritten by the kernel; only reshape on change
+    // so warm batches skip the memset.
+    if scratch.best.len() != m {
+        scratch.best.clear();
+        scratch.best.resize(m, (0u32, f32::INFINITY));
+    }
     let npanels = n.div_ceil(NR).max(1);
     let cn = &packed.sqnorms;
     let a = &x.data;
-    let mut best: Vec<(u32, f32)> = vec![(0, f32::INFINITY); m];
-    par::par_for_chunks(&mut best, ROWS_PER_CHUNK * MR, |start, chunk| {
+    let xn = &scratch.xn;
+    let level = simd_level();
+    par::par_for_chunks(&mut scratch.best, ROWS_PER_CHUNK * MR, |start, chunk| {
         let mut r = 0;
         while r + MR <= chunk.len() {
             let i0 = start + r;
@@ -250,7 +558,7 @@ pub fn nearest_packed(x: &Mat, packed: &PackedMat) -> (Vec<u32>, Vec<f32>) {
             let mut bests = [(0u32, f32::INFINITY); MR];
             for q in 0..npanels {
                 let panel = &packed.panels[q * d * NR..(q + 1) * d * NR];
-                let acc = tile_4xnr(a0, a1, a2, a3, panel);
+                let acc = dtile_4xnr(level, a0, a1, a2, a3, panel);
                 let jb = q * NR;
                 let cr = NR.min(n - jb);
                 for (rr, accr) in acc.iter().enumerate() {
@@ -272,7 +580,7 @@ pub fn nearest_packed(x: &Mat, packed: &PackedMat) -> (Vec<u32>, Vec<f32>) {
             let mut bi = (0u32, f32::INFINITY);
             for q in 0..npanels {
                 let panel = &packed.panels[q * d * NR..(q + 1) * d * NR];
-                let acc = tile_1xnr(arow, panel);
+                let acc = dtile_1xnr(level, arow, panel);
                 let jb = q * NR;
                 let cr = NR.min(n - jb);
                 for c in 0..cr {
@@ -286,13 +594,10 @@ pub fn nearest_packed(x: &Mat, packed: &PackedMat) -> (Vec<u32>, Vec<f32>) {
             r += 1;
         }
     });
-    let mut labels = Vec::with_capacity(m);
-    let mut dists = Vec::with_capacity(m);
-    for (l, v) in best {
-        labels.push(l);
-        dists.push(v);
-    }
-    (labels, dists)
+    labels.clear();
+    labels.extend(scratch.best.iter().map(|&(l, _)| l));
+    dists.clear();
+    dists.extend(scratch.best.iter().map(|&(_, v)| v));
 }
 
 /// f32 row-major matrix. The workhorse container for datasets,
@@ -672,5 +977,72 @@ mod tests {
         let m = Mat::from_vec(3, 2, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
         let g = m.gather_rows(&[2, 0]);
         assert_eq!(g.data, vec![4.0, 5.0, 0.0, 1.0]);
+    }
+
+    /// Restores the default SIMD dispatch even when an assertion unwinds,
+    /// so a failing test cannot leak the forced-scalar mode.
+    struct SimdGuard;
+
+    impl Drop for SimdGuard {
+        fn drop(&mut self) {
+            set_simd_override(0);
+        }
+    }
+
+    /// The bit-identity contract (module docs): forced-scalar and default
+    /// dispatch agree to the bit across awkward shapes — every d in
+    /// 1..=9 plus 16 and 100, odd row tails, and column counts that are
+    /// not a multiple of the NR=8 panel. On hardware without a vector
+    /// path both legs run scalar and the test passes trivially. Other
+    /// tests running concurrently may briefly observe the forced-scalar
+    /// mode; by this very contract that cannot change their results.
+    #[test]
+    fn simd_dispatch_bit_identical_to_scalar() {
+        let _restore = SimdGuard;
+        let mut rng = Rng::new(31);
+        let bits = |m: &Mat| m.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        let fbits = |v: &[f32]| v.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        for &d in &[1usize, 2, 3, 4, 5, 6, 7, 8, 9, 16, 100] {
+            for &(m, n) in &[(1usize, 1usize), (5, 9), (13, 23), (33, 100)] {
+                let a = randmat(m, d, &mut rng);
+                let b = randmat(n, d, &mut rng);
+                let packed = b.pack_rhs();
+                set_simd_override(1);
+                let g_s = a.matmul_nt_packed(&packed);
+                let d_s = a.sq_dists_packed(&packed);
+                let (l_s, v_s) = nearest_packed(&a, &packed);
+                set_simd_override(0);
+                let g_v = a.matmul_nt_packed(&packed);
+                let d_v = a.sq_dists_packed(&packed);
+                let (l_v, v_v) = nearest_packed(&a, &packed);
+                assert_eq!(bits(&g_s), bits(&g_v), "gemm m={m} n={n} d={d}");
+                assert_eq!(bits(&d_s), bits(&d_v), "sq_dists m={m} n={n} d={d}");
+                assert_eq!(l_s, l_v, "nearest labels m={m} n={n} d={d}");
+                assert_eq!(fbits(&v_s), fbits(&v_v), "nearest dists m={m} n={n} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn nearest_packed_into_matches_and_reuses_buffers() {
+        let mut rng = Rng::new(32);
+        let c = randmat(11, 6, &mut rng);
+        let packed = c.pack_rhs();
+        let mut scratch = DistScratch::default();
+        let mut labels = Vec::new();
+        let mut dists = Vec::new();
+        for &m in &[7usize, 30, 30, 13] {
+            let x = randmat(m, 6, &mut rng);
+            nearest_packed_into(&x, &packed, &mut scratch, &mut labels, &mut dists);
+            let (wl, wv) = nearest_packed(&x, &packed);
+            assert_eq!(labels, wl, "labels at m={m}");
+            let bits = |v: &[f32]| v.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&dists), bits(&wv), "dists at m={m}");
+        }
+        // Warm steady state: shrinking batches reuse capacity.
+        let caps = (labels.capacity(), dists.capacity());
+        let x = randmat(13, 6, &mut rng);
+        nearest_packed_into(&x, &packed, &mut scratch, &mut labels, &mut dists);
+        assert_eq!((labels.capacity(), dists.capacity()), caps);
     }
 }

@@ -11,6 +11,7 @@ pub mod eigen;
 pub mod lobpcg;
 
 pub use dense::{
-    nearest_packed, pack_rhs_slice, sq_dists_into, DMat, DistScratch, Mat, PackedMat,
+    nearest_packed, nearest_packed_into, pack_rhs_slice, set_simd_override, sq_dists_into, DMat,
+    DistScratch, Mat, PackedMat,
 };
 pub use sparse::Csr;

@@ -47,8 +47,13 @@
 pub mod shard;
 pub mod source;
 
-pub use shard::{for_each_chunk_sharded, ShardPlan, ShardView};
-pub use source::{for_each_chunk, for_each_chunk_prefetch, reservoir_multi, DataSource};
+pub use shard::{
+    for_each_chunk_sharded, plan_walk, ShardPlan, ShardView, StorageProfile, WalkPlan,
+};
+pub use source::{
+    for_each_chunk, for_each_chunk_prefetch, for_each_chunk_prefetch_depth, reservoir_multi,
+    DataSource,
+};
 
 use crate::affinity::{
     build_affinity, knr::KnrIndex, knr::KnrResult, select, Affinity, DistanceBackend,
@@ -67,8 +72,9 @@ use crate::{ensure_arg, Error, Result};
 pub const DEFAULT_CHUNK: usize = 8192;
 
 /// Execution knobs shared by every pass over a source: rows per chunk,
-/// and how many row-range shards walk the source concurrently. Both are
-/// operational — neither ever changes a label. `chunk == 0` or
+/// how many row-range shards walk the source concurrently, and the
+/// storage profile the adaptive walk planner assumes. All are
+/// operational — none ever changes a label. `chunk == 0` or
 /// `shards == 0` is rejected when a run validates; a shard count above
 /// the source size is clamped by [`ShardPlan::new`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -78,11 +84,15 @@ pub struct ExecOpts {
     /// Row-range shards walked concurrently per pass (1 = sequential
     /// walk with prefetch).
     pub shards: usize,
+    /// Storage hint for the sharded walk planner: walker count and
+    /// prefetch depth follow the profile ([`StorageProfile::Auto`]
+    /// probes the source on first sharded walk; see `pipeline::shard`).
+    pub storage: StorageProfile,
 }
 
 impl Default for ExecOpts {
     fn default() -> Self {
-        ExecOpts { chunk: DEFAULT_CHUNK, shards: 1 }
+        ExecOpts { chunk: DEFAULT_CHUNK, shards: 1, storage: StorageProfile::Auto }
     }
 }
 
@@ -314,12 +324,14 @@ pub struct Pipeline<'a> {
     pub chunk: usize,
     /// Row-range shards walked concurrently per order-free pass.
     pub shards: usize,
+    /// Storage profile the sharded walk planner assumes.
+    pub storage: StorageProfile,
     pub backend: &'a dyn DistanceBackend,
 }
 
 impl<'a> Pipeline<'a> {
     pub fn new(backend: &'a dyn DistanceBackend) -> Pipeline<'a> {
-        Pipeline { chunk: DEFAULT_CHUNK, shards: 1, backend }
+        Pipeline { chunk: DEFAULT_CHUNK, shards: 1, storage: StorageProfile::Auto, backend }
     }
 
     /// Set the chunk size. Stored verbatim; `chunk == 0` is rejected with
@@ -338,10 +350,18 @@ impl<'a> Pipeline<'a> {
         self
     }
 
-    /// Set both execution knobs at once.
+    /// Pin the storage profile the walk planner assumes (skipping the
+    /// [`StorageProfile::Auto`] probe). Operational only.
+    pub fn with_storage(mut self, storage: StorageProfile) -> Pipeline<'a> {
+        self.storage = storage;
+        self
+    }
+
+    /// Set all execution knobs at once.
     pub fn with_opts(mut self, opts: ExecOpts) -> Pipeline<'a> {
         self.chunk = opts.chunk;
         self.shards = opts.shards;
+        self.storage = opts.storage;
         self
     }
 
@@ -442,7 +462,7 @@ impl<'a> Pipeline<'a> {
             KnrIndex::build(&reps, k_prime, params.kmeans_iters.min(30), self.backend)
         })?;
         let knr_stage = KnrStage { k_nn: params.k_nn, mode: params.knr };
-        let plan = ShardPlan::new(n, self.shards)?;
+        let plan = ShardPlan::new(n, self.shards)?.with_storage(self.storage);
         let knr = timer.time("knr_query", || {
             knr_stage.query(src, &index, &plan, self.chunk, self.backend)
         })?;
@@ -592,7 +612,7 @@ mod tests {
         let params = UspecParams { k: 2, p: 100, ..Default::default() };
         let resident = Pipeline::new(&NativeBackend).run(&ds.x, &params, 9).unwrap();
         for shards in [1usize, 2, 7] {
-            let opts = ExecOpts { chunk: 128, shards };
+            let opts = ExecOpts { chunk: 128, shards, ..ExecOpts::default() };
             let run = Pipeline::new(&NativeBackend).with_opts(opts).run(&bin, &params, 9).unwrap();
             assert_eq!(run.labels, resident.labels, "shards={shards}");
             assert_eq!(run.sigma.to_bits(), resident.sigma.to_bits(), "shards={shards}");

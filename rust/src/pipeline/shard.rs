@@ -7,11 +7,32 @@
 //! source, translating local row offsets to global ones. The engine runs
 //! its order-free passes shard-parallel through
 //! [`for_each_chunk_sharded`]: scoped walker threads claim shards from an
-//! atomic cursor, each walking its range with the double-buffered
-//! prefetch of [`for_each_chunk_prefetch`] — so I/O on every shard
-//! overlaps with compute on every other, while each chunk's kernel work
-//! still fans out across the PR-1 worker pool (walkers are not pool
-//! tasks, so the pool's nested-inline rule never serializes the compute).
+//! atomic cursor, each walking its range with the prefetch of
+//! [`for_each_chunk_prefetch_depth`] — so I/O on every shard overlaps
+//! with compute on every other, while each chunk's kernel work still fans
+//! out across the PR-1 worker pool (walkers are not pool tasks, so the
+//! pool's nested-inline rule never serializes the compute).
+//!
+//! # The adaptive walk planner
+//!
+//! How many walkers a pass should run is a property of the *storage*,
+//! not of the shard count. One walker per shard (the old fixed knob) is
+//! exactly wrong on a single disk: N prefetch readers seek-thrash one
+//! spindle, and N walkers all dispatching chunk kernels compete with the
+//! worker pool for cores (compute threads ≈ walkers + pool ≈ 2× the
+//! budget) — the committed `shard_sweep` bench degraded 2.35× → 1.87×
+//! from 1 to 8 shards on one disk. [`plan_walk`] therefore derives the
+//! walker count and per-walker prefetch depth from a
+//! [`StorageProfile`]: serialized storage gets at most two walkers with
+//! a deep prefetch queue (the device streams; the queue hides uneven
+//! compute bursts), parallel storage scales walkers toward *half* the
+//! thread budget (leaving the other half for the pool the walkers
+//! dispatch into). The profile comes from the `ExecOpts` hint, or —
+//! when left at [`StorageProfile::Auto`] — from a one-shot timing probe
+//! that reads one chunk from two distant shards sequentially and then
+//! concurrently. Everything the planner decides is **operational**:
+//! shards are still claimed off the same cursor, results are
+//! bit-identical for every profile, walker count, and depth.
 //!
 //! # The shard-invariance contract
 //!
@@ -38,12 +59,13 @@
 use std::cell::Cell;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use crate::linalg::Mat;
 use crate::util::par;
 use crate::{ensure_arg, Error, Result};
 
-use super::source::{for_each_chunk_prefetch, DataSource};
+use super::source::{for_each_chunk_prefetch_depth, DataSource};
 
 /// Process-wide count of live shard walkers, capping the *total* number
 /// of concurrent walker threads at the `USPEC_THREADS` budget even when
@@ -77,7 +99,151 @@ fn reserve_walkers(desired: usize, budget: usize) -> usize {
 /// sentinel itself is never surfaced to callers.
 const ABORTED: &str = "sharded walk aborted";
 
-/// A partition of `n` rows into contiguous, non-empty row ranges.
+/// How a source's backing storage responds to concurrent readers — the
+/// input to the adaptive walk planner (module docs). Purely operational:
+/// the profile picks walker count and prefetch depth, never any result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StorageProfile {
+    /// Probe on first sharded walk: time one chunk read from two distant
+    /// shards sequentially, then concurrently; classify [`Self::Serial`]
+    /// when the concurrent pair costs closer to the sum than to the max.
+    /// Page-cache-fast reads skip the concurrent leg and classify
+    /// [`Self::Parallel`] (at µs read times reader contention is
+    /// irrelevant and the timing would be pure noise).
+    #[default]
+    Auto,
+    /// Reads serialize (single spindle, one network connection): few
+    /// walkers, deeper per-walker prefetch to keep the device streaming.
+    Serial,
+    /// Reads scale with concurrency (page cache, NVMe, striped array):
+    /// walkers scale toward half the thread budget.
+    Parallel,
+}
+
+impl StorageProfile {
+    /// Parse the CLI/config spelling: `auto`, `serial`, or `parallel`
+    /// (device aliases `hdd` → serial, `ssd`/`nvme` → parallel).
+    pub fn parse(s: &str) -> Result<StorageProfile> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(StorageProfile::Auto),
+            "serial" | "hdd" => Ok(StorageProfile::Serial),
+            "parallel" | "ssd" | "nvme" => Ok(StorageProfile::Parallel),
+            other => Err(Error::Config(format!(
+                "unknown storage profile '{other}' (want auto, serial, or parallel)"
+            ))),
+        }
+    }
+
+    /// Canonical spelling, inverse of [`StorageProfile::parse`].
+    pub fn name(&self) -> &'static str {
+        match self {
+            StorageProfile::Auto => "auto",
+            StorageProfile::Serial => "serial",
+            StorageProfile::Parallel => "parallel",
+        }
+    }
+}
+
+/// Prefetch depth on serialized storage: a deep queue keeps the one
+/// device streaming across the consumer's compute bursts.
+const SERIAL_PREFETCH_DEPTH: usize = 4;
+/// Prefetch depth on parallel storage: per-walker double buffering plus
+/// one chunk of slack.
+const PARALLEL_PREFETCH_DEPTH: usize = 2;
+/// Walker cap on serialized storage: a second walker overlaps one
+/// shard's compute tail with the next shard's reads; more walkers only
+/// multiply seeks.
+const SERIAL_MAX_WALKERS: usize = 2;
+/// Probe classification floor: when both sequential probe reads finish
+/// inside this budget, the source is page-cache fast and the concurrent
+/// leg would time scheduler noise, not storage.
+const PROBE_FAST: Duration = Duration::from_millis(2);
+
+/// Resolved execution shape of one sharded pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WalkPlan {
+    /// Concurrent shard walkers to request from the `ACTIVE_WALKERS`
+    /// budget (the reservation may grant fewer, never zero).
+    pub walkers: usize,
+    /// Chunks each walker's prefetch reader keeps in flight.
+    pub prefetch_depth: usize,
+}
+
+/// Derive the walker count and prefetch depth for a sharded pass from
+/// the storage profile, the shard count, and the thread budget (module
+/// docs lay out the contention math). [`StorageProfile::Auto`] is
+/// resolved by the probe before planning; an unresolved `Auto` here is
+/// planned like [`StorageProfile::Parallel`].
+pub fn plan_walk(profile: StorageProfile, shards: usize, budget: usize) -> WalkPlan {
+    let shards = shards.max(1);
+    let budget = budget.max(1);
+    match profile {
+        StorageProfile::Serial => WalkPlan {
+            walkers: shards.min(SERIAL_MAX_WALKERS),
+            prefetch_depth: SERIAL_PREFETCH_DEPTH,
+        },
+        StorageProfile::Auto | StorageProfile::Parallel => WalkPlan {
+            // Half the budget: each walker computing a chunk dispatches
+            // into the worker pool, so walkers ≈ budget would put
+            // walkers + pool ≈ 2× budget compute threads on the cores —
+            // the diagnosed shard_sweep cliff.
+            walkers: shards.min((budget / 2).max(1)),
+            prefetch_depth: PARALLEL_PREFETCH_DEPTH,
+        },
+    }
+}
+
+/// Resolve [`StorageProfile::Auto`] by timing one chunk read from the
+/// first and the middle shard, sequentially and then concurrently.
+/// Serialized storage completes the concurrent pair in ≈ the sum of the
+/// two solo times; parallel storage in ≈ their max — classify `Serial`
+/// when the concurrent time lands in the upper half of that interval.
+/// The probe re-reads rows the walk is about to read anyway (≤ 4 extra
+/// chunk reads), and a probe read error defers to the walk: the profile
+/// defaults to `Parallel` and the real pass surfaces the error in its
+/// normal path.
+fn probe_storage(src: &dyn DataSource, chunk: usize, plan: &ShardPlan) -> StorageProfile {
+    let ranges = plan.ranges();
+    debug_assert!(ranges.len() >= 2, "probe needs two shards");
+    let (g0, l0) = ranges[0];
+    let (g1, l1) = ranges[ranges.len() / 2];
+    let len0 = chunk.min(l0);
+    let len1 = chunk.min(l1);
+    let mut b0 = Mat::zeros(0, src.d());
+    let mut b1 = Mat::zeros(0, src.d());
+    let t = Instant::now();
+    if src.read_rows(g0, len0, &mut b0).is_err() {
+        return StorageProfile::Parallel;
+    }
+    let ta = t.elapsed();
+    let t = Instant::now();
+    if src.read_rows(g1, len1, &mut b1).is_err() {
+        return StorageProfile::Parallel;
+    }
+    let tb = t.elapsed();
+    if ta + tb < PROBE_FAST {
+        return StorageProfile::Parallel;
+    }
+    let t = Instant::now();
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            let _ = src.read_rows(g0, len0, &mut b0);
+        });
+        let _ = src.read_rows(g1, len1, &mut b1);
+    });
+    let conc = t.elapsed();
+    let lone = ta.max(tb);
+    let seq = ta + tb;
+    if conc >= lone + (seq - lone) / 2 {
+        StorageProfile::Serial
+    } else {
+        StorageProfile::Parallel
+    }
+}
+
+/// A partition of `n` rows into contiguous, non-empty row ranges, plus
+/// the storage profile the walk planner should assume (default
+/// [`StorageProfile::Auto`]; see [`ShardPlan::with_storage`]).
 ///
 /// Ranges differ in length by at most one row (the first `n % shards`
 /// ranges take the extra row), and a request for more shards than rows is
@@ -86,6 +252,7 @@ const ABORTED: &str = "sharded walk aborted";
 pub struct ShardPlan {
     n: usize,
     ranges: Vec<(usize, usize)>,
+    storage: StorageProfile,
 }
 
 impl ShardPlan {
@@ -106,7 +273,20 @@ impl ShardPlan {
             }
             debug_assert_eq!(start, n);
         }
-        Ok(ShardPlan { n, ranges })
+        Ok(ShardPlan { n, ranges, storage: StorageProfile::Auto })
+    }
+
+    /// Pin the storage profile the walk planner assumes, skipping the
+    /// [`StorageProfile::Auto`] probe. Operational only — results are
+    /// bit-identical for every profile.
+    pub fn with_storage(mut self, storage: StorageProfile) -> ShardPlan {
+        self.storage = storage;
+        self
+    }
+
+    /// The storage profile the walk planner will assume.
+    pub fn storage(&self) -> StorageProfile {
+        self.storage
     }
 
     /// Total rows the plan covers.
@@ -195,24 +375,25 @@ impl DataSource for ShardView<'_> {
 /// Walkers are scoped OS threads, **not** pool tasks: a pool task would
 /// trip the pool's nested-inline rule and serialize the chunk compute,
 /// whereas from a walker thread each chunk callback still dispatches its
-/// kernels across the whole PR-1 pool. At most
-/// [`crate::util::par::num_threads`] *walkers* run at once process-wide
-/// (every pass keeps at least one), so arbitrarily many concurrent
-/// sharded passes — e.g. coordinator workers — stay bounded and an
-/// over-wide plan degrades gracefully. Thread accounting: each walker
-/// pairs with one prefetch reader (I/O-blocked), and a walker computing
-/// a chunk participates in its own pool dispatch alongside the pool's
-/// workers — so compute threads can reach walkers + pool ≈ 2× the budget
-/// when every shard is compute-bound at once. Sharding targets
-/// I/O-dominated out-of-core passes, where walkers spend most of their
-/// time blocked on reads; for compute-bound resident data, leave
-/// `shards` at 1 (the resident fast path ignores it anyway).
+/// kernels across the whole PR-1 pool. How many walkers a pass runs, and
+/// how deep each walker's prefetch queue is, comes from [`plan_walk`] on
+/// the plan's [`StorageProfile`] (probing once when left at `Auto`) —
+/// the module docs lay out the contention diagnosis behind the shapes.
+/// Whatever the planner asks for is still charged against the
+/// process-wide `ACTIVE_WALKERS` ledger (every pass keeps at least one
+/// walker), so arbitrarily many concurrent sharded passes — e.g.
+/// coordinator workers — stay bounded and an over-wide plan degrades
+/// gracefully. Sharding targets I/O-dominated out-of-core passes, where
+/// walkers spend most of their time blocked on reads; for compute-bound
+/// resident data, leave `shards` at 1 (the resident fast path ignores it
+/// anyway).
 ///
 /// Resident sources take the zero-copy single-chunk fast path (there is
-/// no I/O to parallelize); a single-shard plan degrades to one prefetched
-/// walk. The first error encountered cancels the walk — unclaimed shards
-/// are skipped and in-flight shards stop at their next chunk — and is
-/// the error returned.
+/// no I/O to parallelize, and no probe runs); a single-shard plan
+/// degrades to one prefetched walk at the profile's depth. The first
+/// error encountered cancels the walk — unclaimed shards are skipped and
+/// in-flight shards stop at their next chunk — and is the error
+/// returned.
 pub fn for_each_chunk_sharded(
     src: &dyn DataSource,
     plan: &ShardPlan,
@@ -236,7 +417,14 @@ pub fn for_each_chunk_sharded(
         return Ok(()); // n == 0
     }
     if plan.shards() == 1 {
-        return for_each_chunk_prefetch(src, chunk, f);
+        // One walker either way; an explicit Serial hint still gets its
+        // deeper prefetch queue. Auto is NOT probed here — with a single
+        // walker there is no reader concurrency to classify for.
+        let depth = match plan.storage {
+            StorageProfile::Serial => SERIAL_PREFETCH_DEPTH,
+            StorageProfile::Auto | StorageProfile::Parallel => 1,
+        };
+        return for_each_chunk_prefetch_depth(src, chunk, depth, f);
     }
     /// Walk one shard; `Ok` covers both completion and cancellation (a
     /// cancelled walker rechecks `abort` at its loop head and exits).
@@ -244,6 +432,7 @@ pub fn for_each_chunk_sharded(
         plan: &ShardPlan,
         src: &dyn DataSource,
         chunk: usize,
+        depth: usize,
         f: &(impl Fn(usize, &Mat) -> Result<()> + Sync),
         abort: &AtomicBool,
         i: usize,
@@ -253,7 +442,7 @@ pub fn for_each_chunk_sharded(
         // Out-of-band cancellation marker: only the check below sets it,
         // so a genuine `f` error can never be mistaken for cancellation.
         let cancelled = Cell::new(false);
-        let r = for_each_chunk_prefetch(&view, chunk, |local, m| {
+        let r = for_each_chunk_prefetch_depth(&view, chunk, depth, |local, m| {
             // Stop at the next chunk once any shard failed: the sentinel
             // unwinds this walk but is never reported (the real error is).
             if abort.load(Ordering::Relaxed) {
@@ -278,8 +467,12 @@ pub fn for_each_chunk_sharded(
     }
 
     let nshards = plan.shards();
-    let desired = nshards.min(par::num_threads()).max(1);
-    let walkers = reserve_walkers(desired, par::num_threads().max(1));
+    let profile = match plan.storage {
+        StorageProfile::Auto => probe_storage(src, chunk, plan),
+        pinned => pinned,
+    };
+    let wp = plan_walk(profile, nshards, par::num_threads());
+    let walkers = reserve_walkers(wp.walkers, par::num_threads().max(1));
     let _lease = WalkerLease(walkers);
     let cursor = AtomicUsize::new(0);
     let abort = AtomicBool::new(false);
@@ -294,7 +487,7 @@ pub fn for_each_chunk_sharded(
                 if i >= nshards {
                     break;
                 }
-                if let Err(e) = walk_shard(plan, src, chunk, &f, &abort, i) {
+                if let Err(e) = walk_shard(plan, src, chunk, wp.prefetch_depth, &f, &abort, i) {
                     abort.store(true, Ordering::Relaxed);
                     let mut fe = first_error.lock().unwrap();
                     if fe.is_none() {
@@ -426,6 +619,102 @@ mod tests {
         assert!(for_each_chunk_sharded(&src, &plan, 0, |_, _| Ok(())).is_err());
         let wrong = ShardPlan::new(63, 4).unwrap();
         assert!(for_each_chunk_sharded(&src, &wrong, 10, |_, _| Ok(())).is_err());
+    }
+
+    #[test]
+    fn plan_walk_shapes_follow_the_profile() {
+        // serialized storage: at most two walkers, deep prefetch queue
+        let wp = plan_walk(StorageProfile::Serial, 8, 8);
+        assert_eq!(
+            wp,
+            WalkPlan { walkers: SERIAL_MAX_WALKERS, prefetch_depth: SERIAL_PREFETCH_DEPTH }
+        );
+        assert_eq!(plan_walk(StorageProfile::Serial, 1, 8).walkers, 1);
+        // parallel storage: walkers scale to half the budget, floor one
+        assert_eq!(plan_walk(StorageProfile::Parallel, 8, 8).walkers, 4);
+        assert_eq!(plan_walk(StorageProfile::Parallel, 3, 8).walkers, 3);
+        assert_eq!(plan_walk(StorageProfile::Parallel, 8, 2).walkers, 1);
+        assert_eq!(
+            plan_walk(StorageProfile::Parallel, 8, 8).prefetch_depth,
+            PARALLEL_PREFETCH_DEPTH
+        );
+        // unresolved Auto plans like Parallel; degenerate inputs clamp
+        assert_eq!(
+            plan_walk(StorageProfile::Auto, 8, 8),
+            plan_walk(StorageProfile::Parallel, 8, 8)
+        );
+        let wp = plan_walk(StorageProfile::Parallel, 0, 0);
+        assert!(wp.walkers >= 1 && wp.prefetch_depth >= 1);
+    }
+
+    /// A source whose reads sleep; with a `gate`, a mutex forces reads to
+    /// queue like a single spindle would.
+    struct SlowSource<'a> {
+        x: &'a Mat,
+        delay: std::time::Duration,
+        gate: Option<Mutex<()>>,
+    }
+
+    impl DataSource for SlowSource<'_> {
+        fn n(&self) -> usize {
+            self.x.rows
+        }
+
+        fn d(&self) -> usize {
+            self.x.cols
+        }
+
+        fn read_rows(&self, start: usize, len: usize, buf: &mut Mat) -> Result<()> {
+            let _g = self.gate.as_ref().map(|m| m.lock().unwrap());
+            std::thread::sleep(self.delay);
+            buf.rows = len;
+            buf.cols = self.x.cols;
+            buf.data.clear();
+            buf.data
+                .extend_from_slice(&self.x.data[start * self.x.cols..(start + len) * self.x.cols]);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn probe_classifies_serialized_and_parallel_reads() {
+        let x = Mat::zeros(400, 2);
+        let plan = ShardPlan::new(400, 4).unwrap();
+        let ms = std::time::Duration::from_millis;
+        // reads gated by one lock: the concurrent pair costs the sum → Serial
+        let serial = SlowSource { x: &x, delay: ms(15), gate: Some(Mutex::new(())) };
+        assert_eq!(probe_storage(&serial, 100, &plan), StorageProfile::Serial);
+        // ungated reads overlap: the concurrent pair costs ≈ the max → Parallel
+        let overlapping = SlowSource { x: &x, delay: ms(15), gate: None };
+        assert_eq!(probe_storage(&overlapping, 100, &plan), StorageProfile::Parallel);
+        // page-cache-fast reads skip the concurrent leg entirely → Parallel
+        let fast = SlowSource { x: &x, delay: ms(0), gate: Some(Mutex::new(())) };
+        assert_eq!(probe_storage(&fast, 100, &plan), StorageProfile::Parallel);
+    }
+
+    #[test]
+    fn sharded_walk_is_profile_invariant() {
+        let ds = two_moons(257, 0.05, 34);
+        let src = NonResident(&ds.x);
+        for profile in [StorageProfile::Auto, StorageProfile::Serial, StorageProfile::Parallel] {
+            for shards in [1usize, 3, 7] {
+                let plan = ShardPlan::new(257, shards).unwrap().with_storage(profile);
+                let seen = Mutex::new(vec![0u32; 257]);
+                for_each_chunk_sharded(&src, &plan, 50, |start, m| {
+                    let mut seen = seen.lock().unwrap();
+                    for i in 0..m.rows {
+                        assert_eq!(m.row(i), ds.x.row(start + i));
+                        seen[start + i] += 1;
+                    }
+                    Ok(())
+                })
+                .unwrap();
+                assert!(
+                    seen.into_inner().unwrap().iter().all(|&c| c == 1),
+                    "every row exactly once (profile={profile:?} shards={shards})"
+                );
+            }
+        }
     }
 
     #[test]

@@ -140,20 +140,37 @@ pub fn for_each_chunk(
 /// [`for_each_chunk`] with **double-buffered prefetch**: a scoped reader
 /// thread fills chunk `i + 1` while the caller's `f` computes on chunk
 /// `i`, so a pass over a slow source (disk, network) overlaps I/O with
-/// compute instead of alternating. Two buffers cycle between the reader
-/// and the consumer; the callback still runs on the calling thread, in
-/// strict row order, over exactly the chunk sequence [`for_each_chunk`]
-/// would deliver — results are bit-identical by construction.
+/// compute instead of alternating. Equivalent to
+/// [`for_each_chunk_prefetch_depth`] at depth 1.
+pub fn for_each_chunk_prefetch(
+    src: &dyn DataSource,
+    chunk: usize,
+    f: impl FnMut(usize, &Mat) -> Result<()>,
+) -> Result<()> {
+    for_each_chunk_prefetch_depth(src, chunk, 1, f)
+}
+
+/// [`for_each_chunk`] with a reader thread keeping up to `depth` chunks
+/// in flight ahead of the consumer (`depth + 1` buffers cycle free →
+/// reader fills → full → consumer computes → free; depth 1 is classic
+/// double buffering). Deeper queues keep a serialized device streaming
+/// when the consumer's compute bursts are uneven — the adaptive shard
+/// planner picks the depth from the storage profile. The callback still
+/// runs on the calling thread, in strict row order, over exactly the
+/// chunk sequence [`for_each_chunk`] would deliver — results are
+/// bit-identical for every depth, by construction.
 ///
 /// Resident sources take the same zero-copy single-chunk fast path (there
 /// is no I/O to hide). Errors surface in callback order: an `f` error on
 /// chunk `i` wins over a read error on any later chunk.
-pub fn for_each_chunk_prefetch(
+pub fn for_each_chunk_prefetch_depth(
     src: &dyn DataSource,
     chunk: usize,
+    depth: usize,
     mut f: impl FnMut(usize, &Mat) -> Result<()>,
 ) -> Result<()> {
     ensure_arg!(chunk >= 1, "for_each_chunk: chunk must be >= 1 (got 0)");
+    ensure_arg!(depth >= 1, "for_each_chunk_prefetch: depth must be >= 1 (got 0)");
     let n = src.n();
     if src.as_mat().is_some() || n <= chunk {
         // Nothing to overlap: zero-copy fast path or a single chunk.
@@ -161,8 +178,8 @@ pub fn for_each_chunk_prefetch(
     }
     // Buffers cycle: free → reader fills → full → consumer computes → free.
     let (free_tx, free_rx) = std::sync::mpsc::channel::<Mat>();
-    let (full_tx, full_rx) = std::sync::mpsc::sync_channel::<(usize, Mat)>(2);
-    for _ in 0..2 {
+    let (full_tx, full_rx) = std::sync::mpsc::sync_channel::<(usize, Mat)>(depth + 1);
+    for _ in 0..=depth {
         free_tx.send(Mat::zeros(0, src.d())).expect("free channel open");
     }
     let mut result: Result<()> = Ok(());
@@ -329,6 +346,21 @@ mod tests {
         })
         .unwrap();
         assert_eq!(seq, pre);
+        // every prefetch depth delivers the same stream
+        for depth in [1usize, 2, 4, 9] {
+            let mut deep: Vec<(usize, usize)> = Vec::new();
+            for_each_chunk_prefetch_depth(&src, 100, depth, |start, m| {
+                for i in 0..m.rows {
+                    assert_eq!(m.row(i), ds.x.row(start + i));
+                }
+                deep.push((start, m.rows));
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(seq, deep, "depth={depth}");
+        }
+        // depth 0 is a config error, like chunk 0
+        assert!(for_each_chunk_prefetch_depth(&src, 100, 0, |_, _| Ok(())).is_err());
         // resident fast path: one zero-copy chunk, like for_each_chunk
         let mut calls = 0;
         for_each_chunk_prefetch(&ds.x, 100, |start, m| {

@@ -11,19 +11,25 @@
 //! seed (`rust/tests/pipeline_equivalence.rs`,
 //! `rust/tests/sharded_equivalence.rs`) — with `shards > 1`, the KNR
 //! passes walk disjoint row ranges of the file concurrently, each
-//! prefetching its next chunk while computing on the current one.
+//! prefetching its next chunk while computing on the current one. How
+//! many walkers run at once and how deep each one prefetches is chosen
+//! by the adaptive walk planner ([`crate::pipeline::plan_walk`]), seeded
+//! either by a storage probe or by an explicit
+//! [`crate::pipeline::StorageProfile`] hint.
 //!
 //! Resident peak of an out-of-core run is
-//! `O(N·K + shards·chunk·d + p·d)` — independent of `N·d`, which only
-//! ever streams off disk (each of the `shards` concurrent walkers holds
-//! two chunk buffers for its double-buffered prefetch). The paper's
+//! `O(N·K + walkers·depth·chunk·d + p·d)` — independent of `N·d`, which
+//! only ever streams off disk (each concurrent walker holds
+//! `depth + 1` chunk buffers for its prefetch pipeline). The paper's
 //! motivation is "ten-million-level datasets on a PC with 64 GB memory"
 //! (§1); the on-disk path takes the limited-resource premise one step
 //! further.
 
 use crate::affinity::DistanceBackend;
 use crate::linalg::Mat;
-use crate::pipeline::{reservoir_multi, DataSource, ExecOpts, Pipeline};
+use crate::pipeline::{
+    plan_walk, reservoir_multi, DataSource, ExecOpts, Pipeline, StorageProfile,
+};
 use crate::usenc::{usenc_opts, UsencParams, UsencResult};
 use crate::uspec::UspecParams;
 use crate::util::rng::Rng;
@@ -179,6 +185,9 @@ pub struct StreamParams {
     /// queries); selection sweeps stay row-ordered but prefetch. Never
     /// changes the labels.
     pub shards: usize,
+    /// Storage profile hint for the walk planner (`Auto` probes the
+    /// source once per sharded pass). Operational only, like `shards`.
+    pub storage: StorageProfile,
     /// U-SPEC hyper-parameters (p, K, k, solver, ...). Random and hybrid
     /// selection sweep the disk; k-means-full needs resident data and is
     /// rejected for on-disk sources.
@@ -190,6 +199,7 @@ impl Default for StreamParams {
         StreamParams {
             chunk: crate::pipeline::DEFAULT_CHUNK,
             shards: 1,
+            storage: StorageProfile::Auto,
             base: UspecParams::default(),
         }
     }
@@ -216,15 +226,21 @@ pub fn reservoir_sample(ds: &BinDataset, size: usize, chunk: usize, seed: u64) -
 }
 
 /// Modeled resident peak of an out-of-core run: sparse B
-/// (idx u32 + d2 f32 + csr f64) + chunk buffers (two per concurrent
-/// shard walker — double buffering; walkers are capped at the thread
-/// budget, so an over-wide `--shards` never inflates the model) +
-/// representative index + embedding.
+/// (idx u32 + d2 f32 + csr f64) + chunk buffers (`depth + 1` per
+/// concurrent shard walker, mirroring [`plan_walk`]; since an `Auto`
+/// run resolves its profile only at walk time, the model takes the max
+/// over the profiles the planner can pick) + representative index +
+/// embedding.
 fn peak_model(n: usize, d: usize, chunk: usize, shards: usize, base: &UspecParams) -> u64 {
     let k_nn = base.k_nn.min(base.p);
-    let walkers = shards.clamp(1, crate::util::par::num_threads().max(1));
+    let budget = crate::util::par::num_threads().max(1);
+    let bufs = |profile| {
+        let wp = plan_walk(profile, shards.max(1), budget);
+        wp.walkers * (wp.prefetch_depth + 1)
+    };
+    let chunk_bufs = bufs(StorageProfile::Serial).max(bufs(StorageProfile::Parallel));
     (n * k_nn) as u64 * (4 + 4 + 8 + 4)
-        + (2 * walkers * chunk * d) as u64 * 4
+        + (chunk_bufs * chunk * d) as u64 * 4
         + (base.p * d) as u64 * 4
         + (n * base.k) as u64 * 4
 }
@@ -238,7 +254,8 @@ pub fn stream_uspec(
     backend: &dyn DistanceBackend,
 ) -> Result<StreamResult> {
     let base = params.base.clamped(ds.n());
-    let opts = ExecOpts { chunk: params.chunk, shards: params.shards };
+    let opts =
+        ExecOpts { chunk: params.chunk, shards: params.shards, storage: params.storage };
     let res = Pipeline::new(backend).with_opts(opts).run(ds, &base, seed)?;
     let peak_bytes = peak_model(ds.n(), ds.d(), params.chunk, params.shards, &base);
     Ok(StreamResult { labels: res.labels, peak_bytes, timer: res.timer })
@@ -337,6 +354,7 @@ mod tests {
             chunk: 700, // force multiple chunks per sweep
             shards: 1,
             base: UspecParams { k: 3, p: 250, ..Default::default() },
+            ..Default::default()
         };
         let res = stream_uspec(&bin, &params, 42, &NativeBackend).unwrap();
         let score = nmi(&res.labels, &ds.y);
@@ -357,6 +375,7 @@ mod tests {
             chunk: 512,
             shards: 3, // sharded walk must still be the in-memory run
             base: UspecParams { k: 2, p: 200, ..Default::default() },
+            ..Default::default()
         };
         let streamed = stream_uspec(&bin, &params, 7, &NativeBackend).unwrap();
         let in_mem = crate::uspec::uspec(
@@ -382,7 +401,7 @@ mod tests {
             k_max: 9,
             base: UspecParams { p: 90, ..Default::default() },
         };
-        let opts = ExecOpts { chunk: 256, shards: 2 };
+        let opts = ExecOpts { chunk: 256, shards: 2, ..ExecOpts::default() };
         let res = stream_usenc(&bin, &params, opts, 21, &NativeBackend).unwrap();
         assert_eq!(res.ensemble.m(), 4);
         let score = nmi(&res.labels, &ds.y);

@@ -453,7 +453,7 @@ mod tests {
         let b = generate_ensemble_chunked(&ds.x, &params, 5, &NativeBackend, 128).unwrap();
         assert_eq!(a.labelings, b.labelings);
         // sharded execution is operational too — same labelings
-        let opts = ExecOpts { chunk: 128, shards: 3 };
+        let opts = ExecOpts { chunk: 128, shards: 3, ..ExecOpts::default() };
         let c = generate_ensemble_opts(&ds.x, &params, 5, &NativeBackend, opts).unwrap();
         assert_eq!(a.labelings, c.labelings);
     }

@@ -23,6 +23,19 @@ pub fn eig_debug() -> bool {
     *FLAG.get_or_init(|| std::env::var("USPEC_EIG_DEBUG").is_ok())
 }
 
+/// False when `USPEC_SIMD=0` was set at first use: forces the distance
+/// kernels in [`crate::linalg`] onto their scalar fallback even on CPUs
+/// where a vector path was detected. Purely operational — the scalar and
+/// vector kernels are bit-identical by construction (see the module docs
+/// in `linalg/dense.rs`), so this knob exists for A/B timing and for the
+/// CI determinism matrix, not for correctness. Read once and cached,
+/// like [`eig_trace`]; tests use `linalg::set_simd_override` instead so
+/// they can flip the choice after first use.
+pub fn simd_allowed() -> bool {
+    static FLAG: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *FLAG.get_or_init(|| std::env::var("USPEC_SIMD").map(|v| v != "0").unwrap_or(true))
+}
+
 /// Binary search into a sorted `Vec<f64>` of cumulative weights; returns the
 /// first index whose cumulative weight exceeds `x`.
 pub fn searchsorted(cum: &[f64], x: f64) -> usize {

@@ -235,6 +235,7 @@ fn stream_uspec_tiny_dataset_errors_cleanly() {
         chunk: 8,
         shards: 1,
         base: UspecParams { k: 2, p: 4, ..Default::default() },
+        ..Default::default()
     };
     assert!(stream_uspec(&bin, &params, 1, &NativeBackend).is_err());
 }

@@ -39,6 +39,7 @@ fn streaming_through_pjrt_backend() {
         chunk: 1024,
         shards: 1,
         base: UspecParams { k: 2, p: 200, ..Default::default() },
+        ..Default::default()
     };
     let pjrt = stream_uspec(&bin, &params, 11, &backend).unwrap();
     let native = stream_uspec(&bin, &params, 11, &NativeBackend).unwrap();

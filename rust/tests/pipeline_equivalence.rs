@@ -9,7 +9,7 @@ use std::sync::Mutex;
 
 use uspec::affinity::NativeBackend;
 use uspec::data::synthetic::two_moons;
-use uspec::linalg::Mat;
+use uspec::linalg::{set_simd_override, Mat};
 use uspec::pipeline::{DataSource, Pipeline};
 use uspec::streaming::BinDataset;
 use uspec::usenc::{usenc_chunked, UsencParams};
@@ -34,10 +34,51 @@ impl Drop for OverrideGuard {
     }
 }
 
+/// Restores the default SIMD dispatch even when an assertion unwinds.
+struct SimdGuard;
+
+impl Drop for SimdGuard {
+    fn drop(&mut self) {
+        set_simd_override(0);
+    }
+}
+
 fn tmp(name: &str) -> std::path::PathBuf {
     let dir = std::env::temp_dir().join("uspec_pipeline_eq");
     std::fs::create_dir_all(&dir).unwrap();
     dir.join(name)
+}
+
+/// The runtime SIMD dispatch layer is purely operational: a full U-SPEC
+/// run under the dispatched kernels is bit-identical — labels, sigma, and
+/// embedding — to the same run forced onto the scalar reference tiles, at
+/// one and several threads.
+#[test]
+fn uspec_simd_dispatch_is_operational() {
+    let _g = lock();
+    let _restore = OverrideGuard;
+    let _simd = SimdGuard;
+    let ds = two_moons(1500, 0.06, 25);
+    let params = UspecParams { k: 2, p: 150, ..Default::default() };
+    let mut baseline: Option<(Vec<u32>, u32, Vec<u32>)> = None;
+    for nt in [1usize, 4] {
+        par::set_thread_override(nt);
+        for force_scalar in [false, true] {
+            set_simd_override(usize::from(force_scalar));
+            let run =
+                Pipeline::new(&NativeBackend).with_chunk(700).run(&ds.x, &params, 77).unwrap();
+            let tag = format!("nt={nt} force_scalar={force_scalar}");
+            let emb_bits: Vec<u32> = run.embedding.data.iter().map(|v| v.to_bits()).collect();
+            match &baseline {
+                Some((labels, sigma, emb)) => {
+                    assert_eq!(&run.labels, labels, "labels changed at {tag}");
+                    assert_eq!(run.sigma.to_bits(), *sigma, "sigma changed at {tag}");
+                    assert_eq!(&emb_bits, emb, "embedding changed at {tag}");
+                }
+                None => baseline = Some((run.labels.clone(), run.sigma.to_bits(), emb_bits)),
+            }
+        }
+    }
 }
 
 #[test]

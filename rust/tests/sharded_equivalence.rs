@@ -1,17 +1,18 @@
 //! Shard-invariance guarantees of the staged engine: the shard count is
 //! an operational knob — labels, sigma, and embeddings are
 //! **bit-identical** across shard counts {1, 2, 7}, sources
-//! {`Mat`, `BinDataset`}, and thread counts {1, 8}, for U-SPEC and for
-//! out-of-core U-SENC. The CI determinism matrix re-runs this suite
-//! under `USPEC_THREADS` ∈ {1, 2, 8}.
+//! {`Mat`, `BinDataset`}, thread counts {1, 8}, storage profiles, and
+//! SIMD dispatch levels, for U-SPEC and for out-of-core U-SENC. The CI
+//! determinism matrix re-runs this suite under `USPEC_THREADS` ∈
+//! {1, 2, 8} and with `USPEC_SIMD=0` (forced-scalar) legs.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use uspec::affinity::NativeBackend;
 use uspec::data::synthetic::two_moons;
-use uspec::linalg::Mat;
-use uspec::pipeline::{DataSource, ExecOpts, Pipeline};
+use uspec::linalg::{set_simd_override, Mat};
+use uspec::pipeline::{DataSource, ExecOpts, Pipeline, StorageProfile};
 use uspec::streaming::{stream_usenc, BinDataset};
 use uspec::usenc::{usenc, UsencParams};
 use uspec::uspec::UspecParams;
@@ -34,6 +35,15 @@ impl Drop for OverrideGuard {
     }
 }
 
+/// Restores the default SIMD dispatch even when an assertion unwinds.
+struct SimdGuard;
+
+impl Drop for SimdGuard {
+    fn drop(&mut self) {
+        set_simd_override(0);
+    }
+}
+
 fn tmp(name: &str) -> std::path::PathBuf {
     let dir = std::env::temp_dir().join("uspec_sharded_eq");
     std::fs::create_dir_all(&dir).unwrap();
@@ -53,8 +63,8 @@ fn uspec_bit_identical_across_shards_sources_threads() {
     for nt in [1usize, 8] {
         par::set_thread_override(nt);
         for shards in [1usize, 2, 7] {
-            let pipe =
-                Pipeline::new(&NativeBackend).with_opts(ExecOpts { chunk: 300, shards });
+            let pipe = Pipeline::new(&NativeBackend)
+                .with_opts(ExecOpts { chunk: 300, shards, ..ExecOpts::default() });
             let mem = pipe.run(&ds.x, &params, 77).unwrap();
             let disk = pipe.run(&bin, &params, 77).unwrap();
             let tag = format!("nt={nt} shards={shards}");
@@ -91,7 +101,7 @@ fn usenc_stream_bit_identical_across_shards() {
     };
     let mem = usenc(&ds.x, &params, 13, &NativeBackend).unwrap();
     for shards in [1usize, 2, 7] {
-        let opts = ExecOpts { chunk: 300, shards };
+        let opts = ExecOpts { chunk: 300, shards, ..ExecOpts::default() };
         let disk = stream_usenc(&bin, &params, opts, 13, &NativeBackend).unwrap();
         assert_eq!(mem.labels, disk.labels, "consensus diverged at shards={shards}");
         assert_eq!(
@@ -140,7 +150,10 @@ fn sharded_run_keeps_chunked_residency_and_total_reads() {
         max_read_rows: AtomicUsize::new(0),
         reads: AtomicUsize::new(0),
     };
-    let pipe = Pipeline::new(&NativeBackend).with_opts(ExecOpts { chunk, shards });
+    // Pin the Parallel profile: the exact read bounds below assume no
+    // probe reads (an Auto run adds up to 4 of them — see the probe test).
+    let pipe = Pipeline::new(&NativeBackend)
+        .with_opts(ExecOpts { chunk, shards, storage: StorageProfile::Parallel });
     let res = pipe.run(&tracked, &params, 51).unwrap();
     assert_eq!(res.labels.len(), bin.n());
 
@@ -160,4 +173,70 @@ fn sharded_run_keeps_chunked_residency_and_total_reads() {
         2 * per_pass,
         2 * per_pass + shards
     );
+}
+
+/// The `Auto` storage probe re-reads rows the walk reads anyway; its
+/// overhead is bounded at 4 extra chunk reads per sharded pass and it
+/// never widens residency past one chunk.
+#[test]
+fn auto_probe_adds_at_most_four_chunk_reads() {
+    let _g = lock();
+    let ds = two_moons(1200, 0.06, 44);
+    let bin = BinDataset::write_mat(&tmp("eq_shards_probe.bin"), &ds.x).unwrap();
+    let chunk = 128usize;
+    let shards = 5usize;
+    let params = UspecParams { k: 2, p: 100, ..Default::default() };
+    let tracked = TrackingSource {
+        inner: &bin,
+        max_read_rows: AtomicUsize::new(0),
+        reads: AtomicUsize::new(0),
+    };
+    let pipe = Pipeline::new(&NativeBackend)
+        .with_opts(ExecOpts { chunk, shards, storage: StorageProfile::Auto });
+    let res = pipe.run(&tracked, &params, 51).unwrap();
+    assert_eq!(res.labels.len(), bin.n());
+
+    let max_rows = tracked.max_read_rows.load(Ordering::Relaxed);
+    assert!(max_rows <= chunk, "probe read {max_rows} rows > chunk {chunk}");
+
+    let per_pass = bin.n().div_ceil(chunk);
+    let reads = tracked.reads.load(Ordering::Relaxed);
+    assert!(
+        reads >= 2 * per_pass && reads <= 2 * per_pass + shards + 4,
+        "reads={reads}, expected within [{}, {}] (walk + probe)",
+        2 * per_pass,
+        2 * per_pass + shards + 4
+    );
+}
+
+/// Forcing the scalar kernel tiles (`USPEC_SIMD=0` / `set_simd_override`)
+/// is operational too: a sharded out-of-core run produces bit-identical
+/// labels, sigma, and embedding whichever tile implementation dispatch
+/// picks.
+#[test]
+fn sharded_run_is_simd_dispatch_invariant() {
+    let _g = lock();
+    let _simd = SimdGuard;
+    let ds = two_moons(1000, 0.06, 45);
+    let bin = BinDataset::write_mat(&tmp("eq_shards_simd.bin"), &ds.x).unwrap();
+    let params = UspecParams { k: 2, p: 120, ..Default::default() };
+    let mut baseline: Option<(Vec<u32>, u32, Vec<u32>)> = None;
+    for force_scalar in [false, true] {
+        set_simd_override(usize::from(force_scalar));
+        for shards in [1usize, 3] {
+            let pipe = Pipeline::new(&NativeBackend)
+                .with_opts(ExecOpts { chunk: 300, shards, ..ExecOpts::default() });
+            let run = pipe.run(&bin, &params, 77).unwrap();
+            let tag = format!("force_scalar={force_scalar} shards={shards}");
+            let emb_bits: Vec<u32> = run.embedding.data.iter().map(|v| v.to_bits()).collect();
+            match &baseline {
+                Some((labels, sigma, emb)) => {
+                    assert_eq!(&run.labels, labels, "labels changed at {tag}");
+                    assert_eq!(run.sigma.to_bits(), *sigma, "sigma changed at {tag}");
+                    assert_eq!(&emb_bits, emb, "embedding changed at {tag}");
+                }
+                None => baseline = Some((run.labels.clone(), run.sigma.to_bits(), emb_bits)),
+            }
+        }
+    }
 }
