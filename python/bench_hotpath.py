@@ -22,6 +22,17 @@ emits `BENCH_hotpath.json` at the repo root in the same schema:
   fused per cache-resident block stands in for the dispatched
   vector tile + shared epilogue. The Rust kernels are bit-identical
   across dispatch levels; these legs only mirror the *throughput* gap.
+* ``eig`` — the reduced p×p transfer-cut eigensolve hot loop (fixed-shape
+  Chebyshev-filtered subspace iteration: DEG=8 gemm applies plus a
+  Rayleigh–Ritz projection per outer step, f64 throughout). Proxy legs:
+  the reference leg contracts every block product with a non-BLAS einsum
+  and fresh temporaries (the old branchy `DMat::matmul` + per-iteration
+  allocation), the packed leg runs `np.dot` into preallocated buffers
+  (the packed f64 tiles + `EigScratch` reuse). Orthonormalization is
+  `np.linalg.qr` in both legs. This is a throughput-only proxy — the
+  scalar-vs-dispatched *bit-identity* contract is asserted in the Rust
+  bench (and `reduced_eig_bit_identical_across_threads_and_simd`) where
+  the numbers are made.
 * ``argmin_k`` — per-row top-K selection with a fresh f64 copy + full
   argsort per row (old `argmin_k` usage) vs `argpartition` into
   preallocated f32 scratch (new `argmin_k_into`).
@@ -271,6 +282,99 @@ def bench_simd_dispatch(smoke=False):
             f"simd n={n} p={p} d={d:3d}: scalar {t_scalar * 1e3:8.2f} ms  "
             f"dispatched {t_disp * 1e3:8.2f} ms ({gf(t_disp):6.2f} GF/s)  "
             f"sq_dists {t_scalar / t_disp:.1f}x  nearest {t_scalar_near / t_disp_near:.1f}x"
+        )
+    return rows
+
+
+# ------------------------------------------------------------- reduced eig
+def bench_eig(smoke=False):
+    """Reduced p×p eigensolve hot loop (see module docstring for the
+    proxy-leg mapping). Both legs run the identical fixed-shape iteration
+    — same start block, same filter bound, same step count — so the only
+    difference is how the block products are contracted and whether the
+    buffers are reused; the top-k Ritz values must agree to rounding."""
+    rows = []
+    rng = np.random.default_rng(31)
+    DEG, NSTEP = 8, 3
+    shapes = ((400, 10),) if smoke else ((400, 10), (1200, 10))
+    for p, k in shapes:
+        q = k + 8
+        # Gaussian affinity over a 2-D three-cluster mixture — the same
+        # near-block-diagonal spectrum the Rust bench solves.
+        centers = np.array([[0.0, 0.0], [6.0, 0.0], [0.0, 6.0]])
+        pts = centers[np.arange(p) % 3] + rng.standard_normal((p, 2))
+        sq = ((pts[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+        e_r = np.exp(-sq / 4.0)
+        dis = 1.0 / np.sqrt(e_r.sum(axis=1))
+        s = e_r * dis[:, None] * dis[None, :]
+        x0 = rng.standard_normal((p, q))
+        inv = 2.0 / 0.5  # fixed filter bound: identical work per leg
+
+        def ref_solve():
+            x, _ = np.linalg.qr(x0)
+            vals = None
+            for _ in range(NSTEP):
+                z_prev = x.copy()
+                z = np.einsum("ij,jk->ik", s, x, optimize=False) * inv - x
+                for _ in range(2, DEG + 1):
+                    z_next = np.einsum("ij,jk->ik", s, z, optimize=False) * inv - z
+                    z_next = 2.0 * z_next - z_prev
+                    z_prev, z = z, z_next
+                x, _ = np.linalg.qr(z)
+                sx = np.einsum("ij,jk->ik", s, x, optimize=False)
+                h = np.einsum("ji,jk->ik", x, sx, optimize=False)
+                hvals, hvecs = np.linalg.eigh(0.5 * (h + h.T))
+                vals = hvals[::-1][:k]
+                x = np.einsum("ij,jk->ik", x, hvecs, optimize=False)
+            return vals
+
+        cheb = [np.empty((p, q)) for _ in range(3)]
+        sx_buf = np.empty((p, q))
+        h_buf = np.empty((q, q))
+        rot_buf = np.empty((p, q))
+
+        def packed_solve():
+            x, _ = np.linalg.qr(x0)
+            vals = None
+            for _ in range(NSTEP):
+                c0, c1, c2 = cheb
+                np.copyto(c0, x)
+                np.dot(s, x, out=c1)
+                c1 *= inv
+                c1 -= x
+                for _ in range(2, DEG + 1):
+                    np.dot(s, c1, out=c2)
+                    c2 *= inv
+                    c2 -= c1
+                    c2 *= 2.0
+                    c2 -= c0
+                    c0, c1, c2 = c1, c2, c0
+                x, _ = np.linalg.qr(c1)
+                np.dot(s, x, out=sx_buf)
+                np.dot(x.T, sx_buf, out=h_buf)
+                hvals, hvecs = np.linalg.eigh(0.5 * (h_buf + h_buf.T))
+                vals = hvals[::-1][:k]
+                np.dot(x, hvecs, out=rot_buf)
+                x = rot_buf
+            return vals
+
+        # same math, different contraction order: Ritz values agree
+        assert np.allclose(ref_solve(), packed_solve(), atol=1e-9)
+        iters = 2 if smoke else 3
+        t_ref = time_median(0, iters, ref_solve)
+        t_packed = time_median(1, iters, packed_solve)
+        rows.append(
+            {
+                "p": p,
+                "k": k,
+                "ref_ms": round(t_ref * 1e3, 3),
+                "dispatched_ms": round(t_packed * 1e3, 3),
+                "speedup": round(t_ref / t_packed, 2),
+            }
+        )
+        print(
+            f"eig p={p:4d} k={k}: einsum+alloc {t_ref * 1e3:8.2f} ms  "
+            f"packed+scratch {t_packed * 1e3:8.2f} ms  speedup {t_ref / t_packed:.1f}x"
         )
     return rows
 
@@ -572,6 +676,7 @@ def main():
         "pool_dispatch": bench_dispatch(smoke),
         "sq_dists": bench_sq_dists(smoke),
         "simd_dispatch": bench_simd_dispatch(smoke),
+        "eig": bench_eig(smoke),
         "argmin_k": bench_argmin(smoke),
         "chunk_sweep": bench_chunk_sweep(smoke),
         "shard_sweep": bench_shard_sweep(smoke),

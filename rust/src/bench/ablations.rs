@@ -16,7 +16,7 @@ use super::TablePrinter;
 use crate::affinity::kernel::{build_affinity_kernel, SigmaRule, SimKernel};
 use crate::affinity::{build_affinity, knr::KnrIndex, select, SelectStrategy};
 use crate::bench::runner::derive;
-use crate::bipartite::{row_normalize, transfer_cut, EigSolver};
+use crate::bipartite::{fast_eig_crossover, row_normalize, transfer_cut, EigSolver};
 use crate::data::Benchmark;
 use crate::ensemble_baselines::strehl;
 use crate::kmeans::{kmeans, KmeansParams};
@@ -116,6 +116,7 @@ pub fn eig_ablation(h: &Harness) -> Result<String> {
     let k = ds.k;
     let mut tp = TablePrinter::new(vec![
         "p".into(),
+        "route".into(),
         "dense:s".into(),
         "auto:s".into(),
         "auto:maxdiff".into(),
@@ -123,7 +124,7 @@ pub fn eig_ablation(h: &Harness) -> Result<String> {
         "lobpcg:maxdiff".into(),
         "nmi(auto)".into(),
     ]);
-    for &p in &[100usize, 200, 400, 800] {
+    for &p in &[100usize, 200, 400, 800, 1200] {
         let p = p.min(ds.n() / 2);
         eprintln!("[ablation-eig] p={p} on {}", ds.name);
         let reps = select(
@@ -151,8 +152,11 @@ pub fn eig_ablation(h: &Harness) -> Result<String> {
         let maxdiff = |x: &[f64]| -> f64 {
             x.iter().zip(&ld).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max)
         };
+        // which side of the dense/iterative crossover this shape lands on
+        let route = if fast_eig_crossover(p, k) { "fast" } else { "dense" };
         tp.row(vec![
             p.to_string(),
+            route.into(),
             format!("{sd:.4}"),
             format!("{sa:.4}"),
             format!("{:.2e}", maxdiff(&la)),
@@ -163,7 +167,7 @@ pub fn eig_ablation(h: &Harness) -> Result<String> {
     }
     Ok(format!(
         "\nAblation — reduced-problem eigensolver (dataset {}, k={k}; \
-         maxdiff = max |λ−λ_dense|)\n{}",
+         route = side of fast_eig_crossover; maxdiff = max |λ−λ_dense|)\n{}",
         ds.name,
         tp.render()
     ))

@@ -11,12 +11,20 @@
 //! iteration on the normalized affinity (default; LOBPCG and a dense
 //! tridiagonal-QL solver are selectable via [`EigSolver`], and every fast
 //! path falls back to dense); the lift back to the N side costs O(NKk).
+//!
+//! All block products run on the packed f64 gemm kernels of
+//! [`crate::linalg::DMat`]; [`reduced_eig_in`] threads an [`EigScratch`]
+//! through the Chebyshev recurrence and Rayleigh–Ritz steps so repeated
+//! solves (ensemble members, bench sweeps) stop allocating per iteration.
+//! `USPEC_EIG_TRACE=1` prints solver routing and per-stage wall timings.
 
 use crate::linalg::eigen::{sym_eig, sym_eig_generalized_smallest};
-use crate::linalg::lobpcg::lobpcg_smallest;
-use crate::linalg::{Csr, DMat, Mat};
+use crate::linalg::lobpcg::lobpcg_smallest_in;
+use crate::linalg::{orthonormalize_cols, Csr, DGemmScratch, DMat, EigScratch, Mat};
 use crate::util::par;
 use crate::{ensure_arg, Error, Result};
+
+pub use crate::linalg::eigen::{fast_eig_crossover, FAST_EIG_K_FACTOR, FAST_EIG_MARGIN};
 
 /// Output of the transfer cut: the spectral embedding of the N objects.
 #[derive(Debug, Clone)]
@@ -45,26 +53,6 @@ pub enum EigSolver {
     Lobpcg,
 }
 
-/// The iterative fast path only pays for itself when the reduced problem
-/// is big relative to the block it iterates: the subspace block is
-/// oversampled to ~k+8 columns and each outer step costs O(p²·block), so
-/// below `FAST_EIG_K_FACTOR·k + FAST_EIG_MARGIN` rows the dense O(p³)
-/// solver wins outright (and is exact). The crossover was tuned on the
-/// `ablation_eig` bench shapes.
-pub const FAST_EIG_K_FACTOR: usize = 4;
-/// Additive slack of the crossover — keeps tiny problems (p ≲ 64) dense
-/// even at k=0-ish scales where `FAST_EIG_K_FACTOR·k` alone would be
-/// meaningless.
-pub const FAST_EIG_MARGIN: usize = 64;
-
-/// True when the reduced p×p problem is large enough for the iterative
-/// fast path: `p > FAST_EIG_K_FACTOR·k + FAST_EIG_MARGIN`. Exposed so the
-/// boundary is unit-testable and the bench can report which side a shape
-/// lands on.
-pub fn fast_eig_crossover(p: usize, k: usize) -> bool {
-    p > FAST_EIG_K_FACTOR * k + FAST_EIG_MARGIN
-}
-
 /// Solve the reduced generalized problem `L_R v = λ D_R v` for the
 /// smallest `k` eigenpairs. Returns (λ, V p×k).
 ///
@@ -75,6 +63,20 @@ pub fn fast_eig_crossover(p: usize, k: usize) -> bool {
 /// degenerate λ=0 cluster that defeats gradient methods (k well-separated
 /// clusters ⇒ k disconnected graph components). O(p²·k·iters) ≪ O(p³).
 pub fn reduced_eig(e_r: &DMat, k: usize, solver: EigSolver, seed: u64) -> Result<(Vec<f64>, DMat)> {
+    let mut scr = EigScratch::default();
+    reduced_eig_in(e_r, k, solver, seed, &mut scr)
+}
+
+/// [`reduced_eig`] running the iterative fast paths through a caller-owned
+/// [`EigScratch`], so repeated solves (ensemble members, bench sweeps)
+/// reuse every block buffer instead of reallocating per call.
+pub fn reduced_eig_in(
+    e_r: &DMat,
+    k: usize,
+    solver: EigSolver,
+    seed: u64,
+    scr: &mut EigScratch,
+) -> Result<(Vec<f64>, DMat)> {
     let p = e_r.rows;
     ensure_arg!(k >= 1 && k <= p, "reduced_eig: k={k} out of range for p={p}");
     // degrees of G_R
@@ -101,55 +103,75 @@ pub fn reduced_eig(e_r: &DMat, k: usize, solver: EigSolver, seed: u64) -> Result
     }
     if use_fast {
         let dis: Vec<f64> = d_r.iter().map(|&x| 1.0 / x.sqrt()).collect();
-        // Ŝ = D^{-1/2} E D^{-1/2}
-        let mut s = DMat::zeros(p, p);
-        for i in 0..p {
-            for j in 0..p {
-                s.set(i, j, e_r.at(i, j) * dis[i] * dis[j]);
-            }
-        }
         if matches!(solver, EigSolver::Lobpcg) {
-            // L̂ = I − Ŝ, smallest-k by LOBPCG with Jacobi preconditioning.
+            // L̂ = I − D^{-1/2} E D^{-1/2}, built fused (no Ŝ temporary) and
+            // row-parallel; smallest-k by LOBPCG with Jacobi preconditioning.
             let mut lhat = DMat::zeros(p, p);
-            for i in 0..p {
-                for j in 0..p {
-                    lhat.set(i, j, if i == j { 1.0 - s.at(i, j) } else { -s.at(i, j) });
+            par::par_for_chunks(&mut lhat.data, p, |start, chunk| {
+                let i = start / p;
+                let di = dis[i];
+                let row = e_r.row(i);
+                for (j, (o, (&ev, &dj))) in
+                    chunk.iter_mut().zip(row.iter().zip(&dis)).enumerate()
+                {
+                    let shat = ev * di * dj;
+                    *o = if i == j { 1.0 - shat } else { -shat };
                 }
-            }
+            });
             let precond: Vec<f64> =
                 (0..p).map(|i| 1.0 / lhat.at(i, i).max(1e-12)).collect();
             if let Ok((vals, w)) =
-                lobpcg_smallest(&lhat, k, Some(&precond), 1e-7, 300, seed ^ 0x10B)
+                lobpcg_smallest_in(&lhat, k, Some(&precond), 1e-7, 300, seed ^ 0x10B, scr)
             {
                 let vals: Vec<f64> = vals.iter().map(|&l| l.max(0.0)).collect();
-                let mut v = DMat::zeros(p, k);
-                for c in 0..k {
-                    for r in 0..p {
-                        v.set(r, c, w.at(r, c) * dis[r]);
-                    }
-                }
-                return Ok((vals, v));
+                return Ok((vals, scale_rows(&w, &dis)));
             }
-        } else if let Some((top_vals, w)) = subspace_iteration_largest(&s, k, 1e-6, 150, seed) {
-            // λ(L̂) = 1 − λ(Ŝ); generalized eigvec v = D^{-1/2} w.
-            let vals: Vec<f64> = top_vals.iter().map(|&l| (1.0 - l).max(0.0)).collect();
-            let mut v = DMat::zeros(p, k);
-            for c in 0..k {
-                for r in 0..p {
-                    v.set(r, c, w.at(r, c) * dis[r]);
+        } else {
+            // Ŝ = D^{-1/2} E D^{-1/2}, row-parallel.
+            let mut s = DMat::zeros(p, p);
+            par::par_for_chunks(&mut s.data, p, |start, chunk| {
+                let i = start / p;
+                let di = dis[i];
+                for (o, (&ev, &dj)) in chunk.iter_mut().zip(e_r.row(i).iter().zip(&dis)) {
+                    *o = ev * di * dj;
                 }
+            });
+            if let Some((top_vals, w)) = subspace_iteration_largest(&s, k, 1e-6, 150, seed, scr)
+            {
+                // λ(L̂) = 1 − λ(Ŝ); generalized eigvec v = D^{-1/2} w.
+                let vals: Vec<f64> = top_vals.iter().map(|&l| (1.0 - l).max(0.0)).collect();
+                return Ok((vals, scale_rows(&w, &dis)));
             }
-            return Ok((vals, v));
         }
     }
-    // Dense path.
+    // Dense path: L_R = D_R − E_R, built fused and row-parallel.
     let mut l_r = DMat::zeros(p, p);
-    for i in 0..p {
-        for j in 0..p {
-            l_r.set(i, j, if i == j { d_r[i] - e_r.at(i, j) } else { -e_r.at(i, j) });
+    par::par_for_chunks(&mut l_r.data, p, |start, chunk| {
+        let i = start / p;
+        let row = e_r.row(i);
+        for (j, (o, &ev)) in chunk.iter_mut().zip(row).enumerate() {
+            *o = if i == j { d_r[i] - ev } else { -ev };
         }
-    }
+    });
     sym_eig_generalized_smallest(&l_r, &d_r, k)
+}
+
+/// Row-scale `w` by `dis` (v = D^{-1/2}·w), row-parallel. Pure per-element
+/// map, so the result is independent of the thread count.
+fn scale_rows(w: &DMat, dis: &[f64]) -> DMat {
+    let k = w.cols;
+    let mut v = DMat::zeros(w.rows, k);
+    if k == 0 {
+        return v;
+    }
+    par::par_for_chunks(&mut v.data, k, |start, chunk| {
+        let r = start / k;
+        let di = dis[r];
+        for (o, &wv) in chunk.iter_mut().zip(w.row(r)) {
+            *o = wv * di;
+        }
+    });
+    v
 }
 
 /// Chebyshev-filtered blocked subspace iteration for the largest-`k`
@@ -171,47 +193,32 @@ fn subspace_iteration_largest(
     tol: f64,
     max_iter: usize,
     seed: u64,
+    scr: &mut EigScratch,
 ) -> Option<(Vec<f64>, DMat)> {
     const DEG: usize = 8; // filter degree (matmuls per outer step)
     let p = s.rows;
     let q = (k + 8).min(p); // oversampled block
     let mut rng = crate::util::rng::Rng::new(seed ^ 0x5B5);
-    let mut x = DMat::zeros(p, q);
-    for v in x.data.iter_mut() {
+    scr.basis.reshape(p, q);
+    for v in scr.basis.data.iter_mut() {
         *v = rng.normal();
     }
-    orthonormalize_cols(&mut x)?;
+    if !orthonormalize_cols(&mut scr.basis, &mut scr.ortho) {
+        return None;
+    }
     // Warm-up: a few plain iterations so the first Ritz values (and hence
     // the first filter bound) are sane.
     for _ in 0..4 {
-        x = s.matmul(&x);
-        orthonormalize_cols(&mut x)?;
+        s.matmul_into(&scr.basis, &mut scr.gemm, &mut scr.prod);
+        std::mem::swap(&mut scr.basis, &mut scr.prod);
+        if !orthonormalize_cols(&mut scr.basis, &mut scr.ortho) {
+            return None;
+        }
     }
-    // Rayleigh–Ritz helper: returns (all Ritz values ascending, rotated
-    // top-k basis, top-k values descending).
-    let ritz = |x: &DMat| -> Option<(Vec<f64>, DMat, Vec<f64>)> {
-        let sx = s.matmul(x);
-        let mut h = x.transpose().matmul(&sx);
-        for i in 0..q {
-            for j in 0..i {
-                let v = 0.5 * (h.at(i, j) + h.at(j, i));
-                h.set(i, j, v);
-                h.set(j, i, v);
-            }
-        }
-        let (hvals, hvecs) = sym_eig(&h).ok()?;
-        let vals: Vec<f64> = (0..k).map(|c| hvals[q - 1 - c]).collect();
-        let mut rot = DMat::zeros(q, k);
-        for c in 0..k {
-            for r in 0..q {
-                rot.set(r, c, hvecs.at(r, q - 1 - c));
-            }
-        }
-        Some((hvals, x.matmul(&rot), vals))
-    };
-    let (mut hvals, _w0, mut prev_vals) = ritz(&x)?;
-    let mut w;
-    let mut best: Option<(Vec<f64>, DMat, f64)> = None;
+    let (mut hvals, mut prev_vals) = ritz_step(s, k, scr)?;
+    let mut best_delta = f64::INFINITY;
+    let mut best_vals: Vec<f64> = Vec::new();
+    let mut have_best = false;
     let outer_max = (max_iter / DEG).max(4);
     for it in 0..outer_max {
         // Filter bound: the (k+1)-th Ritz value (descending), i.e. the top
@@ -220,31 +227,25 @@ fn subspace_iteration_largest(
         let lam_kp1 = if q > k { hvals[q - 1 - k] } else { 0.5 };
         let lam_k = prev_vals[k - 1];
         let a = lam_kp1.clamp(1e-4, (lam_k * 0.999).max(1e-4));
-        // Z_{j} = T_j(L)·X with L = (2S − aI)/a; three-term recurrence.
-        let apply_l = |y: &DMat| -> DMat {
-            let mut sy = s.matmul(y);
-            // (2/a)·S·y − y
-            let inv = 2.0 / a;
-            for (o, v) in sy.data.iter_mut().zip(&y.data) {
-                *o = *o * inv - *v;
-            }
-            sy
-        };
-        let mut z_prev = x.clone();
-        let mut z = apply_l(&x);
+        let inv = 2.0 / a;
+        // Z_j = T_j(L)·X with L = (2S − aI)/a; three-term recurrence
+        // rotating through cheb0/cheb1/cheb2 — no allocation per term.
+        scr.cheb0.copy_from(&scr.basis);
+        cheb_apply(s, &scr.basis, inv, &mut scr.gemm, &mut scr.cheb1);
         for _ in 2..=DEG {
-            let mut z_next = apply_l(&z);
-            for (o, v) in z_next.data.iter_mut().zip(&z_prev.data) {
+            cheb_apply(s, &scr.cheb1, inv, &mut scr.gemm, &mut scr.cheb2);
+            for (o, v) in scr.cheb2.data.iter_mut().zip(&scr.cheb0.data) {
                 *o = 2.0 * *o - *v;
             }
-            z_prev = z;
-            z = z_next;
+            std::mem::swap(&mut scr.cheb0, &mut scr.cheb1);
+            std::mem::swap(&mut scr.cheb1, &mut scr.cheb2);
         }
-        x = z;
-        orthonormalize_cols(&mut x)?;
-        let (nh, nw, nvals) = ritz(&x)?;
+        std::mem::swap(&mut scr.basis, &mut scr.cheb1);
+        if !orthonormalize_cols(&mut scr.basis, &mut scr.ortho) {
+            return None;
+        }
+        let (nh, nvals) = ritz_step(s, k, scr)?;
         hvals = nh;
-        w = nw;
         let delta: f64 =
             nvals.iter().zip(&prev_vals).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
         prev_vals = nvals;
@@ -258,56 +259,65 @@ fn subspace_iteration_largest(
                     4 + (it + 1) * (DEG + 1)
                 );
             }
-            return Some((prev_vals, w));
+            return Some((prev_vals, scr.ritz.clone()));
         }
-        if best.as_ref().map(|(_, _, d)| delta < *d).unwrap_or(true) {
-            best = Some((prev_vals.clone(), w.clone(), delta));
+        if delta < best_delta {
+            best_delta = delta;
+            best_vals.clone_from(&prev_vals);
+            scr.keep.copy_from(&scr.ritz);
+            have_best = true;
         }
     }
     // Not fully converged: a near-converged Ritz subspace is still a usable
     // spectral embedding; only give up when clearly unconverged.
-    match best {
-        Some((vals, w, delta)) if delta < 1e-4 => {
-            if crate::util::eig_debug() {
-                eprintln!("[eig] chebyshev subspace best-effort (delta {delta:.2e})");
-            }
-            Some((vals, w))
+    if have_best && best_delta < 1e-4 {
+        if crate::util::eig_debug() {
+            eprintln!("[eig] chebyshev subspace best-effort (delta {best_delta:.2e})");
         }
-        _ => {
-            if crate::util::eig_debug() {
-                eprintln!("[eig] chebyshev subspace failed; dense fallback");
-            }
-            None
+        Some((best_vals, scr.keep.clone()))
+    } else {
+        if crate::util::eig_debug() {
+            eprintln!("[eig] chebyshev subspace failed; dense fallback");
         }
+        None
     }
 }
 
-/// Gram–Schmidt column orthonormalization (two passes); None on rank
-/// deficiency.
-fn orthonormalize_cols(x: &mut DMat) -> Option<()> {
-    let (n, b) = (x.rows, x.cols);
-    for c in 0..b {
-        for _pass in 0..2 {
-            for prev in 0..c {
-                let mut dot = 0.0;
-                for r in 0..n {
-                    dot += x.at(r, prev) * x.at(r, c);
-                }
-                for r in 0..n {
-                    let v = x.at(r, c) - dot * x.at(r, prev);
-                    x.set(r, c, v);
-                }
-            }
-        }
-        let norm: f64 = (0..n).map(|r| x.at(r, c) * x.at(r, c)).sum::<f64>().sqrt();
-        if norm < 1e-13 {
-            return None;
-        }
-        for r in 0..n {
-            x.set(r, c, x.at(r, c) / norm);
+/// One Rayleigh–Ritz step on `scr.basis` (p×q): projects S onto the basis,
+/// solves the dense q×q problem, and writes the rotated top-k Ritz block
+/// into `scr.ritz`. Returns (all Ritz values ascending, top-k descending).
+fn ritz_step(s: &DMat, k: usize, scr: &mut EigScratch) -> Option<(Vec<f64>, Vec<f64>)> {
+    s.matmul_into(&scr.basis, &mut scr.gemm, &mut scr.prod);
+    scr.basis.matmul_tn_into(&scr.prod, &mut scr.gemm, &mut scr.small);
+    let q = scr.small.rows;
+    for i in 0..q {
+        for j in 0..i {
+            let v = 0.5 * (scr.small.at(i, j) + scr.small.at(j, i));
+            scr.small.set(i, j, v);
+            scr.small.set(j, i, v);
         }
     }
-    Some(())
+    let (hvals, hvecs) = sym_eig(&scr.small).ok()?;
+    scr.rot.reshape(q, k);
+    for r in 0..q {
+        let hr = hvecs.row(r);
+        for (c, o) in scr.rot.row_mut(r).iter_mut().enumerate() {
+            *o = hr[q - 1 - c];
+        }
+    }
+    scr.basis.matmul_into(&scr.rot, &mut scr.gemm, &mut scr.ritz);
+    let vals: Vec<f64> = (0..k).map(|c| hvals[q - 1 - c]).collect();
+    Some((hvals, vals))
+}
+
+/// `out ← L·y` with L = (2S − aI)/a, i.e. `(2/a)·S·y − y`, through the
+/// packed gemm. The elementwise epilogue keeps the exact old operation
+/// order (one multiply, one subtract per element).
+fn cheb_apply(s: &DMat, y: &DMat, inv: f64, gemm: &mut DGemmScratch, out: &mut DMat) {
+    s.matmul_into(y, gemm, out);
+    for (o, v) in out.data.iter_mut().zip(&y.data) {
+        *o = *o * inv - *v;
+    }
 }
 
 /// Full transfer cut over a sparse cross-affinity `B`.
@@ -347,8 +357,13 @@ pub fn transfer_cut(b: &Csr, k: usize, solver: EigSolver, seed: u64) -> Result<T
         b
     };
     // E_R = Bᵀ D_X⁻¹ B — O(N K²)
+    let t0 = std::time::Instant::now();
     let e_r = b.tdb(&w);
+    let t_build = t0.elapsed();
+    let t1 = std::time::Instant::now();
     let (lambdas, v) = reduced_eig(&e_r, k, solver, seed)?;
+    let t_solve = t1.elapsed();
+    let t2 = std::time::Instant::now();
     // γ(2-γ) = λ ⇒ γ = 1 − sqrt(1−λ); clamp λ into [0, 1).
     let gammas: Vec<f64> = lambdas
         .iter()
@@ -368,6 +383,17 @@ pub fn transfer_cut(b: &Csr, k: usize, solver: EigSolver, seed: u64) -> Result<T
             *o = (tv.at(i, c) * scale / denom) as f32;
         }
     });
+    if crate::util::eig_trace() {
+        // Per-stage wall timings so the dense/iterative routing can be
+        // calibrated from real runs, not just solver names.
+        eprintln!(
+            "[eig] transfer_cut n={n} p={} k={k}: E_R build {:.2}ms | reduced solve {:.2}ms | lift {:.2}ms",
+            b.cols,
+            t_build.as_secs_f64() * 1e3,
+            t_solve.as_secs_f64() * 1e3,
+            t2.elapsed().as_secs_f64() * 1e3,
+        );
+    }
     Ok(TransferCut { embedding: emb, gammas, lambdas })
 }
 
@@ -561,12 +587,22 @@ mod tests {
 
     #[test]
     fn fast_eig_crossover_boundary() {
+        use crate::linalg::lobpcg::lobpcg_smallest;
         // exactly at the threshold: dense; one past it: fast
         for k in [1usize, 3, 10, 50] {
             let boundary = FAST_EIG_K_FACTOR * k + FAST_EIG_MARGIN;
             assert!(!fast_eig_crossover(boundary, k), "p == 4k+64 must stay dense (k={k})");
             assert!(fast_eig_crossover(boundary + 1, k), "p == 4k+65 must go fast (k={k})");
+            // lobpcg's small-problem guard is the SAME crossover (it used
+            // to hardcode n <= 4k+32): at the boundary it must reject...
+            assert!(
+                lobpcg_smallest(&DMat::eye(boundary), k, None, 1e-8, 10, 1).is_err(),
+                "lobpcg must reject n == 4k+64 (k={k})"
+            );
         }
+        // ...and one past it, accept (identity: zero residual at once).
+        let boundary = FAST_EIG_K_FACTOR + FAST_EIG_MARGIN;
+        assert!(lobpcg_smallest(&DMat::eye(boundary + 1), 1, None, 1e-8, 50, 1).is_ok());
     }
 
     #[test]

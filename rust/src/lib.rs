@@ -26,6 +26,27 @@
 //! (`python/compile`); the rust binary is self-contained once
 //! `make artifacts` has produced the HLO text artifacts.
 //!
+//! ## Environment knobs
+//!
+//! All runtime tuning is via environment variables, each read once at
+//! first use:
+//!
+//! * `USPEC_THREADS=n` — cap the scoped thread pool at `n` workers
+//!   (default: all cores). Results are bit-identical at any setting: every
+//!   parallel loop writes disjoint chunks with a fixed per-element
+//!   reduction order.
+//! * `USPEC_SIMD=0` — force the scalar kernel paths (distance and gemm),
+//!   bypassing runtime AVX2/NEON detection. The vector tiles replay the
+//!   scalar operation order lanewise, so this changes speed, never bits;
+//!   the bench harnesses assert that equivalence where the numbers are
+//!   made.
+//! * `USPEC_EIG_TRACE=1` — print eigensolver routing (dense vs Chebyshev
+//!   subspace vs LOBPCG, with the crossover that decided it), per-outer-
+//!   iteration convergence deltas, and per-stage transfer-cut wall timings
+//!   (`E_R` build | reduced solve | N×k lift) to stderr.
+//! * `USPEC_EIG_DEBUG=1` — print eigensolver convergence summaries and
+//!   fallback decisions (quieter than `USPEC_EIG_TRACE`).
+//!
 //! ## Quickstart
 //!
 //! ```no_run

@@ -51,6 +51,31 @@
 //!   the argmin scan — are shared scalar code over the per-tile
 //!   accumulator array, so clamping and tie-breaking (lowest index win)
 //!   are byte-for-byte the same on every path.
+//!
+//! # The packed f64 eigensolver kernels
+//!
+//! The transfer-cut eigensolvers (`bipartite::reduced_eig`,
+//! `linalg::lobpcg`) run their p-sized products on a second packed tile
+//! layer over f64: [`DMat::matmul_into`] / [`DMat::matmul_nt_into`] /
+//! [`DMat::matmul_tn_into`] pack the RHS into [`DNR`]-wide feature-major
+//! panels (reusing a caller-held [`DGemmScratch`], so iterative solvers
+//! pack into the same buffer every iteration) and drive [`MR`]×[`DNR`]
+//! register tiles through the same [`SimdLevel`] dispatch as the f32
+//! layer — one 256-bit `_pd` vector (AVX2) or two `float64x2_t` (NEON)
+//! per tile row, strictly `mul` then `add`, replaying the scalar tile's
+//! lanewise op order. The same bit-identity contract therefore holds:
+//! `USPEC_SIMD=0` / [`set_simd_override`] flip only throughput, never a
+//! bit of any eigenvector, and output rows are written over disjoint
+//! ranges so thread count is equally inert.
+//!
+//! [`EigScratch`] bundles the per-solver working set (packing buffers,
+//! orthonormalization transpose scratch, and the named block buffers the
+//! Chebyshev recurrence / Rayleigh–Ritz step / LOBPCG iteration cycle
+//! through) so a whole reduced solve allocates only its final result
+//! once warm. [`orthonormalize_cols`] is the shared two-pass blocked
+//! Gram–Schmidt both solvers use — one rank-deficiency contract
+//! ([`ORTHO_RANK_TOL`]) instead of the two divergent copies that
+//! previously lived in `bipartite` and `lobpcg`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
@@ -61,6 +86,9 @@ use crate::util::par;
 pub const MR: usize = 4;
 /// Microkernel tile width (packed RHS panel width).
 pub const NR: usize = 8;
+/// f64 microkernel tile width (packed RHS panel width of the `DMat`
+/// gemm). Half of [`NR`]: one 256-bit AVX2 vector holds 4 doubles.
+pub const DNR: usize = 4;
 
 /// Output rows processed per parallel work item in the gemm drivers.
 const ROWS_PER_CHUNK: usize = 16;
@@ -130,10 +158,11 @@ mod avx2 {
     //! single rounding would break the bit-identity contract (module
     //! docs) with the scalar fallback's two roundings per step.
 
-    use super::{MR, NR};
+    use super::{DNR, MR, NR};
     use std::arch::x86_64::{
-        _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_setzero_ps,
-        _mm256_storeu_ps,
+        _mm256_add_pd, _mm256_add_ps, _mm256_loadu_pd, _mm256_loadu_ps, _mm256_mul_pd,
+        _mm256_mul_ps, _mm256_set1_pd, _mm256_set1_ps, _mm256_setzero_pd, _mm256_setzero_ps,
+        _mm256_storeu_pd, _mm256_storeu_ps,
     };
 
     /// `MR`-row register tile (vector twin of the scalar `tile_4xnr`).
@@ -190,6 +219,63 @@ mod avx2 {
         _mm256_storeu_ps(out.as_mut_ptr(), acc);
         out
     }
+
+    /// f64 `MR`-row register tile: one 256-bit `_pd` vector covers the
+    /// full `DNR = 4` accumulator lane set. Same mul-then-add discipline
+    /// as the f32 tiles — no `fmadd` — to stay bit-identical with the
+    /// scalar `tile64_4x`.
+    ///
+    /// # Safety
+    /// Same AVX2 requirement as [`tile_4xnr`].
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn tile64_4x(
+        a0: &[f64],
+        a1: &[f64],
+        a2: &[f64],
+        a3: &[f64],
+        panel: &[f64],
+    ) -> [[f64; DNR]; MR] {
+        let d = a0.len();
+        debug_assert!(a1.len() == d && a2.len() == d && a3.len() == d);
+        debug_assert!(panel.len() >= d * DNR);
+        let p = panel.as_ptr();
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        let mut acc2 = _mm256_setzero_pd();
+        let mut acc3 = _mm256_setzero_pd();
+        for t in 0..d {
+            let pv = _mm256_loadu_pd(p.add(t * DNR));
+            acc0 = _mm256_add_pd(acc0, _mm256_mul_pd(_mm256_set1_pd(*a0.get_unchecked(t)), pv));
+            acc1 = _mm256_add_pd(acc1, _mm256_mul_pd(_mm256_set1_pd(*a1.get_unchecked(t)), pv));
+            acc2 = _mm256_add_pd(acc2, _mm256_mul_pd(_mm256_set1_pd(*a2.get_unchecked(t)), pv));
+            acc3 = _mm256_add_pd(acc3, _mm256_mul_pd(_mm256_set1_pd(*a3.get_unchecked(t)), pv));
+        }
+        let mut out = [[0f64; DNR]; MR];
+        _mm256_storeu_pd(out[0].as_mut_ptr(), acc0);
+        _mm256_storeu_pd(out[1].as_mut_ptr(), acc1);
+        _mm256_storeu_pd(out[2].as_mut_ptr(), acc2);
+        _mm256_storeu_pd(out[3].as_mut_ptr(), acc3);
+        out
+    }
+
+    /// f64 single-row tail tile.
+    ///
+    /// # Safety
+    /// Same AVX2 requirement as [`tile_4xnr`].
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn tile64_1x(a: &[f64], panel: &[f64]) -> [f64; DNR] {
+        let d = a.len();
+        debug_assert!(panel.len() >= d * DNR);
+        let p = panel.as_ptr();
+        let mut acc = _mm256_setzero_pd();
+        for t in 0..d {
+            let pv = _mm256_loadu_pd(p.add(t * DNR));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(_mm256_set1_pd(*a.get_unchecked(t)), pv));
+        }
+        let mut out = [0f64; DNR];
+        _mm256_storeu_pd(out.as_mut_ptr(), acc);
+        out
+    }
 }
 
 #[cfg(target_arch = "aarch64")]
@@ -198,8 +284,11 @@ mod neon {
     //! lane set. Same mul-then-add discipline as the AVX2 tiles — no
     //! `vfmaq` — to stay bit-identical with the scalar fallback.
 
-    use super::{MR, NR};
-    use std::arch::aarch64::{float32x4_t, vaddq_f32, vdupq_n_f32, vld1q_f32, vmulq_f32, vst1q_f32};
+    use super::{DNR, MR, NR};
+    use std::arch::aarch64::{
+        float32x4_t, float64x2_t, vaddq_f32, vaddq_f64, vdupq_n_f32, vdupq_n_f64, vld1q_f32,
+        vld1q_f64, vmulq_f32, vmulq_f64, vst1q_f32, vst1q_f64,
+    };
 
     /// `MR`-row register tile (vector twin of the scalar `tile_4xnr`).
     ///
@@ -264,6 +353,71 @@ mod neon {
         vst1q_f32(out.as_mut_ptr().add(4), hi);
         out
     }
+
+    /// f64 `MR`-row register tile: two 128-bit vectors per tile row cover
+    /// the `DNR = 4` lane set. Mul-then-add only, like the f32 tiles.
+    ///
+    /// # Safety
+    /// Same NEON requirement as [`tile_4xnr`].
+    #[target_feature(enable = "neon")]
+    pub unsafe fn tile64_4x(
+        a0: &[f64],
+        a1: &[f64],
+        a2: &[f64],
+        a3: &[f64],
+        panel: &[f64],
+    ) -> [[f64; DNR]; MR] {
+        let d = a0.len();
+        debug_assert!(a1.len() == d && a2.len() == d && a3.len() == d);
+        debug_assert!(panel.len() >= d * DNR);
+        let p = panel.as_ptr();
+        let zero = vdupq_n_f64(0.0);
+        let mut acc: [[float64x2_t; 2]; MR] = [[zero; 2]; MR];
+        for t in 0..d {
+            let plo = vld1q_f64(p.add(t * DNR));
+            let phi = vld1q_f64(p.add(t * DNR + 2));
+            let xs = [
+                *a0.get_unchecked(t),
+                *a1.get_unchecked(t),
+                *a2.get_unchecked(t),
+                *a3.get_unchecked(t),
+            ];
+            for (accr, &x) in acc.iter_mut().zip(&xs) {
+                let xv = vdupq_n_f64(x);
+                accr[0] = vaddq_f64(accr[0], vmulq_f64(xv, plo));
+                accr[1] = vaddq_f64(accr[1], vmulq_f64(xv, phi));
+            }
+        }
+        let mut out = [[0f64; DNR]; MR];
+        for (orow, accr) in out.iter_mut().zip(&acc) {
+            vst1q_f64(orow.as_mut_ptr(), accr[0]);
+            vst1q_f64(orow.as_mut_ptr().add(2), accr[1]);
+        }
+        out
+    }
+
+    /// f64 single-row tail tile.
+    ///
+    /// # Safety
+    /// Same NEON requirement as [`tile_4xnr`].
+    #[target_feature(enable = "neon")]
+    pub unsafe fn tile64_1x(a: &[f64], panel: &[f64]) -> [f64; DNR] {
+        let d = a.len();
+        debug_assert!(panel.len() >= d * DNR);
+        let p = panel.as_ptr();
+        let zero = vdupq_n_f64(0.0);
+        let mut lo = zero;
+        let mut hi = zero;
+        for t in 0..d {
+            let xv = vdupq_n_f64(*a.get_unchecked(t));
+            lo = vaddq_f64(lo, vmulq_f64(xv, vld1q_f64(p.add(t * DNR))));
+            hi = vaddq_f64(hi, vmulq_f64(xv, vld1q_f64(p.add(t * DNR + 2))));
+        }
+        let mut out = [0f64; DNR];
+        vst1q_f64(out.as_mut_ptr(), lo);
+        vst1q_f64(out.as_mut_ptr().add(2), hi);
+        out
+    }
 }
 
 /// Tile-level dispatch on a pre-resolved [`SimdLevel`]. The branch is
@@ -300,6 +454,39 @@ fn dtile_1xnr(level: SimdLevel, a: &[f32], panel: &[f32]) -> [f32; NR] {
         #[cfg(target_arch = "aarch64")]
         SimdLevel::Neon => unsafe { neon::tile_1xnr(a, panel) },
         SimdLevel::Scalar => tile_1xnr(a, panel),
+    }
+}
+
+/// f64 twin of [`dtile_4xnr`], dispatching the `DMat` gemm tiles.
+#[inline(always)]
+fn dtile64_4x(
+    level: SimdLevel,
+    a0: &[f64],
+    a1: &[f64],
+    a2: &[f64],
+    a3: &[f64],
+    panel: &[f64],
+) -> [[f64; DNR]; MR] {
+    match level {
+        // SAFETY: see `dtile_4xnr`.
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { avx2::tile64_4x(a0, a1, a2, a3, panel) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::tile64_4x(a0, a1, a2, a3, panel) },
+        SimdLevel::Scalar => tile64_4x(a0, a1, a2, a3, panel),
+    }
+}
+
+/// f64 twin of [`dtile_1xnr`].
+#[inline(always)]
+fn dtile64_1x(level: SimdLevel, a: &[f64], panel: &[f64]) -> [f64; DNR] {
+    match level {
+        // SAFETY: see `dtile_4xnr`.
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { avx2::tile64_1x(a, panel) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::tile64_1x(a, panel) },
+        SimdLevel::Scalar => tile64_1x(a, panel),
     }
 }
 
@@ -385,6 +572,273 @@ fn tile_1xnr(a: &[f32], panel: &[f32]) -> [f32; NR] {
         }
     }
     acc
+}
+
+/// f64 `MR`-row register tile — the **reference op order** of the f64
+/// bit-identity contract, exactly like [`tile_4xnr`] for f32: lane `c`
+/// combines only with panel lane `c`, one multiply rounding then one add
+/// rounding per inner-dimension step. The AVX2/NEON `tile64_*` twins
+/// replay this sequence 4 (resp. 2×2) lanes at a time.
+#[inline(always)]
+fn tile64_4x(a0: &[f64], a1: &[f64], a2: &[f64], a3: &[f64], panel: &[f64]) -> [[f64; DNR]; MR] {
+    let mut acc = [[0f64; DNR]; MR];
+    for ((((pb, &x0), &x1), &x2), &x3) in
+        panel.chunks_exact(DNR).zip(a0).zip(a1).zip(a2).zip(a3)
+    {
+        for c in 0..DNR {
+            acc[0][c] += x0 * pb[c];
+            acc[1][c] += x1 * pb[c];
+            acc[2][c] += x2 * pb[c];
+            acc[3][c] += x3 * pb[c];
+        }
+    }
+    acc
+}
+
+/// f64 single-row tail tile.
+#[inline(always)]
+fn tile64_1x(a: &[f64], panel: &[f64]) -> [f64; DNR] {
+    let mut acc = [0f64; DNR];
+    for (pb, &x) in panel.chunks_exact(DNR).zip(a) {
+        for c in 0..DNR {
+            acc[c] += x * pb[c];
+        }
+    }
+    acc
+}
+
+/// Pack a `k`×`n` row-major RHS `b` into `DNR`-wide **column** panels for
+/// `A·B`: panel `q` covers output columns `q·DNR .. q·DNR+DNR`, stored
+/// inner-dimension-major (element `[t·DNR + c]` is `B[t, q·DNR+c]`,
+/// zero-padded past `n`). The buffer is reused across calls — only
+/// reshaped (with its memset) when the packed size actually changes; the
+/// pad lanes are re-zeroed explicitly so a shrinking `n` cannot leak
+/// stale values into the tiles.
+fn dpack_cols(b: &[f64], k: usize, n: usize, panels: &mut Vec<f64>) {
+    debug_assert_eq!(b.len(), k * n);
+    let npanels = n.div_ceil(DNR).max(1);
+    let need = npanels * k * DNR;
+    if panels.len() != need {
+        panels.clear();
+        panels.resize(need, 0.0);
+    }
+    for q in 0..npanels {
+        let base = q * DNR;
+        let live = DNR.min(n.saturating_sub(base));
+        let panel = &mut panels[q * k * DNR..(q + 1) * k * DNR];
+        for (t, dst) in panel.chunks_exact_mut(DNR).enumerate() {
+            dst[..live].copy_from_slice(&b[t * n + base..t * n + base + live]);
+            dst[live..].fill(0.0);
+        }
+    }
+}
+
+/// Pack an `n`×`d` row-major RHS `b` into the same panel format as
+/// [`dpack_cols`], but gathering **rows** for `A·Bᵀ`: element
+/// `[t·DNR + r]` is `B[q·DNR+r, t]`. A tile then computes `A·Bᵀ` columns
+/// `q·DNR..` with the identical kernel (and identical arithmetic) as the
+/// `A·B` path.
+fn dpack_rows(b: &[f64], n: usize, d: usize, panels: &mut Vec<f64>) {
+    debug_assert_eq!(b.len(), n * d);
+    let npanels = n.div_ceil(DNR).max(1);
+    let need = npanels * d * DNR;
+    if panels.len() != need {
+        panels.clear();
+        panels.resize(need, 0.0);
+    }
+    for q in 0..npanels {
+        let base = q * DNR;
+        let live = DNR.min(n.saturating_sub(base));
+        let panel = &mut panels[q * d * DNR..(q + 1) * d * DNR];
+        for (t, dst) in panel.chunks_exact_mut(DNR).enumerate() {
+            for (r, pd) in dst[..live].iter_mut().enumerate() {
+                *pd = b[(base + r) * d + t];
+            }
+            dst[live..].fill(0.0);
+        }
+    }
+}
+
+/// Blocked, threaded f64 gemm against pre-packed `DNR`-wide panels,
+/// overwriting `out` (`m`×`n` row-major). Single driver for `A·B` and
+/// `A·Bᵀ` — the packers above produce the same panel format for both, so
+/// both products run the identical tile arithmetic. Output rows are
+/// written over disjoint [`par_for_chunks`](par::par_for_chunks) ranges
+/// and every element is a full fixed-order reduction over the inner
+/// dimension, so results are independent of thread count and chunk
+/// boundaries.
+fn dgemm_packed_into(a: &[f64], m: usize, kk: usize, panels: &[f64], n: usize, out: &mut [f64]) {
+    debug_assert_eq!(a.len(), m * kk);
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let npanels = n.div_ceil(DNR).max(1);
+    let level = simd_level();
+    par::par_for_chunks(out, n * ROWS_PER_CHUNK, |start, chunk| {
+        let row0 = start / n;
+        let nrows = chunk.len() / n;
+        let mut r = 0;
+        // MR-row register tiles over the band.
+        while r + MR <= nrows {
+            let i0 = row0 + r;
+            let a0 = &a[i0 * kk..(i0 + 1) * kk];
+            let a1 = &a[(i0 + 1) * kk..(i0 + 2) * kk];
+            let a2 = &a[(i0 + 2) * kk..(i0 + 3) * kk];
+            let a3 = &a[(i0 + 3) * kk..(i0 + 4) * kk];
+            for q in 0..npanels {
+                let panel = &panels[q * kk * DNR..(q + 1) * kk * DNR];
+                let acc = dtile64_4x(level, a0, a1, a2, a3, panel);
+                let jb = q * DNR;
+                let cr = DNR.min(n - jb);
+                for (rr, accr) in acc.iter().enumerate() {
+                    chunk[(r + rr) * n + jb..(r + rr) * n + jb + cr]
+                        .copy_from_slice(&accr[..cr]);
+                }
+            }
+            r += MR;
+        }
+        // Tail rows.
+        while r < nrows {
+            let i0 = row0 + r;
+            let arow = &a[i0 * kk..(i0 + 1) * kk];
+            for q in 0..npanels {
+                let panel = &panels[q * kk * DNR..(q + 1) * kk * DNR];
+                let acc = dtile64_1x(level, arow, panel);
+                let jb = q * DNR;
+                let cr = DNR.min(n - jb);
+                chunk[r * n + jb..r * n + jb + cr].copy_from_slice(&acc[..cr]);
+            }
+            r += 1;
+        }
+    });
+}
+
+/// Reusable packing buffers for the f64 gemm family
+/// ([`DMat::matmul_into`] and friends): `panels` holds the packed RHS,
+/// `lhs_t` the transposed LHS of `matmul_tn_into`. Iterative solvers keep
+/// one per solve so every iteration packs into warm memory.
+#[derive(Debug, Default)]
+pub struct DGemmScratch {
+    panels: Vec<f64>,
+    lhs_t: Vec<f64>,
+}
+
+/// A column whose residual norm after projection falls below this is
+/// treated as rank-deficient by [`orthonormalize_cols`] — the single
+/// contract shared by every solver (previously `bipartite` used 1e-13
+/// and `lobpcg` 1e-12; the stricter threshold won).
+pub const ORTHO_RANK_TOL: f64 = 1e-13;
+
+/// Orthonormalize the columns of `x` in place by blocked two-pass
+/// classical Gram–Schmidt (CGS2). Returns `false` — leaving `x`
+/// unspecified — as soon as a column's residual norm falls below
+/// [`ORTHO_RANK_TOL`] (numerical rank deficiency).
+///
+/// The matrix is transposed once into `scratch` so every column is a
+/// contiguous run: the projection coefficients of column `c` against all
+/// previous columns are then one streaming sweep (a `c`×`n` gemv) and
+/// the subtraction a second, instead of the `cols`-strided element loops
+/// this replaces. Two full passes give CGS2 its MGS-grade stability.
+/// Entirely sequential with a fixed reduction order, so results never
+/// depend on thread count or SIMD dispatch.
+pub fn orthonormalize_cols(x: &mut DMat, scratch: &mut Vec<f64>) -> bool {
+    let (n, b) = (x.rows, x.cols);
+    if b == 0 {
+        return true;
+    }
+    if scratch.len() != b * n + b {
+        scratch.clear();
+        scratch.resize(b * n + b, 0.0);
+    }
+    let (qt, g) = scratch.split_at_mut(b * n);
+    for r in 0..n {
+        for (c, &v) in x.row(r).iter().enumerate() {
+            qt[c * n + r] = v;
+        }
+    }
+    for c in 0..b {
+        let (prevs, rest) = qt.split_at_mut(c * n);
+        let v = &mut rest[..n];
+        for _pass in 0..2 {
+            for (j, gj) in g[..c].iter_mut().enumerate() {
+                let q = &prevs[j * n..(j + 1) * n];
+                let mut dot = 0.0;
+                for (a, t) in q.iter().zip(v.iter()) {
+                    dot += a * t;
+                }
+                *gj = dot;
+            }
+            for (j, &gj) in g[..c].iter().enumerate() {
+                let q = &prevs[j * n..(j + 1) * n];
+                for (o, &qv) in v.iter_mut().zip(q) {
+                    *o -= gj * qv;
+                }
+            }
+        }
+        let mut norm = 0.0;
+        for t in v.iter() {
+            norm += t * t;
+        }
+        let norm = norm.sqrt();
+        if norm < ORTHO_RANK_TOL {
+            return false;
+        }
+        for t in v.iter_mut() {
+            *t /= norm;
+        }
+    }
+    for r in 0..n {
+        for (c, o) in x.row_mut(r).iter_mut().enumerate() {
+            *o = qt[c * n + r];
+        }
+    }
+    true
+}
+
+/// The full per-solver working set of the reduced eigensolvers
+/// (`bipartite::reduced_eig`, Chebyshev subspace iteration, LOBPCG):
+/// gemm packing buffers, orthonormalization scratch, and the named block
+/// buffers the iterations cycle through. Holding one of these across a
+/// solve makes the Chebyshev three-term recurrence, the Rayleigh–Ritz
+/// step, and the LOBPCG `[X, R, P]` assembly allocation-free once warm —
+/// only the `q`×`q` projected eigenproblem (`q ≈ k+8`) and the final
+/// returned eigenvectors still allocate.
+///
+/// The fields are deliberately crate-visible rather than encapsulated:
+/// the solvers borrow several buffers simultaneously (e.g. a gemm from
+/// `basis` into `prod` while packing into `gemm`), which only the
+/// compiler's disjoint-field borrows allow.
+#[derive(Debug, Default)]
+pub struct EigScratch {
+    pub(crate) gemm: DGemmScratch,
+    pub(crate) ortho: Vec<f64>,
+    /// Current basis block X (p×q).
+    pub(crate) basis: DMat,
+    /// Operator product S·X / A·X.
+    pub(crate) prod: DMat,
+    /// LOBPCG residual block R.
+    pub(crate) resid: DMat,
+    /// LOBPCG subspace [X, R, P] (p×2q or p×3q).
+    pub(crate) wide: DMat,
+    /// Operator product on the wide subspace.
+    pub(crate) wide2: DMat,
+    /// Projected q×q Rayleigh–Ritz matrix.
+    pub(crate) small: DMat,
+    /// Eigenvector column block extracted from the small problem.
+    pub(crate) rot: DMat,
+    /// Rotated Ritz basis X·rot.
+    pub(crate) ritz: DMat,
+    /// Best-so-far Ritz block for best-effort fallbacks.
+    pub(crate) keep: DMat,
+    /// LOBPCG direction block P.
+    pub(crate) dir: DMat,
+    /// Chebyshev recurrence term z_{j-1}.
+    pub(crate) cheb0: DMat,
+    /// Chebyshev recurrence term z_j.
+    pub(crate) cheb1: DMat,
+    /// Chebyshev recurrence term z_{j+1}.
+    pub(crate) cheb2: DMat,
 }
 
 /// Blocked, threaded `A·Bᵀ` against a packed RHS, writing into `out`
@@ -707,7 +1161,7 @@ impl Mat {
 }
 
 /// f64 row-major matrix for the small spectral problems.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct DMat {
     pub rows: usize,
     pub cols: usize,
@@ -762,25 +1216,100 @@ impl DMat {
         t
     }
 
-    /// Plain gemm `self · other`.
+    /// Re-dimension to `rows`×`cols`, reallocating only when the element
+    /// count changes. Contents are unspecified afterwards — this is the
+    /// "about to be overwritten" primitive of the `_into` gemm family.
+    pub fn reshape(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        if self.data.len() != rows * cols {
+            self.data.clear();
+            self.data.resize(rows * cols, 0.0);
+        }
+    }
+
+    /// Become a copy of `src`, reusing this matrix's allocation.
+    pub fn copy_from(&mut self, src: &DMat) {
+        self.reshape(src.rows, src.cols);
+        self.data.copy_from_slice(&src.data);
+    }
+
+    /// Plain gemm `self · other` on the packed register-tiled f64 kernel
+    /// (branch-free inner loop — the old per-element `av == 0.0` test is
+    /// gone with the old element loops). Allocating convenience wrapper;
+    /// iterative callers use [`DMat::matmul_into`] with persistent
+    /// scratch.
     pub fn matmul(&self, other: &DMat) -> DMat {
-        assert_eq!(self.cols, other.rows, "matmul inner dim mismatch");
-        let (m, k, n) = (self.rows, self.cols, other.cols);
-        let mut out = DMat::zeros(m, n);
-        par::par_for_chunks(&mut out.data, n, |start, chunk| {
-            let i = start / n;
-            let a = self.row(i);
-            for (t, &av) in a.iter().enumerate().take(k) {
-                if av == 0.0 {
-                    continue;
-                }
-                let b = other.row(t);
-                for j in 0..n {
-                    chunk[j] += av * b[j];
-                }
-            }
-        });
+        let mut scratch = DGemmScratch::default();
+        let mut out = DMat::default();
+        self.matmul_into(other, &mut scratch, &mut out);
         out
+    }
+
+    /// `self · other` written into `out` (reshaped as needed), packing the
+    /// RHS into `scratch`. Once warm, a fixed-shape call allocates
+    /// nothing.
+    pub fn matmul_into(&self, other: &DMat, scratch: &mut DGemmScratch, out: &mut DMat) {
+        assert_eq!(self.cols, other.rows, "matmul inner dim mismatch");
+        out.reshape(self.rows, other.cols);
+        dpack_cols(&other.data, other.rows, other.cols, &mut scratch.panels);
+        dgemm_packed_into(
+            &self.data,
+            self.rows,
+            self.cols,
+            &scratch.panels,
+            other.cols,
+            &mut out.data,
+        );
+    }
+
+    /// `self · otherᵀ` (m×d · (n×d)ᵀ = m×n). The row-packer lands `other`
+    /// in the same panel format as the `A·B` path, so the product is not
+    /// just equivalent but **bit-identical** to
+    /// `self.matmul(&other.transpose())` — without materializing the
+    /// transpose.
+    pub fn matmul_nt(&self, other: &DMat) -> DMat {
+        let mut scratch = DGemmScratch::default();
+        let mut out = DMat::default();
+        self.matmul_nt_into(other, &mut scratch, &mut out);
+        out
+    }
+
+    /// [`DMat::matmul_nt`] writing into caller buffers.
+    pub fn matmul_nt_into(&self, other: &DMat, scratch: &mut DGemmScratch, out: &mut DMat) {
+        assert_eq!(self.cols, other.cols, "matmul_nt inner dim mismatch");
+        out.reshape(self.rows, other.rows);
+        dpack_rows(&other.data, other.rows, other.cols, &mut scratch.panels);
+        dgemm_packed_into(
+            &self.data,
+            self.rows,
+            self.cols,
+            &scratch.panels,
+            other.rows,
+            &mut out.data,
+        );
+    }
+
+    /// `selfᵀ · other` ((p×m)ᵀ · p×n = m×n) — the Rayleigh–Ritz
+    /// projection shape `Xᵀ(SX)`. The LHS is transposed once into
+    /// `scratch` (O(p·m), negligible against the O(p·m·n) product) so the
+    /// kernel runs over contiguous rows; arithmetic is bit-identical to
+    /// `self.transpose().matmul(other)`.
+    pub fn matmul_tn_into(&self, other: &DMat, scratch: &mut DGemmScratch, out: &mut DMat) {
+        assert_eq!(self.rows, other.rows, "matmul_tn inner dim mismatch");
+        let (m, kk) = (self.cols, self.rows);
+        if scratch.lhs_t.len() != m * kk {
+            scratch.lhs_t.clear();
+            scratch.lhs_t.resize(m * kk, 0.0);
+        }
+        for r in 0..kk {
+            for (c, &v) in self.row(r).iter().enumerate() {
+                scratch.lhs_t[c * kk + r] = v;
+            }
+        }
+        out.reshape(m, other.cols);
+        dpack_cols(&other.data, other.rows, other.cols, &mut scratch.panels);
+        dgemm_packed_into(&scratch.lhs_t, m, kk, &scratch.panels, other.cols, &mut out.data);
     }
 
     /// `selfᵀ · self` (Gram matrix), exploiting symmetry.
@@ -1021,6 +1550,117 @@ mod tests {
                 assert_eq!(fbits(&v_s), fbits(&v_v), "nearest dists m={m} n={n} d={d}");
             }
         }
+    }
+
+    fn drandmat(r: usize, c: usize, rng: &mut Rng) -> DMat {
+        DMat::from_vec(r, c, (0..r * c).map(|_| rng.f64() - 0.5).collect())
+    }
+
+    /// The packed f64 gemm matches a naive triple loop at shapes
+    /// straddling the MR/DNR tile boundaries, and the three product
+    /// variants (`A·B`, `A·Bᵀ`, `Aᵀ·B`) are bit-identical to each other
+    /// through explicit transposes — same panels, same kernel, same
+    /// arithmetic.
+    #[test]
+    fn dmat_packed_matmul_matches_naive_at_awkward_shapes() {
+        let mut rng = Rng::new(41);
+        let bits = |m: &DMat| m.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        for &(m, kk, n) in &[
+            (1usize, 1usize, 1usize),
+            (3, 5, 4),
+            (4, 4, 4),
+            (7, 9, 5),
+            (17, 23, 13),
+            (33, 16, 40),
+            (65, 2, 101),
+        ] {
+            let a = drandmat(m, kk, &mut rng);
+            let b = drandmat(kk, n, &mut rng);
+            let c = a.matmul(&b);
+            assert_eq!((c.rows, c.cols), (m, n));
+            for i in 0..m {
+                for j in 0..n {
+                    let want: f64 = (0..kk).map(|t| a.at(i, t) * b.at(t, j)).sum();
+                    assert!(
+                        (c.at(i, j) - want).abs() < 1e-12,
+                        "({i},{j}) m={m} k={kk} n={n}"
+                    );
+                }
+            }
+            let c_nt = a.matmul_nt(&b.transpose());
+            assert_eq!(bits(&c), bits(&c_nt), "nt m={m} k={kk} n={n}");
+            let at = a.transpose();
+            let mut scratch = DGemmScratch::default();
+            let mut c_tn = DMat::default();
+            at.matmul_tn_into(&b, &mut scratch, &mut c_tn);
+            assert_eq!(bits(&c), bits(&c_tn), "tn m={m} k={kk} n={n}");
+            // warm re-run through the same scratch reuses the buffers
+            at.matmul_tn_into(&b, &mut scratch, &mut c_tn);
+            assert_eq!(bits(&c), bits(&c_tn), "tn rerun m={m} k={kk} n={n}");
+        }
+    }
+
+    /// The f64 bit-identity contract: forced-scalar and default dispatch
+    /// agree to the bit across awkward shapes (see
+    /// `simd_dispatch_bit_identical_to_scalar` for the f32 twin and the
+    /// concurrency caveat).
+    #[test]
+    fn dmat_simd_dispatch_bit_identical_to_scalar() {
+        let _restore = SimdGuard;
+        let mut rng = Rng::new(42);
+        let bits = |m: &DMat| m.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        for &kk in &[1usize, 2, 3, 4, 5, 7, 8, 16, 100] {
+            for &(m, n) in &[(1usize, 1usize), (5, 9), (13, 23), (33, 50)] {
+                let a = drandmat(m, kk, &mut rng);
+                let b = drandmat(kk, n, &mut rng);
+                let bt = b.transpose();
+                set_simd_override(1);
+                let c_s = a.matmul(&b);
+                let n_s = a.matmul_nt(&bt);
+                set_simd_override(0);
+                let c_v = a.matmul(&b);
+                let n_v = a.matmul_nt(&bt);
+                assert_eq!(bits(&c_s), bits(&c_v), "matmul m={m} k={kk} n={n}");
+                assert_eq!(bits(&n_s), bits(&n_v), "matmul_nt m={m} k={kk} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn reshape_and_copy_from_reuse_allocations() {
+        let mut m = DMat::zeros(4, 6);
+        let cap = m.data.capacity();
+        m.reshape(6, 4);
+        assert_eq!((m.rows, m.cols, m.data.len()), (6, 4, 24));
+        assert_eq!(m.data.capacity(), cap, "same element count must not realloc");
+        let src = DMat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        m.copy_from(&src);
+        assert_eq!(m, src);
+    }
+
+    #[test]
+    fn orthonormalize_cols_orthonormalizes_and_detects_deficiency() {
+        let mut rng = Rng::new(43);
+        let mut x = drandmat(20, 5, &mut rng);
+        let mut scratch = Vec::new();
+        assert!(orthonormalize_cols(&mut x, &mut scratch));
+        let g = x.gram();
+        for i in 0..5 {
+            for j in 0..5 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((g.at(i, j) - want).abs() < 1e-10, "({i},{j})");
+            }
+        }
+        // a duplicated column is rank-deficient
+        let mut bad = drandmat(20, 3, &mut rng);
+        for r in 0..20 {
+            let v = bad.at(r, 0);
+            bad.set(r, 2, v);
+        }
+        assert!(!orthonormalize_cols(&mut bad, &mut scratch));
+        // empty block is trivially orthonormal
+        let mut empty = DMat::zeros(7, 0);
+        assert!(orthonormalize_cols(&mut empty, &mut scratch));
     }
 
     #[test]

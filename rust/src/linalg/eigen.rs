@@ -6,7 +6,25 @@
 //! diagonal `D`, via the congruence transform `D^{-1/2} L D^{-1/2}`.
 
 use crate::linalg::dense::DMat;
+use crate::util::par;
 use crate::{Error, Result};
+
+/// `fast_eig_crossover` slope: the iterative solvers win once `p`
+/// exceeds roughly this many multiples of `k` …
+pub const FAST_EIG_K_FACTOR: usize = 4;
+/// … plus this constant margin (covers the iterative setup overhead on
+/// small problems).
+pub const FAST_EIG_MARGIN: usize = 64;
+
+/// `true` when a p×p reduced problem asking for `k` eigenpairs is large
+/// enough that an iterative solver (Chebyshev subspace iteration /
+/// LOBPCG) beats the dense O(p³) `tred2`+`tqli` solve. The **single**
+/// dense/iterative crossover: `bipartite::reduced_eig` routes on it and
+/// `lobpcg_smallest` rejects below it, so the two can never disagree.
+/// `USPEC_EIG_TRACE=1` prints which side each decomposition took.
+pub fn fast_eig_crossover(p: usize, k: usize) -> bool {
+    p > FAST_EIG_K_FACTOR * k + FAST_EIG_MARGIN
+}
 
 /// Full eigen-decomposition of a symmetric matrix.
 /// Returns eigenvalues ascending and the matrix whose *columns* are the
@@ -50,20 +68,33 @@ pub fn sym_eig_generalized_smallest(
         .iter()
         .map(|&x| if x > 1e-300 { 1.0 / x.sqrt() } else { 0.0 })
         .collect();
-    // S = D^{-1/2} L D^{-1/2}
+    // S = D^{-1/2} L D^{-1/2}, built row-parallel (disjoint row ranges,
+    // per-element arithmetic independent of the chunking — the n² serial
+    // at/set loop this replaces dominated the setup at p ≥ 1000).
     let mut s = DMat::zeros(n, n);
-    for i in 0..n {
-        for j in 0..n {
-            s.set(i, j, l.at(i, j) * dinv_sqrt[i] * dinv_sqrt[j]);
+    par::par_for_chunks(&mut s.data, n * 16, |start, chunk| {
+        let row0 = start / n;
+        for (bi, orow) in chunk.chunks_mut(n).enumerate() {
+            let i = row0 + bi;
+            let li = l.row(i);
+            let di = dinv_sqrt[i];
+            for ((o, &lv), &dj) in orow.iter_mut().zip(li).zip(&dinv_sqrt) {
+                *o = lv * di * dj;
+            }
         }
-    }
+    });
     let (vals, vecs) = sym_eig(&s)?;
     let k = k.min(n);
+    // Back-scale the eigenvectors v = D^{-1/2} w, row-parallel likewise.
     let mut v = DMat::zeros(n, k);
-    for c in 0..k {
-        for r in 0..n {
-            v.set(r, c, vecs.at(r, c) * dinv_sqrt[r]);
-        }
+    if k > 0 {
+        par::par_for_chunks(&mut v.data, k, |start, chunk| {
+            let r = start / k;
+            let dr = dinv_sqrt[r];
+            for (o, &w) in chunk.iter_mut().zip(&vecs.row(r)[..k]) {
+                *o = w * dr;
+            }
+        });
     }
     Ok((vals[..k].to_vec(), v))
 }

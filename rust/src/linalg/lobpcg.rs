@@ -3,9 +3,16 @@
 //! p×p / k_c×k_c transfer-cut problems when k ≪ p. Falls back to the dense
 //! solver ([`super::eigen::sym_eig`]) on stagnation; the U-SPEC pipeline
 //! asks for `k+1` vectors so the cluster-count eigengap is always covered.
+//!
+//! All block products run on the packed f64 gemm kernels
+//! ([`DMat::matmul_into`] and friends) through a caller-supplied
+//! [`EigScratch`], so an iteration allocates only its q×q projected
+//! eigenproblem. The small-problem guard routes through the same
+//! [`fast_eig_crossover`] constants as `bipartite::reduced_eig` — one
+//! crossover, not two.
 
-use crate::linalg::dense::DMat;
-use crate::linalg::eigen::sym_eig;
+use crate::linalg::dense::{orthonormalize_cols, DGemmScratch, DMat, EigScratch};
+use crate::linalg::eigen::{fast_eig_crossover, sym_eig};
 use crate::{Error, Result};
 
 /// Matrix-free operator interface: y = A·x for a block of vectors.
@@ -13,6 +20,12 @@ pub trait SymOp {
     fn dim(&self) -> usize;
     /// Apply to a block X (n×b), returning A·X (n×b).
     fn apply(&self, x: &DMat) -> DMat;
+    /// Apply into a caller buffer, packing through `scratch`. The default
+    /// falls back to the allocating [`SymOp::apply`]; dense operators
+    /// override it with the allocation-free gemm.
+    fn apply_into(&self, x: &DMat, _scratch: &mut DGemmScratch, out: &mut DMat) {
+        *out = self.apply(x);
+    }
 }
 
 impl SymOp for DMat {
@@ -22,65 +35,54 @@ impl SymOp for DMat {
     fn apply(&self, x: &DMat) -> DMat {
         self.matmul(x)
     }
-}
-
-/// B-orthonormalize columns of `x` in place via Cholesky-free repeated
-/// Gram–Schmidt; returns false if the block is rank deficient.
-fn orthonormalize(x: &mut DMat) -> bool {
-    let (n, b) = (x.rows, x.cols);
-    for c in 0..b {
-        for _pass in 0..2 {
-            for prev in 0..c {
-                let mut dot = 0.0;
-                for r in 0..n {
-                    dot += x.at(r, prev) * x.at(r, c);
-                }
-                for r in 0..n {
-                    let v = x.at(r, c) - dot * x.at(r, prev);
-                    x.set(r, c, v);
-                }
-            }
-        }
-        let norm: f64 = (0..n).map(|r| x.at(r, c) * x.at(r, c)).sum::<f64>().sqrt();
-        if norm < 1e-12 {
-            return false;
-        }
-        for r in 0..n {
-            x.set(r, c, x.at(r, c) / norm);
-        }
+    fn apply_into(&self, x: &DMat, scratch: &mut DGemmScratch, out: &mut DMat) {
+        self.matmul_into(x, scratch, out);
     }
-    true
 }
 
-fn hstack(blocks: &[&DMat]) -> DMat {
+/// Concatenate blocks side by side into `out` (reshaped as needed): one
+/// `memcpy` per (row, block) instead of the element-wise `at`/`set` loop
+/// this replaces.
+fn hstack_into(blocks: &[&DMat], out: &mut DMat) {
     let n = blocks[0].rows;
     let total: usize = blocks.iter().map(|b| b.cols).sum();
-    let mut out = DMat::zeros(n, total);
-    let mut off = 0;
-    for b in blocks {
-        for r in 0..n {
-            for c in 0..b.cols {
-                out.set(r, off + c, b.at(r, c));
-            }
+    out.reshape(n, total);
+    for r in 0..n {
+        let orow = out.row_mut(r);
+        let mut off = 0;
+        for b in blocks {
+            orow[off..off + b.cols].copy_from_slice(b.row(r));
+            off += b.cols;
         }
-        off += b.cols;
     }
-    out
 }
 
-fn cols(m: &DMat, lo: usize, hi: usize) -> DMat {
-    let mut out = DMat::zeros(m.rows, hi - lo);
+/// Copy columns `lo..hi` of `m` into `out` (reshaped as needed), one
+/// `memcpy` per row.
+fn cols_into(m: &DMat, lo: usize, hi: usize, out: &mut DMat) {
+    out.reshape(m.rows, hi - lo);
     for r in 0..m.rows {
-        for c in lo..hi {
-            out.set(r, c - lo, m.at(r, c));
+        out.row_mut(r).copy_from_slice(&m.row(r)[lo..hi]);
+    }
+}
+
+/// Symmetrize a square matrix in place: `h ← (h + hᵀ)/2`.
+fn symmetrize(h: &mut DMat) {
+    let q = h.rows;
+    debug_assert_eq!(h.cols, q);
+    for i in 0..q {
+        for j in 0..i {
+            let v = 0.5 * (h.at(i, j) + h.at(j, i));
+            h.set(i, j, v);
+            h.set(j, i, v);
         }
     }
-    out
 }
 
 /// Smallest `k` eigenpairs of the symmetric operator `op`.
 /// `diag_precond`: optional diagonal preconditioner (e.g. 1/diag(A)).
-/// Returns (λ ascending, V n×k with orthonormal columns).
+/// Returns (λ ascending, V n×k with orthonormal columns). Allocating
+/// convenience wrapper over [`lobpcg_smallest_in`].
 pub fn lobpcg_smallest(
     op: &dyn SymOp,
     k: usize,
@@ -89,47 +91,66 @@ pub fn lobpcg_smallest(
     max_iter: usize,
     seed: u64,
 ) -> Result<(Vec<f64>, DMat)> {
+    let mut scr = EigScratch::default();
+    lobpcg_smallest_in(op, k, diag_precond, tol, max_iter, seed, &mut scr)
+}
+
+/// [`lobpcg_smallest`] running every block product and assembly through
+/// `scr` — per iteration only the q×q projected eigenproblem allocates.
+pub fn lobpcg_smallest_in(
+    op: &dyn SymOp,
+    k: usize,
+    diag_precond: Option<&[f64]>,
+    tol: f64,
+    max_iter: usize,
+    seed: u64,
+    scr: &mut EigScratch,
+) -> Result<(Vec<f64>, DMat)> {
     let n = op.dim();
     let k = k.min(n);
     if k == 0 {
         return Ok((Vec::new(), DMat::zeros(n, 0)));
     }
-    // Small problems: dense solve is both faster and exact.
-    if n <= 4 * k + 32 {
+    // Below the dense/iterative crossover the dense solve is both faster
+    // and exact — same constants as `bipartite::reduced_eig`'s routing.
+    if !fast_eig_crossover(n, k) {
         return Err(Error::Numerical("lobpcg: problem too small, use dense".into()));
     }
     let mut rng = crate::util::rng::Rng::new(seed);
-    let mut x = DMat::zeros(n, k);
-    for v in x.data.iter_mut() {
+    scr.basis.reshape(n, k);
+    for v in scr.basis.data.iter_mut() {
         *v = rng.normal();
     }
-    if !orthonormalize(&mut x) {
+    if !orthonormalize_cols(&mut scr.basis, &mut scr.ortho) {
         return Err(Error::Numerical("lobpcg: degenerate start".into()));
     }
-    let mut p_block: Option<DMat> = None;
+    let mut have_p = false;
     let mut lambda = vec![0.0f64; k];
     let mut prev_res = f64::INFINITY;
     let mut stagnant = 0;
 
     for _it in 0..max_iter {
-        let ax = op.apply(&x);
-        // Rayleigh quotients per column.
-        for c in 0..k {
-            let mut num = 0.0;
-            for r in 0..n {
-                num += x.at(r, c) * ax.at(r, c);
+        op.apply_into(&scr.basis, &mut scr.gemm, &mut scr.prod);
+        // Rayleigh quotients per column (row-major sweep; per-column
+        // accumulation order over rows is unchanged).
+        lambda.fill(0.0);
+        for r in 0..n {
+            let xr = scr.basis.row(r);
+            let ar = scr.prod.row(r);
+            for ((l, &xv), &av) in lambda.iter_mut().zip(xr).zip(ar) {
+                *l += xv * av;
             }
-            lambda[c] = num;
         }
         // Residuals R = AX - X Λ
-        let mut r_block = ax.clone();
-        for c in 0..k {
-            for r in 0..n {
-                let v = r_block.at(r, c) - lambda[c] * x.at(r, c);
-                r_block.set(r, c, v);
+        scr.resid.copy_from(&scr.prod);
+        for r in 0..n {
+            let xr = scr.basis.row(r);
+            let rr = scr.resid.row_mut(r);
+            for ((o, &xv), &l) in rr.iter_mut().zip(xr).zip(&lambda) {
+                *o -= l * xv;
             }
         }
-        let res_norm: f64 = r_block.data.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let res_norm: f64 = scr.resid.data.iter().map(|v| v * v).sum::<f64>().sqrt();
         if res_norm < tol {
             break;
         }
@@ -144,72 +165,60 @@ pub fn lobpcg_smallest(
         prev_res = res_norm;
         // Precondition residuals.
         if let Some(pre) = diag_precond {
-            for c in 0..k {
-                for r in 0..n {
-                    r_block.set(r, c, r_block.at(r, c) * pre[r]);
+            for (r, &p) in pre.iter().enumerate().take(n) {
+                for v in scr.resid.row_mut(r) {
+                    *v *= p;
                 }
             }
         }
-        if !orthonormalize(&mut r_block) {
+        if !orthonormalize_cols(&mut scr.resid, &mut scr.ortho) {
             break;
         }
-        // Subspace S = [X, R, P]
-        let s = match &p_block {
-            Some(p) => hstack(&[&x, &r_block, p]),
-            None => hstack(&[&x, &r_block]),
-        };
-        let mut s_orth = s.clone();
-        if !orthonormalize(&mut s_orth) {
+        // Subspace S = [X, R, P], orthonormalized in place.
+        if have_p {
+            hstack_into(&[&scr.basis, &scr.resid, &scr.dir], &mut scr.wide);
+        } else {
+            hstack_into(&[&scr.basis, &scr.resid], &mut scr.wide);
+        }
+        if !orthonormalize_cols(&mut scr.wide, &mut scr.ortho) {
             break;
         }
         // Rayleigh–Ritz on the subspace: solve (Sᵀ A S) c = θ c.
-        let as_ = op.apply(&s_orth);
-        let h = s_orth.transpose().matmul(&as_);
-        // symmetrize
-        let mut hs = h.clone();
-        for i in 0..hs.rows {
-            for j in 0..hs.cols {
-                let v = 0.5 * (h.at(i, j) + h.at(j, i));
-                hs.set(i, j, v);
-            }
-        }
-        let (_vals, vecs) = sym_eig(&hs)?;
-        let c_best = cols(&vecs, 0, k);
-        let x_new = s_orth.matmul(&c_best);
+        op.apply_into(&scr.wide, &mut scr.gemm, &mut scr.wide2);
+        scr.wide.matmul_tn_into(&scr.wide2, &mut scr.gemm, &mut scr.small);
+        symmetrize(&mut scr.small);
+        let (_vals, vecs) = sym_eig(&scr.small)?;
+        cols_into(&vecs, 0, k, &mut scr.rot);
+        scr.wide.matmul_into(&scr.rot, &mut scr.gemm, &mut scr.ritz);
         // New conjugate direction: the component of X_new outside old X.
-        let mut p_new = x_new.clone();
-        for c in 0..k {
-            for r in 0..n {
-                p_new.set(r, c, p_new.at(r, c) - x.at(r, c));
+        scr.dir.copy_from(&scr.ritz);
+        for r in 0..n {
+            let xr = scr.basis.row(r);
+            let dr = scr.dir.row_mut(r);
+            for (o, &xv) in dr.iter_mut().zip(xr) {
+                *o -= xv;
             }
         }
-        x = x_new;
-        if !orthonormalize(&mut x) {
+        std::mem::swap(&mut scr.basis, &mut scr.ritz);
+        if !orthonormalize_cols(&mut scr.basis, &mut scr.ortho) {
             break;
         }
-        if orthonormalize(&mut p_new) {
-            p_block = Some(p_new);
-        } else {
-            p_block = None;
-        }
+        have_p = orthonormalize_cols(&mut scr.dir, &mut scr.ortho);
     }
     // Final Rayleigh–Ritz to return consistent (λ, V) sorted ascending.
-    let ax = op.apply(&x);
-    let h = x.transpose().matmul(&ax);
-    let mut hs = h.clone();
-    for i in 0..k {
-        for j in 0..k {
-            hs.set(i, j, 0.5 * (h.at(i, j) + h.at(j, i)));
-        }
-    }
-    let (vals, vecs) = sym_eig(&hs)?;
-    let v = x.matmul(&cols(&vecs, 0, k));
-    Ok((vals[..k].to_vec(), v))
+    op.apply_into(&scr.basis, &mut scr.gemm, &mut scr.prod);
+    scr.basis.matmul_tn_into(&scr.prod, &mut scr.gemm, &mut scr.small);
+    symmetrize(&mut scr.small);
+    let (vals, vecs) = sym_eig(&scr.small)?;
+    cols_into(&vecs, 0, k, &mut scr.rot);
+    scr.basis.matmul_into(&scr.rot, &mut scr.gemm, &mut scr.ritz);
+    Ok((vals[..k].to_vec(), scr.ritz.clone()))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::eigen::{FAST_EIG_K_FACTOR, FAST_EIG_MARGIN};
     use crate::util::rng::Rng;
 
     /// Random PSD with known spectrum via Q Λ Qᵀ.
@@ -218,7 +227,8 @@ mod tests {
         for v in q.data.iter_mut() {
             *v = rng.normal();
         }
-        assert!(orthonormalize(&mut q));
+        let mut scratch = Vec::new();
+        assert!(orthonormalize_cols(&mut q, &mut scratch));
         let mut lam = DMat::zeros(n, n);
         for (i, &s) in spec.iter().enumerate() {
             lam.set(i, i, s);
@@ -229,7 +239,8 @@ mod tests {
     #[test]
     fn finds_smallest_eigenpairs() {
         let mut rng = Rng::new(21);
-        let n = 80;
+        // comfortably above the crossover (4·4 + 64 = 80 would reject)
+        let n = 128;
         let spec: Vec<f64> = (0..n).map(|i| i as f64 * 0.5 + 0.1).collect();
         let a = psd_with_spectrum(n, &spec, &mut rng);
         let (vals, v) = lobpcg_smallest(&a, 4, None, 1e-10, 300, 7).unwrap();
@@ -269,5 +280,15 @@ mod tests {
     fn rejects_tiny_problem() {
         let a = DMat::eye(5);
         assert!(lobpcg_smallest(&a, 2, None, 1e-8, 10, 1).is_err());
+    }
+
+    /// The small-problem guard is the shared crossover, not a private
+    /// constant: rejection flips exactly at `fast_eig_crossover`.
+    #[test]
+    fn guard_is_the_shared_crossover() {
+        let k = 2;
+        let boundary = FAST_EIG_K_FACTOR * k + FAST_EIG_MARGIN;
+        assert!(lobpcg_smallest(&DMat::eye(boundary), k, None, 1e-8, 10, 1).is_err());
+        assert!(lobpcg_smallest(&DMat::eye(boundary + 1), k, None, 1e-8, 50, 1).is_ok());
     }
 }

@@ -11,7 +11,7 @@ pub mod eigen;
 pub mod lobpcg;
 
 pub use dense::{
-    nearest_packed, nearest_packed_into, pack_rhs_slice, set_simd_override, sq_dists_into, DMat,
-    DistScratch, Mat, PackedMat,
+    nearest_packed, nearest_packed_into, orthonormalize_cols, pack_rhs_slice, set_simd_override,
+    sq_dists_into, DGemmScratch, DMat, DistScratch, EigScratch, Mat, PackedMat, ORTHO_RANK_TOL,
 };
 pub use sparse::Csr;

@@ -81,6 +81,55 @@ fn uspec_simd_dispatch_is_operational() {
     }
 }
 
+/// The reduced p×p eigensolve itself is deterministic: lambdas and
+/// eigenvectors are bit-identical across thread counts and SIMD dispatch,
+/// for both iterative solvers, at a shape above the dense/iterative
+/// crossover. This pins the packed f64 gemm + scratch paths directly, not
+/// just through end-to-end labels.
+#[test]
+fn reduced_eig_bit_identical_across_threads_and_simd() {
+    use uspec::bipartite::{reduced_eig, EigSolver};
+    use uspec::linalg::DMat;
+    use uspec::util::rng::Rng;
+
+    let _g = lock();
+    let _restore = OverrideGuard;
+    let _simd = SimdGuard;
+    // Gaussian affinity over 2-D normal points: dense, symmetric, positive
+    // degrees; p=200 > 4k+64 so both Auto and Lobpcg take their fast path.
+    let (p, k) = (200usize, 3usize);
+    let mut rng = Rng::new(0xE16);
+    let pts: Vec<(f64, f64)> = (0..p).map(|_| (rng.normal(), rng.normal())).collect();
+    let mut e_r = DMat::zeros(p, p);
+    for i in 0..p {
+        for j in 0..p {
+            let dx = pts[i].0 - pts[j].0;
+            let dy = pts[i].1 - pts[j].1;
+            e_r.set(i, j, (-(dx * dx + dy * dy) / 2.0).exp());
+        }
+    }
+    for solver in [EigSolver::Auto, EigSolver::Lobpcg] {
+        let mut baseline: Option<(Vec<u64>, Vec<u64>)> = None;
+        for nt in [1usize, 2, 8] {
+            par::set_thread_override(nt);
+            for force_scalar in [false, true] {
+                set_simd_override(usize::from(force_scalar));
+                let (lambdas, v) = reduced_eig(&e_r, k, solver, 41).unwrap();
+                let lam_bits: Vec<u64> = lambdas.iter().map(|l| l.to_bits()).collect();
+                let v_bits: Vec<u64> = v.data.iter().map(|x| x.to_bits()).collect();
+                let tag = format!("{solver:?} nt={nt} force_scalar={force_scalar}");
+                match &baseline {
+                    Some((lb, vb)) => {
+                        assert_eq!(&lam_bits, lb, "lambdas changed at {tag}");
+                        assert_eq!(&v_bits, vb, "eigvecs changed at {tag}");
+                    }
+                    None => baseline = Some((lam_bits, v_bits)),
+                }
+            }
+        }
+    }
+}
+
 #[test]
 fn uspec_mat_and_bin_sources_bit_identical_across_threads() {
     let _g = lock();
