@@ -31,7 +31,13 @@ COMMANDS:
                                 dataset (USPECB01 file, or a benchmark
                                 spilled to a temp file); --method u-spec
                                 (default) or u-senc; --shards S walks S
-                                row ranges in parallel per pass
+                                row ranges in parallel per pass;
+                                --source remote://host:port streams from
+                                a serve-shard endpoint instead
+  serve-shard --data F.bin --addr H:P
+                                serve a USPECB01 file's row ranges to
+                                remote stream walkers over TCP (port 0
+                                picks an ephemeral port)
   info                          print config + artifact status
 
 COMMON FLAGS (any config key):
@@ -48,8 +54,11 @@ COMMON FLAGS (any config key):
   --shards     row-range shards per streaming pass, 1..=n (I/O overlap
                only — labels never depend on it)  [1]
   --storage    walk-planner hint: auto | serial (hdd) | parallel
-               (ssd/nvme); auto probes the source. Operational only,
-               like --shards  [auto]
+               (ssd/nvme) | remote (net); auto probes the source unless
+               it knows its backend. Operational only, like --shards
+               [auto]
+  --source     remote://host:port of a serve-shard endpoint for stream
+               (labels are bit-identical to the local run)  [null]
   --runs       repetitions for mean±std
   --seed       master seed
   --config     JSON config file (flags override it)
@@ -91,7 +100,7 @@ pub fn parse(args: &[String]) -> Result<Invocation> {
             .ok_or_else(|| Error::Config(format!("--{key} needs a value")))?;
         match key {
             "config" => {}
-            "id" | "out" | "k_max" => {
+            "id" | "out" | "k_max" | "data" | "addr" => {
                 extra.insert(key.to_string(), value.clone());
             }
             _ => cfg.set(key, value)?,
@@ -238,9 +247,21 @@ pub fn execute(inv: Invocation) -> Result<String> {
             }
 
             let h = Harness::new(inv.cfg.clone())?;
+            // A remote source streams straight off a serve-shard endpoint:
+            // no local file, no spill, no ground truth. Malformed specs
+            // were rejected at config time; an unreachable endpoint fails
+            // here, typed, within the connect timeout × retries.
+            if let Some(spec) = &inv.cfg.source {
+                let hostport = spec.strip_prefix("remote://").ok_or_else(|| {
+                    Error::Config(format!("--source '{spec}': want remote://host:port"))
+                })?;
+                let remote = crate::net::RemoteSource::connect(hostport)?;
+                return stream_run(&inv.cfg, &remote, spec, None, h.backend());
+            }
             let path = Path::new(&inv.cfg.dataset);
             let mut spill = SpillGuard(None);
-            let (bin, truth) = if path.exists() && path.extension().map(|e| e == "bin").unwrap_or(false) {
+            let is_bin = path.exists() && path.extension().map(|e| e == "bin").unwrap_or(false);
+            let (bin, truth) = if is_bin {
                 (crate::streaming::BinDataset::open(path)?, None)
             } else {
                 let ds = resolve_dataset(&inv.cfg)?;
@@ -257,77 +278,93 @@ pub fn execute(inv: Invocation) -> Result<String> {
                 let bin = crate::streaming::BinDataset::write_mat(&tmp, &ds.x)?;
                 (bin, Some(ds))
             };
-            let k = inv.cfg.k.or(truth.as_ref().map(|d| d.k)).unwrap_or(2);
-            let p = inv.cfg.p.min(bin.n() / 2).max(k.min(bin.n()));
-            let base = crate::uspec::UspecParams {
-                k,
-                p,
-                k_nn: inv.cfg.k_nn.min(p),
-                ..Default::default()
-            };
-            let shards = inv.cfg.shards;
-            if shards == 0 || shards > bin.n() {
-                return Err(Error::Config(format!(
-                    "--shards must be in 1..={} for this dataset (got {shards})",
-                    bin.n()
-                )));
-            }
-            let opts = crate::pipeline::ExecOpts {
-                chunk: crate::pipeline::DEFAULT_CHUNK,
-                shards,
-                storage: inv.cfg.storage,
-            };
-            let t0 = std::time::Instant::now();
-            let (method, labels, timer_summary, peak) =
-                if inv.cfg.method.eq_ignore_ascii_case("u-senc") {
-                    let params = crate::usenc::UsencParams {
-                        k,
-                        m: inv.cfg.m,
-                        k_min: inv.cfg.k_min,
-                        k_max: inv.cfg.k_max,
-                        base,
-                    };
-                    let res = crate::streaming::stream_usenc(
-                        &bin,
-                        &params,
-                        opts,
-                        inv.cfg.seed,
-                        h.backend(),
-                    )?;
-                    ("U-SENC", res.labels, res.timer.summary(), None)
-                } else {
-                    let sp = crate::streaming::StreamParams {
-                        chunk: opts.chunk,
-                        shards,
-                        storage: opts.storage,
-                        base,
-                    };
-                    let res =
-                        crate::streaming::stream_uspec(&bin, &sp, inv.cfg.seed, h.backend())?;
-                    ("U-SPEC", res.labels, res.timer.summary(), Some(res.peak_bytes))
-                };
-            let secs = t0.elapsed().as_secs_f64();
-            let peak = peak
-                .map(|b| format!(", resident model {:.1} MB", b as f64 / 1e6))
-                .unwrap_or_default();
-            let mut out = format!(
-                "streamed {method} over {} (n={} d={}, k={k}, shards={shards}): \
-                 {secs:.2}s{peak}\n[{timer_summary}]\n",
-                inv.cfg.dataset,
-                bin.n(),
-                bin.d(),
-            );
-            if let Some(ds) = truth {
-                out.push_str(&format!(
-                    "NMI={:.4} CA={:.4}\n",
-                    nmi(&labels, &ds.y),
-                    ca(&labels, &ds.y)
-                ));
-            }
-            Ok(out)
+            stream_run(&inv.cfg, &bin, &inv.cfg.dataset, truth.as_ref(), h.backend())
+        }
+        "serve-shard" => {
+            // Foreground server: load the file, bind, serve until killed.
+            let data = inv
+                .extra
+                .get("data")
+                .ok_or_else(|| Error::Config("serve-shard needs --data FILE.bin".into()))?;
+            let addr = inv
+                .extra
+                .get("addr")
+                .ok_or_else(|| Error::Config("serve-shard needs --addr host:port".into()))?;
+            let bin = crate::streaming::BinDataset::open(Path::new(data))?;
+            let (n, d) = (bin.n(), bin.d());
+            let server = crate::net::ShardServer::bind(addr, std::sync::Arc::new(bin))?;
+            println!("serving {data} (n={n}, d={d}) on {} — ctrl-c to stop", server.addr());
+            server.join()?;
+            Ok(String::new())
         }
         other => Err(Error::Config(format!("unknown command '{other}'\n\n{USAGE}"))),
     }
+}
+
+/// The shared tail of `stream`: run U-SPEC or U-SENC over any source
+/// (local file or remote endpoint) and format the report. `truth` is the
+/// labeled dataset when the source was spilled from a benchmark.
+fn stream_run(
+    cfg: &RunConfig,
+    src: &dyn crate::pipeline::DataSource,
+    display: &str,
+    truth: Option<&Dataset>,
+    backend: &dyn crate::affinity::DistanceBackend,
+) -> Result<String> {
+    let k = cfg.k.or(truth.map(|d| d.k)).unwrap_or(2);
+    let p = cfg.p.min(src.n() / 2).max(k.min(src.n()));
+    let base = crate::uspec::UspecParams { k, p, k_nn: cfg.k_nn.min(p), ..Default::default() };
+    let shards = cfg.shards;
+    if shards == 0 || shards > src.n() {
+        return Err(Error::Config(format!(
+            "--shards must be in 1..={} for this dataset (got {shards})",
+            src.n()
+        )));
+    }
+    let opts = crate::pipeline::ExecOpts {
+        chunk: crate::pipeline::DEFAULT_CHUNK,
+        shards,
+        storage: cfg.storage,
+    };
+    let t0 = std::time::Instant::now();
+    let (method, labels, timer_summary, peak) = if cfg.method.eq_ignore_ascii_case("u-senc") {
+        let params = crate::usenc::UsencParams {
+            k,
+            m: cfg.m,
+            k_min: cfg.k_min,
+            k_max: cfg.k_max,
+            base,
+        };
+        let res = crate::streaming::stream_usenc(src, &params, opts, cfg.seed, backend)?;
+        ("U-SENC", res.labels, res.timer.summary(), None)
+    } else {
+        let sp = crate::streaming::StreamParams {
+            chunk: opts.chunk,
+            shards,
+            storage: opts.storage,
+            base,
+        };
+        let res = crate::streaming::stream_uspec(src, &sp, cfg.seed, backend)?;
+        ("U-SPEC", res.labels, res.timer.summary(), Some(res.peak_bytes))
+    };
+    let secs = t0.elapsed().as_secs_f64();
+    let peak = peak
+        .map(|b| format!(", resident model {:.1} MB", b as f64 / 1e6))
+        .unwrap_or_default();
+    let mut out = format!(
+        "streamed {method} over {display} (n={} d={}, k={k}, shards={shards}): \
+         {secs:.2}s{peak}\n[{timer_summary}]\n",
+        src.n(),
+        src.d(),
+    );
+    if let Some(ds) = truth {
+        out.push_str(&format!(
+            "NMI={:.4} CA={:.4}\n",
+            nmi(&labels, &ds.y),
+            ca(&labels, &ds.y)
+        ));
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -443,6 +480,51 @@ mod tests {
         // unlabeled file: no NMI line
         assert!(!out.contains("NMI="), "{out}");
         std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn serve_shard_requires_data_and_addr() {
+        let err = execute(parse(&argv("serve-shard --addr 127.0.0.1:0")).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("--data"), "{err}");
+        let err = execute(parse(&argv("serve-shard --data x.bin")).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("--addr"), "{err}");
+    }
+
+    #[test]
+    fn stream_source_remote_end_to_end() {
+        // serve a spilled benchmark in-process, then stream over the wire
+        let ds = crate::data::synthetic::two_moons(500, 0.05, 3);
+        let tmp = std::env::temp_dir().join(format!("uspec_cli_net_{}.bin", std::process::id()));
+        crate::streaming::BinDataset::write_mat(&tmp, &ds.x).unwrap();
+        let bin = crate::streaming::BinDataset::open(&tmp).unwrap();
+        let server =
+            crate::net::ShardServer::bind("127.0.0.1:0", std::sync::Arc::new(bin)).unwrap();
+        let inv = parse(&argv(&format!(
+            "stream --source remote://{} --k 2 --p 80",
+            server.addr()
+        )))
+        .unwrap();
+        let out = execute(inv).unwrap();
+        assert!(out.contains("streamed U-SPEC"), "{out}");
+        // remote sources carry no ground truth
+        assert!(!out.contains("NMI="), "{out}");
+        drop(server);
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn stream_source_unreachable_is_a_typed_error() {
+        // grab an ephemeral port and release it so nothing listens there
+        let addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let inv = parse(&argv(&format!("stream --source remote://{addr} --k 2"))).unwrap();
+        let err = execute(inv).unwrap_err();
+        assert!(
+            matches!(err, Error::Net(_) | Error::Io(_)),
+            "want a transport error, got {err}"
+        );
     }
 
     #[test]

@@ -64,6 +64,9 @@ pub struct RunConfig {
     /// Storage profile hint for the sharded walk planner (`auto` probes;
     /// operational only, like `shards`).
     pub storage: StorageProfile,
+    /// Remote data source for `stream`: `remote://host:port` of a
+    /// `serve-shard` endpoint; None (default) streams the local dataset.
+    pub source: Option<String>,
     /// Repetitions for mean±std reporting.
     pub runs: usize,
     /// Master seed.
@@ -88,6 +91,7 @@ impl Default for RunConfig {
             workers: crate::util::par::num_threads(),
             shards: 1,
             storage: StorageProfile::Auto,
+            source: None,
             runs: 3,
             seed: 42,
             budget_bytes: 64 * (1 << 30),
@@ -111,6 +115,10 @@ impl RunConfig {
             ("workers", Json::Num(self.workers as f64)),
             ("shards", Json::Num(self.shards as f64)),
             ("storage", Json::Str(self.storage.name().into())),
+            (
+                "source",
+                self.source.as_ref().map(|s| Json::Str(s.clone())).unwrap_or(Json::Null),
+            ),
             ("runs", Json::Num(self.runs as f64)),
             ("seed", Json::Num(self.seed as f64)),
             ("budget_bytes", Json::Num(self.budget_bytes as f64)),
@@ -159,6 +167,20 @@ impl RunConfig {
                 self.shards = s;
             }
             "storage" => self.storage = StorageProfile::parse(value)?,
+            "source" => {
+                if value == "null" {
+                    self.source = None;
+                } else {
+                    let hostport = value.strip_prefix("remote://").ok_or_else(|| {
+                        Error::Config(format!(
+                            "source: '{value}' (want remote://host:port or null)"
+                        ))
+                    })?;
+                    crate::net::validate_host_port(hostport)
+                        .map_err(|e| Error::Config(format!("source: {e}")))?;
+                    self.source = Some(value.to_string());
+                }
+            }
             "runs" => self.runs = parse_usize(value)?.max(1),
             "seed" => {
                 self.seed = value.parse().map_err(|e| Error::Config(format!("seed: {e}")))?
@@ -222,6 +244,28 @@ mod tests {
         let j = cfg.to_json().to_string();
         let back = RunConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
         assert_eq!(back.shards, 4);
+    }
+
+    #[test]
+    fn source_key_roundtrips_and_rejects_junk() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.source, None);
+        cfg.set("source", "remote://127.0.0.1:7000").unwrap();
+        assert_eq!(cfg.source.as_deref(), Some("remote://127.0.0.1:7000"));
+        // roundtrip through JSON keeps the endpoint
+        let j = cfg.to_json().to_string();
+        let back = RunConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.source.as_deref(), Some("remote://127.0.0.1:7000"));
+        // null clears it, and the None default roundtrips too
+        cfg.set("source", "null").unwrap();
+        assert_eq!(cfg.source, None);
+        let j = cfg.to_json().to_string();
+        let back = RunConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.source, None);
+        // malformed spellings are config errors, not deferred failures
+        for bad in ["ftp://h:1", "remote://", "remote://host", "remote://:1", "remote://h:x"] {
+            assert!(cfg.set("source", bad).is_err(), "{bad} must be rejected");
+        }
     }
 
     #[test]

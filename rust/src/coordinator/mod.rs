@@ -9,9 +9,10 @@
 //! the shared [`crate::runtime::KernelPool`], whose dynamic batcher
 //! coalesces concurrent distance requests.
 //!
-//! The source is any [`DataSource`]: a resident `Mat` or an on-disk
-//! `BinDataset` — workers stream their own KNR passes, so out-of-core
-//! ensembles never materialize the full N×d matrix.
+//! The source is any [`DataSource`]: a resident `Mat`, an on-disk
+//! `BinDataset`, or a [`crate::net::RemoteSource`] served by another
+//! machine — workers stream their own KNR passes, so out-of-core (or
+//! over-the-wire) ensembles never materialize the full N×d matrix.
 
 use crate::affinity::DistanceBackend;
 use crate::pipeline::{DataSource, ExecOpts, Pipeline};
@@ -228,6 +229,22 @@ mod tests {
         let plain = crate::usenc::usenc(&ds.x, &p, 11, &NativeBackend).unwrap();
         let coord = usenc_coordinated(&ds.x, &p, 11, &NativeBackend, 2, None).unwrap();
         assert_eq!(plain.labels, coord.labels);
+    }
+
+    #[test]
+    fn coordinated_usenc_over_remote_source_matches_local() {
+        let ds = two_moons(240, 0.05, 6);
+        let p = params();
+        let server = crate::net::ShardServer::bind(
+            "127.0.0.1:0",
+            std::sync::Arc::new(ds.x.clone()),
+        )
+        .unwrap();
+        let remote = crate::net::RemoteSource::connect(&server.addr().to_string()).unwrap();
+        let local = usenc_coordinated(&ds.x, &p, 13, &NativeBackend, 2, None).unwrap();
+        let wire = usenc_coordinated(&remote, &p, 13, &NativeBackend, 2, None).unwrap();
+        assert_eq!(local.labels, wire.labels);
+        assert_eq!(local.ensemble.labelings, wire.ensemble.labelings);
     }
 
     #[test]

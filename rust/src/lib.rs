@@ -46,6 +46,12 @@
 //!   (`E_R` build | reduced solve | N×k lift) to stderr.
 //! * `USPEC_EIG_DEBUG=1` — print eigensolver convergence summaries and
 //!   fallback decisions (quieter than `USPEC_EIG_TRACE`).
+//! * `USPEC_NET_TIMEOUT_MS=n` — connect/read/write deadline in
+//!   milliseconds for remote shard sources ([`net`]); default 5000.
+//!   Operational only: it bounds waiting, never changes any result.
+//! * `USPEC_NET_RETRIES=n` — how many times a transient remote-read
+//!   failure (disconnect, timeout, corrupt frame) is retried on a fresh
+//!   connection before the walk aborts with a typed error; default 3.
 //!
 //! ## Quickstart
 //!
@@ -73,6 +79,7 @@ pub mod baselines;
 pub mod graphpart;
 pub mod ensemble_baselines;
 pub mod streaming;
+pub mod net;
 pub mod runtime;
 pub mod coordinator;
 pub mod bench;
@@ -90,6 +97,9 @@ pub enum Error {
     Io(std::io::Error),
     Xla(String),
     Config(String),
+    /// A network-transport failure (connect/read timeout, disconnect,
+    /// malformed frame, exhausted retries) on a remote shard source.
+    Net(String),
 }
 
 impl std::fmt::Display for Error {
@@ -105,6 +115,7 @@ impl std::fmt::Display for Error {
             Error::Io(e) => write!(f, "io: {e}"),
             Error::Xla(m) => write!(f, "xla: {m}"),
             Error::Config(m) => write!(f, "config: {m}"),
+            Error::Net(m) => write!(f, "net: {m}"),
         }
     }
 }

@@ -6,6 +6,8 @@
 //!   repro cluster --dataset CC-5M --method U-SENC --m 20 --workers 4
 //!   repro table --id t4 --scale 0.001
 //!   repro gen-data --dataset Flower-20M --scale 0.01 --out flower.csv
+//!   repro serve-shard --data flower.bin --addr 0.0.0.0:7401
+//!   repro stream --source remote://10.0.0.2:7401 --k 4 --shards 4
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();

@@ -1,0 +1,265 @@
+//! The consuming side of remote shard execution: [`RemoteSource`] is a
+//! [`DataSource`] whose `read_rows` crosses the network as `USPEC/1`
+//! frames ([`crate::net::proto`]).
+//!
+//! Robustness model — a remote read must never hang and never return a
+//! silently partial chunk:
+//!
+//! * **Timeouts everywhere.** Connects use [`NetOpts::connect_timeout`];
+//!   every established socket carries [`NetOpts::io_timeout`] read/write
+//!   deadlines. A dead or wedged server surfaces as an error within one
+//!   timeout, not as a stuck walker.
+//! * **Bounded retry with backoff.** Transport failures (connect/read
+//!   timeouts, disconnects, corrupt frames — [`crate::Error::Io`] and
+//!   [`crate::Error::Net`]) are retried up to [`NetOpts::retries`] times
+//!   with exponential backoff on a *fresh* connection. Application
+//!   errors the server reports (`OP_ERR`: out-of-range rows, bad
+//!   request) come back as [`crate::Error::InvalidArg`] and are **not**
+//!   retried — resending a bad request cannot fix it.
+//! * **Typed surfacing.** Exhausted retries return [`crate::Error::Net`];
+//!   through [`crate::pipeline::for_each_chunk_sharded`] that aborts the
+//!   whole walk via the existing first-error-wins path, exactly like a
+//!   failed disk read.
+//!
+//! Reads either fill the buffer with the exact bytes a local read would
+//! produce (frames are checksummed and size-validated, f32 payloads
+//! round-trip bit-exactly) or fail — so every bit-identity invariant the
+//! engine pins holds over the wire. A small connection pool amortizes
+//! dials across the chunk stream; [`DataSource::storage_hint`] reports
+//! [`StorageProfile::Remote`] so the adaptive walk planner schedules few
+//! walkers with a deep prefetch queue instead of probing the link.
+
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::linalg::Mat;
+use crate::pipeline::{DataSource, StorageProfile};
+use crate::{ensure_arg, Error, Result};
+
+use super::proto::{
+    decode_meta, decode_rows_into, encode_read_rows, read_frame, write_frame, OP_ERR, OP_META,
+    OP_META_RESP, OP_PING, OP_PONG, OP_READ_ROWS, OP_ROWS,
+};
+use super::{net_retries, net_timeout_ms};
+
+/// Idle connections kept for reuse; walkers + prefetch readers rarely
+/// need more, and a burst beyond the cap just dials.
+const POOL_CAP: usize = 8;
+
+/// Network behavior knobs. [`NetOpts::default`] reads the env knobs
+/// `USPEC_NET_TIMEOUT_MS` and `USPEC_NET_RETRIES` (crate docs) — all
+/// operational: they bound waiting, never change any result.
+#[derive(Debug, Clone, Copy)]
+pub struct NetOpts {
+    /// Deadline for establishing a connection.
+    pub connect_timeout: Duration,
+    /// Read/write deadline on every established socket.
+    pub io_timeout: Duration,
+    /// Transient-failure retries after the first attempt (0 = one
+    /// attempt only).
+    pub retries: usize,
+    /// Backoff before the first retry; doubles per retry (capped at
+    /// 16×).
+    pub backoff: Duration,
+}
+
+impl Default for NetOpts {
+    fn default() -> Self {
+        let t = Duration::from_millis(net_timeout_ms());
+        let backoff = Duration::from_millis(50);
+        NetOpts { connect_timeout: t, io_timeout: t, retries: net_retries(), backoff }
+    }
+}
+
+/// A [`DataSource`] served by a remote [`crate::net::ShardServer`]. The
+/// shape (`n`, `d`) is fetched once at connect time; every `read_rows`
+/// is one framed request/response round-trip on a pooled connection.
+pub struct RemoteSource {
+    addr: SocketAddr,
+    /// The `host:port` the caller gave us, for error messages.
+    label: String,
+    n: usize,
+    d: usize,
+    opts: NetOpts,
+    pool: Mutex<Vec<TcpStream>>,
+}
+
+impl RemoteSource {
+    /// Connect to `host:port` with default [`NetOpts`] and fetch the
+    /// dataset shape. Fails fast (typed, within the connect timeout ×
+    /// retries) on a malformed address or an unreachable endpoint.
+    pub fn connect(addr: &str) -> Result<RemoteSource> {
+        RemoteSource::connect_with(addr, NetOpts::default())
+    }
+
+    /// [`RemoteSource::connect`] with explicit [`NetOpts`].
+    pub fn connect_with(addr: &str, opts: NetOpts) -> Result<RemoteSource> {
+        super::validate_host_port(addr)?;
+        let resolved = addr
+            .to_socket_addrs()
+            .map_err(|e| Error::Net(format!("{addr}: resolve failed: {e}")))?
+            .next()
+            .ok_or_else(|| Error::Net(format!("{addr}: resolved to no address")))?;
+        let mut src = RemoteSource {
+            addr: resolved,
+            label: addr.to_string(),
+            n: 0,
+            d: 0,
+            opts,
+            pool: Mutex::new(Vec::new()),
+        };
+        let (n, d) = src.fetch_meta()?;
+        ensure_arg!(d >= 1, "{addr}: remote dataset has d=0");
+        src.n = n;
+        src.d = d;
+        Ok(src)
+    }
+
+    /// The resolved server address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Round-trip liveness check; returns the request latency.
+    pub fn ping(&self) -> Result<Duration> {
+        let t = Instant::now();
+        self.with_conn("ping", |conn| {
+            write_frame(conn, OP_PING, &[])?;
+            let (op, _) = read_frame(conn, 64)?;
+            match op {
+                OP_PONG => Ok(()),
+                other => Err(unexpected(other, "Pong")),
+            }
+        })?;
+        Ok(t.elapsed())
+    }
+
+    fn fetch_meta(&self) -> Result<(usize, usize)> {
+        self.with_conn("meta", |conn| {
+            write_frame(conn, OP_META, &[])?;
+            let (op, payload) = read_frame(conn, 64)?;
+            match op {
+                OP_META_RESP => {
+                    let (n, d) = decode_meta(&payload)?;
+                    let n = usize::try_from(n)
+                        .map_err(|_| Error::Net(format!("remote n={n} exceeds usize")))?;
+                    let d = usize::try_from(d)
+                        .map_err(|_| Error::Net(format!("remote d={d} exceeds usize")))?;
+                    Ok((n, d))
+                }
+                OP_ERR => Err(server_error(&payload)),
+                other => Err(unexpected(other, "MetaResp")),
+            }
+        })
+    }
+
+    /// Dial a fresh connection with all deadlines armed.
+    fn dial(&self) -> Result<TcpStream> {
+        let conn = TcpStream::connect_timeout(&self.addr, self.opts.connect_timeout)
+            .map_err(|e| Error::Net(format!("{}: connect failed: {e}", self.label)))?;
+        conn.set_read_timeout(Some(self.opts.io_timeout))?;
+        conn.set_write_timeout(Some(self.opts.io_timeout))?;
+        let _ = conn.set_nodelay(true);
+        Ok(conn)
+    }
+
+    /// Run one request on a pooled (or fresh) connection, retrying
+    /// transient failures with exponential backoff. On success the
+    /// connection returns to the pool; on any failure it is dropped —
+    /// a half-read stream must never serve the next request.
+    fn with_conn<T>(
+        &self,
+        what: &str,
+        mut f: impl FnMut(&mut TcpStream) -> Result<T>,
+    ) -> Result<T> {
+        let mut last: Option<Error> = None;
+        for attempt in 0..=self.opts.retries {
+            if attempt > 0 {
+                let shift = (attempt - 1).min(4) as u32;
+                std::thread::sleep(self.opts.backoff * (1u32 << shift));
+            }
+            let pooled = self.lock_pool().pop();
+            let mut conn = match pooled {
+                Some(c) => c,
+                None => match self.dial() {
+                    Ok(c) => c,
+                    Err(e) => {
+                        last = Some(e);
+                        continue;
+                    }
+                },
+            };
+            match f(&mut conn) {
+                Ok(v) => {
+                    let mut pool = self.lock_pool();
+                    if pool.len() < POOL_CAP {
+                        pool.push(conn);
+                    }
+                    return Ok(v);
+                }
+                // Transport-class failures retry on a fresh connection;
+                // everything else (server-reported InvalidArg) is final.
+                Err(e @ (Error::Io(_) | Error::Net(_))) => last = Some(e),
+                Err(e) => return Err(e),
+            }
+        }
+        let last = last.expect("at least one attempt ran");
+        Err(Error::Net(format!(
+            "{}: {what} failed after {} attempts: {last}",
+            self.label,
+            self.opts.retries + 1
+        )))
+    }
+
+    fn lock_pool(&self) -> std::sync::MutexGuard<'_, Vec<TcpStream>> {
+        self.pool.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+impl DataSource for RemoteSource {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn read_rows(&self, start: usize, len: usize, buf: &mut Mat) -> Result<()> {
+        ensure_arg!(start + len <= self.n, "read_rows: out of range");
+        ensure_arg!(len >= 1, "read_rows: len must be >= 1");
+        let expect = len * self.d * 4;
+        self.with_conn("read_rows", |conn| {
+            write_frame(conn, OP_READ_ROWS, &encode_read_rows(start as u64, len as u64))?;
+            // Cap: the exact payload plus header slack; anything larger is
+            // a corrupt frame, not a bigger answer.
+            let (op, payload) = read_frame(conn, expect + 64)?;
+            match op {
+                OP_ROWS => decode_rows_into(&payload, len, self.d, buf),
+                OP_ERR => Err(server_error(&payload)),
+                other => Err(unexpected(other, "Rows")),
+            }
+        })
+    }
+
+    /// A network round-trip per chunk is a high-latency serial-ish
+    /// backend: the walk planner schedules few walkers with deep
+    /// prefetch and skips the local-storage probe.
+    fn storage_hint(&self) -> Option<StorageProfile> {
+        Some(StorageProfile::Remote)
+    }
+}
+
+/// A server-reported failure: the request was delivered and rejected, so
+/// retrying cannot help — surfaced as `InvalidArg`, the non-retryable
+/// class.
+fn server_error(payload: &[u8]) -> Error {
+    Error::InvalidArg(format!("remote shard server: {}", String::from_utf8_lossy(payload)))
+}
+
+/// A well-formed frame of the wrong type: protocol confusion, treated as
+/// transient (the retry gets a fresh connection and a clean stream).
+fn unexpected(op: u8, want: &str) -> Error {
+    Error::Net(format!("unexpected frame opcode {op:#04x} (want {want})"))
+}

@@ -1,0 +1,232 @@
+//! Remote shard execution — the networking subsystem that lets any
+//! [`crate::pipeline::DataSource`] live on another machine.
+//!
+//! Three pieces:
+//!
+//! * [`proto`] — the `USPEC/1` wire protocol: versioned, length-framed,
+//!   checksummed binary messages. Frame layout (all little-endian):
+//!   1 version byte ([`proto::PROTO_VERSION`]), 1 opcode byte, a u32
+//!   payload length, the payload, and a trailing u32 FNV-1a checksum
+//!   over header + payload. Requests are `Ping`, `Meta`, and
+//!   `ReadRows{start, len}`; row responses carry raw little-endian f32
+//!   values in the `BinDataset` layout, so a served chunk is bit-exactly
+//!   the local read.
+//! * [`ShardServer`] (`repro serve-shard --data f.bin --addr host:port`)
+//!   — serves row ranges of a shared source to concurrent clients,
+//!   thread-per-connection.
+//! * [`RemoteSource`] — a `DataSource` whose `read_rows` is a framed
+//!   request on a pooled TCP connection, with connect/read timeouts and
+//!   bounded retry-with-backoff. Its
+//!   [`storage_hint`](crate::pipeline::DataSource::storage_hint) reports
+//!   [`crate::pipeline::StorageProfile::Remote`], so the adaptive walk
+//!   planner schedules remote shards as a high-latency serial-ish
+//!   backend: few walkers, deep prefetch.
+//!
+//! The contract this module must keep is the crate's standing
+//! invariant: **where a shard lives is operational, never semantic**.
+//! Labels, sigma, and the embedding are bit-identical whether a shard is
+//! resident, on disk, or served over a socket
+//! (`rust/tests/sharded_equivalence.rs` pins loopback legs across
+//! {all-local, mixed, all-remote} × thread counts), and a failing remote
+//! read either recovers via retry or aborts the walk with a typed error
+//! — never a hang (every socket carries a deadline) and never a silently
+//! partial result (frames are size-validated and checksummed).
+//!
+//! Env knobs (crate docs list all of them): `USPEC_NET_TIMEOUT_MS`
+//! bounds connects and socket reads/writes (default 5000);
+//! `USPEC_NET_RETRIES` caps transient-failure retries (default 3).
+
+pub mod client;
+pub mod proto;
+pub mod server;
+
+pub use client::{NetOpts, RemoteSource};
+pub use server::{ServeOpts, ShardServer};
+
+use crate::{ensure_arg, Error, Result};
+use std::sync::OnceLock;
+
+/// `USPEC_NET_TIMEOUT_MS` (read once): connect/read/write deadline in
+/// milliseconds for remote sources. Default 5000.
+pub fn net_timeout_ms() -> u64 {
+    static V: OnceLock<u64> = OnceLock::new();
+    *V.get_or_init(|| {
+        std::env::var("USPEC_NET_TIMEOUT_MS").ok().and_then(|v| v.parse().ok()).unwrap_or(5000)
+    })
+}
+
+/// `USPEC_NET_RETRIES` (read once): transient-failure retries after the
+/// first attempt. Default 3.
+pub fn net_retries() -> usize {
+    static V: OnceLock<usize> = OnceLock::new();
+    *V.get_or_init(|| {
+        std::env::var("USPEC_NET_RETRIES").ok().and_then(|v| v.parse().ok()).unwrap_or(3)
+    })
+}
+
+/// Validate a `host:port` string (the spelling `serve-shard --addr` and
+/// `remote://` sources use). Port 0 is allowed — it means "ephemeral"
+/// for a server bind (a client connect to port 0 fails at dial time with
+/// its own clear error).
+pub fn validate_host_port(s: &str) -> Result<()> {
+    let (host, port) = s
+        .rsplit_once(':')
+        .ok_or_else(|| Error::InvalidArg(format!("'{s}': want host:port")))?;
+    ensure_arg!(!host.is_empty(), "'{s}': empty host (want host:port)");
+    ensure_arg!(
+        port.parse::<u16>().is_ok(),
+        "'{s}': bad port '{port}' (want 0..=65535)"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::pipeline::{for_each_chunk_sharded, DataSource, ShardPlan, StorageProfile};
+    use std::sync::{Arc, Mutex};
+    use std::time::Duration;
+
+    /// A deterministic matrix whose every cell is unique — any
+    /// misplaced row or byte shows up as a bit mismatch.
+    fn test_mat(n: usize, d: usize) -> Mat {
+        let mut m = Mat::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                m.set(i, j, (i * d + j) as f32 * 0.5 - 3.0);
+            }
+        }
+        m
+    }
+
+    fn serve(x: Mat) -> ShardServer {
+        ShardServer::bind("127.0.0.1:0", Arc::new(x)).unwrap()
+    }
+
+    fn fast_opts(retries: usize) -> NetOpts {
+        NetOpts {
+            connect_timeout: Duration::from_millis(2000),
+            io_timeout: Duration::from_millis(2000),
+            retries,
+            backoff: Duration::from_millis(1),
+        }
+    }
+
+    #[test]
+    fn remote_reads_match_local_bit_exactly() {
+        let x = test_mat(97, 3);
+        let server = serve(x.clone());
+        let remote = RemoteSource::connect(&server.addr().to_string()).unwrap();
+        assert_eq!((remote.n(), remote.d()), (97, 3));
+        assert!(remote.ping().unwrap() < Duration::from_secs(5));
+        let mut got = Mat::zeros(0, 3);
+        let mut want = Mat::zeros(0, 3);
+        // several ranges over one source: exercises pool reuse too
+        for (start, len) in [(0usize, 97usize), (0, 1), (96, 1), (40, 17), (95, 2)] {
+            remote.read_rows(start, len, &mut got).unwrap();
+            x.read_rows(start, len, &mut want).unwrap();
+            assert_eq!((got.rows, got.cols), (len, 3), "[{start}, {}) shape", start + len);
+            let a: Vec<u32> = got.data.iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> = want.data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b, "[{start}, {}) bytes", start + len);
+        }
+        // the planner hint: remote is a high-latency serial-ish backend
+        assert_eq!(remote.storage_hint(), Some(StorageProfile::Remote));
+    }
+
+    #[test]
+    fn out_of_range_requests_are_typed_errors_client_and_server_side() {
+        use super::proto::{encode_read_rows, read_frame, write_frame, OP_ERR, OP_READ_ROWS};
+        use std::net::TcpStream;
+
+        let server = serve(test_mat(10, 2));
+        let remote = RemoteSource::connect(&server.addr().to_string()).unwrap();
+        // client-side: rejected before any network traffic
+        let mut buf = Mat::zeros(0, 2);
+        let err = remote.read_rows(8, 5, &mut buf).unwrap_err();
+        assert!(matches!(err, Error::InvalidArg(_)), "{err}");
+        // server-side: a raw socket can send what the client never would;
+        // the answer is an OP_ERR frame, not a dropped connection
+        let mut conn = TcpStream::connect(server.addr()).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        write_frame(&mut conn, OP_READ_ROWS, &encode_read_rows(8, 5)).unwrap();
+        let (op, payload) = read_frame(&mut conn, 1 << 16).unwrap();
+        assert_eq!(op, OP_ERR);
+        let msg = String::from_utf8_lossy(&payload).to_string();
+        assert!(msg.contains("out of range"), "{msg}");
+        // unknown opcodes are answered, not ignored
+        write_frame(&mut conn, 0x55, &[]).unwrap();
+        let (op, payload) = read_frame(&mut conn, 1 << 16).unwrap();
+        assert_eq!(op, OP_ERR);
+        assert!(String::from_utf8_lossy(&payload).contains("opcode"));
+    }
+
+    #[test]
+    fn malformed_addresses_are_rejected() {
+        assert!(validate_host_port("localhost:9000").is_ok());
+        assert!(validate_host_port("127.0.0.1:0").is_ok()); // ephemeral bind
+        for bad in ["nohost", ":123", "host:", "host:notaport", "host:99999"] {
+            let err = validate_host_port(bad).unwrap_err();
+            assert!(matches!(err, Error::InvalidArg(_)), "{bad}: {err}");
+            assert!(RemoteSource::connect(bad).is_err(), "{bad} must not connect");
+        }
+    }
+
+    #[test]
+    fn unreachable_endpoint_fails_fast_with_typed_error() {
+        // bind-then-drop: the port existed a moment ago, nobody listens now
+        let addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let t = std::time::Instant::now();
+        let err = RemoteSource::connect_with(&addr, fast_opts(1)).unwrap_err();
+        assert!(matches!(err, Error::Net(_)), "{err}");
+        assert!(err.to_string().contains("attempts"), "{err}");
+        // 2 attempts × (fast refusal + 1ms backoff) — well inside the bound
+        assert!(t.elapsed() < Duration::from_secs(30), "took {:?}", t.elapsed());
+    }
+
+    #[test]
+    fn mid_stream_disconnect_recovers_via_retry() {
+        let x = test_mat(64, 2);
+        let server =
+            ShardServer::bind_with("127.0.0.1:0", Arc::new(x.clone()), ServeOpts { fail_reads: 2 })
+                .unwrap();
+        let remote = RemoteSource::connect_with(&server.addr().to_string(), fast_opts(3)).unwrap();
+        // first read eats both injected failures (truncated frame + abrupt
+        // disconnect), then succeeds on a fresh connection — bit-exactly
+        let mut got = Mat::zeros(0, 2);
+        remote.read_rows(0, 64, &mut got).unwrap();
+        let a: Vec<u32> = got.data.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = x.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "recovered read must be bit-identical");
+        // subsequent reads see a healthy server
+        remote.read_rows(10, 5, &mut got).unwrap();
+        assert_eq!(got.rows, 5);
+    }
+
+    #[test]
+    fn exhausted_retries_surface_typed_error_and_abort_the_walk() {
+        let x = test_mat(80, 2);
+        let always_failing = ServeOpts { fail_reads: usize::MAX };
+        let server = ShardServer::bind_with("127.0.0.1:0", Arc::new(x), always_failing).unwrap();
+        let remote = RemoteSource::connect_with(&server.addr().to_string(), fast_opts(1)).unwrap();
+        // direct read: a typed Net error naming the retry budget
+        let mut buf = Mat::zeros(0, 2);
+        let err = remote.read_rows(0, 10, &mut buf).unwrap_err();
+        assert!(matches!(err, Error::Net(_)), "{err}");
+        assert!(err.to_string().contains("2 attempts"), "{err}");
+        // through the sharded walk: the first failing shard aborts the
+        // whole pass via the existing first-error-wins path — it returns
+        // (no hang) and returns Err (no silently partial result)
+        let plan = ShardPlan::new(80, 2).unwrap();
+        let delivered = Mutex::new(0usize);
+        let r = for_each_chunk_sharded(&remote, &plan, 16, |_, m| {
+            *delivered.lock().unwrap() += m.rows;
+            Ok(())
+        });
+        assert!(r.is_err(), "walk over a dead remote must fail, not hang");
+    }
+}

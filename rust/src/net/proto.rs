@@ -1,0 +1,288 @@
+//! The `USPEC/1` wire protocol: versioned, length-framed, checksummed.
+//!
+//! Every message — request or response — is one frame:
+//!
+//! ```text
+//! offset  size  field
+//! 0       1     protocol version  ([`PROTO_VERSION`] = 0x01)
+//! 1       1     opcode            (request 0x01..=0x03, response 0x81..)
+//! 2       4     payload length L  (u32, little-endian)
+//! 6       L     payload
+//! 6+L     4     FNV-1a checksum   (u32 LE, over bytes [0, 6+L))
+//! ```
+//!
+//! The checksum covers the header *and* the payload, so a corrupted
+//! length or opcode is caught as reliably as corrupted row data. All
+//! integers are little-endian; row payloads are raw little-endian `f32`
+//! values, row-major — exactly the [`crate::streaming::BinDataset`]
+//! layout, so a served chunk is bit-identical to a local read of the
+//! same rows.
+//!
+//! Request opcodes and their payloads:
+//!
+//! | opcode | payload | response |
+//! |---|---|---|
+//! | [`OP_PING`] | empty | [`OP_PONG`], empty |
+//! | [`OP_META`] | empty | [`OP_META_RESP`], `u64 n, u64 d` |
+//! | [`OP_READ_ROWS`] | `u64 start, u64 len` | [`OP_ROWS`], `len·d` f32 values |
+//!
+//! Any request the server cannot satisfy (out-of-range rows, unknown
+//! opcode) is answered with [`OP_ERR`] carrying a UTF-8 message; the
+//! client surfaces that as a non-retryable error. Transport failures
+//! (disconnects, timeouts, checksum mismatches) are the retryable class —
+//! see [`crate::net::RemoteSource`].
+
+use crate::linalg::Mat;
+use crate::{Error, Result};
+use std::io::{Read, Write};
+
+/// Version byte every frame leads with; a mismatch rejects the frame.
+pub const PROTO_VERSION: u8 = 0x01;
+
+/// Request: liveness check, empty payload.
+pub const OP_PING: u8 = 0x01;
+/// Request: dataset shape, empty payload.
+pub const OP_META: u8 = 0x02;
+/// Request: rows `[start, start + len)`; payload `u64 start, u64 len`.
+pub const OP_READ_ROWS: u8 = 0x03;
+/// Response to [`OP_PING`], empty payload.
+pub const OP_PONG: u8 = 0x81;
+/// Response to [`OP_META`]; payload `u64 n, u64 d`.
+pub const OP_META_RESP: u8 = 0x82;
+/// Response to [`OP_READ_ROWS`]; payload `len·d` little-endian f32s.
+pub const OP_ROWS: u8 = 0x83;
+/// Error response to any request; payload is a UTF-8 message.
+pub const OP_ERR: u8 = 0xFF;
+
+/// Frame header length (version + opcode + payload length).
+pub const HEADER_LEN: usize = 6;
+/// Trailing checksum length.
+pub const CHECKSUM_LEN: usize = 4;
+/// Payload cap for *request* frames (requests are tiny; a larger claim
+/// is a corrupt or hostile frame).
+pub const MAX_REQUEST_PAYLOAD: usize = 64;
+
+/// Incremental 32-bit FNV-1a — the per-frame checksum. Not
+/// cryptographic; it exists to catch truncation and bit rot on the wire,
+/// like the magic/size checks guard the on-disk format.
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv32(u32);
+
+impl Fnv32 {
+    pub fn new() -> Fnv32 {
+        Fnv32(0x811C_9DC5)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= u32::from(b);
+            self.0 = self.0.wrapping_mul(0x0100_0193);
+        }
+    }
+
+    pub fn finish(&self) -> u32 {
+        self.0
+    }
+}
+
+impl Default for Fnv32 {
+    fn default() -> Self {
+        Fnv32::new()
+    }
+}
+
+/// The 6-byte frame header for `op` with a `payload_len`-byte payload.
+pub(crate) fn frame_header(op: u8, payload_len: usize) -> [u8; HEADER_LEN] {
+    let mut head = [0u8; HEADER_LEN];
+    head[0] = PROTO_VERSION;
+    head[1] = op;
+    head[2..6].copy_from_slice(&(payload_len as u32).to_le_bytes());
+    head
+}
+
+/// Write one complete frame (header, payload, checksum) and flush.
+pub fn write_frame(w: &mut impl Write, op: u8, payload: &[u8]) -> std::io::Result<()> {
+    let head = frame_header(op, payload.len());
+    let mut sum = Fnv32::new();
+    sum.update(&head);
+    sum.update(payload);
+    w.write_all(&head)?;
+    w.write_all(payload)?;
+    w.write_all(&sum.finish().to_le_bytes())?;
+    w.flush()
+}
+
+/// Read one complete frame, enforcing the version byte, a payload cap,
+/// and the trailing checksum. Transport failures surface as
+/// [`Error::Io`]; malformed frames as [`Error::Net`] — both are the
+/// retryable class for the client.
+pub fn read_frame(r: &mut impl Read, max_payload: usize) -> Result<(u8, Vec<u8>)> {
+    let mut head = [0u8; HEADER_LEN];
+    r.read_exact(&mut head)?;
+    if head[0] != PROTO_VERSION {
+        return Err(Error::Net(format!(
+            "protocol version {:#04x}, want {PROTO_VERSION:#04x}",
+            head[0]
+        )));
+    }
+    let op = head[1];
+    let len = u32::from_le_bytes(head[2..6].try_into().unwrap()) as usize;
+    if len > max_payload {
+        return Err(Error::Net(format!("frame payload {len} bytes > cap {max_payload}")));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    let mut trailer = [0u8; CHECKSUM_LEN];
+    r.read_exact(&mut trailer)?;
+    let want = u32::from_le_bytes(trailer);
+    let mut sum = Fnv32::new();
+    sum.update(&head);
+    sum.update(&payload);
+    let got = sum.finish();
+    if got != want {
+        return Err(Error::Net(format!(
+            "frame checksum mismatch (got {got:#010x}, frame says {want:#010x})"
+        )));
+    }
+    Ok((op, payload))
+}
+
+/// Encode an [`OP_READ_ROWS`] request payload.
+pub fn encode_read_rows(start: u64, len: u64) -> [u8; 16] {
+    let mut p = [0u8; 16];
+    p[..8].copy_from_slice(&start.to_le_bytes());
+    p[8..].copy_from_slice(&len.to_le_bytes());
+    p
+}
+
+/// Decode an [`OP_READ_ROWS`] request payload.
+pub fn decode_read_rows(payload: &[u8]) -> Result<(u64, u64)> {
+    if payload.len() != 16 {
+        return Err(Error::Net(format!("ReadRows payload {} bytes, want 16", payload.len())));
+    }
+    let start = u64::from_le_bytes(payload[..8].try_into().unwrap());
+    let len = u64::from_le_bytes(payload[8..].try_into().unwrap());
+    Ok((start, len))
+}
+
+/// Encode an [`OP_META_RESP`] payload.
+pub fn encode_meta(n: u64, d: u64) -> [u8; 16] {
+    let mut p = [0u8; 16];
+    p[..8].copy_from_slice(&n.to_le_bytes());
+    p[8..].copy_from_slice(&d.to_le_bytes());
+    p
+}
+
+/// Decode an [`OP_META_RESP`] payload.
+pub fn decode_meta(payload: &[u8]) -> Result<(u64, u64)> {
+    if payload.len() != 16 {
+        return Err(Error::Net(format!("Meta payload {} bytes, want 16", payload.len())));
+    }
+    let n = u64::from_le_bytes(payload[..8].try_into().unwrap());
+    let d = u64::from_le_bytes(payload[8..].try_into().unwrap());
+    Ok((n, d))
+}
+
+/// Serialize a row chunk into an [`OP_ROWS`] payload (little-endian f32,
+/// row-major — the `BinDataset` layout).
+pub fn encode_rows(m: &Mat) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(m.data.len() * 4);
+    for v in &m.data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    bytes
+}
+
+/// Deserialize an [`OP_ROWS`] payload into `buf`, validating the exact
+/// expected size for a `rows × d` chunk.
+pub fn decode_rows_into(payload: &[u8], rows: usize, d: usize, buf: &mut Mat) -> Result<()> {
+    let expect = rows * d * 4;
+    if payload.len() != expect {
+        return Err(Error::Net(format!(
+            "Rows payload {} bytes, want {expect} ({rows} rows × {d} dims)",
+            payload.len()
+        )));
+    }
+    buf.rows = rows;
+    buf.cols = d;
+    buf.data.clear();
+    buf.data
+        .extend(payload.chunks_exact(4).map(|b| f32::from_le_bytes(b.try_into().unwrap())));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip_all_opcodes() {
+        for (op, payload) in [
+            (OP_PING, Vec::new()),
+            (OP_META, Vec::new()),
+            (OP_READ_ROWS, encode_read_rows(7, 13).to_vec()),
+            (OP_ROWS, vec![1u8, 2, 3, 4]),
+            (OP_ERR, b"nope".to_vec()),
+        ] {
+            let mut wire = Vec::new();
+            write_frame(&mut wire, op, &payload).unwrap();
+            let (rop, rpayload) = read_frame(&mut wire.as_slice(), 1 << 20).unwrap();
+            assert_eq!((rop, rpayload), (op, payload));
+        }
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, OP_ROWS, &[9u8; 32]).unwrap();
+        // flip one payload byte: checksum must catch it
+        let mut bad = wire.clone();
+        bad[HEADER_LEN + 5] ^= 0x40;
+        let err = read_frame(&mut bad.as_slice(), 1 << 20).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        // flip the version byte
+        let mut bad = wire.clone();
+        bad[0] = 0x7F;
+        let err = read_frame(&mut bad.as_slice(), 1 << 20).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+        // flip a header byte (opcode): also covered by the checksum
+        let mut bad = wire.clone();
+        bad[1] ^= 0x01;
+        assert!(read_frame(&mut bad.as_slice(), 1 << 20).is_err());
+        // truncated mid-payload: an Io error (the retryable class)
+        let cut = &wire[..HEADER_LEN + 10];
+        let err = read_frame(&mut &cut[..], 1 << 20).unwrap_err();
+        assert!(matches!(err, crate::Error::Io(_)), "{err}");
+    }
+
+    #[test]
+    fn oversize_payload_claim_is_rejected_before_allocation() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, OP_ROWS, &[0u8; 128]).unwrap();
+        let err = read_frame(&mut wire.as_slice(), 64).unwrap_err();
+        assert!(err.to_string().contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn request_and_meta_payload_roundtrip() {
+        assert_eq!(decode_read_rows(&encode_read_rows(123, 456)).unwrap(), (123, 456));
+        assert_eq!(decode_meta(&encode_meta(10_000_000, 64)).unwrap(), (10_000_000, 64));
+        assert!(decode_read_rows(&[0u8; 15]).is_err());
+        assert!(decode_meta(&[0u8; 17]).is_err());
+    }
+
+    #[test]
+    fn rows_payload_is_bit_exact() {
+        let mut m = Mat::zeros(3, 2);
+        let vals = [1.5f32, -0.0, f32::MIN_POSITIVE, 3.25e-40, 1e30, -7.125];
+        m.data.copy_from_slice(&vals);
+        let payload = encode_rows(&m);
+        let mut back = Mat::zeros(0, 0);
+        decode_rows_into(&payload, 3, 2, &mut back).unwrap();
+        let a: Vec<u32> = m.data.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = back.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "f32 values must round-trip bit-exactly");
+        // size mismatch is a malformed frame, not a short read
+        assert!(decode_rows_into(&payload, 2, 2, &mut back).is_err());
+    }
+}

@@ -1,0 +1,206 @@
+//! The serving side of remote shard execution: a [`ShardServer`] binds a
+//! TCP listener and answers `USPEC/1` frames ([`crate::net::proto`]) for
+//! any shared [`DataSource`] — thread-per-connection on the PR-1 scoped
+//! idiom, so concurrent clients (shard walkers, prefetch readers) each
+//! stream their own row ranges without serializing each other.
+//!
+//! The server is deliberately dumb: it owns no clustering logic and no
+//! row-range policy. A client asks for rows `[start, start + len)` and
+//! gets exactly the bytes a local [`DataSource::read_rows`] would produce
+//! (little-endian f32, row-major), so whether a shard is local or served
+//! over a socket is invisible to every invariant the engine pins.
+//! Requests the source rejects (out-of-range rows) are answered with an
+//! `OP_ERR` frame carrying the error text — the client maps those to
+//! non-retryable errors, keeping a misbehaving request from looping.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::linalg::Mat;
+use crate::pipeline::DataSource;
+use crate::{Error, Result};
+
+use super::proto::{
+    decode_read_rows, encode_meta, encode_rows, frame_header, read_frame, write_frame,
+    MAX_REQUEST_PAYLOAD, OP_ERR, OP_META, OP_META_RESP, OP_PING, OP_PONG, OP_READ_ROWS, OP_ROWS,
+};
+
+/// A connection with no complete request inside this window is dropped —
+/// an abandoned client can never pin a handler thread forever.
+const IDLE_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Serving options. The only knob is a fault-injection hook for the
+/// retry-path tests; production servers use [`ServeOpts::default`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeOpts {
+    /// Chaos hook: answer the first `fail_reads` row requests (across all
+    /// connections) with a deliberately truncated frame followed by an
+    /// abrupt disconnect — the mid-stream failure mode the client's
+    /// retry loop must absorb. 0 (the default) serves faithfully.
+    pub fail_reads: usize,
+}
+
+/// A running shard server: a bound listener plus its accept thread.
+/// Dropping the server shuts it down (the accept loop is woken and
+/// joined); [`ShardServer::join`] instead blocks forever, for the
+/// `repro serve-shard` foreground process.
+pub struct ShardServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ShardServer {
+    /// Bind `addr` (`host:port`; port 0 picks an ephemeral port) and
+    /// serve `source` to any number of concurrent clients.
+    pub fn bind(addr: &str, source: Arc<dyn DataSource + Send + Sync>) -> Result<ShardServer> {
+        ShardServer::bind_with(addr, source, ServeOpts::default())
+    }
+
+    /// [`ShardServer::bind`] with explicit [`ServeOpts`].
+    pub fn bind_with(
+        addr: &str,
+        source: Arc<dyn DataSource + Send + Sync>,
+        opts: ServeOpts,
+    ) -> Result<ShardServer> {
+        super::validate_host_port(addr)?;
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::Net(format!("bind {addr}: {e}")))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| Error::Net(format!("bind {addr}: no local addr: {e}")))?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let fail_budget = Arc::new(AtomicUsize::new(opts.fail_reads));
+        let stop = Arc::clone(&shutdown);
+        let accept = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let Ok(conn) = conn else { continue };
+                let src = Arc::clone(&source);
+                let budget = Arc::clone(&fail_budget);
+                // Handlers are detached: each lives exactly as long as its
+                // connection (EOF, error, or idle timeout ends it), and the
+                // shared state they hold is Arc'd.
+                std::thread::spawn(move || handle(conn, &*src, &budget));
+            }
+        });
+        Ok(ShardServer { addr: local, shutdown, accept: Some(accept) })
+    }
+
+    /// The bound address — with the resolved port when `bind` got port 0.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Serve until the process is killed (the `repro serve-shard`
+    /// foreground mode). Consumes the server; never returns normally
+    /// unless the listener thread dies.
+    pub fn join(mut self) -> Result<()> {
+        if let Some(h) = self.accept.take() {
+            h.join().map_err(|_| Error::Net("shard server accept thread panicked".into()))?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for ShardServer {
+    fn drop(&mut self) {
+        let Some(h) = self.accept.take() else { return };
+        self.shutdown.store(true, Ordering::Relaxed);
+        // The accept loop blocks in `incoming()`; a throwaway connection
+        // wakes it so it can observe the flag and exit.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(250));
+        let _ = h.join();
+    }
+}
+
+/// Serve one connection until EOF, an I/O error, or the idle timeout.
+fn handle(mut conn: TcpStream, source: &dyn DataSource, fail_budget: &AtomicUsize) {
+    let _ = conn.set_nodelay(true);
+    let _ = conn.set_read_timeout(Some(IDLE_TIMEOUT));
+    let _ = conn.set_write_timeout(Some(IDLE_TIMEOUT));
+    let (n, d) = (source.n(), source.d());
+    let mut buf = Mat::zeros(0, d);
+    loop {
+        // Requests are tiny; a frame claiming more is corrupt or hostile
+        // and ends the connection (the client will retry on a fresh one).
+        let Ok((op, payload)) = read_frame(&mut conn, MAX_REQUEST_PAYLOAD) else { return };
+        let ok = match op {
+            OP_PING => write_frame(&mut conn, OP_PONG, &[]).is_ok(),
+            OP_META => {
+                write_frame(&mut conn, OP_META_RESP, &encode_meta(n as u64, d as u64)).is_ok()
+            }
+            OP_READ_ROWS => {
+                let reply = serve_rows(&payload, source, n, d, &mut buf);
+                match reply {
+                    Ok(rows_payload) => {
+                        if chaos_strike(fail_budget) {
+                            // Injected mid-stream failure: a correct header,
+                            // half the payload, then a severed connection.
+                            let head = frame_header(OP_ROWS, rows_payload.len());
+                            let _ = std::io::Write::write_all(&mut conn, &head);
+                            let _ = std::io::Write::write_all(
+                                &mut conn,
+                                &rows_payload[..rows_payload.len() / 2],
+                            );
+                            let _ = std::io::Write::flush(&mut conn);
+                            return;
+                        }
+                        write_frame(&mut conn, OP_ROWS, &rows_payload).is_ok()
+                    }
+                    Err(e) => write_frame(&mut conn, OP_ERR, e.to_string().as_bytes()).is_ok(),
+                }
+            }
+            other => write_frame(
+                &mut conn,
+                OP_ERR,
+                format!("unknown request opcode {other:#04x}").as_bytes(),
+            )
+            .is_ok(),
+        };
+        if !ok {
+            return;
+        }
+    }
+}
+
+/// Validate and execute one row request; any `Err` becomes an `OP_ERR`
+/// frame (the non-retryable class on the client).
+fn serve_rows(
+    payload: &[u8],
+    source: &dyn DataSource,
+    n: usize,
+    d: usize,
+    buf: &mut Mat,
+) -> Result<Vec<u8>> {
+    let (start, len) = decode_read_rows(payload)?;
+    let end = start.checked_add(len).ok_or_else(|| {
+        Error::InvalidArg(format!("rows [{start}, start+{len}) overflows"))
+    })?;
+    if end > n as u64 || len == 0 {
+        return Err(Error::InvalidArg(format!(
+            "rows [{start}, {end}) out of range (n={n}, len must be >= 1)"
+        )));
+    }
+    // The frame length field is u32: a request whose payload cannot be
+    // framed is a caller bug, not something to truncate silently.
+    let bytes = len * (d as u64) * 4;
+    if bytes > u32::MAX as u64 {
+        return Err(Error::InvalidArg(format!(
+            "rows [{start}, {end}): payload {bytes} bytes exceeds the u32 frame limit"
+        )));
+    }
+    source.read_rows(start as usize, len as usize, buf)?;
+    Ok(encode_rows(buf))
+}
+
+/// Consume one failure token if any remain (the `fail_reads` chaos hook).
+fn chaos_strike(budget: &AtomicUsize) -> bool {
+    budget
+        .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1))
+        .is_ok()
+}

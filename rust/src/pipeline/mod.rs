@@ -44,9 +44,11 @@
 //! `O(N·K + shards·chunk·d + p·d)` — independent of `N·d`, which only
 //! ever streams through the chunk buffers.
 
+pub mod segment;
 pub mod shard;
 pub mod source;
 
+pub use segment::SegmentedSource;
 pub use shard::{
     for_each_chunk_sharded, plan_walk, ShardPlan, ShardView, StorageProfile, WalkPlan,
 };
@@ -462,7 +464,13 @@ impl<'a> Pipeline<'a> {
             KnrIndex::build(&reps, k_prime, params.kmeans_iters.min(30), self.backend)
         })?;
         let knr_stage = KnrStage { k_nn: params.k_nn, mode: params.knr };
-        let plan = ShardPlan::new(n, self.shards)?.with_storage(self.storage);
+        // A composite source (e.g. mixed local + remote segments) dictates
+        // where shards may cut; a uniform source gets the balanced split.
+        let plan = match src.segments() {
+            Some(segs) => ShardPlan::aligned(n, self.shards, &segs)?,
+            None => ShardPlan::new(n, self.shards)?,
+        }
+        .with_storage(self.storage);
         let knr = timer.time("knr_query", || {
             knr_stage.query(src, &index, &plan, self.chunk, self.backend)
         })?;

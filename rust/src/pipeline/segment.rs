@@ -1,0 +1,253 @@
+//! A composite [`DataSource`]: contiguous row segments, each backed by
+//! its own source — the shape a mixed local + remote deployment has (some
+//! rows on this machine's disk, some served by
+//! [`crate::net::RemoteSource`] endpoints).
+//!
+//! A [`SegmentedSource`] presents the concatenation as one `n × d`
+//! source. Reads that stay inside one segment forward directly (the
+//! common case once shard boundaries are aligned); reads that straddle a
+//! boundary are stitched from per-segment reads, so the contract is the
+//! same either way: the exact bytes the backing sources hold, in global
+//! row order. The composite reports its boundaries through
+//! [`DataSource::segments`] — [`ShardPlan::aligned`]
+//! (via [`crate::pipeline::Pipeline`]) aligns shard cuts to them so no
+//! walker serves one shard from two backends — and its
+//! [`DataSource::storage_hint`] is the *slowest* segment's hint, because
+//! the walk planner must assume the pass is paced by its slowest backend.
+//!
+//! [`ShardPlan::aligned`]: crate::pipeline::ShardPlan::aligned
+
+use crate::linalg::Mat;
+use crate::pipeline::{DataSource, StorageProfile};
+use crate::{ensure_arg, Result};
+
+struct Segment {
+    src: Box<dyn DataSource + Send + Sync>,
+    /// First row of `src` this segment exposes.
+    start: usize,
+    /// Rows exposed.
+    len: usize,
+    /// Global row of the segment's first exposed row.
+    global: usize,
+}
+
+/// Contiguous row segments over heterogeneous backing sources, presented
+/// as one [`DataSource`]. Build with [`SegmentedSource::push`]; segments
+/// concatenate in push order.
+#[derive(Default)]
+pub struct SegmentedSource {
+    segs: Vec<Segment>,
+    d: usize,
+    n: usize,
+}
+
+impl SegmentedSource {
+    /// An empty composite (0 × 0 until the first push).
+    pub fn new() -> SegmentedSource {
+        SegmentedSource::default()
+    }
+
+    /// Append rows `[start, start + len)` of `src` as the next global
+    /// segment. All segments must agree on `d`; `len == 0` or a range
+    /// outside `src` is rejected.
+    pub fn push(
+        &mut self,
+        src: impl DataSource + Send + Sync + 'static,
+        start: usize,
+        len: usize,
+    ) -> Result<()> {
+        ensure_arg!(len >= 1, "segmented source: empty segment");
+        ensure_arg!(
+            start + len <= src.n(),
+            "segmented source: rows [{start}, {}) out of range (source n={})",
+            start + len,
+            src.n()
+        );
+        if self.segs.is_empty() {
+            self.d = src.d();
+        } else {
+            ensure_arg!(
+                src.d() == self.d,
+                "segmented source: segment d={} but composite d={}",
+                src.d(),
+                self.d
+            );
+        }
+        let global = self.n;
+        self.segs.push(Segment { src: Box::new(src), start, len, global });
+        self.n += len;
+        Ok(())
+    }
+
+    /// Index of the segment containing global row `row`.
+    fn locate(&self, row: usize) -> usize {
+        debug_assert!(row < self.n);
+        self.segs.partition_point(|s| s.global + s.len <= row)
+    }
+}
+
+impl DataSource for SegmentedSource {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn read_rows(&self, start: usize, len: usize, buf: &mut Mat) -> Result<()> {
+        ensure_arg!(len >= 1, "read_rows: len must be >= 1");
+        ensure_arg!(start + len <= self.n, "read_rows: out of range");
+        let first = self.locate(start);
+        let seg = &self.segs[first];
+        if start + len <= seg.global + seg.len {
+            // Entirely inside one segment: forward, preserving the
+            // caller's buffer-reuse contract.
+            return seg.src.read_rows(seg.start + (start - seg.global), len, buf);
+        }
+        // Straddles a boundary: stitch per-segment reads in row order.
+        buf.rows = len;
+        buf.cols = self.d;
+        buf.data.clear();
+        let mut tmp = Mat::zeros(0, self.d);
+        let mut row = start;
+        let end = start + len;
+        let mut i = first;
+        while row < end {
+            let seg = &self.segs[i];
+            let local = row - seg.global;
+            let take = (seg.len - local).min(end - row);
+            seg.src.read_rows(seg.start + local, take, &mut tmp)?;
+            ensure_arg!(
+                tmp.rows == take,
+                "segment read returned {} rows, requested {take}",
+                tmp.rows
+            );
+            buf.data.extend_from_slice(&tmp.data);
+            row += take;
+            i += 1;
+        }
+        Ok(())
+    }
+
+    /// The global `(start, len)` boundaries, for shard alignment.
+    fn segments(&self) -> Option<Vec<(usize, usize)>> {
+        if self.segs.is_empty() {
+            return None;
+        }
+        Some(self.segs.iter().map(|s| (s.global, s.len)).collect())
+    }
+
+    /// The slowest segment's hint: the walk planner must pace the pass by
+    /// its slowest backend (Remote ≻ Serial ≻ Parallel). `None` when no
+    /// segment knows its backing.
+    fn storage_hint(&self) -> Option<StorageProfile> {
+        fn rank(p: StorageProfile) -> u8 {
+            match p {
+                StorageProfile::Remote => 2,
+                StorageProfile::Serial => 1,
+                StorageProfile::Auto | StorageProfile::Parallel => 0,
+            }
+        }
+        self.segs
+            .iter()
+            .filter_map(|s| s.src.storage_hint())
+            .max_by_key(|&p| rank(p))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn numbered(n: usize, d: usize, base: f32) -> Mat {
+        let mut m = Mat::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                m.set(i, j, base + (i * d + j) as f32);
+            }
+        }
+        m
+    }
+
+    /// A Mat wrapper with a fixed storage hint and no resident fast path.
+    struct Hinted(Mat, StorageProfile);
+
+    impl DataSource for Hinted {
+        fn n(&self) -> usize {
+            self.0.rows
+        }
+
+        fn d(&self) -> usize {
+            self.0.cols
+        }
+
+        fn read_rows(&self, start: usize, len: usize, buf: &mut Mat) -> Result<()> {
+            self.0.read_rows(start, len, buf)
+        }
+
+        fn storage_hint(&self) -> Option<StorageProfile> {
+            Some(self.1)
+        }
+    }
+
+    #[test]
+    fn construction_validates_shapes_and_ranges() {
+        let mut s = SegmentedSource::new();
+        assert!(s.push(numbered(10, 2, 0.0), 0, 0).is_err()); // empty
+        assert!(s.push(numbered(10, 2, 0.0), 5, 6).is_err()); // past end
+        s.push(numbered(10, 2, 0.0), 0, 10).unwrap();
+        assert!(s.push(numbered(10, 3, 0.0), 0, 10).is_err()); // d mismatch
+        s.push(numbered(8, 2, 100.0), 2, 6).unwrap(); // sub-range is fine
+        assert_eq!((s.n(), s.d()), (16, 2));
+        assert_eq!(s.segments(), Some(vec![(0, 10), (10, 6)]));
+    }
+
+    #[test]
+    fn reads_match_the_concatenation_across_boundaries() {
+        // expected concatenation: rows 0..10 of a, rows 2..8 of b
+        let a = numbered(10, 2, 0.0);
+        let b = numbered(8, 2, 100.0);
+        let mut want = Mat::zeros(0, 2);
+        want.data.extend_from_slice(&a.data);
+        want.data.extend_from_slice(&b.data[2 * 2..8 * 2]);
+        want.rows = 16;
+
+        let mut s = SegmentedSource::new();
+        s.push(a, 0, 10).unwrap();
+        s.push(b, 2, 6).unwrap();
+        let mut got = Mat::zeros(0, 2);
+        // inside the first, inside the second, straddling, and full reads
+        for (start, len) in [(0usize, 10usize), (10, 6), (8, 5), (0, 16), (9, 2)] {
+            s.read_rows(start, len, &mut got).unwrap();
+            assert_eq!((got.rows, got.cols), (len, 2));
+            assert_eq!(
+                got.data,
+                &want.data[start * 2..(start + len) * 2],
+                "[{start}, {})",
+                start + len
+            );
+        }
+        // out-of-range and empty reads are rejected
+        assert!(s.read_rows(10, 7, &mut got).is_err());
+        assert!(s.read_rows(0, 0, &mut got).is_err());
+    }
+
+    #[test]
+    fn hint_escalates_to_the_slowest_segment() {
+        let mk = |h| Hinted(numbered(4, 1, 0.0), h);
+        let mut s = SegmentedSource::new();
+        s.push(mk(StorageProfile::Parallel), 0, 4).unwrap();
+        assert_eq!(s.storage_hint(), Some(StorageProfile::Parallel));
+        s.push(mk(StorageProfile::Serial), 0, 4).unwrap();
+        assert_eq!(s.storage_hint(), Some(StorageProfile::Serial));
+        s.push(mk(StorageProfile::Remote), 0, 4).unwrap();
+        assert_eq!(s.storage_hint(), Some(StorageProfile::Remote));
+        // hint-less segments don't mask a known slow one
+        let mut s = SegmentedSource::new();
+        s.push(numbered(4, 1, 0.0), 0, 4).unwrap();
+        assert_eq!(s.storage_hint(), None);
+        s.push(mk(StorageProfile::Remote), 0, 4).unwrap();
+        assert_eq!(s.storage_hint(), Some(StorageProfile::Remote));
+    }
+}

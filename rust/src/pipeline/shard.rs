@@ -51,10 +51,17 @@
 //!   so the sweep sees the same row stream regardless of how the plan
 //!   cuts it, and only the prefetch (not the merge) is concurrent.
 //!
-//! A `ShardView` is also the unit a future remote executor ships: a
-//! remote shard is just a `DataSource` whose `read_rows` crosses the
-//! network, and the contract above already guarantees the merged result
-//! is independent of how many such shards serve a pass.
+//! A `ShardView` is also the unit the remote executor ships: a remote
+//! shard is just a `DataSource` whose `read_rows` crosses the network
+//! ([`crate::net::RemoteSource`]), and the contract above already
+//! guarantees the merged result is independent of how many such shards
+//! serve a pass. A remote backend announces itself through
+//! [`DataSource::storage_hint`] — [`StorageProfile::Remote`] plans like
+//! serialized storage but with a deeper prefetch queue (each read pays a
+//! network round-trip, so the queue hides latency, not seeks) — and a
+//! composite source mixing backends announces its boundaries through
+//! [`DataSource::segments`], which [`ShardPlan::aligned`] respects so no
+//! shard straddles two backends.
 
 use std::cell::Cell;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -118,18 +125,24 @@ pub enum StorageProfile {
     /// Reads scale with concurrency (page cache, NVMe, striped array):
     /// walkers scale toward half the thread budget.
     Parallel,
+    /// Reads cross a network round-trip ([`crate::net::RemoteSource`]):
+    /// few walkers (the link serializes anyway), deepest prefetch queue
+    /// (the queue hides latency, not seeks).
+    Remote,
 }
 
 impl StorageProfile {
-    /// Parse the CLI/config spelling: `auto`, `serial`, or `parallel`
-    /// (device aliases `hdd` → serial, `ssd`/`nvme` → parallel).
+    /// Parse the CLI/config spelling: `auto`, `serial`, `parallel`, or
+    /// `remote` (device aliases `hdd` → serial, `ssd`/`nvme` → parallel,
+    /// `net`/`network` → remote).
     pub fn parse(s: &str) -> Result<StorageProfile> {
         match s.to_ascii_lowercase().as_str() {
             "auto" => Ok(StorageProfile::Auto),
             "serial" | "hdd" => Ok(StorageProfile::Serial),
             "parallel" | "ssd" | "nvme" => Ok(StorageProfile::Parallel),
+            "remote" | "net" | "network" => Ok(StorageProfile::Remote),
             other => Err(Error::Config(format!(
-                "unknown storage profile '{other}' (want auto, serial, or parallel)"
+                "unknown storage profile '{other}' (want auto, serial, parallel, or remote)"
             ))),
         }
     }
@@ -140,6 +153,7 @@ impl StorageProfile {
             StorageProfile::Auto => "auto",
             StorageProfile::Serial => "serial",
             StorageProfile::Parallel => "parallel",
+            StorageProfile::Remote => "remote",
         }
     }
 }
@@ -154,6 +168,12 @@ const PARALLEL_PREFETCH_DEPTH: usize = 2;
 /// shard's compute tail with the next shard's reads; more walkers only
 /// multiply seeks.
 const SERIAL_MAX_WALKERS: usize = 2;
+/// Prefetch depth on remote storage: each read pays a network round-trip,
+/// so a deep in-flight queue keeps the link busy across compute bursts.
+const REMOTE_PREFETCH_DEPTH: usize = 6;
+/// Walker cap on remote storage: like a spindle, one TCP link serializes;
+/// a second walker overlaps shard tails, more only contend.
+const REMOTE_MAX_WALKERS: usize = 2;
 /// Probe classification floor: when both sequential probe reads finish
 /// inside this budget, the source is page-cache fast and the concurrent
 /// leg would time scheduler noise, not storage.
@@ -181,6 +201,10 @@ pub fn plan_walk(profile: StorageProfile, shards: usize, budget: usize) -> WalkP
         StorageProfile::Serial => WalkPlan {
             walkers: shards.min(SERIAL_MAX_WALKERS),
             prefetch_depth: SERIAL_PREFETCH_DEPTH,
+        },
+        StorageProfile::Remote => WalkPlan {
+            walkers: shards.min(REMOTE_MAX_WALKERS),
+            prefetch_depth: REMOTE_PREFETCH_DEPTH,
         },
         StorageProfile::Auto | StorageProfile::Parallel => WalkPlan {
             // Half the budget: each walker computing a chunk dispatches
@@ -276,6 +300,57 @@ impl ShardPlan {
         Ok(ShardPlan { n, ranges, storage: StorageProfile::Auto })
     }
 
+    /// Plan from explicit `(start, len)` ranges, which must be non-empty,
+    /// contiguous from row 0, and individually non-empty. This is how a
+    /// caller with natural boundaries (file segments, remote endpoints)
+    /// dictates exactly where shards cut.
+    pub fn from_ranges(ranges: Vec<(usize, usize)>) -> Result<ShardPlan> {
+        ensure_arg!(!ranges.is_empty(), "shard plan: no ranges");
+        let mut next = 0usize;
+        for &(start, len) in &ranges {
+            ensure_arg!(
+                start == next,
+                "shard plan: range [{start}, {}) not contiguous (expected start {next})",
+                start + len
+            );
+            ensure_arg!(len >= 1, "shard plan: empty range at row {start}");
+            next = start + len;
+        }
+        Ok(ShardPlan { n: next, ranges, storage: StorageProfile::Auto })
+    }
+
+    /// Plan up to `shards` ranges over `n` rows, **aligned** to the given
+    /// segment boundaries (contiguous from 0, covering `n` — the
+    /// [`DataSource::segments`] contract): every segment gets at least one
+    /// shard and no shard straddles two segments, so a composite source
+    /// never serves one shard from two backends. Shards are distributed
+    /// across segments proportionally to their row counts.
+    pub fn aligned(n: usize, shards: usize, segments: &[(usize, usize)]) -> Result<ShardPlan> {
+        ensure_arg!(shards >= 1, "shard plan: shards must be >= 1 (got 0)");
+        ensure_arg!(!segments.is_empty(), "shard plan: no segments");
+        let mut next = 0usize;
+        for &(start, len) in segments {
+            ensure_arg!(
+                start == next && len >= 1,
+                "shard plan: segment [{start}, {}) invalid (expected contiguous from {next})",
+                start + len
+            );
+            next = start + len;
+        }
+        ensure_arg!(next == n, "shard plan: segments cover {next} rows, source has {n}");
+        let mut ranges = Vec::new();
+        for &(start, len) in segments {
+            // Proportional share of the shard budget, at least one shard
+            // per segment, never more shards than rows.
+            let share = (shards * len).div_ceil(n).max(1).min(len);
+            let sub = ShardPlan::new(len, share)?;
+            for &(s, l) in sub.ranges() {
+                ranges.push((start + s, l));
+            }
+        }
+        Ok(ShardPlan { n, ranges, storage: StorageProfile::Auto })
+    }
+
     /// Pin the storage profile the walk planner assumes, skipping the
     /// [`StorageProfile::Auto`] probe. Operational only — results are
     /// bit-identical for every profile.
@@ -362,6 +437,11 @@ impl DataSource for ShardView<'_> {
         );
         self.parent.read_rows(self.start + start, len, buf)
     }
+
+    /// A view is backed by whatever backs its parent.
+    fn storage_hint(&self) -> Option<StorageProfile> {
+        self.parent.storage_hint()
+    }
 }
 
 /// Walk `src` **shard-parallel**: dedicated walker threads claim shards
@@ -417,12 +497,19 @@ pub fn for_each_chunk_sharded(
         return Ok(()); // n == 0
     }
     if plan.shards() == 1 {
-        // One walker either way; an explicit Serial hint still gets its
-        // deeper prefetch queue. Auto is NOT probed here — with a single
-        // walker there is no reader concurrency to classify for.
+        // One walker either way; an explicit Serial/Remote hint still gets
+        // its deeper prefetch queue. Auto is NOT probed here — with a
+        // single walker there is no reader concurrency to classify for —
+        // but a source that *knows* its backend still shapes the queue.
         let depth = match plan.storage {
             StorageProfile::Serial => SERIAL_PREFETCH_DEPTH,
-            StorageProfile::Auto | StorageProfile::Parallel => 1,
+            StorageProfile::Remote => REMOTE_PREFETCH_DEPTH,
+            StorageProfile::Auto => match src.storage_hint() {
+                Some(StorageProfile::Serial) => SERIAL_PREFETCH_DEPTH,
+                Some(StorageProfile::Remote) => REMOTE_PREFETCH_DEPTH,
+                _ => 1,
+            },
+            StorageProfile::Parallel => 1,
         };
         return for_each_chunk_prefetch_depth(src, chunk, depth, f);
     }
@@ -468,7 +555,12 @@ pub fn for_each_chunk_sharded(
 
     let nshards = plan.shards();
     let profile = match plan.storage {
-        StorageProfile::Auto => probe_storage(src, chunk, plan),
+        // A source that knows its backend (remote link, composite) skips
+        // the probe; only a genuinely unknown backing is timed.
+        StorageProfile::Auto => match src.storage_hint() {
+            Some(p) => p,
+            None => probe_storage(src, chunk, plan),
+        },
         pinned => pinned,
     };
     let wp = plan_walk(profile, nshards, par::num_threads());
@@ -547,6 +639,114 @@ mod tests {
         let plan = ShardPlan::new(0, 4).unwrap();
         assert_eq!(plan.shards(), 0);
         assert_eq!(plan.n(), 0);
+    }
+
+    #[test]
+    fn from_ranges_accepts_contiguous_covers_and_rejects_gaps() {
+        let plan = ShardPlan::from_ranges(vec![(0, 7), (7, 13)]).unwrap();
+        assert_eq!((plan.n(), plan.shards()), (20, 2));
+        assert!(ShardPlan::from_ranges(vec![]).is_err());
+        assert!(ShardPlan::from_ranges(vec![(1, 5)]).is_err()); // not from 0
+        assert!(ShardPlan::from_ranges(vec![(0, 5), (6, 5)]).is_err()); // gap
+        assert!(ShardPlan::from_ranges(vec![(0, 5), (5, 0)]).is_err()); // empty
+    }
+
+    #[test]
+    fn aligned_plan_never_straddles_a_segment_boundary() {
+        // 700 local + 500 remote rows, various shard budgets
+        let segs = [(0usize, 700usize), (700, 500)];
+        for shards in [1usize, 2, 4, 8] {
+            let plan = ShardPlan::aligned(1200, shards, &segs).unwrap();
+            assert_eq!(plan.n(), 1200);
+            let mut next = 0;
+            for &(start, len) in plan.ranges() {
+                assert_eq!(start, next);
+                assert!(len >= 1);
+                // a shard lies entirely inside one segment
+                let inside = segs
+                    .iter()
+                    .any(|&(s0, l0)| start >= s0 && start + len <= s0 + l0);
+                assert!(inside, "shard [{start}, {}) straddles", start + len);
+                next = start + len;
+            }
+            assert_eq!(next, 1200);
+            // every segment got at least one shard
+            for &(s0, _) in &segs {
+                assert!(plan.ranges().iter().any(|&(s, _)| s == s0));
+            }
+        }
+        // degenerate: segments must cover n exactly
+        assert!(ShardPlan::aligned(1200, 4, &[(0, 700)]).is_err());
+        assert!(ShardPlan::aligned(1200, 0, &segs).is_err());
+        // tiny segments: share clamps to the segment length
+        let plan = ShardPlan::aligned(5, 8, &[(0, 1), (1, 4)]).unwrap();
+        assert!(plan.ranges().iter().all(|&(_, l)| l >= 1));
+        assert_eq!(plan.ranges().iter().map(|&(_, l)| l).sum::<usize>(), 5);
+    }
+
+    #[test]
+    fn remote_profile_plans_few_walkers_deep_prefetch() {
+        let wp = plan_walk(StorageProfile::Remote, 8, 8);
+        assert_eq!(
+            wp,
+            WalkPlan { walkers: REMOTE_MAX_WALKERS, prefetch_depth: REMOTE_PREFETCH_DEPTH }
+        );
+        assert_eq!(plan_walk(StorageProfile::Remote, 1, 8).walkers, 1);
+        assert_eq!(StorageProfile::parse("remote").unwrap(), StorageProfile::Remote);
+        assert_eq!(StorageProfile::parse("network").unwrap(), StorageProfile::Remote);
+        assert_eq!(StorageProfile::Remote.name(), "remote");
+    }
+
+    /// A wrapper that reports a fixed storage hint, for planner-path
+    /// coverage without a real network.
+    struct Hinted<'a>(&'a Mat, StorageProfile);
+
+    impl DataSource for Hinted<'_> {
+        fn n(&self) -> usize {
+            self.0.rows
+        }
+
+        fn d(&self) -> usize {
+            self.0.cols
+        }
+
+        fn read_rows(&self, start: usize, len: usize, buf: &mut Mat) -> Result<()> {
+            let src = NonResident(self.0);
+            src.read_rows(start, len, buf)
+        }
+
+        fn storage_hint(&self) -> Option<StorageProfile> {
+            Some(self.1)
+        }
+    }
+
+    #[test]
+    fn storage_hint_steers_auto_without_changing_results() {
+        let ds = two_moons(257, 0.05, 35);
+        for hint in [StorageProfile::Serial, StorageProfile::Remote, StorageProfile::Parallel] {
+            let src = Hinted(&ds.x, hint);
+            for shards in [1usize, 4] {
+                let plan = ShardPlan::new(257, shards).unwrap(); // storage: Auto
+                let seen = Mutex::new(vec![0u32; 257]);
+                for_each_chunk_sharded(&src, &plan, 50, |start, m| {
+                    let mut seen = seen.lock().unwrap();
+                    for i in 0..m.rows {
+                        assert_eq!(m.row(i), ds.x.row(start + i));
+                        seen[start + i] += 1;
+                    }
+                    Ok(())
+                })
+                .unwrap();
+                assert!(
+                    seen.into_inner().unwrap().iter().all(|&c| c == 1),
+                    "every row exactly once (hint={hint:?} shards={shards})"
+                );
+            }
+            // the hint survives a ShardView wrapper
+            let src = Hinted(&ds.x, hint);
+            let view = ShardView::new(&src, 10, 50).unwrap();
+            assert_eq!(view.storage_hint(), Some(hint));
+        }
     }
 
     #[test]

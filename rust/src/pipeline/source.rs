@@ -54,6 +54,25 @@ pub trait DataSource: Sync {
     fn as_mat(&self) -> Option<&Mat> {
         None
     }
+
+    /// What kind of backend this source *knows* it is, if any. A source
+    /// that can answer (e.g. a remote source is always a high-latency
+    /// network link) lets the shard planner skip the storage probe; `None`
+    /// (the default) means "probe me". Operational only — the hint steers
+    /// walker count and prefetch depth, never any result.
+    fn storage_hint(&self) -> Option<crate::pipeline::StorageProfile> {
+        None
+    }
+
+    /// Natural row-range boundaries, if the source is a composite of
+    /// differently-backed pieces (e.g. [`crate::pipeline::SegmentedSource`]
+    /// mixing local and remote rows). The shard planner aligns shard
+    /// boundaries to these so no shard straddles two backends. `None` (the
+    /// default) means one uniform backing. Ranges must be contiguous from
+    /// 0 and cover `n`.
+    fn segments(&self) -> Option<Vec<(usize, usize)>> {
+        None
+    }
 }
 
 impl DataSource for Mat {

@@ -71,17 +71,32 @@ impl BinDataset {
         if &header[..8] != MAGIC {
             return Err(Error::InvalidArg(format!("{}: not a USPECB01 file", path.display())));
         }
-        let n = u64::from_le_bytes(header[8..16].try_into().unwrap()) as usize;
-        let d = u64::from_le_bytes(header[16..24].try_into().unwrap()) as usize;
-        ensure_arg!(d >= 1, "{}: d=0", path.display());
-        let expect = 24 + (n * d * 4) as u64;
+        let n64 = u64::from_le_bytes(header[8..16].try_into().unwrap());
+        let d64 = u64::from_le_bytes(header[16..24].try_into().unwrap());
+        ensure_arg!(d64 >= 1, "{}: d=0", path.display());
+        // Checked u64 math throughout: a corrupt header must produce a
+        // clear error, never an overflowed size that happens to match.
+        let expect = n64
+            .checked_mul(d64)
+            .and_then(|v| v.checked_mul(4))
+            .and_then(|v| v.checked_add(24))
+            .ok_or_else(|| {
+                Error::InvalidArg(format!(
+                    "{}: header n={n64} d={d64} overflows the format",
+                    path.display()
+                ))
+            })?;
         let len = f.metadata()?.len();
         if len != expect {
             return Err(Error::InvalidArg(format!(
-                "{}: size {len} != expected {expect} (n={n}, d={d})",
+                "{}: size {len} != expected {expect} (n={n64}, d={d64})",
                 path.display()
             )));
         }
+        let n = usize::try_from(n64)
+            .map_err(|_| Error::InvalidArg(format!("{}: n={n64} exceeds usize", path.display())))?;
+        let d = usize::try_from(d64)
+            .map_err(|_| Error::InvalidArg(format!("{}: d={d64} exceeds usize", path.display())))?;
         Ok(BinDataset { path: path.to_path_buf(), n, d })
     }
 
@@ -131,9 +146,19 @@ impl DataSource for BinDataset {
     fn read_rows(&self, start: usize, len: usize, buf: &mut Mat) -> Result<()> {
         ensure_arg!(start + len <= self.n, "read_rows: out of range");
         let mut f = std::fs::File::open(&self.path)?;
-        f.seek(SeekFrom::Start(24 + (start * self.d * 4) as u64))?;
+        let offset = 24 + (start as u64) * (self.d as u64) * 4;
+        f.seek(SeekFrom::Start(offset))?;
         let mut bytes = vec![0u8; len * self.d * 4];
-        f.read_exact(&mut bytes)?;
+        // A short read means the file shrank or was swapped out from
+        // under us — name the range instead of surfacing a bare EOF, and
+        // fill nothing: the caller sees an error, never partial rows.
+        f.read_exact(&mut bytes).map_err(|e| {
+            Error::InvalidArg(format!(
+                "{}: truncated read of rows [{start}, {}): {e} (file changed since open?)",
+                self.path.display(),
+                start + len
+            ))
+        })?;
         buf.rows = len;
         buf.cols = self.d;
         buf.data.clear();
@@ -227,28 +252,42 @@ pub fn reservoir_sample(ds: &BinDataset, size: usize, chunk: usize, seed: u64) -
 
 /// Modeled resident peak of an out-of-core run: sparse B
 /// (idx u32 + d2 f32 + csr f64) + chunk buffers (`depth + 1` per
-/// concurrent shard walker, mirroring [`plan_walk`]; since an `Auto`
-/// run resolves its profile only at walk time, the model takes the max
-/// over the profiles the planner can pick) + representative index +
-/// embedding.
-fn peak_model(n: usize, d: usize, chunk: usize, shards: usize, base: &UspecParams) -> u64 {
+/// concurrent shard walker, mirroring [`plan_walk`]) + representative
+/// index + embedding. A source that knows its backend
+/// ([`DataSource::storage_hint`], e.g. a remote source) pins the buffer
+/// count to that profile's walk shape; since an `Auto` run over an
+/// unhinted source resolves its profile only at walk time, the model
+/// then takes the max over the profiles the planner can pick.
+fn peak_model(
+    n: usize,
+    d: usize,
+    chunk: usize,
+    shards: usize,
+    base: &UspecParams,
+    hint: Option<StorageProfile>,
+) -> u64 {
     let k_nn = base.k_nn.min(base.p);
     let budget = crate::util::par::num_threads().max(1);
     let bufs = |profile| {
         let wp = plan_walk(profile, shards.max(1), budget);
         wp.walkers * (wp.prefetch_depth + 1)
     };
-    let chunk_bufs = bufs(StorageProfile::Serial).max(bufs(StorageProfile::Parallel));
+    let chunk_bufs = match hint {
+        Some(p) => bufs(p),
+        None => bufs(StorageProfile::Serial).max(bufs(StorageProfile::Parallel)),
+    };
     (n * k_nn) as u64 * (4 + 4 + 8 + 4)
         + (chunk_bufs * chunk * d) as u64 * 4
         + (base.p * d) as u64 * 4
         + (n * base.k) as u64 * 4
 }
 
-/// Out-of-core U-SPEC over an on-disk dataset: [`Pipeline::run`] with the
-/// caller's chunk size.
+/// Out-of-core U-SPEC over any non-resident source — an on-disk
+/// [`BinDataset`], a [`crate::net::RemoteSource`], or a mixed
+/// [`crate::pipeline::SegmentedSource`]: [`Pipeline::run`] with the
+/// caller's execution knobs.
 pub fn stream_uspec(
-    ds: &BinDataset,
+    ds: &dyn DataSource,
     params: &StreamParams,
     seed: u64,
     backend: &dyn DistanceBackend,
@@ -257,17 +296,18 @@ pub fn stream_uspec(
     let opts =
         ExecOpts { chunk: params.chunk, shards: params.shards, storage: params.storage };
     let res = Pipeline::new(backend).with_opts(opts).run(ds, &base, seed)?;
-    let peak_bytes = peak_model(ds.n(), ds.d(), params.chunk, params.shards, &base);
+    let peak_bytes =
+        peak_model(ds.n(), ds.d(), params.chunk, params.shards, &base, ds.storage_hint());
     Ok(StreamResult { labels: res.labels, peak_bytes, timer: res.timer })
 }
 
-/// Out-of-core U-SENC over an on-disk dataset:
+/// Out-of-core U-SENC over any non-resident source:
 /// [`crate::usenc::usenc_opts`] with the caller's execution knobs. The m
-/// candidate sweeps share one disk pass; each base clusterer streams its
-/// own KNR pass (shard-parallel when `opts.shards > 1`), so the resident
-/// peak stays at single-clusterer scale.
+/// candidate sweeps share one pass over the source; each base clusterer
+/// streams its own KNR pass (shard-parallel when `opts.shards > 1`), so
+/// the resident peak stays at single-clusterer scale.
 pub fn stream_usenc(
-    ds: &BinDataset,
+    ds: &dyn DataSource,
     params: &UsencParams,
     opts: ExecOpts,
     seed: u64,
@@ -323,6 +363,26 @@ mod tests {
         let bytes = std::fs::read(&good).unwrap();
         std::fs::write(&good, &bytes[..bytes.len() - 4]).unwrap();
         assert!(BinDataset::open(&good).is_err());
+    }
+
+    #[test]
+    fn clipped_file_read_is_a_proper_error_not_a_short_read() {
+        let ds = two_moons(100, 0.05, 13);
+        let path = tmp("clipped.bin");
+        let bin = BinDataset::write_mat(&path, &ds.x).unwrap();
+        // clip the payload after open: only the first 50 rows survive
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..24 + 50 * 2 * 4]).unwrap();
+        let mut buf = Mat::zeros(0, 2);
+        // reads inside the surviving prefix still work...
+        bin.read_rows(0, 50, &mut buf).unwrap();
+        assert_eq!(buf.rows, 50);
+        // ...reads past the cut are a named error, never partial rows
+        let err = bin.read_rows(40, 20, &mut buf).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+        assert!(err.to_string().contains("[40, 60)"), "{err}");
+        // and a fresh open rejects the size mismatch outright
+        assert!(BinDataset::open(&path).is_err());
     }
 
     #[test]

@@ -10,6 +10,7 @@ use std::sync::Mutex;
 use uspec::affinity::NativeBackend;
 use uspec::data::synthetic::two_moons;
 use uspec::linalg::{set_simd_override, Mat};
+use uspec::net::{RemoteSource, ShardServer};
 use uspec::pipeline::{DataSource, Pipeline};
 use uspec::streaming::BinDataset;
 use uspec::usenc::{usenc_chunked, UsencParams};
@@ -60,7 +61,7 @@ fn uspec_simd_dispatch_is_operational() {
     let _simd = SimdGuard;
     let ds = two_moons(1500, 0.06, 25);
     let params = UspecParams { k: 2, p: 150, ..Default::default() };
-    let mut baseline: Option<(Vec<u32>, u32, Vec<u32>)> = None;
+    let mut baseline: Option<(Vec<u32>, u64, Vec<u32>)> = None;
     for nt in [1usize, 4] {
         par::set_thread_override(nt);
         for force_scalar in [false, true] {
@@ -165,6 +166,31 @@ fn uspec_wrapper_equals_engine_at_any_chunk() {
     for chunk in [97usize, 512, 8192] {
         let run = Pipeline::new(&NativeBackend).with_chunk(chunk).run(&bin, &params, 5).unwrap();
         assert_eq!(wrapped.labels, run.labels, "chunk={chunk}");
+    }
+}
+
+/// A loopback `serve-shard` endpoint is indistinguishable from a local
+/// file: the remote run is bit-identical to the resident run at every
+/// chunk size. ("remote" in the name routes this test to CI's
+/// bounded-timeout loopback step.)
+#[test]
+fn remote_source_is_chunk_invariant_and_matches_local() {
+    let _g = lock();
+    let ds = two_moons(1100, 0.06, 26);
+    let params = UspecParams { k: 2, p: 120, ..Default::default() };
+    let resident = uspec(&ds.x, &params, 5).unwrap();
+    let server =
+        ShardServer::bind("127.0.0.1:0", std::sync::Arc::new(ds.x.clone())).unwrap();
+    let remote = RemoteSource::connect(&server.addr().to_string()).unwrap();
+    for chunk in [97usize, 512, 8192] {
+        let run =
+            Pipeline::new(&NativeBackend).with_chunk(chunk).run(&remote, &params, 5).unwrap();
+        assert_eq!(resident.labels, run.labels, "labels diverged at chunk={chunk}");
+        assert_eq!(
+            resident.sigma.to_bits(),
+            run.sigma.to_bits(),
+            "sigma diverged at chunk={chunk}"
+        );
     }
 }
 

@@ -1,10 +1,12 @@
 //! Shard-invariance guarantees of the staged engine: the shard count is
 //! an operational knob — labels, sigma, and embeddings are
 //! **bit-identical** across shard counts {1, 2, 7}, sources
-//! {`Mat`, `BinDataset`}, thread counts {1, 8}, storage profiles, and
-//! SIMD dispatch levels, for U-SPEC and for out-of-core U-SENC. The CI
-//! determinism matrix re-runs this suite under `USPEC_THREADS` ∈
-//! {1, 2, 8} and with `USPEC_SIMD=0` (forced-scalar) legs.
+//! {`Mat`, `BinDataset`, `RemoteSource`, mixed `SegmentedSource`},
+//! thread counts {1, 8}, storage profiles, and SIMD dispatch levels, for
+//! U-SPEC and for out-of-core U-SENC. The CI determinism matrix re-runs
+//! this suite under `USPEC_THREADS` ∈ {1, 2, 8} and with `USPEC_SIMD=0`
+//! (forced-scalar) legs; the loopback remote legs run as a separate
+//! bounded-timeout step filtered on "remote".
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -12,7 +14,8 @@ use std::sync::Mutex;
 use uspec::affinity::NativeBackend;
 use uspec::data::synthetic::two_moons;
 use uspec::linalg::{set_simd_override, Mat};
-use uspec::pipeline::{DataSource, ExecOpts, Pipeline, StorageProfile};
+use uspec::net::{RemoteSource, ShardServer};
+use uspec::pipeline::{DataSource, ExecOpts, Pipeline, SegmentedSource, StorageProfile};
 use uspec::streaming::{stream_usenc, BinDataset};
 use uspec::usenc::{usenc, UsencParams};
 use uspec::uspec::UspecParams;
@@ -59,7 +62,7 @@ fn uspec_bit_identical_across_shards_sources_threads() {
     let ds = two_moons(1500, 0.06, 41);
     let bin = BinDataset::write_mat(&tmp("eq_shards.bin"), &ds.x).unwrap();
     let params = UspecParams { k: 2, p: 150, ..Default::default() };
-    let mut baseline: Option<(Vec<u32>, u32, Vec<u32>)> = None;
+    let mut baseline: Option<(Vec<u32>, u64, Vec<u32>)> = None;
     for nt in [1usize, 8] {
         par::set_thread_override(nt);
         for shards in [1usize, 2, 7] {
@@ -209,6 +212,54 @@ fn auto_probe_adds_at_most_four_chunk_reads() {
     );
 }
 
+/// The ISSUE's pinned invariant: the network is just another backing.
+/// One dataset served three ways — all-local `BinDataset`, all-remote
+/// over a loopback `serve-shard` endpoint, and a mixed composite (rows
+/// [0, 700) local + rows [700, 1200) remote) — yields bit-identical
+/// labels, sigma, and embedding across thread counts {1, 8} × shard
+/// counts {1, 4}. (The CI determinism matrix runs this leg separately
+/// under a bounded timeout; "remote" in the name is its filter.)
+#[test]
+fn uspec_bit_identical_across_local_mixed_remote_backings() {
+    let _g = lock();
+    let _restore = OverrideGuard;
+    let ds = two_moons(1200, 0.06, 46);
+    let bin = BinDataset::write_mat(&tmp("eq_shards_remote.bin"), &ds.x).unwrap();
+    let served = BinDataset::open(&tmp("eq_shards_remote.bin")).unwrap();
+    let server = ShardServer::bind("127.0.0.1:0", std::sync::Arc::new(served)).unwrap();
+    let addr = server.addr().to_string();
+    let params = UspecParams { k: 2, p: 120, ..Default::default() };
+    let mut baseline: Option<(Vec<u32>, u64, Vec<u32>)> = None;
+    for nt in [1usize, 8] {
+        par::set_thread_override(nt);
+        for shards in [1usize, 4] {
+            let pipe = Pipeline::new(&NativeBackend)
+                .with_opts(ExecOpts { chunk: 256, shards, ..ExecOpts::default() });
+            let remote = RemoteSource::connect(&addr).unwrap();
+            let mut mixed = SegmentedSource::new();
+            mixed.push(BinDataset::open(&tmp("eq_shards_remote.bin")).unwrap(), 0, 700).unwrap();
+            mixed.push(RemoteSource::connect(&addr).unwrap(), 700, 500).unwrap();
+            for (backing, run) in [
+                ("local", pipe.run(&bin, &params, 77).unwrap()),
+                ("remote", pipe.run(&remote, &params, 77).unwrap()),
+                ("mixed", pipe.run(&mixed, &params, 77).unwrap()),
+            ] {
+                let tag = format!("nt={nt} shards={shards} backing={backing}");
+                let emb_bits: Vec<u32> =
+                    run.embedding.data.iter().map(|v| v.to_bits()).collect();
+                match &baseline {
+                    Some((labels, sigma, emb)) => {
+                        assert_eq!(&run.labels, labels, "labels changed at {tag}");
+                        assert_eq!(run.sigma.to_bits(), *sigma, "sigma changed at {tag}");
+                        assert_eq!(&emb_bits, emb, "embedding changed at {tag}");
+                    }
+                    None => baseline = Some((run.labels.clone(), run.sigma.to_bits(), emb_bits)),
+                }
+            }
+        }
+    }
+}
+
 /// Forcing the scalar kernel tiles (`USPEC_SIMD=0` / `set_simd_override`)
 /// is operational too: a sharded out-of-core run produces bit-identical
 /// labels, sigma, and embedding whichever tile implementation dispatch
@@ -220,7 +271,7 @@ fn sharded_run_is_simd_dispatch_invariant() {
     let ds = two_moons(1000, 0.06, 45);
     let bin = BinDataset::write_mat(&tmp("eq_shards_simd.bin"), &ds.x).unwrap();
     let params = UspecParams { k: 2, p: 120, ..Default::default() };
-    let mut baseline: Option<(Vec<u32>, u32, Vec<u32>)> = None;
+    let mut baseline: Option<(Vec<u32>, u64, Vec<u32>)> = None;
     for force_scalar in [false, true] {
         set_simd_override(usize::from(force_scalar));
         for shards in [1usize, 3] {
