@@ -49,6 +49,11 @@ emits `BENCH_hotpath.json` at the repo root in the same schema:
   count and prefetch depth from `pipeline::shard::plan_walk`, walkers
   claiming shards off a shared queue. Mirrors
   `pipeline::shard::for_each_chunk_sharded`.
+* ``net`` — the remote-I/O fast path: USPEC/2 wire-compression ratio
+  (byte-shuffle + RLE, the exact `net::codec` token grammar) on
+  sparse-clustered vs incompressible rows, and a multi-pass chunk walk with
+  the decoded-chunk LRU on vs off. Throughput-only proxy — the
+  lossless/bit-identity contracts live in the Rust tests.
 
 Pass ``--smoke`` for a fast CI sanity run (smaller shapes, fewer
 iterations, same schema).
@@ -471,6 +476,197 @@ def bench_chunk_sweep(smoke=False):
     return rows
 
 
+# -------------------------------------------------------------------- net
+# Mirror of `net::codec` (USPEC/2 wire compression): byte-shuffle the 4
+# bytes of every f32 into 4 planes, then byte-RLE. Token grammar matches
+# the Rust encoder exactly: control c < 0x80 = literal run of c+1 bytes
+# (1..=128); c >= 0x80 = the next byte repeated (c-0x80)+3 times
+# (3..=130); runs shorter than 3 fold into literals.
+NET_MIN_RUN, NET_MAX_RUN, NET_MAX_LIT = 3, 130, 128
+
+
+def net_shuffle(raw):
+    """f32 bytes -> 4 concatenated byte planes (all byte-0s, byte-1s, …)."""
+    return np.frombuffer(raw, dtype=np.uint8).reshape(-1, 4).T.tobytes()
+
+
+def net_unshuffle(planes):
+    return np.frombuffer(planes, dtype=np.uint8).reshape(4, -1).T.tobytes()
+
+
+def net_rle_encode(b):
+    out = bytearray()
+    n, i = len(b), 0
+    while i < n:
+        run = 1
+        while i + run < n and b[i + run] == b[i] and run < NET_MAX_RUN:
+            run += 1
+        if run >= NET_MIN_RUN:
+            out.append(0x80 + run - NET_MIN_RUN)
+            out.append(b[i])
+            i += run
+            continue
+        start = i
+        while i < n and i - start < NET_MAX_LIT:
+            if i + NET_MIN_RUN <= n and b[i] == b[i + 1] == b[i + 2]:
+                break
+            i += 1
+        out.append(i - start - 1)
+        out += b[start:i]
+    return bytes(out)
+
+
+def net_rle_decode(s):
+    out = bytearray()
+    i, n = 0, len(s)
+    while i < n:
+        c = s[i]
+        i += 1
+        if c < 0x80:
+            lit = c + 1
+            out += s[i:i + lit]
+            i += lit
+        else:
+            out += bytes([s[i]]) * ((c - 0x80) + NET_MIN_RUN)
+            i += 1
+    return bytes(out)
+
+
+def net_compress(raw):
+    """Rust `codec::compress`: length prefix + RLE(shuffled planes);
+    None when not strictly smaller (the server then sends plain rows)."""
+    enc = len(raw).to_bytes(4, "little") + net_rle_encode(net_shuffle(raw))
+    return enc if len(enc) < len(raw) else None
+
+
+def bench_net(smoke=False):
+    """Remote-I/O fast path, python mirror (throughput-only: the Rust
+    suite asserts the bit-identity and never-touches-the-socket
+    contracts where the bytes are made — `net::codec` tests and the
+    `sharded_equivalence` remote legs).
+
+    * ``codec`` — wire bytes moved with USPEC/2 compression on sparse
+      clustered f32 rows (a few active dims per row, exact zeros
+      elsewhere — the zero stretches become long byte runs after the
+      shuffle) vs dense random rows (no byte runs: the codec declines
+      and the server falls back to plain frames — ratio pinned at 1.0,
+      never worse).
+    * ``multi_pass_cache`` — an m-pass chunk walk (U-SENC re-reads one
+      chunk grid m times) with the decoded-chunk LRU on vs off; a hit
+      returns the resident array and skips the read+decode entirely,
+      mirroring `RemoteSource`'s cache-hit-never-touches-the-socket
+      contract.
+    """
+    rng = np.random.default_rng(41)
+    codec_rows = []
+    n_rows, d, active = (1024, 16, 2) if smoke else (4096, 16, 2)
+    # sparse clustered rows (MNIST-style): each row has `active` dims
+    # near its cluster's center and exact 0.0 elsewhere — the zero
+    # stretches become long byte runs after the shuffle. Dense rows with
+    # float-to-float byte variety produce no runs; the codec declines
+    # and the server sends plain frames (the `random` leg).
+    sparse = np.zeros((n_rows, d), dtype=np.float32)
+    centers = rng.standard_normal((2, active)).astype(np.float32) * 2.0
+    jit = (rng.random((n_rows, active), dtype=np.float32) - 0.5) * 1e-3
+    for i in range(n_rows):
+        off = (i % 2) * active  # disjoint active dims per center
+        sparse[i, off:off + active] = centers[i % 2] + jit[i]
+    random_rows = rng.standard_normal((n_rows, d)).astype(np.float32)
+    for name, mat in (("sparse-clustered", sparse), ("random", random_rows)):
+        raw = mat.tobytes()
+        t0 = time.perf_counter()
+        comp = net_compress(raw)
+        t_enc = time.perf_counter() - t0
+        if comp is not None:
+            # bit-exact roundtrip, NaN-payload-safe by construction
+            assert net_unshuffle(net_rle_decode(comp[4:])) == raw
+            wire = len(comp)
+        else:
+            wire = len(raw)  # plain-frame fallback: never a regression
+        ratio = len(raw) / wire
+        codec_rows.append(
+            {
+                "data": name,
+                "rows": n_rows,
+                "d": d,
+                "raw_bytes": len(raw),
+                "wire_bytes": wire,
+                "ratio": round(ratio, 2),
+                "fallback_plain": comp is None,
+                "encode_mb_s": round(len(raw) / 1e6 / t_enc, 2),
+            }
+        )
+        print(
+            f"net codec {name:9s}: {len(raw)} -> {wire} bytes  "
+            f"ratio {ratio:.2f}x{'  (plain fallback)' if comp is None else ''}"
+        )
+    assert codec_rows[0]["ratio"] >= 2.0, "sparse clustered rows must shrink >= 2x"
+    assert codec_rows[1]["ratio"] >= 1.0, "fallback must never expand the wire"
+
+    # multi-pass chunk walk, cache on vs off
+    n, d, chunk, passes = (16_384, 8, 2048, 5) if smoke else (65_536, 16, 4096, 6)
+    path = os.path.join(tempfile.gettempdir(), f"uspec_net_cache_{os.getpid()}.bin")
+    rng.standard_normal((n, d)).astype(np.float32).tofile(path)
+
+    def fetch(lo, hi):
+        cnt = (hi - lo) * d
+        return np.fromfile(path, dtype=np.float32, count=cnt, offset=lo * d * 4).reshape(-1, d)
+
+    grid = [(lo, min(lo + chunk, n)) for lo in range(0, n, chunk)]
+
+    def walk_uncached():
+        acc = 0
+        for _ in range(passes):
+            for lo, hi in grid:
+                acc += fetch(lo, hi).shape[0]
+        return acc
+
+    def walk_cached():
+        cache = {}
+        acc = 0
+        for _ in range(passes):
+            for key in grid:
+                buf = cache.get(key)
+                if buf is None:
+                    buf = fetch(*key)
+                    cache[key] = buf  # budget = one full grid, like the tests
+                acc += buf.shape[0]
+        return acc
+
+    try:
+        assert walk_uncached() == walk_cached() == passes * n
+        iters = 2 if smoke else 4
+        t_off = min(_timed(walk_uncached) for _ in range(iters))
+        t_on = min(_timed(walk_cached) for _ in range(iters))
+    finally:
+        os.remove(path)
+    assert t_on < t_off, "cache-on multi-pass walk must beat re-fetching"
+    cache_rows = [
+        {
+            "n": n,
+            "d": d,
+            "chunk": chunk,
+            "passes": passes,
+            "uncached_ms": round(t_off * 1e3, 3),
+            "cached_ms": round(t_on * 1e3, 3),
+            "speedup": round(t_off / t_on, 2),
+        }
+    ]
+    print(
+        f"net cache n={n} passes={passes}: uncached {t_off * 1e3:8.2f} ms  "
+        f"cached {t_on * 1e3:8.2f} ms  speedup {t_off / t_on:.1f}x"
+    )
+    return {
+        "note": (
+            "throughput-only python mirror; bit-identity and the "
+            "cache-hit-never-touches-the-socket contract are asserted in "
+            "the Rust net::codec tests and sharded_equivalence remote legs"
+        ),
+        "codec": codec_rows,
+        "multi_pass_cache": cache_rows,
+    }
+
+
 # ------------------------------------------------------------- shard sweep
 def plan_walk(shards, budget):
     """Mirror of `pipeline::shard::plan_walk` for the Parallel/Auto
@@ -680,6 +876,7 @@ def main():
         "argmin_k": bench_argmin(smoke),
         "chunk_sweep": bench_chunk_sweep(smoke),
         "shard_sweep": bench_shard_sweep(smoke),
+        "net": bench_net(smoke),
     }
     path = os.path.join(REPO_ROOT, "BENCH_hotpath.json")
     with open(path, "w") as f:

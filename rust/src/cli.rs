@@ -34,10 +34,11 @@ COMMANDS:
                                 row ranges in parallel per pass;
                                 --source remote://host:port streams from
                                 a serve-shard endpoint instead
-  serve-shard --data F.bin --addr H:P
+  serve-shard --data F.bin --addr H:P [--cache BYTES]
                                 serve a USPECB01 file's row ranges to
                                 remote stream walkers over TCP (port 0
-                                picks an ephemeral port)
+                                picks an ephemeral port); --cache keeps
+                                an LRU of encoded reply frames
   info                          print config + artifact status
 
 COMMON FLAGS (any config key):
@@ -59,6 +60,9 @@ COMMON FLAGS (any config key):
                [auto]
   --source     remote://host:port of a serve-shard endpoint for stream
                (labels are bit-identical to the local run)  [null]
+  --net_cache  decoded-chunk LRU budget in bytes for a remote source;
+               repeat passes over the same row range skip the wire.
+               Operational only — 0 disables  [0]
   --runs       repetitions for mean±std
   --seed       master seed
   --config     JSON config file (flags override it)
@@ -100,7 +104,7 @@ pub fn parse(args: &[String]) -> Result<Invocation> {
             .ok_or_else(|| Error::Config(format!("--{key} needs a value")))?;
         match key {
             "config" => {}
-            "id" | "out" | "k_max" | "data" | "addr" => {
+            "id" | "out" | "k_max" | "data" | "addr" | "cache" => {
                 extra.insert(key.to_string(), value.clone());
             }
             _ => cfg.set(key, value)?,
@@ -255,7 +259,13 @@ pub fn execute(inv: Invocation) -> Result<String> {
                 let hostport = spec.strip_prefix("remote://").ok_or_else(|| {
                     Error::Config(format!("--source '{spec}': want remote://host:port"))
                 })?;
-                let remote = crate::net::RemoteSource::connect(hostport)?;
+                let remote = crate::net::RemoteSource::connect_with(
+                    hostport,
+                    crate::net::NetOpts {
+                        cache_bytes: inv.cfg.net_cache,
+                        ..crate::net::NetOpts::default()
+                    },
+                )?;
                 return stream_run(&inv.cfg, &remote, spec, None, h.backend());
             }
             let path = Path::new(&inv.cfg.dataset);
@@ -290,9 +300,19 @@ pub fn execute(inv: Invocation) -> Result<String> {
                 .extra
                 .get("addr")
                 .ok_or_else(|| Error::Config("serve-shard needs --addr host:port".into()))?;
+            let cache_bytes = match inv.extra.get("cache") {
+                Some(v) => v.parse::<usize>().map_err(|_| {
+                    Error::Config(format!("--cache wants a byte count, got '{v}'"))
+                })?,
+                None => 0,
+            };
             let bin = crate::streaming::BinDataset::open(Path::new(data))?;
             let (n, d) = (bin.n(), bin.d());
-            let server = crate::net::ShardServer::bind(addr, std::sync::Arc::new(bin))?;
+            let server = crate::net::ShardServer::bind_with(
+                addr,
+                std::sync::Arc::new(bin),
+                crate::net::ServeOpts { cache_bytes, ..Default::default() },
+            )?;
             println!("serving {data} (n={n}, d={d}) on {} — ctrl-c to stop", server.addr());
             server.join()?;
             Ok(String::new())
@@ -325,6 +345,7 @@ fn stream_run(
         chunk: crate::pipeline::DEFAULT_CHUNK,
         shards,
         storage: cfg.storage,
+        net_cache: cfg.net_cache,
     };
     let t0 = std::time::Instant::now();
     let (method, labels, timer_summary, peak) = if cfg.method.eq_ignore_ascii_case("u-senc") {
@@ -342,6 +363,7 @@ fn stream_run(
             chunk: opts.chunk,
             shards,
             storage: opts.storage,
+            net_cache: opts.net_cache,
             base,
         };
         let res = crate::streaming::stream_uspec(src, &sp, cfg.seed, backend)?;
@@ -388,6 +410,13 @@ mod tests {
         let inv = parse(&argv("stream --dataset TB-1M --storage nvme")).unwrap();
         assert_eq!(inv.cfg.storage, crate::pipeline::StorageProfile::Parallel);
         assert!(parse(&argv("stream --dataset TB-1M --storage tape")).is_err());
+    }
+
+    #[test]
+    fn parse_net_cache_flag() {
+        let inv = parse(&argv("stream --dataset TB-1M --net_cache 1048576")).unwrap();
+        assert_eq!(inv.cfg.net_cache, 1 << 20);
+        assert!(parse(&argv("stream --dataset TB-1M --net_cache nah")).is_err());
     }
 
     #[test]
@@ -488,6 +517,12 @@ mod tests {
         assert!(err.to_string().contains("--data"), "{err}");
         let err = execute(parse(&argv("serve-shard --data x.bin")).unwrap()).unwrap_err();
         assert!(err.to_string().contains("--addr"), "{err}");
+        // --cache is validated before the data file is opened
+        let err = execute(
+            parse(&argv("serve-shard --data x.bin --addr 127.0.0.1:0 --cache lots")).unwrap(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("--cache"), "{err}");
     }
 
     #[test]
@@ -497,13 +532,20 @@ mod tests {
         let tmp = std::env::temp_dir().join(format!("uspec_cli_net_{}.bin", std::process::id()));
         crate::streaming::BinDataset::write_mat(&tmp, &ds.x).unwrap();
         let bin = crate::streaming::BinDataset::open(&tmp).unwrap();
-        let server =
-            crate::net::ShardServer::bind("127.0.0.1:0", std::sync::Arc::new(bin)).unwrap();
+        // exercise the full fast path: server frame cache + client
+        // decoded-chunk cache + (default-on) compression
+        let server = crate::net::ShardServer::bind_with(
+            "127.0.0.1:0",
+            std::sync::Arc::new(bin),
+            crate::net::ServeOpts { cache_bytes: 1 << 20, ..Default::default() },
+        )
+        .unwrap();
         let inv = parse(&argv(&format!(
-            "stream --source remote://{} --k 2 --p 80",
+            "stream --source remote://{} --k 2 --p 80 --net_cache 1048576",
             server.addr()
         )))
         .unwrap();
+        assert_eq!(inv.cfg.net_cache, 1 << 20);
         let out = execute(inv).unwrap();
         assert!(out.contains("streamed U-SPEC"), "{out}");
         // remote sources carry no ground truth

@@ -67,6 +67,10 @@ pub struct RunConfig {
     /// Remote data source for `stream`: `remote://host:port` of a
     /// `serve-shard` endpoint; None (default) streams the local dataset.
     pub source: Option<String>,
+    /// Decoded-chunk LRU budget in bytes for a remote source (0 = no
+    /// cache). Operational only, like `shards` — labels never depend on
+    /// it; the streaming peak model charges the budget.
+    pub net_cache: usize,
     /// Repetitions for mean±std reporting.
     pub runs: usize,
     /// Master seed.
@@ -92,6 +96,7 @@ impl Default for RunConfig {
             shards: 1,
             storage: StorageProfile::Auto,
             source: None,
+            net_cache: 0,
             runs: 3,
             seed: 42,
             budget_bytes: 64 * (1 << 30),
@@ -119,6 +124,7 @@ impl RunConfig {
                 "source",
                 self.source.as_ref().map(|s| Json::Str(s.clone())).unwrap_or(Json::Null),
             ),
+            ("net_cache", Json::Num(self.net_cache as f64)),
             ("runs", Json::Num(self.runs as f64)),
             ("seed", Json::Num(self.seed as f64)),
             ("budget_bytes", Json::Num(self.budget_bytes as f64)),
@@ -181,6 +187,7 @@ impl RunConfig {
                     self.source = Some(value.to_string());
                 }
             }
+            "net_cache" => self.net_cache = parse_usize(value)?,
             "runs" => self.runs = parse_usize(value)?.max(1),
             "seed" => {
                 self.seed = value.parse().map_err(|e| Error::Config(format!("seed: {e}")))?
@@ -266,6 +273,23 @@ mod tests {
         for bad in ["ftp://h:1", "remote://", "remote://host", "remote://:1", "remote://h:x"] {
             assert!(cfg.set("source", bad).is_err(), "{bad} must be rejected");
         }
+    }
+
+    #[test]
+    fn net_cache_key_roundtrips_and_rejects_junk() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.net_cache, 0);
+        cfg.set("net_cache", "1048576").unwrap();
+        assert_eq!(cfg.net_cache, 1 << 20);
+        // 0 is a valid spelling of "no cache"
+        cfg.set("net_cache", "0").unwrap();
+        assert_eq!(cfg.net_cache, 0);
+        assert!(cfg.set("net_cache", "-1").is_err());
+        assert!(cfg.set("net_cache", "big").is_err());
+        cfg.set("net_cache", "4096").unwrap();
+        let j = cfg.to_json().to_string();
+        let back = RunConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.net_cache, 4096);
     }
 
     #[test]

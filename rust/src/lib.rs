@@ -52,6 +52,15 @@
 //! * `USPEC_NET_RETRIES=n` — how many times a transient remote-read
 //!   failure (disconnect, timeout, corrupt frame) is retried on a fresh
 //!   connection before the walk aborts with a typed error; default 3.
+//! * `USPEC_NET_COMPRESS=0` — disable `USPEC/2` wire compression on
+//!   both client and server; peers fall back to plain `USPEC/1` row
+//!   frames. The codec is lossless (byte-shuffle + RLE with bit-exact
+//!   reassembly), so this changes bytes on the wire, never results.
+//! * `USPEC_NET_POOL=n` — cap the per-source pool of reusable
+//!   connections a [`net::RemoteSource`] keeps warm; default 8,
+//!   floor 1. Operational only.
+//! * `USPEC_NET_IDLE_MS=n` — server-side idle disconnect for a client
+//!   connection in milliseconds; default 60000. Operational only.
 //!
 //! ## Quickstart
 //!

@@ -1,6 +1,6 @@
 //! The consuming side of remote shard execution: [`RemoteSource`] is a
-//! [`DataSource`] whose `read_rows` crosses the network as `USPEC/1`
-//! frames ([`crate::net::proto`]).
+//! [`DataSource`] whose `read_rows` crosses the network as `USPEC/1` /
+//! `USPEC/2` frames ([`crate::net::proto`]).
 //!
 //! Robustness model — a remote read must never hang and never return a
 //! silently partial chunk:
@@ -21,13 +21,39 @@
 //!   whole walk via the existing first-error-wins path, exactly like a
 //!   failed disk read.
 //!
+//! Three purely operational fast paths (none changes a single bit the
+//! engine sees):
+//!
+//! * **Request pipelining.** One chunk read is split into up to
+//!   [`PIPELINE_DEPTH`] sub-range requests written back-to-back before
+//!   the first response is read, so the server reads/encodes/sends part
+//!   `i + 1` while the client checksums and decodes part `i` — instead
+//!   of paying a full round trip per chunk with both ends idle half the
+//!   time. Responses arrive strictly in request order on the one
+//!   connection; bytes are appended in order, so the assembled chunk is
+//!   byte-identical to a single-frame read. Any failure mid-exchange
+//!   drops the connection with all in-flight state and retries the whole
+//!   chunk fresh — a half-read stream never serves the next request.
+//! * **Compression** ([`NetOpts::compress`], default from the
+//!   `USPEC_NET_COMPRESS` knob). After the server advertises `USPEC/2`
+//!   in its Pong capability bytes, row requests carry `FLAG_COMPRESS`
+//!   and responses may arrive as `OP_ROWS_C` ([`crate::net::codec`] —
+//!   bit-exactly invertible byte-shuffle + RLE). Against a v1 server the
+//!   source speaks plain `USPEC/1` forever.
+//! * **A decoded-chunk LRU** ([`NetOpts::cache_bytes`], default off;
+//!   wired from `ExecOpts::net_cache` by the CLI). U-SENC's `1 + m`
+//!   sweeps re-read the same row ranges — repeat reads hit memory, not
+//!   the wire. A hit copies the exact decoded floats a miss would have
+//!   produced and touches no socket at all.
+//!
 //! Reads either fill the buffer with the exact bytes a local read would
 //! produce (frames are checksummed and size-validated, f32 payloads
 //! round-trip bit-exactly) or fail — so every bit-identity invariant the
-//! engine pins holds over the wire. A small connection pool amortizes
-//! dials across the chunk stream; [`DataSource::storage_hint`] reports
-//! [`StorageProfile::Remote`] so the adaptive walk planner schedules few
-//! walkers with a deep prefetch queue instead of probing the link.
+//! engine pins holds over the wire. A small connection pool
+//! (`USPEC_NET_POOL`) amortizes dials across the chunk stream;
+//! [`DataSource::storage_hint`] reports [`StorageProfile::Remote`] so
+//! the adaptive walk planner schedules few walkers with a deep prefetch
+//! queue instead of probing the link.
 
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::sync::Mutex;
@@ -37,19 +63,23 @@ use crate::linalg::Mat;
 use crate::pipeline::{DataSource, StorageProfile};
 use crate::{ensure_arg, Error, Result};
 
+use super::cache::ByteLru;
 use super::proto::{
-    decode_meta, decode_rows_into, encode_read_rows, read_frame, write_frame, OP_ERR, OP_META,
-    OP_META_RESP, OP_PING, OP_PONG, OP_READ_ROWS, OP_ROWS,
+    decode_meta, encode_read_rows, encode_read_rows_v2, read_frame, write_frame, FLAG_COMPRESS,
+    OP_ERR, OP_META, OP_META_RESP, OP_PING, OP_PONG, OP_READ_ROWS, OP_ROWS, OP_ROWS_C, PROTO_V2,
 };
-use super::{net_retries, net_timeout_ms};
+use super::{net_compress, net_pool, net_retries, net_timeout_ms};
 
-/// Idle connections kept for reuse; walkers + prefetch readers rarely
-/// need more, and a burst beyond the cap just dials.
-const POOL_CAP: usize = 8;
+/// Sub-requests kept in flight per connection when one chunk read is
+/// pipelined — matches the walk planner's Remote prefetch depth
+/// ([`crate::pipeline::shard::REMOTE_PREFETCH_DEPTH`]), so the wire
+/// stays as busy as the prefetch queue it feeds.
+pub const PIPELINE_DEPTH: usize = crate::pipeline::shard::REMOTE_PREFETCH_DEPTH;
 
 /// Network behavior knobs. [`NetOpts::default`] reads the env knobs
-/// `USPEC_NET_TIMEOUT_MS` and `USPEC_NET_RETRIES` (crate docs) — all
-/// operational: they bound waiting, never change any result.
+/// `USPEC_NET_TIMEOUT_MS`, `USPEC_NET_RETRIES`, and `USPEC_NET_COMPRESS`
+/// (crate docs) — all operational: they bound waiting and byte counts,
+/// never change any result.
 #[derive(Debug, Clone, Copy)]
 pub struct NetOpts {
     /// Deadline for establishing a connection.
@@ -62,19 +92,35 @@ pub struct NetOpts {
     /// Backoff before the first retry; doubles per retry (capped at
     /// 16×).
     pub backoff: Duration,
+    /// Decoded-chunk LRU budget in bytes; 0 (the default) disables the
+    /// cache. The streaming peak model charges this budget.
+    pub cache_bytes: usize,
+    /// Request compressed row frames when the server advertises
+    /// `USPEC/2`. Defaults to the `USPEC_NET_COMPRESS` env knob (on
+    /// unless set to `0`).
+    pub compress: bool,
 }
 
 impl Default for NetOpts {
     fn default() -> Self {
         let t = Duration::from_millis(net_timeout_ms());
         let backoff = Duration::from_millis(50);
-        NetOpts { connect_timeout: t, io_timeout: t, retries: net_retries(), backoff }
+        NetOpts {
+            connect_timeout: t,
+            io_timeout: t,
+            retries: net_retries(),
+            backoff,
+            cache_bytes: 0,
+            compress: net_compress(),
+        }
     }
 }
 
 /// A [`DataSource`] served by a remote [`crate::net::ShardServer`]. The
-/// shape (`n`, `d`) is fetched once at connect time; every `read_rows`
-/// is one framed request/response round-trip on a pooled connection.
+/// shape (`n`, `d`) and the server's protocol capabilities are fetched
+/// once at connect time; every `read_rows` is a pipelined framed
+/// exchange on a pooled connection (or a cache hit that never leaves
+/// the process).
 pub struct RemoteSource {
     addr: SocketAddr,
     /// The `host:port` the caller gave us, for error messages.
@@ -82,13 +128,18 @@ pub struct RemoteSource {
     n: usize,
     d: usize,
     opts: NetOpts,
+    /// The server advertised `USPEC/2` in its Pong capability bytes.
+    peer_v2: bool,
     pool: Mutex<Vec<TcpStream>>,
+    /// Decoded row-range chunks, keyed by `(start, len)`.
+    cache: Mutex<ByteLru<(u64, u64), Vec<f32>>>,
 }
 
 impl RemoteSource {
-    /// Connect to `host:port` with default [`NetOpts`] and fetch the
-    /// dataset shape. Fails fast (typed, within the connect timeout ×
-    /// retries) on a malformed address or an unreachable endpoint.
+    /// Connect to `host:port` with default [`NetOpts`], negotiate the
+    /// protocol revision, and fetch the dataset shape. Fails fast
+    /// (typed, within the connect timeout × retries) on a malformed
+    /// address or an unreachable endpoint.
     pub fn connect(addr: &str) -> Result<RemoteSource> {
         RemoteSource::connect_with(addr, NetOpts::default())
     }
@@ -107,8 +158,11 @@ impl RemoteSource {
             n: 0,
             d: 0,
             opts,
+            peer_v2: false,
             pool: Mutex::new(Vec::new()),
+            cache: Mutex::new(ByteLru::new(opts.cache_bytes)),
         };
+        src.peer_v2 = src.negotiate()?;
         let (n, d) = src.fetch_meta()?;
         ensure_arg!(d >= 1, "{addr}: remote dataset has d=0");
         src.n = n;
@@ -121,11 +175,24 @@ impl RemoteSource {
         self.addr
     }
 
+    /// True when the server advertised `USPEC/2` (compressed row frames
+    /// may be negotiated). A v1 server downgrades this source to plain
+    /// `USPEC/1` for its whole lifetime.
+    pub fn peer_v2(&self) -> bool {
+        self.peer_v2
+    }
+
+    /// `(hits, misses)` of the decoded-chunk cache — operational
+    /// telemetry; always `(0, 0)` when the cache is disabled.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        self.lock_cache().stats()
+    }
+
     /// Round-trip liveness check; returns the request latency.
     pub fn ping(&self) -> Result<Duration> {
         let t = Instant::now();
         self.with_conn("ping", |conn| {
-            write_frame(conn, OP_PING, &[])?;
+            write_frame(conn, OP_PING, &[PROTO_V2])?;
             let (op, _) = read_frame(conn, 64)?;
             match op {
                 OP_PONG => Ok(()),
@@ -133,6 +200,22 @@ impl RemoteSource {
             }
         })?;
         Ok(t.elapsed())
+    }
+
+    /// Capability negotiation, run once at connect: advertise `USPEC/2`
+    /// in the Ping payload and look for the server's [`PROTO_V2`]
+    /// capability byte in the Pong. A v1 server ignores the request
+    /// payload and answers an empty Pong — the downgrade path.
+    fn negotiate(&self) -> Result<bool> {
+        self.with_conn("negotiate", |conn| {
+            write_frame(conn, OP_PING, &[PROTO_V2])?;
+            let (op, caps) = read_frame(conn, 64)?;
+            match op {
+                OP_PONG => Ok(caps.contains(&PROTO_V2)),
+                OP_ERR => Err(server_error(&caps)),
+                other => Err(unexpected(other, "Pong")),
+            }
+        })
     }
 
     fn fetch_meta(&self) -> Result<(usize, usize)> {
@@ -166,8 +249,9 @@ impl RemoteSource {
 
     /// Run one request on a pooled (or fresh) connection, retrying
     /// transient failures with exponential backoff. On success the
-    /// connection returns to the pool; on any failure it is dropped —
-    /// a half-read stream must never serve the next request.
+    /// connection returns to the pool (capped by `USPEC_NET_POOL`); on
+    /// any failure it is dropped — a half-read stream, pipelined
+    /// in-flight frames included, must never serve the next request.
     fn with_conn<T>(
         &self,
         what: &str,
@@ -193,7 +277,7 @@ impl RemoteSource {
             match f(&mut conn) {
                 Ok(v) => {
                     let mut pool = self.lock_pool();
-                    if pool.len() < POOL_CAP {
+                    if pool.len() < net_pool() {
                         pool.push(conn);
                     }
                     return Ok(v);
@@ -212,9 +296,81 @@ impl RemoteSource {
         )))
     }
 
+    /// The pipelined row exchange: write every sub-range request, then
+    /// read the responses in order, appending decoded floats into `buf`.
+    /// The split is purely operational — the assembled bytes are
+    /// identical to a single-frame read of `[start, start + len)`.
+    fn exchange_rows(
+        &self,
+        conn: &mut TcpStream,
+        start: usize,
+        len: usize,
+        buf: &mut Mat,
+    ) -> Result<()> {
+        let d = self.d;
+        let compress = self.peer_v2 && self.opts.compress;
+        let parts = PIPELINE_DEPTH.min(len);
+        let (base, rem) = (len / parts, len % parts);
+        let mut ranges = Vec::with_capacity(parts);
+        let mut at = start;
+        for i in 0..parts {
+            let l = base + usize::from(i < rem);
+            ranges.push((at, l));
+            at += l;
+        }
+        for &(s, l) in &ranges {
+            if compress {
+                let req = encode_read_rows_v2(s as u64, l as u64, FLAG_COMPRESS);
+                write_frame(conn, OP_READ_ROWS, &req)?;
+            } else {
+                write_frame(conn, OP_READ_ROWS, &encode_read_rows(s as u64, l as u64))?;
+            }
+        }
+        buf.rows = len;
+        buf.cols = d;
+        buf.data.clear();
+        buf.data.reserve(len * d);
+        for &(s, l) in &ranges {
+            let expect = l * d * 4;
+            // Cap: the exact payload plus header slack; compressed frames
+            // are strictly smaller by construction. Anything larger is a
+            // corrupt frame, not a bigger answer.
+            let (op, payload) = read_frame(conn, expect + 64)?;
+            match op {
+                OP_ROWS => append_rows(&payload, expect, &mut buf.data)?,
+                OP_ROWS_C if compress => {
+                    let raw = super::codec::decompress(&payload, expect)?;
+                    append_rows(&raw, expect, &mut buf.data)?;
+                }
+                OP_ERR => return Err(server_error(&payload)),
+                other => {
+                    return Err(unexpected(other, if compress { "Rows/RowsC" } else { "Rows" }))
+                }
+            }
+            debug_assert_eq!(buf.data.len(), (s + l - start) * d);
+        }
+        Ok(())
+    }
+
     fn lock_pool(&self) -> std::sync::MutexGuard<'_, Vec<TcpStream>> {
         self.pool.lock().unwrap_or_else(|e| e.into_inner())
     }
+
+    fn lock_cache(&self) -> std::sync::MutexGuard<'_, ByteLru<(u64, u64), Vec<f32>>> {
+        self.cache.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// Validate a raw-rows payload length and append its decoded f32s.
+fn append_rows(payload: &[u8], expect: usize, out: &mut Vec<f32>) -> Result<()> {
+    if payload.len() != expect {
+        return Err(Error::Net(format!(
+            "Rows payload {} bytes, want {expect}",
+            payload.len()
+        )));
+    }
+    out.extend(payload.chunks_exact(4).map(|b| f32::from_le_bytes(b.try_into().unwrap())));
+    Ok(())
 }
 
 impl DataSource for RemoteSource {
@@ -229,18 +385,21 @@ impl DataSource for RemoteSource {
     fn read_rows(&self, start: usize, len: usize, buf: &mut Mat) -> Result<()> {
         ensure_arg!(start + len <= self.n, "read_rows: out of range");
         ensure_arg!(len >= 1, "read_rows: len must be >= 1");
-        let expect = len * self.d * 4;
-        self.with_conn("read_rows", |conn| {
-            write_frame(conn, OP_READ_ROWS, &encode_read_rows(start as u64, len as u64))?;
-            // Cap: the exact payload plus header slack; anything larger is
-            // a corrupt frame, not a bigger answer.
-            let (op, payload) = read_frame(conn, expect + 64)?;
-            match op {
-                OP_ROWS => decode_rows_into(&payload, len, self.d, buf),
-                OP_ERR => Err(server_error(&payload)),
-                other => Err(unexpected(other, "Rows")),
+        let key = (start as u64, len as u64);
+        if self.opts.cache_bytes > 0 {
+            if let Some(rows) = self.lock_cache().get(&key) {
+                buf.rows = len;
+                buf.cols = self.d;
+                buf.data.clear();
+                buf.data.extend_from_slice(rows);
+                return Ok(());
             }
-        })
+        }
+        self.with_conn("read_rows", |conn| self.exchange_rows(conn, start, len, buf))?;
+        if self.opts.cache_bytes > 0 {
+            self.lock_cache().insert(key, buf.data.clone(), len * self.d * 4);
+        }
+        Ok(())
     }
 
     /// A network round-trip per chunk is a high-latency serial-ish

@@ -1,45 +1,89 @@
 //! Remote shard execution — the networking subsystem that lets any
 //! [`crate::pipeline::DataSource`] live on another machine.
 //!
-//! Three pieces:
+//! Five pieces:
 //!
-//! * [`proto`] — the `USPEC/1` wire protocol: versioned, length-framed,
-//!   checksummed binary messages. Frame layout (all little-endian):
-//!   1 version byte ([`proto::PROTO_VERSION`]), 1 opcode byte, a u32
-//!   payload length, the payload, and a trailing u32 FNV-1a checksum
-//!   over header + payload. Requests are `Ping`, `Meta`, and
-//!   `ReadRows{start, len}`; row responses carry raw little-endian f32
-//!   values in the `BinDataset` layout, so a served chunk is bit-exactly
-//!   the local read.
-//! * [`ShardServer`] (`repro serve-shard --data f.bin --addr host:port`)
-//!   — serves row ranges of a shared source to concurrent clients,
-//!   thread-per-connection.
-//! * [`RemoteSource`] — a `DataSource` whose `read_rows` is a framed
-//!   request on a pooled TCP connection, with connect/read timeouts and
-//!   bounded retry-with-backoff. Its
+//! * [`proto`] — the `USPEC/1` / `USPEC/2` wire protocol: versioned,
+//!   length-framed, checksummed binary messages. Frame layout (all
+//!   little-endian): 1 version byte ([`proto::PROTO_VERSION`], or
+//!   [`proto::PROTO_V2`] on frames only a v2 peer can decode), 1 opcode
+//!   byte, a u32 payload length, the payload, and a trailing u32 FNV-1a
+//!   checksum over header + payload. Requests are `Ping`, `Meta`, and
+//!   `ReadRows{start, len[, flags]}`; plain row responses carry raw
+//!   little-endian f32 values in the `BinDataset` layout, so a served
+//!   chunk is bit-exactly the local read.
+//! * [`codec`] — the `USPEC/2` lossless row compression (byte-shuffled
+//!   f32 planes + run-length coding, no dependencies): `OP_ROWS_C`
+//!   payloads decode bit-exactly or fail typed.
+//! * [`cache`] — one bounded-byte LRU used on both ends of the wire:
+//!   decoded chunks in the client, encoded frames in the server.
+//! * [`ShardServer`] (`repro serve-shard --data f.bin --addr host:port
+//!   [--cache BYTES]`) — serves row ranges of a shared source to
+//!   concurrent clients, thread-per-connection.
+//! * [`RemoteSource`] — a `DataSource` whose `read_rows` is a pipelined
+//!   framed exchange on a pooled TCP connection (up to
+//!   [`client::PIPELINE_DEPTH`] sub-requests in flight), with
+//!   connect/read timeouts and bounded retry-with-backoff. Its
 //!   [`storage_hint`](crate::pipeline::DataSource::storage_hint) reports
 //!   [`crate::pipeline::StorageProfile::Remote`], so the adaptive walk
 //!   planner schedules remote shards as a high-latency serial-ish
 //!   backend: few walkers, deep prefetch.
 //!
+//! # `USPEC/2` negotiation and fallback rules
+//!
+//! `USPEC/2` adds exactly one wire feature — compressed row frames — and
+//! is negotiated so that every v1 ↔ v2 pairing works unchanged:
+//!
+//! 1. **Advertise.** At connect, the client sends `Ping` whose payload
+//!    carries its capability bytes (`[0x02]`); the server's `Pong`
+//!    payload carries its own. A v1 peer sends an empty payload and
+//!    ignores whatever it receives — Ping/Pong payloads were always
+//!    tolerated, never interpreted, under `USPEC/1`.
+//! 2. **Request.** Only after seeing `0x02` in the Pong (and with
+//!    compression enabled — `USPEC_NET_COMPRESS` not `0` and
+//!    [`NetOpts::compress`] true) does the client append the flags byte
+//!    to `ReadRows` (`FLAG_COMPRESS`). Against a v1 server the 16-byte
+//!    request form is used forever — the 17-byte form would be rejected
+//!    as malformed.
+//! 3. **Respond.** A flagged request is answered with `OP_ROWS_C` (a
+//!    [`proto::PROTO_V2`]-stamped frame, [`codec`] payload) **iff** the
+//!    encoding is strictly smaller than the raw rows; otherwise the
+//!    plain `OP_ROWS` frame is sent — incompressible data never costs
+//!    extra bytes. Unflagged requests always get plain `OP_ROWS`, so a
+//!    v1 client never receives a frame it cannot decode.
+//! 4. **Checksums are unchanged.** Compressed frames carry the same
+//!    FNV-1a trailer over header + payload; a corrupt or truncated
+//!    compressed stream is rejected typed ([`crate::Error::Net`], the
+//!    retryable class) either by the trailer or by the codec's own
+//!    token/length validation.
+//!
 //! The contract this module must keep is the crate's standing
-//! invariant: **where a shard lives is operational, never semantic**.
-//! Labels, sigma, and the embedding are bit-identical whether a shard is
-//! resident, on disk, or served over a socket
+//! invariant: **where a shard lives — and how its bytes travel — is
+//! operational, never semantic**. Labels, sigma, and the embedding are
+//! bit-identical whether a shard is resident, on disk, or served over a
+//! socket, with compression and chunk caches on or off
 //! (`rust/tests/sharded_equivalence.rs` pins loopback legs across
-//! {all-local, mixed, all-remote} × thread counts), and a failing remote
-//! read either recovers via retry or aborts the walk with a typed error
-//! — never a hang (every socket carries a deadline) and never a silently
-//! partial result (frames are size-validated and checksummed).
+//! {all-local, mixed, all-remote} × {compress on/off} × {cache on/off} ×
+//! thread counts), and a failing remote read either recovers via retry
+//! or aborts the walk with a typed error — never a hang (every socket
+//! carries a deadline) and never a silently partial result (frames are
+//! size-validated and checksummed).
 //!
 //! Env knobs (crate docs list all of them): `USPEC_NET_TIMEOUT_MS`
 //! bounds connects and socket reads/writes (default 5000);
-//! `USPEC_NET_RETRIES` caps transient-failure retries (default 3).
+//! `USPEC_NET_RETRIES` caps transient-failure retries (default 3);
+//! `USPEC_NET_COMPRESS=0` forces plain `USPEC/1` frames everywhere;
+//! `USPEC_NET_POOL` caps idle pooled connections per source (default 8);
+//! `USPEC_NET_IDLE_MS` is the server's per-connection idle timeout
+//! (default 60000).
 
+pub mod cache;
 pub mod client;
+pub mod codec;
 pub mod proto;
 pub mod server;
 
+pub use cache::ByteLru;
 pub use client::{NetOpts, RemoteSource};
 pub use server::{ServeOpts, ShardServer};
 
@@ -61,6 +105,40 @@ pub fn net_retries() -> usize {
     static V: OnceLock<usize> = OnceLock::new();
     *V.get_or_init(|| {
         std::env::var("USPEC_NET_RETRIES").ok().and_then(|v| v.parse().ok()).unwrap_or(3)
+    })
+}
+
+/// `USPEC_NET_COMPRESS` (read once): `0` forces plain `USPEC/1` frames —
+/// servers stop advertising v2, clients stop requesting compressed rows.
+/// Anything else (including unset) leaves compression negotiable.
+/// Purely operational: compression is lossless, so this knob never
+/// changes a label, only bytes on the wire.
+pub fn net_compress() -> bool {
+    static V: OnceLock<bool> = OnceLock::new();
+    *V.get_or_init(|| std::env::var("USPEC_NET_COMPRESS").map(|v| v != "0").unwrap_or(true))
+}
+
+/// `USPEC_NET_POOL` (read once): idle connections kept for reuse per
+/// [`RemoteSource`]; walkers + prefetch readers rarely need more, and a
+/// burst beyond the cap just dials. Default 8, floor 1.
+pub fn net_pool() -> usize {
+    static V: OnceLock<usize> = OnceLock::new();
+    *V.get_or_init(|| {
+        std::env::var("USPEC_NET_POOL")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(8usize)
+            .max(1)
+    })
+}
+
+/// `USPEC_NET_IDLE_MS` (read once): the server drops a connection with
+/// no complete request inside this window, so an abandoned client can
+/// never pin a handler thread forever. Default 60000.
+pub fn net_idle_ms() -> u64 {
+    static V: OnceLock<u64> = OnceLock::new();
+    *V.get_or_init(|| {
+        std::env::var("USPEC_NET_IDLE_MS").ok().and_then(|v| v.parse().ok()).unwrap_or(60_000)
     })
 }
 
@@ -110,7 +188,12 @@ mod tests {
             io_timeout: Duration::from_millis(2000),
             retries,
             backoff: Duration::from_millis(1),
+            ..NetOpts::default()
         }
+    }
+
+    fn bits(m: &Mat) -> Vec<u32> {
+        m.data.iter().map(|v| v.to_bits()).collect()
     }
 
     #[test]
@@ -191,9 +274,12 @@ mod tests {
     #[test]
     fn mid_stream_disconnect_recovers_via_retry() {
         let x = test_mat(64, 2);
-        let server =
-            ShardServer::bind_with("127.0.0.1:0", Arc::new(x.clone()), ServeOpts { fail_reads: 2 })
-                .unwrap();
+        let server = ShardServer::bind_with(
+            "127.0.0.1:0",
+            Arc::new(x.clone()),
+            ServeOpts { fail_reads: 2, ..ServeOpts::default() },
+        )
+        .unwrap();
         let remote = RemoteSource::connect_with(&server.addr().to_string(), fast_opts(3)).unwrap();
         // first read eats both injected failures (truncated frame + abrupt
         // disconnect), then succeeds on a fresh connection — bit-exactly
@@ -207,10 +293,250 @@ mod tests {
         assert_eq!(got.rows, 5);
     }
 
+    /// A from-scratch `USPEC/1` endpoint, byte-compatible with the PR-6
+    /// server: empty Pongs, 16-byte-only ReadRows, plain `OP_ROWS`. The
+    /// downgrade tests run a real client against it.
+    fn legacy_v1_server(x: Mat) -> (std::net::SocketAddr, Arc<std::sync::atomic::AtomicBool>) {
+        use super::proto::{
+            encode_meta, encode_rows, read_frame, write_frame, OP_ERR, OP_META, OP_META_RESP,
+            OP_PING, OP_PONG, OP_READ_ROWS, OP_ROWS,
+        };
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop2.load(std::sync::atomic::Ordering::Relaxed) {
+                    break;
+                }
+                let Ok(mut conn) = conn else { continue };
+                let x = x.clone();
+                std::thread::spawn(move || {
+                    conn.set_read_timeout(Some(Duration::from_secs(10))).ok();
+                    loop {
+                        let Ok((op, payload)) = read_frame(&mut conn, 64) else { return };
+                        let ok = match op {
+                            // a v1 server never advertises capabilities
+                            OP_PING => write_frame(&mut conn, OP_PONG, &[]).is_ok(),
+                            OP_META => write_frame(
+                                &mut conn,
+                                OP_META_RESP,
+                                &encode_meta(x.rows as u64, x.cols as u64),
+                            )
+                            .is_ok(),
+                            OP_READ_ROWS => {
+                                // strict v1: exactly 16 bytes or malformed
+                                if payload.len() != 16 {
+                                    write_frame(&mut conn, OP_ERR, b"ReadRows payload: want 16")
+                                        .is_ok()
+                                } else {
+                                    let start = u64::from_le_bytes(
+                                        payload[..8].try_into().unwrap(),
+                                    ) as usize;
+                                    let len = u64::from_le_bytes(
+                                        payload[8..].try_into().unwrap(),
+                                    ) as usize;
+                                    let mut buf = Mat::zeros(0, x.cols);
+                                    match x.read_rows(start, len, &mut buf) {
+                                        Ok(()) => write_frame(
+                                            &mut conn,
+                                            OP_ROWS,
+                                            &encode_rows(&buf),
+                                        )
+                                        .is_ok(),
+                                        Err(e) => write_frame(
+                                            &mut conn,
+                                            OP_ERR,
+                                            e.to_string().as_bytes(),
+                                        )
+                                        .is_ok(),
+                                    }
+                                }
+                            }
+                            _ => write_frame(&mut conn, OP_ERR, b"unknown opcode").is_ok(),
+                        };
+                        if !ok {
+                            return;
+                        }
+                    }
+                });
+            }
+        });
+        (addr, stop)
+    }
+
+    #[test]
+    fn v2_client_downgrades_against_a_legacy_v1_server() {
+        let x = test_mat(61, 3);
+        let (addr, stop) = legacy_v1_server(x.clone());
+        // compression explicitly requested — the empty Pong must veto it
+        let opts = NetOpts { compress: true, ..fast_opts(1) };
+        let remote = RemoteSource::connect_with(&addr.to_string(), opts).unwrap();
+        assert!(!remote.peer_v2(), "legacy server must not negotiate v2");
+        let mut got = Mat::zeros(0, 3);
+        let mut want = Mat::zeros(0, 3);
+        for (start, len) in [(0usize, 61usize), (0, 1), (30, 17)] {
+            remote.read_rows(start, len, &mut got).unwrap();
+            x.read_rows(start, len, &mut want).unwrap();
+            assert_eq!(bits(&got), bits(&want), "[{start}, {})", start + len);
+        }
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        let _ = std::net::TcpStream::connect_timeout(&addr, Duration::from_millis(250));
+    }
+
+    #[test]
+    fn v1_client_against_a_v2_server_gets_plain_frames() {
+        use super::proto::{
+            encode_read_rows, read_frame, write_frame, OP_PING, OP_PONG, OP_READ_ROWS, OP_ROWS,
+            PROTO_VERSION,
+        };
+        use std::net::TcpStream;
+
+        let x = test_mat(24, 2);
+        let server = ShardServer::bind_with(
+            "127.0.0.1:0",
+            Arc::new(x.clone()),
+            ServeOpts { compress: true, ..ServeOpts::default() },
+        )
+        .unwrap();
+        let mut conn = TcpStream::connect(server.addr()).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        // a v1 client pings with an empty payload and ignores Pong caps
+        write_frame(&mut conn, OP_PING, &[]).unwrap();
+        let (op, _caps) = read_frame(&mut conn, 64).unwrap();
+        assert_eq!(op, OP_PONG);
+        // an unflagged 16-byte ReadRows must get a plain v1 OP_ROWS frame
+        write_frame(&mut conn, OP_READ_ROWS, &encode_read_rows(3, 7)).unwrap();
+        // peek the version byte by reading the raw frame ourselves
+        let mut raw = vec![0u8; 6];
+        std::io::Read::read_exact(&mut conn, &mut raw).unwrap();
+        assert_eq!(raw[0], PROTO_VERSION, "v1 client must never see a v2 frame");
+        assert_eq!(raw[1], OP_ROWS, "unflagged request must get plain rows");
+        let len = u32::from_le_bytes(raw[2..6].try_into().unwrap()) as usize;
+        assert_eq!(len, 7 * 2 * 4, "plain payload is raw f32 bytes");
+    }
+
+    #[test]
+    fn compressed_loopback_reads_are_bit_identical() {
+        // sparse rows (two active dims, exact zeros elsewhere → long
+        // byte runs after the shuffle) so OP_ROWS_C actually fires;
+        // fallbacks to plain frames would pass equality too, but
+        // peer_v2 + the codec unit tests pin the compressed path
+        let mut x = Mat::zeros(300, 16);
+        for i in 0..300 {
+            let off = (i % 2) * 2;
+            x.set(i, off, 1.5 + (i % 7) as f32 * 1e-4);
+            x.set(i, off + 1, -0.75 + (i % 5) as f32 * 1e-4);
+        }
+        let server = ShardServer::bind_with(
+            "127.0.0.1:0",
+            Arc::new(x.clone()),
+            ServeOpts { compress: true, ..ServeOpts::default() },
+        )
+        .unwrap();
+        let opts = NetOpts { compress: true, ..fast_opts(1) };
+        let remote = RemoteSource::connect_with(&server.addr().to_string(), opts).unwrap();
+        assert!(remote.peer_v2(), "server must advertise USPEC/2");
+        let mut got = Mat::zeros(0, 16);
+        let mut want = Mat::zeros(0, 16);
+        for (start, len) in [(0usize, 300usize), (0, 1), (299, 1), (140, 33), (0, 5)] {
+            remote.read_rows(start, len, &mut got).unwrap();
+            x.read_rows(start, len, &mut want).unwrap();
+            assert_eq!(bits(&got), bits(&want), "[{start}, {})", start + len);
+        }
+    }
+
+    #[test]
+    fn client_cache_hit_never_touches_the_socket() {
+        // wire-read counter on the serving side: with the server's own
+        // frame cache off, every frame that crosses the socket is one
+        // source read — so a flat count proves the repeat read stayed
+        // entirely inside the client's decoded-chunk LRU
+        let counting =
+            Arc::new(CountingSource { x: test_mat(128, 3), reads: Default::default() });
+        let server = ShardServer::bind_with(
+            "127.0.0.1:0",
+            Arc::clone(&counting) as Arc<dyn DataSource + Send + Sync>,
+            ServeOpts::default(),
+        )
+        .unwrap();
+        let opts = NetOpts { cache_bytes: 1 << 20, ..fast_opts(0) };
+        let remote = RemoteSource::connect_with(&server.addr().to_string(), opts).unwrap();
+        let mut first = Mat::zeros(0, 3);
+        remote.read_rows(16, 64, &mut first).unwrap();
+        let wire_reads = counting.reads.load(std::sync::atomic::Ordering::Relaxed);
+        assert!(wire_reads >= 1);
+        let mut again = Mat::zeros(0, 3);
+        remote.read_rows(16, 64, &mut again).unwrap();
+        assert_eq!(bits(&first), bits(&again), "cached chunk is the decoded original");
+        assert_eq!(
+            counting.reads.load(std::sync::atomic::Ordering::Relaxed),
+            wire_reads,
+            "a cache hit must not touch the socket"
+        );
+        let (hits, misses) = remote.cache_stats();
+        assert!(hits >= 1 && misses >= 1, "hits={hits} misses={misses}");
+        // a different range is a miss and goes back to the wire
+        remote.read_rows(0, 8, &mut again).unwrap();
+        assert!(
+            counting.reads.load(std::sync::atomic::Ordering::Relaxed) > wire_reads,
+            "an uncached range must reach the server"
+        );
+    }
+
+    /// A source that counts `read_rows` calls — the wire-read counter
+    /// behind the client-cache and server-frame-cache tests.
+    struct CountingSource {
+        x: Mat,
+        reads: std::sync::atomic::AtomicUsize,
+    }
+
+    impl DataSource for CountingSource {
+        fn n(&self) -> usize {
+            self.x.rows
+        }
+        fn d(&self) -> usize {
+            self.x.cols
+        }
+        fn read_rows(&self, start: usize, len: usize, buf: &mut Mat) -> crate::Result<()> {
+            self.reads.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            self.x.read_rows(start, len, buf)
+        }
+    }
+
+    #[test]
+    fn server_frame_cache_reuses_one_encode_across_clients() {
+        let counting =
+            Arc::new(CountingSource { x: test_mat(96, 2), reads: Default::default() });
+        let server = ShardServer::bind_with(
+            "127.0.0.1:0",
+            Arc::clone(&counting) as Arc<dyn DataSource + Send + Sync>,
+            ServeOpts { cache_bytes: 1 << 20, ..ServeOpts::default() },
+        )
+        .unwrap();
+        let addr = server.addr().to_string();
+        let mut buf = Mat::zeros(0, 2);
+        let a = RemoteSource::connect_with(&addr, fast_opts(0)).unwrap();
+        a.read_rows(0, 96, &mut buf).unwrap();
+        let after_first = counting.reads.load(std::sync::atomic::Ordering::Relaxed);
+        assert!(after_first >= 1);
+        // a second client asking for the same chunk grid: every sub-range
+        // frame comes out of the server's LRU — zero new source reads
+        let b = RemoteSource::connect_with(&addr, fast_opts(0)).unwrap();
+        b.read_rows(0, 96, &mut buf).unwrap();
+        let after_second = counting.reads.load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(after_first, after_second, "second client must hit the frame cache");
+        let bits_b = bits(&buf);
+        let mut want = Mat::zeros(0, 2);
+        counting.x.read_rows(0, 96, &mut want).unwrap();
+        assert_eq!(bits_b, bits(&want), "cached frames decode bit-identically");
+    }
+
     #[test]
     fn exhausted_retries_surface_typed_error_and_abort_the_walk() {
         let x = test_mat(80, 2);
-        let always_failing = ServeOpts { fail_reads: usize::MAX };
+        let always_failing = ServeOpts { fail_reads: usize::MAX, ..ServeOpts::default() };
         let server = ShardServer::bind_with("127.0.0.1:0", Arc::new(x), always_failing).unwrap();
         let remote = RemoteSource::connect_with(&server.addr().to_string(), fast_opts(1)).unwrap();
         // direct read: a typed Net error naming the retry budget

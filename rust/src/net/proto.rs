@@ -1,10 +1,13 @@
-//! The `USPEC/1` wire protocol: versioned, length-framed, checksummed.
+//! The `USPEC/1` + `USPEC/2` wire protocol: versioned, length-framed,
+//! checksummed.
 //!
 //! Every message — request or response — is one frame:
 //!
 //! ```text
 //! offset  size  field
-//! 0       1     protocol version  ([`PROTO_VERSION`] = 0x01)
+//! 0       1     protocol version  ([`PROTO_VERSION`] = 0x01, or
+//!                                  [`PROTO_V2`] = 0x02 for frames only a
+//!                                  v2 peer can decode)
 //! 1       1     opcode            (request 0x01..=0x03, response 0x81..)
 //! 2       4     payload length L  (u32, little-endian)
 //! 6       L     payload
@@ -13,31 +16,53 @@
 //!
 //! The checksum covers the header *and* the payload, so a corrupted
 //! length or opcode is caught as reliably as corrupted row data. All
-//! integers are little-endian; row payloads are raw little-endian `f32`
-//! values, row-major — exactly the [`crate::streaming::BinDataset`]
-//! layout, so a served chunk is bit-identical to a local read of the
-//! same rows.
+//! integers are little-endian; plain row payloads are raw little-endian
+//! `f32` values, row-major — exactly the
+//! [`crate::streaming::BinDataset`] layout, so a served chunk is
+//! bit-identical to a local read of the same rows.
 //!
 //! Request opcodes and their payloads:
 //!
 //! | opcode | payload | response |
 //! |---|---|---|
-//! | [`OP_PING`] | empty | [`OP_PONG`], empty |
+//! | [`OP_PING`] | capability bytes (may be empty) | [`OP_PONG`], capability bytes |
 //! | [`OP_META`] | empty | [`OP_META_RESP`], `u64 n, u64 d` |
-//! | [`OP_READ_ROWS`] | `u64 start, u64 len` | [`OP_ROWS`], `len·d` f32 values |
+//! | [`OP_READ_ROWS`] | `u64 start, u64 len[, u8 flags]` | [`OP_ROWS`] or [`OP_ROWS_C`] |
+//!
+//! `USPEC/2` extends `USPEC/1` in three backward-compatible steps (see
+//! [`crate::net`] for the full negotiation/fallback rules):
+//!
+//! * Ping/Pong payloads carry **capability bytes** — a v2 peer includes
+//!   [`PROTO_V2`]; a v1 peer sends/ignores an empty payload.
+//! * A ReadRows request may append one **flags byte**
+//!   ([`FLAG_COMPRESS`]: the client accepts compressed responses). Only
+//!   sent after the server advertised v2 — a v1 server rejects the
+//!   17-byte payload as malformed.
+//! * [`OP_ROWS_C`] answers a flagged ReadRows with a
+//!   [`crate::net::codec`] payload (byte-shuffled + run-length coded
+//!   f32 rows, bit-exactly invertible) in a [`PROTO_V2`] frame. When
+//!   compression would not shrink the payload the server answers with a
+//!   plain [`OP_ROWS`] instead, so the wire never carries a regression.
 //!
 //! Any request the server cannot satisfy (out-of-range rows, unknown
 //! opcode) is answered with [`OP_ERR`] carrying a UTF-8 message; the
 //! client surfaces that as a non-retryable error. Transport failures
-//! (disconnects, timeouts, checksum mismatches) are the retryable class —
-//! see [`crate::net::RemoteSource`].
+//! (disconnects, timeouts, checksum mismatches, malformed compressed
+//! streams) are the retryable class — see [`crate::net::RemoteSource`].
 
 use crate::linalg::Mat;
 use crate::{Error, Result};
 use std::io::{Read, Write};
 
-/// Version byte every frame leads with; a mismatch rejects the frame.
+/// Version byte every baseline frame leads with; an unknown version
+/// rejects the frame.
 pub const PROTO_VERSION: u8 = 0x01;
+/// Version byte on frames only a `USPEC/2` peer can decode (today:
+/// [`OP_ROWS_C`]), and the capability byte advertised in Ping/Pong
+/// payloads. A v1 peer that somehow receives such a frame rejects it at
+/// the framing layer — the designed failure mode if negotiation were
+/// ever bypassed.
+pub const PROTO_V2: u8 = 0x02;
 
 /// Request: liveness check, empty payload.
 pub const OP_PING: u8 = 0x01;
@@ -51,8 +76,15 @@ pub const OP_PONG: u8 = 0x81;
 pub const OP_META_RESP: u8 = 0x82;
 /// Response to [`OP_READ_ROWS`]; payload `len·d` little-endian f32s.
 pub const OP_ROWS: u8 = 0x83;
+/// `USPEC/2` response to a [`FLAG_COMPRESS`]-flagged [`OP_READ_ROWS`];
+/// payload is a [`crate::net::codec`] stream, carried in a [`PROTO_V2`]
+/// frame.
+pub const OP_ROWS_C: u8 = 0x84;
 /// Error response to any request; payload is a UTF-8 message.
 pub const OP_ERR: u8 = 0xFF;
+
+/// ReadRows flags bit: the client accepts [`OP_ROWS_C`] responses.
+pub const FLAG_COMPRESS: u8 = 0x01;
 
 /// Frame header length (version + opcode + payload length).
 pub const HEADER_LEN: usize = 6;
@@ -91,18 +123,36 @@ impl Default for Fnv32 {
     }
 }
 
-/// The 6-byte frame header for `op` with a `payload_len`-byte payload.
-pub(crate) fn frame_header(op: u8, payload_len: usize) -> [u8; HEADER_LEN] {
+/// The 6-byte frame header for `op` with a `payload_len`-byte payload,
+/// stamped with `version`.
+pub(crate) fn frame_header_v(version: u8, op: u8, payload_len: usize) -> [u8; HEADER_LEN] {
     let mut head = [0u8; HEADER_LEN];
-    head[0] = PROTO_VERSION;
+    head[0] = version;
     head[1] = op;
     head[2..6].copy_from_slice(&(payload_len as u32).to_le_bytes());
     head
 }
 
-/// Write one complete frame (header, payload, checksum) and flush.
+/// The 6-byte baseline ([`PROTO_VERSION`]) frame header.
+pub(crate) fn frame_header(op: u8, payload_len: usize) -> [u8; HEADER_LEN] {
+    frame_header_v(PROTO_VERSION, op, payload_len)
+}
+
+/// Write one complete baseline frame (header, payload, checksum) and
+/// flush.
 pub fn write_frame(w: &mut impl Write, op: u8, payload: &[u8]) -> std::io::Result<()> {
-    let head = frame_header(op, payload.len());
+    write_frame_v(w, PROTO_VERSION, op, payload)
+}
+
+/// [`write_frame`] with an explicit version byte — [`PROTO_V2`] for
+/// frames only a negotiated v2 peer may receive.
+pub fn write_frame_v(
+    w: &mut impl Write,
+    version: u8,
+    op: u8,
+    payload: &[u8],
+) -> std::io::Result<()> {
+    let head = frame_header_v(version, op, payload.len());
     let mut sum = Fnv32::new();
     sum.update(&head);
     sum.update(payload);
@@ -112,16 +162,16 @@ pub fn write_frame(w: &mut impl Write, op: u8, payload: &[u8]) -> std::io::Resul
     w.flush()
 }
 
-/// Read one complete frame, enforcing the version byte, a payload cap,
-/// and the trailing checksum. Transport failures surface as
+/// Read one complete frame, enforcing a known version byte, a payload
+/// cap, and the trailing checksum. Transport failures surface as
 /// [`Error::Io`]; malformed frames as [`Error::Net`] — both are the
 /// retryable class for the client.
 pub fn read_frame(r: &mut impl Read, max_payload: usize) -> Result<(u8, Vec<u8>)> {
     let mut head = [0u8; HEADER_LEN];
     r.read_exact(&mut head)?;
-    if head[0] != PROTO_VERSION {
+    if head[0] != PROTO_VERSION && head[0] != PROTO_V2 {
         return Err(Error::Net(format!(
-            "protocol version {:#04x}, want {PROTO_VERSION:#04x}",
+            "protocol version {:#04x}, want {PROTO_VERSION:#04x} or {PROTO_V2:#04x}",
             head[0]
         )));
     }
@@ -147,7 +197,8 @@ pub fn read_frame(r: &mut impl Read, max_payload: usize) -> Result<(u8, Vec<u8>)
     Ok((op, payload))
 }
 
-/// Encode an [`OP_READ_ROWS`] request payload.
+/// Encode a baseline [`OP_READ_ROWS`] request payload (the only form a
+/// v1 server accepts).
 pub fn encode_read_rows(start: u64, len: u64) -> [u8; 16] {
     let mut p = [0u8; 16];
     p[..8].copy_from_slice(&start.to_le_bytes());
@@ -155,14 +206,27 @@ pub fn encode_read_rows(start: u64, len: u64) -> [u8; 16] {
     p
 }
 
-/// Decode an [`OP_READ_ROWS`] request payload.
-pub fn decode_read_rows(payload: &[u8]) -> Result<(u64, u64)> {
-    if payload.len() != 16 {
-        return Err(Error::Net(format!("ReadRows payload {} bytes, want 16", payload.len())));
-    }
+/// Encode a `USPEC/2` [`OP_READ_ROWS`] request payload with a trailing
+/// flags byte ([`FLAG_COMPRESS`]). Send only after the server advertised
+/// [`PROTO_V2`] — a v1 server rejects the 17-byte form.
+pub fn encode_read_rows_v2(start: u64, len: u64, flags: u8) -> [u8; 17] {
+    let mut p = [0u8; 17];
+    p[..16].copy_from_slice(&encode_read_rows(start, len));
+    p[16] = flags;
+    p
+}
+
+/// Decode an [`OP_READ_ROWS`] request payload, either form; the flags
+/// byte decodes as 0 for the 16-byte baseline request.
+pub fn decode_read_rows(payload: &[u8]) -> Result<(u64, u64, u8)> {
+    let flags = match payload.len() {
+        16 => 0,
+        17 => payload[16],
+        n => return Err(Error::Net(format!("ReadRows payload {n} bytes, want 16 or 17"))),
+    };
     let start = u64::from_le_bytes(payload[..8].try_into().unwrap());
-    let len = u64::from_le_bytes(payload[8..].try_into().unwrap());
-    Ok((start, len))
+    let len = u64::from_le_bytes(payload[8..16].try_into().unwrap());
+    Ok((start, len, flags))
 }
 
 /// Encode an [`OP_META_RESP`] payload.
@@ -219,8 +283,10 @@ mod tests {
     fn frame_roundtrip_all_opcodes() {
         for (op, payload) in [
             (OP_PING, Vec::new()),
+            (OP_PING, vec![PROTO_V2]),
             (OP_META, Vec::new()),
             (OP_READ_ROWS, encode_read_rows(7, 13).to_vec()),
+            (OP_READ_ROWS, encode_read_rows_v2(7, 13, FLAG_COMPRESS).to_vec()),
             (OP_ROWS, vec![1u8, 2, 3, 4]),
             (OP_ERR, b"nope".to_vec()),
         ] {
@@ -229,6 +295,12 @@ mod tests {
             let (rop, rpayload) = read_frame(&mut wire.as_slice(), 1 << 20).unwrap();
             assert_eq!((rop, rpayload), (op, payload));
         }
+        // v2-stamped frames read back identically (OP_ROWS_C carrier)
+        let mut wire = Vec::new();
+        write_frame_v(&mut wire, PROTO_V2, OP_ROWS_C, &[5u8, 6, 7]).unwrap();
+        assert_eq!(wire[0], PROTO_V2);
+        let (op, payload) = read_frame(&mut wire.as_slice(), 1 << 20).unwrap();
+        assert_eq!((op, payload), (OP_ROWS_C, vec![5u8, 6, 7]));
     }
 
     #[test]
@@ -265,9 +337,16 @@ mod tests {
 
     #[test]
     fn request_and_meta_payload_roundtrip() {
-        assert_eq!(decode_read_rows(&encode_read_rows(123, 456)).unwrap(), (123, 456));
+        // 16-byte baseline requests decode with flags 0
+        assert_eq!(decode_read_rows(&encode_read_rows(123, 456)).unwrap(), (123, 456, 0));
+        // 17-byte v2 requests carry their flags byte through
+        assert_eq!(
+            decode_read_rows(&encode_read_rows_v2(123, 456, FLAG_COMPRESS)).unwrap(),
+            (123, 456, FLAG_COMPRESS)
+        );
         assert_eq!(decode_meta(&encode_meta(10_000_000, 64)).unwrap(), (10_000_000, 64));
         assert!(decode_read_rows(&[0u8; 15]).is_err());
+        assert!(decode_read_rows(&[0u8; 18]).is_err());
         assert!(decode_meta(&[0u8; 17]).is_err());
     }
 

@@ -1,8 +1,9 @@
 //! The serving side of remote shard execution: a [`ShardServer`] binds a
-//! TCP listener and answers `USPEC/1` frames ([`crate::net::proto`]) for
-//! any shared [`DataSource`] — thread-per-connection on the PR-1 scoped
-//! idiom, so concurrent clients (shard walkers, prefetch readers) each
-//! stream their own row ranges without serializing each other.
+//! TCP listener and answers `USPEC/1` / `USPEC/2` frames
+//! ([`crate::net::proto`]) for any shared [`DataSource`] —
+//! thread-per-connection on the PR-1 scoped idiom, so concurrent clients
+//! (shard walkers, prefetch readers) each stream their own row ranges
+//! without serializing each other.
 //!
 //! The server is deliberately dumb: it owns no clustering logic and no
 //! row-range policy. A client asks for rows `[start, start + len)` and
@@ -12,35 +13,66 @@
 //! Requests the source rejects (out-of-range rows) are answered with an
 //! `OP_ERR` frame carrying the error text — the client maps those to
 //! non-retryable errors, keeping a misbehaving request from looping.
+//!
+//! Two purely operational fast paths ride on top:
+//!
+//! * **Compression** ([`ServeOpts::compress`], default from the
+//!   `USPEC_NET_COMPRESS` knob): the server advertises `USPEC/2` in its
+//!   Pong capability bytes; a request flagged [`FLAG_COMPRESS`] is
+//!   answered with an `OP_ROWS_C` frame ([`crate::net::codec`]:
+//!   byte-shuffled + run-length coded, bit-exactly invertible) whenever
+//!   that is strictly smaller than the raw rows, else with the plain
+//!   frame. Unflagged requests always get plain `OP_ROWS`.
+//! * **An encoded-frame LRU** ([`ServeOpts::cache_bytes`], default off):
+//!   `m` ensemble clients sweeping the same rows reuse one
+//!   read + encode + compress pass instead of `m`. Keyed by
+//!   `(start, len, compressed?)`; sources are immutable for the server's
+//!   lifetime, so a cached frame is exactly what a fresh encode would
+//!   produce.
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::linalg::Mat;
 use crate::pipeline::DataSource;
 use crate::{Error, Result};
 
+use super::cache::ByteLru;
 use super::proto::{
-    decode_read_rows, encode_meta, encode_rows, frame_header, read_frame, write_frame,
-    MAX_REQUEST_PAYLOAD, OP_ERR, OP_META, OP_META_RESP, OP_PING, OP_PONG, OP_READ_ROWS, OP_ROWS,
+    decode_read_rows, encode_meta, encode_rows, frame_header_v, read_frame, write_frame,
+    write_frame_v, FLAG_COMPRESS, MAX_REQUEST_PAYLOAD, OP_ERR, OP_META, OP_META_RESP, OP_PING,
+    OP_PONG, OP_READ_ROWS, OP_ROWS, OP_ROWS_C, PROTO_V2, PROTO_VERSION,
 };
+use super::{net_compress, net_idle_ms};
 
-/// A connection with no complete request inside this window is dropped —
-/// an abandoned client can never pin a handler thread forever.
-const IDLE_TIMEOUT: Duration = Duration::from_secs(60);
-
-/// Serving options. The only knob is a fault-injection hook for the
-/// retry-path tests; production servers use [`ServeOpts::default`].
-#[derive(Debug, Clone, Copy, Default)]
+/// Serving options; production servers use [`ServeOpts::default`].
+#[derive(Debug, Clone, Copy)]
 pub struct ServeOpts {
     /// Chaos hook: answer the first `fail_reads` row requests (across all
     /// connections) with a deliberately truncated frame followed by an
     /// abrupt disconnect — the mid-stream failure mode the client's
     /// retry loop must absorb. 0 (the default) serves faithfully.
     pub fail_reads: usize,
+    /// Encoded-frame LRU budget in bytes; 0 (the default) disables the
+    /// cache. Wired from `repro serve-shard --cache BYTES`.
+    pub cache_bytes: usize,
+    /// Advertise `USPEC/2` and compress flagged row responses. Defaults
+    /// to the `USPEC_NET_COMPRESS` env knob (on unless set to `0`).
+    pub compress: bool,
 }
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts { fail_reads: 0, cache_bytes: 0, compress: net_compress() }
+    }
+}
+
+/// The encoded-frame cache: `(start, len, compressed?)` → the exact
+/// `(version, opcode, payload)` a fresh encode would produce. `Arc`'d so
+/// concurrent handler threads share one copy of each payload.
+type FrameCache = Mutex<ByteLru<(u64, u64, bool), (u8, u8, Arc<Vec<u8>>)>>;
 
 /// A running shard server: a bound listener plus its accept thread.
 /// Dropping the server shuts it down (the accept loop is woken and
@@ -73,6 +105,8 @@ impl ShardServer {
             .map_err(|e| Error::Net(format!("bind {addr}: no local addr: {e}")))?;
         let shutdown = Arc::new(AtomicBool::new(false));
         let fail_budget = Arc::new(AtomicUsize::new(opts.fail_reads));
+        let cache: Option<Arc<FrameCache>> = (opts.cache_bytes > 0)
+            .then(|| Arc::new(Mutex::new(ByteLru::new(opts.cache_bytes))));
         let stop = Arc::clone(&shutdown);
         let accept = std::thread::spawn(move || {
             for conn in listener.incoming() {
@@ -82,10 +116,13 @@ impl ShardServer {
                 let Ok(conn) = conn else { continue };
                 let src = Arc::clone(&source);
                 let budget = Arc::clone(&fail_budget);
+                let cache = cache.clone();
                 // Handlers are detached: each lives exactly as long as its
                 // connection (EOF, error, or idle timeout ends it), and the
                 // shared state they hold is Arc'd.
-                std::thread::spawn(move || handle(conn, &*src, &budget));
+                std::thread::spawn(move || {
+                    handle(conn, &*src, &budget, opts, cache.as_deref())
+                });
             }
         });
         Ok(ShardServer { addr: local, shutdown, accept: Some(accept) })
@@ -118,30 +155,43 @@ impl Drop for ShardServer {
     }
 }
 
-/// Serve one connection until EOF, an I/O error, or the idle timeout.
-fn handle(mut conn: TcpStream, source: &dyn DataSource, fail_budget: &AtomicUsize) {
+/// Serve one connection until EOF, an I/O error, or the idle timeout
+/// (`USPEC_NET_IDLE_MS`; a connection with no complete request inside
+/// the window is dropped — an abandoned client can never pin a handler
+/// thread forever).
+fn handle(
+    mut conn: TcpStream,
+    source: &dyn DataSource,
+    fail_budget: &AtomicUsize,
+    opts: ServeOpts,
+    cache: Option<&FrameCache>,
+) {
+    let idle = Duration::from_millis(net_idle_ms().max(1));
     let _ = conn.set_nodelay(true);
-    let _ = conn.set_read_timeout(Some(IDLE_TIMEOUT));
-    let _ = conn.set_write_timeout(Some(IDLE_TIMEOUT));
+    let _ = conn.set_read_timeout(Some(idle));
+    let _ = conn.set_write_timeout(Some(idle));
     let (n, d) = (source.n(), source.d());
+    // Pong capability bytes: advertise USPEC/2 iff this server will
+    // honor FLAG_COMPRESS (a v1 client ignores the payload entirely).
+    let caps: &[u8] = if opts.compress { &[PROTO_V2] } else { &[] };
     let mut buf = Mat::zeros(0, d);
     loop {
         // Requests are tiny; a frame claiming more is corrupt or hostile
         // and ends the connection (the client will retry on a fresh one).
         let Ok((op, payload)) = read_frame(&mut conn, MAX_REQUEST_PAYLOAD) else { return };
         let ok = match op {
-            OP_PING => write_frame(&mut conn, OP_PONG, &[]).is_ok(),
+            OP_PING => write_frame(&mut conn, OP_PONG, caps).is_ok(),
             OP_META => {
                 write_frame(&mut conn, OP_META_RESP, &encode_meta(n as u64, d as u64)).is_ok()
             }
             OP_READ_ROWS => {
-                let reply = serve_rows(&payload, source, n, d, &mut buf);
+                let reply = serve_rows(&payload, source, n, d, &mut buf, opts.compress, cache);
                 match reply {
-                    Ok(rows_payload) => {
+                    Ok((version, rop, rows_payload)) => {
                         if chaos_strike(fail_budget) {
                             // Injected mid-stream failure: a correct header,
                             // half the payload, then a severed connection.
-                            let head = frame_header(OP_ROWS, rows_payload.len());
+                            let head = frame_header_v(version, rop, rows_payload.len());
                             let _ = std::io::Write::write_all(&mut conn, &head);
                             let _ = std::io::Write::write_all(
                                 &mut conn,
@@ -150,7 +200,7 @@ fn handle(mut conn: TcpStream, source: &dyn DataSource, fail_budget: &AtomicUsiz
                             let _ = std::io::Write::flush(&mut conn);
                             return;
                         }
-                        write_frame(&mut conn, OP_ROWS, &rows_payload).is_ok()
+                        write_frame_v(&mut conn, version, rop, &rows_payload).is_ok()
                     }
                     Err(e) => write_frame(&mut conn, OP_ERR, e.to_string().as_bytes()).is_ok(),
                 }
@@ -169,15 +219,19 @@ fn handle(mut conn: TcpStream, source: &dyn DataSource, fail_budget: &AtomicUsiz
 }
 
 /// Validate and execute one row request; any `Err` becomes an `OP_ERR`
-/// frame (the non-retryable class on the client).
+/// frame (the non-retryable class on the client). Returns the frame to
+/// send: `(version, opcode, payload)` — compressed when the client asked
+/// for it, compression is enabled, and it actually shrinks the bytes.
 fn serve_rows(
     payload: &[u8],
     source: &dyn DataSource,
     n: usize,
     d: usize,
     buf: &mut Mat,
-) -> Result<Vec<u8>> {
-    let (start, len) = decode_read_rows(payload)?;
+    compress_ok: bool,
+    cache: Option<&FrameCache>,
+) -> Result<(u8, u8, Arc<Vec<u8>>)> {
+    let (start, len, flags) = decode_read_rows(payload)?;
     let end = start.checked_add(len).ok_or_else(|| {
         Error::InvalidArg(format!("rows [{start}, start+{len}) overflows"))
     })?;
@@ -194,8 +248,30 @@ fn serve_rows(
             "rows [{start}, {end}): payload {bytes} bytes exceeds the u32 frame limit"
         )));
     }
+    let want_compress = compress_ok && flags & FLAG_COMPRESS != 0;
+    let key = (start, len, want_compress);
+    if let Some(cache) = cache {
+        if let Some(hit) = lock_cache(cache).get(&key) {
+            return Ok(hit.clone());
+        }
+    }
     source.read_rows(start as usize, len as usize, buf)?;
-    Ok(encode_rows(buf))
+    let raw = encode_rows(buf);
+    let reply = match want_compress.then(|| super::codec::compress(&raw)).flatten() {
+        Some(comp) => (PROTO_V2, OP_ROWS_C, Arc::new(comp)),
+        None => (PROTO_VERSION, OP_ROWS, Arc::new(raw)),
+    };
+    if let Some(cache) = cache {
+        let weight = reply.2.len();
+        lock_cache(cache).insert(key, reply.clone(), weight);
+    }
+    Ok(reply)
+}
+
+fn lock_cache(
+    cache: &FrameCache,
+) -> std::sync::MutexGuard<'_, ByteLru<(u64, u64, bool), (u8, u8, Arc<Vec<u8>>)>> {
+    cache.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 /// Consume one failure token if any remain (the `fail_reads` chaos hook).

@@ -90,11 +90,19 @@ pub struct ExecOpts {
     /// prefetch depth follow the profile ([`StorageProfile::Auto`]
     /// probes the source on first sharded walk; see `pipeline::shard`).
     pub storage: StorageProfile,
+    /// Decoded-chunk LRU budget in bytes for remote sources (0 — the
+    /// default — disables caching). The pipeline itself never constructs
+    /// sources, so this is a *wiring* knob: the CLI passes it into
+    /// [`crate::net::NetOpts::cache_bytes`] when it connects a
+    /// `remote://` source, and the streaming peak model charges it.
+    /// Purely operational — repeat sweeps (U-SENC's `1 + m` passes) hit
+    /// memory instead of the wire, bit-identically.
+    pub net_cache: usize,
 }
 
 impl Default for ExecOpts {
     fn default() -> Self {
-        ExecOpts { chunk: DEFAULT_CHUNK, shards: 1, storage: StorageProfile::Auto }
+        ExecOpts { chunk: DEFAULT_CHUNK, shards: 1, storage: StorageProfile::Auto, net_cache: 0 }
     }
 }
 

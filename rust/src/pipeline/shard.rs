@@ -170,7 +170,10 @@ const PARALLEL_PREFETCH_DEPTH: usize = 2;
 const SERIAL_MAX_WALKERS: usize = 2;
 /// Prefetch depth on remote storage: each read pays a network round-trip,
 /// so a deep in-flight queue keeps the link busy across compute bursts.
-const REMOTE_PREFETCH_DEPTH: usize = 6;
+/// Public because the remote client's request pipelining
+/// ([`crate::net::client::PIPELINE_DEPTH`]) matches this depth — the
+/// wire keeps as many frames in flight as the prefetch queue it feeds.
+pub const REMOTE_PREFETCH_DEPTH: usize = 6;
 /// Walker cap on remote storage: like a spindle, one TCP link serializes;
 /// a second walker overlaps shard tails, more only contend.
 const REMOTE_MAX_WALKERS: usize = 2;

@@ -213,6 +213,11 @@ pub struct StreamParams {
     /// Storage profile hint for the walk planner (`Auto` probes the
     /// source once per sharded pass). Operational only, like `shards`.
     pub storage: StorageProfile,
+    /// Decoded-chunk LRU budget in bytes the caller gave its remote
+    /// source ([`crate::net::NetOpts::cache_bytes`]); 0 = no cache. The
+    /// peak model charges it — the cache is resident memory traded for
+    /// wire round-trips, so the budget must show up in the N/A model.
+    pub net_cache: usize,
     /// U-SPEC hyper-parameters (p, K, k, solver, ...). Random and hybrid
     /// selection sweep the disk; k-means-full needs resident data and is
     /// rejected for on-disk sources.
@@ -225,6 +230,7 @@ impl Default for StreamParams {
             chunk: crate::pipeline::DEFAULT_CHUNK,
             shards: 1,
             storage: StorageProfile::Auto,
+            net_cache: 0,
             base: UspecParams::default(),
         }
     }
@@ -257,12 +263,15 @@ pub fn reservoir_sample(ds: &BinDataset, size: usize, chunk: usize, seed: u64) -
 /// ([`DataSource::storage_hint`], e.g. a remote source) pins the buffer
 /// count to that profile's walk shape; since an `Auto` run over an
 /// unhinted source resolves its profile only at walk time, the model
-/// then takes the max over the profiles the planner can pick.
+/// then takes the max over the profiles the planner can pick. A
+/// non-zero `net_cache` (the remote decoded-chunk LRU budget) is
+/// charged in full: the LRU fills to its budget on any multi-pass run.
 fn peak_model(
     n: usize,
     d: usize,
     chunk: usize,
     shards: usize,
+    net_cache: usize,
     base: &UspecParams,
     hint: Option<StorageProfile>,
 ) -> u64 {
@@ -280,6 +289,7 @@ fn peak_model(
         + (chunk_bufs * chunk * d) as u64 * 4
         + (base.p * d) as u64 * 4
         + (n * base.k) as u64 * 4
+        + net_cache as u64
 }
 
 /// Out-of-core U-SPEC over any non-resident source — an on-disk
@@ -293,11 +303,22 @@ pub fn stream_uspec(
     backend: &dyn DistanceBackend,
 ) -> Result<StreamResult> {
     let base = params.base.clamped(ds.n());
-    let opts =
-        ExecOpts { chunk: params.chunk, shards: params.shards, storage: params.storage };
+    let opts = ExecOpts {
+        chunk: params.chunk,
+        shards: params.shards,
+        storage: params.storage,
+        net_cache: params.net_cache,
+    };
     let res = Pipeline::new(backend).with_opts(opts).run(ds, &base, seed)?;
-    let peak_bytes =
-        peak_model(ds.n(), ds.d(), params.chunk, params.shards, &base, ds.storage_hint());
+    let peak_bytes = peak_model(
+        ds.n(),
+        ds.d(),
+        params.chunk,
+        params.shards,
+        params.net_cache,
+        &base,
+        ds.storage_hint(),
+    );
     Ok(StreamResult { labels: res.labels, peak_bytes, timer: res.timer })
 }
 

@@ -14,7 +14,7 @@ use std::sync::Mutex;
 use uspec::affinity::NativeBackend;
 use uspec::data::synthetic::two_moons;
 use uspec::linalg::{set_simd_override, Mat};
-use uspec::net::{RemoteSource, ShardServer};
+use uspec::net::{NetOpts, RemoteSource, ServeOpts, ShardServer};
 use uspec::pipeline::{DataSource, ExecOpts, Pipeline, SegmentedSource, StorageProfile};
 use uspec::streaming::{stream_usenc, BinDataset};
 use uspec::usenc::{usenc, UsencParams};
@@ -156,7 +156,7 @@ fn sharded_run_keeps_chunked_residency_and_total_reads() {
     // Pin the Parallel profile: the exact read bounds below assume no
     // probe reads (an Auto run adds up to 4 of them — see the probe test).
     let pipe = Pipeline::new(&NativeBackend)
-        .with_opts(ExecOpts { chunk, shards, storage: StorageProfile::Parallel });
+        .with_opts(ExecOpts { chunk, shards, storage: StorageProfile::Parallel, net_cache: 0 });
     let res = pipe.run(&tracked, &params, 51).unwrap();
     assert_eq!(res.labels.len(), bin.n());
 
@@ -195,7 +195,7 @@ fn auto_probe_adds_at_most_four_chunk_reads() {
         reads: AtomicUsize::new(0),
     };
     let pipe = Pipeline::new(&NativeBackend)
-        .with_opts(ExecOpts { chunk, shards, storage: StorageProfile::Auto });
+        .with_opts(ExecOpts { chunk, shards, storage: StorageProfile::Auto, net_cache: 0 });
     let res = pipe.run(&tracked, &params, 51).unwrap();
     assert_eq!(res.labels.len(), bin.n());
 
@@ -258,6 +258,95 @@ fn uspec_bit_identical_across_local_mixed_remote_backings() {
             }
         }
     }
+}
+
+/// The remote fast path is operational end to end: wire compression
+/// (`USPEC/2`) and the chunk caches on either side change bytes moved,
+/// never results. One dataset, one all-local baseline, then every
+/// {compress on/off} × {client cache on/off + server frame cache} ×
+/// thread-count {1, 8} combination over a loopback endpoint must
+/// reproduce labels, sigma, and embedding bit-exactly. Opts are set
+/// explicitly (not via env) so the CI `USPEC_NET_COMPRESS=0` legs still
+/// exercise both codec states.
+#[test]
+fn uspec_bit_identical_remote_compress_cache_matrix() {
+    let _g = lock();
+    let _restore = OverrideGuard;
+    let ds = two_moons(1200, 0.06, 47);
+    let bin = BinDataset::write_mat(&tmp("eq_fastpath.bin"), &ds.x).unwrap();
+    let params = UspecParams { k: 2, p: 120, ..Default::default() };
+    let opts = ExecOpts { chunk: 256, shards: 3, ..ExecOpts::default() };
+    let pipe = Pipeline::new(&NativeBackend).with_opts(opts);
+    let local = pipe.run(&bin, &params, 77).unwrap();
+    let local_emb: Vec<u32> = local.embedding.data.iter().map(|v| v.to_bits()).collect();
+    for compress in [false, true] {
+        for cache in [0usize, 1 << 20] {
+            let served = BinDataset::open(&tmp("eq_fastpath.bin")).unwrap();
+            let server = ShardServer::bind_with(
+                "127.0.0.1:0",
+                std::sync::Arc::new(served),
+                ServeOpts { cache_bytes: cache, compress, ..Default::default() },
+            )
+            .unwrap();
+            let addr = server.addr().to_string();
+            for nt in [1usize, 8] {
+                par::set_thread_override(nt);
+                let remote = RemoteSource::connect_with(
+                    &addr,
+                    NetOpts { cache_bytes: cache, compress, ..NetOpts::default() },
+                )
+                .unwrap();
+                assert_eq!(remote.peer_v2(), compress, "negotiation at compress={compress}");
+                let run = pipe.run(&remote, &params, 77).unwrap();
+                let tag = format!("compress={compress} cache={cache} nt={nt}");
+                assert_eq!(run.labels, local.labels, "labels changed at {tag}");
+                assert_eq!(run.sigma.to_bits(), local.sigma.to_bits(), "sigma at {tag}");
+                let emb: Vec<u32> = run.embedding.data.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(emb, local_emb, "embedding changed at {tag}");
+            }
+        }
+    }
+}
+
+/// Out-of-core U-SENC over the full remote fast path (pipelining +
+/// compression + both caches on): the m base sweeps re-read the same
+/// chunk grid, so the decoded-chunk cache carries most passes — and the
+/// consensus must still be the in-memory run, bit for bit.
+#[test]
+fn usenc_stream_remote_fast_path_matches_in_memory() {
+    let _g = lock();
+    let ds = two_moons(800, 0.06, 48);
+    let bin = BinDataset::write_mat(&tmp("eq_fastpath_usenc.bin"), &ds.x).unwrap();
+    let params = UsencParams {
+        k: 2,
+        m: 5,
+        k_min: 4,
+        k_max: 9,
+        base: UspecParams { p: 80, ..Default::default() },
+    };
+    let mem = usenc(&ds.x, &params, 13, &NativeBackend).unwrap();
+    let server = ShardServer::bind_with(
+        "127.0.0.1:0",
+        std::sync::Arc::new(bin),
+        ServeOpts { cache_bytes: 1 << 20, compress: true, ..Default::default() },
+    )
+    .unwrap();
+    let remote = RemoteSource::connect_with(
+        &server.addr().to_string(),
+        NetOpts { cache_bytes: 1 << 20, compress: true, ..NetOpts::default() },
+    )
+    .unwrap();
+    assert!(remote.peer_v2());
+    let opts = ExecOpts { chunk: 300, shards: 2, net_cache: 1 << 20, ..ExecOpts::default() };
+    let streamed = stream_usenc(&remote, &params, opts, 13, &NativeBackend).unwrap();
+    assert_eq!(mem.labels, streamed.labels, "consensus diverged over the fast path");
+    assert_eq!(
+        mem.ensemble.labelings, streamed.ensemble.labelings,
+        "base clusterings diverged over the fast path"
+    );
+    let (hits, misses) = remote.cache_stats();
+    assert!(hits > 0, "m={} sweeps never reused a decoded chunk", params.m);
+    assert!(misses > 0, "first pass must miss");
 }
 
 /// Forcing the scalar kernel tiles (`USPEC_SIMD=0` / `set_simd_override`)
