@@ -56,7 +56,13 @@ emits `BENCH_hotpath.json` at the repo root in the same schema:
   lossless/bit-identity contracts live in the Rust tests.
 
 Pass ``--smoke`` for a fast CI sanity run (smaller shapes, fewer
-iterations, same schema).
+iterations, same schema). ``--smoke`` is also the CI bench-regression
+gate: the fresh run is compared per-section against the committed
+``BENCH_hotpath.json`` (geometric mean of the higher-is-better
+``speedup``/``ratio`` fields) and the process exits nonzero when any
+section lands below 75% of its committed aggregate. Incomparable
+baselines (different mode/harness, metric-less sections) are skipped
+loudly, never failed.
 
 When a Rust toolchain is available, `cargo bench --bench micro_hotpath`
 overwrites this file with natively measured numbers (``harness`` tells
@@ -858,8 +864,91 @@ def bench_shard_sweep(smoke=False):
     return rows
 
 
+# -------------------------------------------------------- regression gate
+# `--smoke` doubles as the CI bench gate: the fresh run is compared
+# against the committed BENCH_hotpath.json and the process exits nonzero
+# when any section's higher-is-better aggregate regresses by more than
+# 25%. The new report is still written first, so the uploaded artifact
+# always reflects the run that was judged.
+GATE_THRESHOLD = 0.75
+
+
+def collect_gate_metric(section):
+    """Geometric mean of every higher-is-better field (a name containing
+    'speedup', or 'ratio') across a section's rows; None when the section
+    has no such fields (e.g. chunk_sweep reports only overheads)."""
+    rows = []
+    if isinstance(section, dict):
+        for v in section.values():
+            if isinstance(v, list):
+                rows.extend(r for r in v if isinstance(r, dict))
+    elif isinstance(section, list):
+        rows = [r for r in section if isinstance(r, dict)]
+    vals = []
+    for r in rows:
+        for key, v in r.items():
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                continue
+            if ("speedup" in key or key == "ratio") and v > 0:
+                vals.append(float(v))
+    if not vals:
+        return None
+    return float(np.exp(np.mean(np.log(vals))))
+
+
+def gate_against_baseline(report, baseline):
+    """Per-section comparison vs the committed report; returns the list
+    of regressed section names. Incomparable baselines (different mode or
+    harness, missing or metric-less sections) are skipped loudly, never
+    failed — the gate only judges like against like."""
+    if not baseline:
+        print("[gate] no committed BENCH_hotpath.json — gate skipped")
+        return []
+    if (baseline.get("mode"), baseline.get("harness")) != (
+        report.get("mode"),
+        report.get("harness"),
+    ):
+        print(
+            f"[gate] baseline is {baseline.get('harness')}/{baseline.get('mode')}, "
+            f"this run is {report.get('harness')}/{report.get('mode')} — gate skipped"
+        )
+        return []
+    failures = []
+    for name in (
+        "pool_dispatch",
+        "sq_dists",
+        "simd_dispatch",
+        "eig",
+        "argmin_k",
+        "chunk_sweep",
+        "shard_sweep",
+        "net",
+    ):
+        old = collect_gate_metric(baseline.get(name))
+        new = collect_gate_metric(report.get(name))
+        if old is None or new is None:
+            print(f"[gate] {name}: no comparable higher-is-better metrics — skipped")
+            continue
+        ok = new >= GATE_THRESHOLD * old
+        print(
+            f"[gate] {name}: baseline {old:.2f} -> current {new:.2f} "
+            f"({new / old:.0%}) {'ok' if ok else 'REGRESSION (<75%)'}"
+        )
+        if not ok:
+            failures.append(name)
+    return failures
+
+
 def main():
     smoke = "--smoke" in sys.argv[1:]
+    baseline_path = os.path.join(REPO_ROOT, "BENCH_hotpath.json")
+    baseline = None
+    if smoke and os.path.exists(baseline_path):
+        try:
+            with open(baseline_path) as f:
+                baseline = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"[gate] unreadable baseline ({e}) — gate skipped")
     report = {
         "harness": "python-mirror",
         "mode": "smoke" if smoke else "full",
@@ -878,11 +967,15 @@ def main():
         "shard_sweep": bench_shard_sweep(smoke),
         "net": bench_net(smoke),
     }
-    path = os.path.join(REPO_ROOT, "BENCH_hotpath.json")
-    with open(path, "w") as f:
+    with open(baseline_path, "w") as f:
         json.dump(report, f, indent=2)
         f.write("\n")
-    print(f"[saved {path}]")
+    print(f"[saved {baseline_path}]")
+    if smoke:
+        failures = gate_against_baseline(report, baseline)
+        if failures:
+            print(f"[gate] FAILED: {', '.join(failures)} regressed >25% vs the committed report")
+            sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -18,7 +18,9 @@ USAGE:
 
 COMMANDS:
   datasets                      print the Table 3 inventory
-  gen-data --dataset D --out F  generate a benchmark dataset as CSV
+  gen-data --dataset D --out F  generate a benchmark dataset (CSV, or
+                                the USPECB01 binary form when --out
+                                ends in .bin)
   cluster  --dataset D --method M
                                 run one method, print NMI/CA/ARI/time
   table    --id tN              regenerate a paper table (t3..t16, fig1/3/5)
@@ -39,6 +41,29 @@ COMMANDS:
                                 remote stream walkers over TCP (port 0
                                 picks an ephemeral port); --cache keeps
                                 an LRU of encoded reply frames
+  serve    --addr H:P --models_dir DIR [--queue N]
+                                clustering-as-a-service daemon: accepts
+                                SubmitFit/JobStatus/Assign/ListModels
+                                over USPEC/2; fitted models persist as
+                                artifacts under --models_dir (loaded
+                                back at startup); --queue bounds the
+                                fit-job backlog [16]
+  fit      --data F.bin --out model.bin [--method u-spec|u-senc]
+                                fit locally and save a model artifact
+  submit-fit --addr H:P --data F.bin [--method ...]
+                                enqueue a fit on a serve daemon (--data
+                                is the server-visible path); prints the
+                                job id
+  job-status --addr H:P --job N [--wait SECS]
+                                poll one job; --wait blocks until done/
+                                failed (nonzero exit on failure)
+  assign   --data F.bin (--model ID --addr H:P | --model_file F)
+                                [--out labels.txt]
+                                label out-of-sample rows with a fitted
+                                model — remotely against a serve daemon
+                                or locally from an artifact file;
+                                bit-identical either way
+  list-models --addr H:P        enumerate a serve daemon's registry
   info                          print config + artifact status
 
 COMMON FLAGS (any config key):
@@ -104,7 +129,8 @@ pub fn parse(args: &[String]) -> Result<Invocation> {
             .ok_or_else(|| Error::Config(format!("--{key} needs a value")))?;
         match key {
             "config" => {}
-            "id" | "out" | "k_max" | "data" | "addr" | "cache" => {
+            "id" | "out" | "k_max" | "data" | "addr" | "cache" | "model" | "model_file"
+            | "job" | "wait" | "models_dir" | "queue" => {
                 extra.insert(key.to_string(), value.clone());
             }
             _ => cfg.set(key, value)?,
@@ -112,6 +138,28 @@ pub fn parse(args: &[String]) -> Result<Invocation> {
         i += 2;
     }
     Ok(Invocation { command, cfg, extra })
+}
+
+/// A required `--key value` extra, or a typed config error.
+fn require<'a>(inv: &'a Invocation, key: &str, msg: &str) -> Result<&'a str> {
+    inv.extra.get(key).map(String::as_str).ok_or_else(|| Error::Config(msg.into()))
+}
+
+/// An optional numeric extra with a default; non-numeric values are a
+/// typed config error, not a silent fallback.
+fn parse_extra<T: std::str::FromStr>(inv: &Invocation, key: &str, default: T) -> Result<T> {
+    match inv.extra.get(key) {
+        Some(v) => v
+            .parse()
+            .map_err(|_| Error::Config(format!("--{key} wants a number, got '{v}'"))),
+        None => Ok(default),
+    }
+}
+
+/// A required numeric extra.
+fn parse_extra_req<T: std::str::FromStr>(inv: &Invocation, key: &str, msg: &str) -> Result<T> {
+    let v = require(inv, key, msg)?;
+    v.parse().map_err(|_| Error::Config(format!("--{key} wants a number, got '{v}'")))
 }
 
 /// Resolve a dataset name (benchmark or CSV path).
@@ -157,7 +205,13 @@ pub fn execute(inv: Invocation) -> Result<String> {
                 .extra
                 .get("out")
                 .ok_or_else(|| Error::Config("gen-data needs --out FILE".into()))?;
-            loader::save_csv(&ds, Path::new(out))?;
+            // a .bin target writes the streaming/serving USPECB01 form
+            // (features only); anything else writes labeled CSV
+            if Path::new(out).extension().map(|e| e == "bin").unwrap_or(false) {
+                crate::streaming::BinDataset::write_mat(Path::new(out), &ds.x)?;
+            } else {
+                loader::save_csv(&ds, Path::new(out))?;
+            }
             Ok(format!("wrote {} ({} × {}, k={}) to {}", ds.name, ds.n(), ds.d(), ds.k, out))
         }
         "cluster" => {
@@ -316,6 +370,130 @@ pub fn execute(inv: Invocation) -> Result<String> {
             println!("serving {data} (n={n}, d={d}) on {} — ctrl-c to stop", server.addr());
             server.join()?;
             Ok(String::new())
+        }
+        "serve" => {
+            // Foreground job manager: bind, load the model registry,
+            // serve fits and assignment queries until killed.
+            let addr = require(&inv, "addr", "serve needs --addr host:port")?;
+            let models_dir = require(&inv, "models_dir", "serve needs --models_dir DIR")?;
+            let queue = parse_extra(&inv, "queue", 16usize)?;
+            let rt = crate::net::ServeRuntime::bind(
+                addr,
+                crate::net::ServeConfig {
+                    models_dir: std::path::PathBuf::from(models_dir),
+                    queue_depth: queue,
+                },
+            )?;
+            println!(
+                "serving models from {models_dir} on {} ({} loaded, queue depth {queue}) — ctrl-c to stop",
+                rt.addr(),
+                rt.model_ids().len()
+            );
+            rt.join()?;
+            Ok(String::new())
+        }
+        "fit" => {
+            // Local fit → model artifact, the offline twin of submit-fit.
+            let data = require(&inv, "data", "fit needs --data FILE.bin")?;
+            let out = require(&inv, "out", "fit needs --out MODEL_FILE")?;
+            let spec = crate::config::FitSpec::from_config(&inv.cfg, data);
+            let model = crate::net::serve::fit_model(&spec)?;
+            crate::runtime::save_model(Path::new(out), &model)?;
+            Ok(format!(
+                "fitted {} model (k={}, d={}) from {data}, saved to {out}\n",
+                model.kind(),
+                model.k(),
+                model.d()
+            ))
+        }
+        "submit-fit" => {
+            let addr = require(&inv, "addr", "submit-fit needs --addr host:port")?;
+            let data = require(&inv, "data", "submit-fit needs --data FILE.bin (server-visible)")?;
+            let spec = crate::config::FitSpec::from_config(&inv.cfg, data);
+            spec.validate()?;
+            let mut client = crate::net::ServeClient::connect(addr)?;
+            let job = client.submit_fit(&spec)?;
+            Ok(format!("{job}\n"))
+        }
+        "job-status" => {
+            let addr = require(&inv, "addr", "job-status needs --addr host:port")?;
+            let job: u64 = parse_extra_req(&inv, "job", "job-status needs --job N")?;
+            let mut client = crate::net::ServeClient::connect(addr)?;
+            match inv.extra.get("wait") {
+                Some(w) => {
+                    let secs: u64 = w.parse().map_err(|_| {
+                        Error::Config(format!("--wait wants seconds, got '{w}'"))
+                    })?;
+                    let model =
+                        client.wait_for(job, std::time::Duration::from_secs(secs))?;
+                    Ok(format!("job {job} done: model {model}\n"))
+                }
+                None => {
+                    let r = client.job_status(job)?;
+                    let detail = match (&r.model, &r.error) {
+                        (Some(m), _) => format!(" model {m}"),
+                        (None, Some(e)) => format!(" error: {e}"),
+                        (None, None) => String::new(),
+                    };
+                    Ok(format!("job {job} {}{detail}\n", r.status))
+                }
+            }
+        }
+        "assign" => {
+            // Label out-of-sample rows: remotely (--model + --addr)
+            // against a serve daemon, or locally (--model_file) from an
+            // artifact. Both paths are bit-identical by construction.
+            let data = require(&inv, "data", "assign needs --data FILE.bin")?;
+            let bin = crate::streaming::BinDataset::open(Path::new(data))?;
+            let labels = match (inv.extra.get("model"), inv.extra.get("model_file")) {
+                (Some(model_id), None) => {
+                    let addr = require(&inv, "addr", "remote assign needs --addr host:port")?;
+                    let mut rows = crate::linalg::Mat::zeros(0, 0);
+                    use crate::pipeline::DataSource;
+                    bin.read_rows(0, bin.n(), &mut rows)?;
+                    let mut client = crate::net::ServeClient::connect(addr)?;
+                    client.assign(model_id, &rows)?
+                }
+                (None, Some(model_file)) => {
+                    let model = crate::runtime::load_model(Path::new(model_file))?;
+                    let pipe = crate::pipeline::Pipeline::new(&crate::affinity::NativeBackend);
+                    match &model {
+                        crate::runtime::Model::Uspec(m) => pipe.assign(m, &bin)?,
+                        crate::runtime::Model::Usenc(m) => pipe.assign_consensus(m, &bin)?,
+                    }
+                }
+                _ => {
+                    return Err(Error::Config(
+                        "assign needs exactly one of --model ID (with --addr) or --model_file F"
+                            .into(),
+                    ))
+                }
+            };
+            let mut text = String::with_capacity(labels.len() * 3);
+            for l in &labels {
+                text.push_str(&l.to_string());
+                text.push('\n');
+            }
+            match inv.extra.get("out") {
+                Some(out) => {
+                    std::fs::write(out, &text)?;
+                    Ok(format!("wrote {} labels to {out}\n", labels.len()))
+                }
+                None => Ok(text),
+            }
+        }
+        "list-models" => {
+            let addr = require(&inv, "addr", "list-models needs --addr host:port")?;
+            let mut client = crate::net::ServeClient::connect(addr)?;
+            let models = client.list_models()?;
+            if models.is_empty() {
+                return Ok("no models registered\n".into());
+            }
+            let mut out = String::new();
+            for m in models {
+                out.push_str(&format!("{}  kind={} k={} d={}\n", m.id, m.kind, m.k, m.d));
+            }
+            Ok(out)
         }
         other => Err(Error::Config(format!("unknown command '{other}'\n\n{USAGE}"))),
     }
@@ -567,6 +745,84 @@ mod tests {
             matches!(err, Error::Net(_) | Error::Io(_)),
             "want a transport error, got {err}"
         );
+    }
+
+    #[test]
+    fn serve_and_assign_flag_validation() {
+        let err = execute(parse(&argv("serve --addr 127.0.0.1:0")).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("--models_dir"), "{err}");
+        let err = execute(parse(&argv("serve --models_dir /tmp/x")).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("--addr"), "{err}");
+        // --queue is validated before binding anything
+        let err = execute(
+            parse(&argv("serve --addr 127.0.0.1:0 --models_dir /tmp/x --queue many")).unwrap(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("--queue"), "{err}");
+        // assign demands exactly one model source
+        let err = execute(parse(&argv("assign --data x.bin")).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("exactly one"), "{err}");
+        let err = execute(parse(&argv("job-status --addr 127.0.0.1:1 --job soon")).unwrap())
+            .unwrap_err();
+        assert!(err.to_string().contains("--job"), "{err}");
+    }
+
+    #[test]
+    fn fit_and_assign_locally_end_to_end() {
+        let ds = crate::data::synthetic::two_moons(400, 0.05, 3);
+        let pid = std::process::id();
+        let data = std::env::temp_dir().join(format!("uspec_cli_fit_{pid}.bin"));
+        let model = std::env::temp_dir().join(format!("uspec_cli_fit_{pid}.uspecmdl"));
+        let labels_out = std::env::temp_dir().join(format!("uspec_cli_fit_{pid}.txt"));
+        crate::streaming::BinDataset::write_mat(&data, &ds.x).unwrap();
+
+        let out = execute(
+            parse(&argv(&format!(
+                "fit --data {} --out {} --k 2 --p 80 --seed 9",
+                data.display(),
+                model.display()
+            )))
+            .unwrap(),
+        )
+        .unwrap();
+        assert!(out.contains("fitted uspec model"), "{out}");
+
+        // stdout labels == --out labels == in-process assign
+        let inline = execute(
+            parse(&argv(&format!(
+                "assign --data {} --model_file {}",
+                data.display(),
+                model.display()
+            )))
+            .unwrap(),
+        )
+        .unwrap();
+        execute(
+            parse(&argv(&format!(
+                "assign --data {} --model_file {} --out {}",
+                data.display(),
+                model.display(),
+                labels_out.display()
+            )))
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(inline, std::fs::read_to_string(&labels_out).unwrap());
+        assert_eq!(inline.lines().count(), 400);
+
+        let loaded = crate::runtime::load_model(&model).unwrap();
+        let bin = crate::streaming::BinDataset::open(&data).unwrap();
+        let pipe = crate::pipeline::Pipeline::new(&crate::affinity::NativeBackend);
+        let direct = match &loaded {
+            crate::runtime::Model::Uspec(m) => pipe.assign(m, &bin).unwrap(),
+            crate::runtime::Model::Usenc(m) => pipe.assign_consensus(m, &bin).unwrap(),
+        };
+        let expect: String = direct.iter().map(|l| format!("{l}\n")).collect();
+        assert_eq!(inline, expect, "CLI assign must match the in-process path");
+
+        for p in [&data, &model, &labels_out] {
+            std::fs::remove_file(p).ok();
+        }
     }
 
     #[test]

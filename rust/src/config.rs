@@ -213,6 +213,130 @@ fn json_to_string(v: &Json) -> String {
     }
 }
 
+/// A fit-job specification — the `OP_SUBMIT_FIT` payload the `submit-fit`
+/// CLI sends and the `repro serve` daemon executes. `data` is a
+/// [`crate::streaming::BinDataset`] path as seen by the *server*. The
+/// seed is serialized as a string: the in-tree JSON number is an f64 and
+/// would silently round u64 seeds above 2^53.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FitSpec {
+    /// "u-spec" or "u-senc".
+    pub method: String,
+    /// Server-visible BinDataset path to fit on.
+    pub data: String,
+    /// Output (consensus) cluster count.
+    pub k: usize,
+    /// Representatives p per (base) clusterer.
+    pub p: usize,
+    /// Nearest representatives K.
+    pub k_nn: usize,
+    /// Ensemble size m (u-senc only).
+    pub m: usize,
+    /// Base-clusterer cluster range (u-senc only).
+    pub k_min: usize,
+    pub k_max: usize,
+    /// Pipeline seed.
+    pub seed: u64,
+}
+
+impl FitSpec {
+    /// Derive a spec from a [`RunConfig`] (the CLI path: shared `--k`,
+    /// `--p`, … flags) plus the data path.
+    pub fn from_config(cfg: &RunConfig, data: &str) -> FitSpec {
+        FitSpec {
+            // CLI --method is case-insensitive; the wire form is canonical
+            method: cfg.method.to_ascii_lowercase(),
+            data: data.to_string(),
+            k: cfg.k.unwrap_or(2),
+            p: cfg.p,
+            k_nn: cfg.k_nn,
+            m: cfg.m,
+            k_min: cfg.k_min,
+            k_max: cfg.k_max,
+            seed: cfg.seed,
+        }
+    }
+
+    /// Reject specs the daemon could only fail on later.
+    pub fn validate(&self) -> Result<()> {
+        match self.method.as_str() {
+            "u-spec" | "u-senc" => {}
+            other => {
+                return Err(Error::Config(format!(
+                    "fit spec: unknown method '{other}' (want u-spec or u-senc)"
+                )))
+            }
+        }
+        if self.data.is_empty() {
+            return Err(Error::Config("fit spec: empty data path".into()));
+        }
+        if self.k == 0 {
+            return Err(Error::Config("fit spec: k must be >= 1".into()));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::Str(self.method.clone())),
+            ("data", Json::Str(self.data.clone())),
+            ("k", Json::Num(self.k as f64)),
+            ("p", Json::Num(self.p as f64)),
+            ("k_nn", Json::Num(self.k_nn as f64)),
+            ("m", Json::Num(self.m as f64)),
+            ("k_min", Json::Num(self.k_min as f64)),
+            ("k_max", Json::Num(self.k_max as f64)),
+            ("seed", Json::Str(self.seed.to_string())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<FitSpec> {
+        let obj =
+            v.as_obj().ok_or_else(|| Error::Config("fit spec must be a JSON object".into()))?;
+        let str_field = |key: &str| -> Result<String> {
+            obj.get(key)
+                .and_then(|v| v.as_str())
+                .map(str::to_string)
+                .ok_or_else(|| Error::Config(format!("fit spec: missing string '{key}'")))
+        };
+        let num_field = |key: &str, default: usize| -> Result<usize> {
+            match obj.get(key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_usize()
+                    .ok_or_else(|| Error::Config(format!("fit spec: bad number '{key}'"))),
+            }
+        };
+        let seed = match obj.get("seed") {
+            None => RunConfig::default().seed,
+            Some(Json::Str(s)) => s
+                .parse()
+                .map_err(|e| Error::Config(format!("fit spec: seed: {e}")))?,
+            Some(Json::Num(n)) => *n as u64,
+            Some(_) => return Err(Error::Config("fit spec: bad seed".into())),
+        };
+        let spec = FitSpec {
+            method: str_field("method")?,
+            data: str_field("data")?,
+            k: num_field("k", 2)?,
+            p: num_field("p", 1000)?,
+            k_nn: num_field("k_nn", 5)?,
+            m: num_field("m", 20)?,
+            k_min: num_field("k_min", 20)?,
+            k_max: num_field("k_max", 60)?,
+            seed,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse a spec from JSON text (the wire form).
+    pub fn parse(text: &str) -> Result<FitSpec> {
+        let v = Json::parse(text).map_err(Error::Config)?;
+        FitSpec::from_json(&v)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -290,6 +414,25 @@ mod tests {
         let j = cfg.to_json().to_string();
         let back = RunConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
         assert_eq!(back.net_cache, 4096);
+    }
+
+    #[test]
+    fn fit_spec_roundtrips_with_u64_seed_and_rejects_junk() {
+        let mut cfg = RunConfig::default();
+        cfg.set("method", "u-senc").unwrap();
+        cfg.set("k", "3").unwrap();
+        // a seed above 2^53 would round through an f64 JSON number
+        cfg.set("seed", "18446744073709551615").unwrap();
+        let spec = FitSpec::from_config(&cfg, "/data/train.bin");
+        let back = FitSpec::parse(&spec.to_json().to_string()).unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.seed, u64::MAX, "u64 seeds must survive the wire");
+        assert_eq!((back.method.as_str(), back.k), ("u-senc", 3));
+        // malformed specs are typed config errors
+        assert!(FitSpec::parse("[1,2]").is_err());
+        assert!(FitSpec::parse(r#"{"method":"magic","data":"x"}"#).is_err());
+        assert!(FitSpec::parse(r#"{"method":"u-spec"}"#).is_err());
+        assert!(FitSpec::parse(r#"{"method":"u-spec","data":"x","k":0}"#).is_err());
     }
 
     #[test]

@@ -21,6 +21,31 @@
 //!   kernels (HLO text under `artifacts/`) and serves them to the hot path,
 //!   plus a **coordinator** ([`coordinator`]) that schedules ensemble jobs
 //!   across a worker pool with batched kernel dispatch.
+//! * A **clustering-as-a-service** layer: fitted models persist as
+//!   versioned, checksummed artifacts ([`runtime::model`]); out-of-sample
+//!   rows are labeled against them ([`pipeline::Pipeline::assign`] /
+//!   [`pipeline::Pipeline::assign_consensus`]) bit-identically across
+//!   threads, chunk sizes, and SIMD dispatch; and a `repro serve` job
+//!   manager ([`net::serve`]) runs fits and assignment queries as a
+//!   long-lived daemon over the `USPEC/2` wire protocol.
+//!
+//! ## Model artifacts and the serve protocol
+//!
+//! A fitted model ([`pipeline::Pipeline::fit`] → `UspecModel`,
+//! [`usenc::usenc_fit`] → `UsencModel`) serializes to a single-file
+//! artifact: magic `USPECMDL`, a format-version byte, a kind byte
+//! (U-SPEC / U-SENC), the little-endian body (representatives,
+//! per-representative labels, sigma as raw f64 bits, seed, and — for
+//! ensembles — per-base consensus vote tables, plus a JSON provenance
+//! blob), and a trailing FNV-1a checksum over everything before it.
+//! [`runtime::save_model`]/[`runtime::load_model`] roundtrip bit-exactly;
+//! corrupt, truncated, or version-skewed files are rejected with typed
+//! errors before any field is trusted. The `repro serve` daemon speaks
+//! four `USPEC/2` opcodes on the [`net::proto`] framing: `SubmitFit`
+//! (0x10, JSON fit spec), `JobStatus` (0x11, u64 job id), `Assign`
+//! (0x12, model id + f32 rows → u32 labels), and `ListModels` (0x13);
+//! see [`net::serve`] for the lifecycle and drain semantics, and
+//! `repro serve --models_dir DIR [--queue N]` for the CLI.
 //!
 //! Python (JAX + Pallas) exists only on the *compile path*
 //! (`python/compile`); the rust binary is self-contained once
@@ -60,7 +85,15 @@
 //!   connections a [`net::RemoteSource`] keeps warm; default 8,
 //!   floor 1. Operational only.
 //! * `USPEC_NET_IDLE_MS=n` — server-side idle disconnect for a client
-//!   connection in milliseconds; default 60000. Operational only.
+//!   connection in milliseconds; default 60000. Operational only. Also
+//!   bounds how long a dropping `repro serve` daemon waits for in-flight
+//!   queries to drain.
+//!
+//! The `repro serve` daemon adds two CLI knobs alongside these:
+//! `--models_dir DIR` (the artifact store the registry is seeded from at
+//! startup and fits persist into) and `--queue N` (the bounded fit-job
+//! backlog, default 16 — a submit beyond it is rejected with a typed
+//! error instead of buffering unboundedly).
 //!
 //! ## Quickstart
 //!

@@ -8,6 +8,9 @@
 //!   repro gen-data --dataset Flower-20M --scale 0.01 --out flower.csv
 //!   repro serve-shard --data flower.bin --addr 0.0.0.0:7401
 //!   repro stream --source remote://10.0.0.2:7401 --k 4 --shards 4
+//!   repro serve --addr 0.0.0.0:7500 --models_dir models --queue 8
+//!   repro fit --data train.bin --method u-spec --k 4 --out m.uspecmdl
+//!   repro assign --data query.bin --model_file m.uspecmdl --out labels.txt
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();

@@ -98,7 +98,11 @@ impl<K: Eq + Hash + Clone, V> ByteLru<K, V> {
     /// is simply not cached — the caller's read path already has the
     /// data; the cache only ever declines to remember it.
     pub fn insert(&mut self, key: K, value: V, bytes: usize) {
-        if bytes > self.budget {
+        // A zero budget declines even zero-weight entries: a disabled
+        // cache must never grow a map (callers that want a *true* no-op —
+        // no stats, no allocation — skip constructing the cache entirely,
+        // like `RemoteSource` does for `cache_bytes == 0`).
+        if self.budget == 0 || bytes > self.budget {
             return;
         }
         if let Some(old) = self.map.remove(&key) {
@@ -155,12 +159,15 @@ mod tests {
         let mut lru: ByteLru<u32, Vec<u8>> = ByteLru::new(8);
         lru.insert(1, vec![0; 9], 9);
         assert!(lru.is_empty(), "oversized value must be declined");
+        // a zero budget declines everything — even zero-weight entries —
+        // so a disabled cache never grows a map and every lookup misses
         let mut off: ByteLru<u32, ()> = ByteLru::new(0);
         off.insert(1, (), 0);
-        // a zero-weight entry in a zero-budget cache is still useless;
-        // by the budget rule (0 <= 0) it may sit there, but real callers
-        // gate on budget > 0 — assert the byte invariant regardless
-        assert!(off.bytes() <= off.budget());
+        off.insert(2, (), 4);
+        assert!(off.is_empty(), "zero-budget cache must stay empty");
+        assert_eq!((off.len(), off.bytes()), (0, 0));
+        assert!(off.get(&1).is_none() && off.get(&2).is_none());
+        assert_eq!(off.stats(), (0, 2), "both lookups are misses");
     }
 
     #[test]

@@ -131,8 +131,10 @@ pub struct RemoteSource {
     /// The server advertised `USPEC/2` in its Pong capability bytes.
     peer_v2: bool,
     pool: Mutex<Vec<TcpStream>>,
-    /// Decoded row-range chunks, keyed by `(start, len)`.
-    cache: Mutex<ByteLru<(u64, u64), Vec<f32>>>,
+    /// Decoded row-range chunks, keyed by `(start, len)`. `None` when the
+    /// budget is 0 — a disabled cache is a true no-op (no map, no stats,
+    /// no lock on the read path), not an always-missing one.
+    cache: Option<Mutex<ByteLru<(u64, u64), Vec<f32>>>>,
 }
 
 impl RemoteSource {
@@ -160,7 +162,7 @@ impl RemoteSource {
             opts,
             peer_v2: false,
             pool: Mutex::new(Vec::new()),
-            cache: Mutex::new(ByteLru::new(opts.cache_bytes)),
+            cache: (opts.cache_bytes > 0).then(|| Mutex::new(ByteLru::new(opts.cache_bytes))),
         };
         src.peer_v2 = src.negotiate()?;
         let (n, d) = src.fetch_meta()?;
@@ -183,9 +185,13 @@ impl RemoteSource {
     }
 
     /// `(hits, misses)` of the decoded-chunk cache — operational
-    /// telemetry; always `(0, 0)` when the cache is disabled.
+    /// telemetry; always `(0, 0)` when the cache is disabled (a zero
+    /// budget constructs no cache at all, so nothing is ever counted).
     pub fn cache_stats(&self) -> (u64, u64) {
-        self.lock_cache().stats()
+        match &self.cache {
+            Some(c) => c.lock().unwrap_or_else(|e| e.into_inner()).stats(),
+            None => (0, 0),
+        }
     }
 
     /// Round-trip liveness check; returns the request latency.
@@ -355,10 +361,6 @@ impl RemoteSource {
     fn lock_pool(&self) -> std::sync::MutexGuard<'_, Vec<TcpStream>> {
         self.pool.lock().unwrap_or_else(|e| e.into_inner())
     }
-
-    fn lock_cache(&self) -> std::sync::MutexGuard<'_, ByteLru<(u64, u64), Vec<f32>>> {
-        self.cache.lock().unwrap_or_else(|e| e.into_inner())
-    }
 }
 
 /// Validate a raw-rows payload length and append its decoded f32s.
@@ -386,8 +388,8 @@ impl DataSource for RemoteSource {
         ensure_arg!(start + len <= self.n, "read_rows: out of range");
         ensure_arg!(len >= 1, "read_rows: len must be >= 1");
         let key = (start as u64, len as u64);
-        if self.opts.cache_bytes > 0 {
-            if let Some(rows) = self.lock_cache().get(&key) {
+        if let Some(cache) = &self.cache {
+            if let Some(rows) = cache.lock().unwrap_or_else(|e| e.into_inner()).get(&key) {
                 buf.rows = len;
                 buf.cols = self.d;
                 buf.data.clear();
@@ -396,8 +398,11 @@ impl DataSource for RemoteSource {
             }
         }
         self.with_conn("read_rows", |conn| self.exchange_rows(conn, start, len, buf))?;
-        if self.opts.cache_bytes > 0 {
-            self.lock_cache().insert(key, buf.data.clone(), len * self.d * 4);
+        if let Some(cache) = &self.cache {
+            cache
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .insert(key, buf.data.clone(), len * self.d * 4);
         }
         Ok(())
     }

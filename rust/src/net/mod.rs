@@ -1,7 +1,7 @@
 //! Remote shard execution — the networking subsystem that lets any
 //! [`crate::pipeline::DataSource`] live on another machine.
 //!
-//! Five pieces:
+//! Six pieces:
 //!
 //! * [`proto`] — the `USPEC/1` / `USPEC/2` wire protocol: versioned,
 //!   length-framed, checksummed binary messages. Frame layout (all
@@ -28,6 +28,13 @@
 //!   [`crate::pipeline::StorageProfile::Remote`], so the adaptive walk
 //!   planner schedules remote shards as a high-latency serial-ish
 //!   backend: few walkers, deep prefetch.
+//! * [`serve`] (`repro serve --addr host:port --models-dir DIR
+//!   [--queue N]`) — the clustering-as-a-service job manager: `USPEC/2`
+//!   serve opcodes (`SubmitFit` 0x10, `JobStatus` 0x11, `Assign` 0x12,
+//!   `ListModels` 0x13) over the same framing, a bounded fit-job queue
+//!   drained by one worker, and concurrent out-of-sample assignment
+//!   from an in-memory model registry persisted as
+//!   [`crate::runtime::model`] artifacts under `--models-dir`.
 //!
 //! # `USPEC/2` negotiation and fallback rules
 //!
@@ -81,10 +88,12 @@ pub mod cache;
 pub mod client;
 pub mod codec;
 pub mod proto;
+pub mod serve;
 pub mod server;
 
 pub use cache::ByteLru;
 pub use client::{NetOpts, RemoteSource};
+pub use serve::{JobReport, JobState, ModelInfo, ServeClient, ServeConfig, ServeRuntime};
 pub use server::{ServeOpts, ShardServer};
 
 use crate::{ensure_arg, Error, Result};

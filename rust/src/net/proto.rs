@@ -83,6 +83,38 @@ pub const OP_ROWS_C: u8 = 0x84;
 /// Error response to any request; payload is a UTF-8 message.
 pub const OP_ERR: u8 = 0xFF;
 
+// --- `USPEC/2` serve opcodes (`repro serve`, [`crate::net::serve`]) ----
+// The job-manager daemon speaks the same framing; its frames are stamped
+// [`PROTO_V2`] since no v1 peer exists for these opcodes.
+
+/// Request: enqueue a fit job; payload is a UTF-8 JSON
+/// [`crate::config::FitSpec`]. Answered with [`OP_JOB_RESP`] (or
+/// [`OP_ERR`] when the bounded queue is full / the spec is malformed).
+pub const OP_SUBMIT_FIT: u8 = 0x10;
+/// Request: job status; payload `u64 job id`. Answered with
+/// [`OP_JOB_RESP`].
+pub const OP_JOB_STATUS: u8 = 0x11;
+/// Request: label out-of-sample rows with a registered model; payload is
+/// [`encode_assign`] (`u16 id_len · id · u64 rows · u64 d · rows×d f32`).
+/// Answered with [`OP_ASSIGN_RESP`].
+pub const OP_ASSIGN: u8 = 0x12;
+/// Request: list registered models, empty payload. Answered with
+/// [`OP_MODELS_RESP`] (UTF-8 JSON).
+pub const OP_LIST_MODELS: u8 = 0x13;
+/// Response to [`OP_SUBMIT_FIT`] / [`OP_JOB_STATUS`]; payload is a UTF-8
+/// JSON object (`job`, `status`, and `model` / `error` when resolved).
+pub const OP_JOB_RESP: u8 = 0x90;
+/// Response to [`OP_ASSIGN`]; payload is [`encode_labels`]
+/// (`u64 rows · rows×u32 labels`).
+pub const OP_ASSIGN_RESP: u8 = 0x91;
+/// Response to [`OP_LIST_MODELS`]; payload is a UTF-8 JSON array.
+pub const OP_MODELS_RESP: u8 = 0x92;
+
+/// Payload cap for serve-daemon frames: [`OP_ASSIGN`] carries row data
+/// (and [`OP_ASSIGN_RESP`] labels), so the tiny [`MAX_REQUEST_PAYLOAD`]
+/// cap does not apply — clients chunk their queries under this bound.
+pub const MAX_SERVE_PAYLOAD: usize = 16 << 20;
+
 /// ReadRows flags bit: the client accepts [`OP_ROWS_C`] responses.
 pub const FLAG_COMPRESS: u8 = 0x01;
 
@@ -275,9 +307,102 @@ pub fn decode_rows_into(payload: &[u8], rows: usize, d: usize, buf: &mut Mat) ->
     Ok(())
 }
 
+/// Encode an [`OP_ASSIGN`] request: `u16 id_len · id bytes · u64 rows ·
+/// u64 d · rows×d` little-endian f32s (bit-exact, like every row payload).
+pub fn encode_assign(model_id: &str, m: &Mat) -> Result<Vec<u8>> {
+    if model_id.is_empty() || model_id.len() > u16::MAX as usize {
+        return Err(Error::InvalidArg(format!(
+            "assign: model id must be 1..={} bytes (got {})",
+            u16::MAX,
+            model_id.len()
+        )));
+    }
+    let mut p = Vec::with_capacity(2 + model_id.len() + 16 + m.data.len() * 4);
+    p.extend_from_slice(&(model_id.len() as u16).to_le_bytes());
+    p.extend_from_slice(model_id.as_bytes());
+    p.extend_from_slice(&(m.rows as u64).to_le_bytes());
+    p.extend_from_slice(&(m.cols as u64).to_le_bytes());
+    for v in &m.data {
+        p.extend_from_slice(&v.to_le_bytes());
+    }
+    Ok(p)
+}
+
+/// Decode an [`OP_ASSIGN`] request payload into `(model id, rows)`.
+pub fn decode_assign(payload: &[u8]) -> Result<(String, Mat)> {
+    let short = || Error::Net("Assign payload truncated".into());
+    if payload.len() < 2 {
+        return Err(short());
+    }
+    let id_len = u16::from_le_bytes(payload[..2].try_into().unwrap()) as usize;
+    let rest = payload.get(2..).ok_or_else(short)?;
+    if rest.len() < id_len + 16 {
+        return Err(short());
+    }
+    let id = std::str::from_utf8(&rest[..id_len])
+        .map_err(|_| Error::Net("Assign model id is not UTF-8".into()))?
+        .to_string();
+    let rows = u64::from_le_bytes(rest[id_len..id_len + 8].try_into().unwrap()) as usize;
+    let d = u64::from_le_bytes(rest[id_len + 8..id_len + 16].try_into().unwrap()) as usize;
+    let mut m = Mat::zeros(0, 0);
+    decode_rows_into(&rest[id_len + 16..], rows, d, &mut m)
+        .map_err(|_| Error::Net("Assign payload row data size mismatch".into()))?;
+    Ok((id, m))
+}
+
+/// Encode an [`OP_ASSIGN_RESP`] payload: `u64 rows · rows×u32 labels`.
+pub fn encode_labels(labels: &[u32]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(8 + labels.len() * 4);
+    p.extend_from_slice(&(labels.len() as u64).to_le_bytes());
+    for l in labels {
+        p.extend_from_slice(&l.to_le_bytes());
+    }
+    p
+}
+
+/// Decode an [`OP_ASSIGN_RESP`] payload.
+pub fn decode_labels(payload: &[u8]) -> Result<Vec<u32>> {
+    if payload.len() < 8 {
+        return Err(Error::Net("Labels payload truncated".into()));
+    }
+    let rows = u64::from_le_bytes(payload[..8].try_into().unwrap()) as usize;
+    let body = &payload[8..];
+    if body.len() != rows * 4 {
+        return Err(Error::Net(format!(
+            "Labels payload {} bytes for {rows} rows, want {}",
+            body.len(),
+            rows * 4
+        )));
+    }
+    Ok(body.chunks_exact(4).map(|b| u32::from_le_bytes(b.try_into().unwrap())).collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn assign_payloads_roundtrip() {
+        let mut m = Mat::zeros(3, 2);
+        m.data.copy_from_slice(&[1.5, -0.0, 2.25, f32::MIN_POSITIVE, -7.0, 0.125]);
+        let p = encode_assign("model-000042", &m).unwrap();
+        let (id, back) = decode_assign(&p).unwrap();
+        assert_eq!(id, "model-000042");
+        let a: Vec<u32> = m.data.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = back.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b);
+        assert_eq!((back.rows, back.cols), (3, 2));
+        // malformed: truncated, bad sizes, empty id
+        assert!(decode_assign(&p[..5]).is_err());
+        assert!(decode_assign(&p[..p.len() - 1]).is_err());
+        assert!(encode_assign("", &m).is_err());
+        let labels = vec![0u32, 3, 1, u32::MAX];
+        assert_eq!(decode_labels(&encode_labels(&labels)).unwrap(), labels);
+        assert!(decode_labels(&[0u8; 7]).is_err());
+        let mut bad = encode_labels(&labels);
+        bad.pop();
+        assert!(decode_labels(&bad).is_err());
+    }
 
     #[test]
     fn frame_roundtrip_all_opcodes() {

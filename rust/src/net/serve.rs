@@ -1,0 +1,735 @@
+//! The `repro serve` job manager — clustering as a long-running service.
+//!
+//! A [`ServeRuntime`] binds a TCP listener on the existing `USPEC/2`
+//! framing ([`crate::net::proto`]) and runs two planes concurrently:
+//!
+//! * **Control/fit plane.** `SubmitFit` enqueues a [`FitSpec`] onto a
+//!   **bounded** job queue (depth [`ServeConfig::queue_depth`]; a full
+//!   queue rejects the submit with a typed `OP_ERR` instead of buffering
+//!   unboundedly). One fit worker drains the queue: it opens the
+//!   server-visible [`crate::streaming::BinDataset`], runs
+//!   [`Pipeline::fit`] (U-SPEC) or [`crate::usenc::usenc_fit`] (U-SENC)
+//!   on the worker pool, persists the model artifact
+//!   ([`crate::runtime::model::save_model`]) under
+//!   [`ServeConfig::models_dir`], and registers it in the in-memory
+//!   registry. `JobStatus` polls the lifecycle:
+//!   `queued → running → done | failed`.
+//! * **Query plane.** `Assign` labels out-of-sample rows against any
+//!   registered model — answered thread-per-connection straight from the
+//!   registry ([`Pipeline::assign`] / [`Pipeline::assign_consensus`]),
+//!   concurrent with fits and with each other. `ListModels` enumerates
+//!   the registry.
+//!
+//! At bind time the registry is seeded from `models_dir` — every
+//! `*.uspecmdl` artifact a previous daemon saved is loaded (corrupt files
+//! are skipped with a note on stderr, never served). Model ids are the
+//! artifact file stems; fits name theirs `model-<job id>`.
+//!
+//! **Graceful shutdown.** Dropping the runtime stops accepting, closes
+//! the fit queue (queued-but-unstarted jobs stay `queued`; the running
+//! fit finishes and is persisted), and *drains in-flight queries*: active
+//! connections are counted, and shutdown waits for the count to reach
+//! zero (bounded by the idle timeout) before joining the worker — a
+//! client mid-`Assign` gets its labels, not a reset connection.
+//!
+//! The assignment path inherits every determinism invariant the engine
+//! pins: a served `Assign` returns exactly the labels an in-process
+//! [`Pipeline::assign`] with the same model and rows would — bit-for-bit,
+//! across threads, chunk sizes, and SIMD dispatch
+//! (`rust/tests/serve_runtime.rs`, CI `serve-e2e`).
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::affinity::NativeBackend;
+use crate::config::FitSpec;
+use crate::linalg::Mat;
+use crate::pipeline::Pipeline;
+use crate::runtime::model::{load_model, save_model, Model};
+use crate::streaming::BinDataset;
+use crate::usenc::{usenc_fit, UsencParams};
+use crate::uspec::UspecParams;
+use crate::util::json::Json;
+use crate::{ensure_arg, Error, Result};
+
+use super::proto::{
+    decode_assign, decode_labels, encode_assign, encode_labels, read_frame, write_frame_v,
+    MAX_SERVE_PAYLOAD, OP_ASSIGN, OP_ASSIGN_RESP, OP_ERR, OP_JOB_RESP, OP_JOB_STATUS,
+    OP_LIST_MODELS, OP_MODELS_RESP, OP_SUBMIT_FIT, PROTO_V2,
+};
+use super::{net_idle_ms, net_timeout_ms};
+
+/// Artifact file extension under the models dir.
+pub const MODEL_EXT: &str = "uspecmdl";
+
+/// Daemon configuration (`repro serve --models-dir DIR [--queue N]`).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Artifact store: fitted models are saved here and the registry is
+    /// seeded from it at bind.
+    pub models_dir: PathBuf,
+    /// Bounded fit-queue depth; a submit beyond it is rejected with a
+    /// typed error (backpressure, not unbounded buffering).
+    pub queue_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { models_dir: PathBuf::from("models"), queue_depth: 16 }
+    }
+}
+
+/// One job's lifecycle, as reported by `JobStatus`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    /// Fit finished; the model is registered under this id.
+    Done { model: String },
+    Failed { error: String },
+}
+
+impl JobState {
+    fn status(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done { .. } => "done",
+            JobState::Failed { .. } => "failed",
+        }
+    }
+}
+
+/// Pending jobs plus the closed flag, under one lock so `close()` and
+/// `push` cannot race.
+type QueueSlots = (VecDeque<(u64, FitSpec)>, bool);
+
+/// The bounded fit queue: a plain deque + condvar so the worker blocks
+/// without spinning and `close()` wakes it for shutdown.
+struct FitQueue {
+    q: Mutex<QueueSlots>,
+    cv: Condvar,
+    depth: usize,
+}
+
+impl FitQueue {
+    fn new(depth: usize) -> FitQueue {
+        FitQueue { q: Mutex::new((VecDeque::new(), false)), cv: Condvar::new(), depth }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, QueueSlots> {
+        self.q.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Enqueue or reject: a full (or closed) queue is the caller's typed
+    /// error, never a silent wait.
+    fn push(&self, job: u64, spec: FitSpec) -> Result<()> {
+        let mut g = self.lock();
+        if g.1 {
+            return Err(Error::Net("serve: shutting down, fit queue closed".into()));
+        }
+        if g.0.len() >= self.depth {
+            return Err(Error::InvalidArg(format!(
+                "serve: fit queue full ({} jobs queued, depth {}) — retry later",
+                g.0.len(),
+                self.depth
+            )));
+        }
+        g.0.push_back((job, spec));
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; `None` once closed and drained-or-abandoned.
+    fn pop(&self) -> Option<(u64, FitSpec)> {
+        let mut g = self.lock();
+        loop {
+            if g.1 {
+                return None; // closed: abandon queued jobs (they stay `queued`)
+            }
+            if let Some(item) = g.0.pop_front() {
+                return Some(item);
+            }
+            g = self.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    fn close(&self) {
+        self.lock().1 = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Shared daemon state: registry, job table, queue, drain counters.
+struct ServeState {
+    models_dir: PathBuf,
+    registry: Mutex<BTreeMap<String, Arc<Model>>>,
+    jobs: Mutex<HashMap<u64, JobState>>,
+    next_job: AtomicU64,
+    queue: FitQueue,
+    /// Connections currently inside `handle` — the drain gauge.
+    active: AtomicUsize,
+    shutdown: AtomicBool,
+}
+
+impl ServeState {
+    fn lock_registry(&self) -> std::sync::MutexGuard<'_, BTreeMap<String, Arc<Model>>> {
+        self.registry.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn lock_jobs(&self) -> std::sync::MutexGuard<'_, HashMap<u64, JobState>> {
+        self.jobs.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn set_job(&self, id: u64, state: JobState) {
+        self.lock_jobs().insert(id, state);
+    }
+}
+
+/// A running `repro serve` daemon: listener + accept thread + one fit
+/// worker. Dropping it shuts down gracefully (see module docs);
+/// [`ServeRuntime::join`] blocks forever for the CLI foreground mode.
+pub struct ServeRuntime {
+    addr: SocketAddr,
+    state: Arc<ServeState>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServeRuntime {
+    /// Bind `addr` (`host:port`; port 0 picks an ephemeral port), seed
+    /// the registry from `config.models_dir` (created if missing), and
+    /// start serving.
+    pub fn bind(addr: &str, config: ServeConfig) -> Result<ServeRuntime> {
+        super::validate_host_port(addr)?;
+        ensure_arg!(config.queue_depth >= 1, "serve: queue depth must be >= 1");
+        std::fs::create_dir_all(&config.models_dir)?;
+        let listener =
+            TcpListener::bind(addr).map_err(|e| Error::Net(format!("bind {addr}: {e}")))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| Error::Net(format!("bind {addr}: no local addr: {e}")))?;
+        let state = Arc::new(ServeState {
+            registry: Mutex::new(load_registry(&config.models_dir)),
+            models_dir: config.models_dir,
+            jobs: Mutex::new(HashMap::new()),
+            next_job: AtomicU64::new(1),
+            queue: FitQueue::new(config.queue_depth),
+            active: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+        });
+        let accept_state = Arc::clone(&state);
+        let accept = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if accept_state.shutdown.load(Ordering::Relaxed) {
+                    break;
+                }
+                let Ok(conn) = conn else { continue };
+                let st = Arc::clone(&accept_state);
+                std::thread::spawn(move || {
+                    st.active.fetch_add(1, Ordering::SeqCst);
+                    handle(conn, &st);
+                    st.active.fetch_sub(1, Ordering::SeqCst);
+                });
+            }
+        });
+        let worker_state = Arc::clone(&state);
+        let worker = std::thread::spawn(move || fit_worker(&worker_state));
+        Ok(ServeRuntime { addr: local, state, accept: Some(accept), worker: Some(worker) })
+    }
+
+    /// The bound address — with the resolved port when `bind` got port 0.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Registered model ids (sorted).
+    pub fn model_ids(&self) -> Vec<String> {
+        self.state.lock_registry().keys().cloned().collect()
+    }
+
+    /// Serve until the process is killed (the `repro serve` foreground
+    /// mode). Consumes the runtime; never returns normally unless the
+    /// accept thread dies.
+    pub fn join(mut self) -> Result<()> {
+        if let Some(h) = self.accept.take() {
+            h.join().map_err(|_| Error::Net("serve accept thread panicked".into()))?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for ServeRuntime {
+    fn drop(&mut self) {
+        let Some(h) = self.accept.take() else { return };
+        self.state.shutdown.store(true, Ordering::SeqCst);
+        self.state.queue.close();
+        // The accept loop blocks in `incoming()`; a throwaway connection
+        // wakes it so it can observe the flag and exit.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(250));
+        let _ = h.join();
+        // Drain in-flight queries: the handlers already counted
+        // themselves in; wait (bounded by the idle timeout) for them to
+        // finish their current exchanges and exit on the shutdown flag.
+        let deadline =
+            std::time::Instant::now() + Duration::from_millis(net_idle_ms().max(1000));
+        while self.state.active.load(Ordering::SeqCst) > 0
+            && std::time::Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Seed the registry from the artifact store. Corrupt or foreign files
+/// are skipped with a note — a bad artifact must never be served, and
+/// one bad file must never take the daemon down.
+fn load_registry(dir: &Path) -> BTreeMap<String, Arc<Model>> {
+    let mut reg = BTreeMap::new();
+    let Ok(entries) = std::fs::read_dir(dir) else { return reg };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.extension().and_then(|e| e.to_str()) != Some(MODEL_EXT) {
+            continue;
+        }
+        let Some(stem) = path.file_stem().and_then(|s| s.to_str()) else { continue };
+        match load_model(&path) {
+            Ok(model) => {
+                reg.insert(stem.to_string(), Arc::new(model));
+            }
+            Err(e) => eprintln!("serve: skipping {}: {e}", path.display()),
+        }
+    }
+    reg
+}
+
+/// The fit worker: drain the queue until it closes. One job at a time —
+/// the fit itself is pool-parallel, so serializing jobs keeps the worker
+/// pool for the running fit instead of thrashing between fits.
+fn fit_worker(state: &ServeState) {
+    while let Some((job, spec)) = state.queue.pop() {
+        state.set_job(job, JobState::Running);
+        match run_fit(state, job, &spec) {
+            Ok(model_id) => state.set_job(job, JobState::Done { model: model_id }),
+            Err(e) => state.set_job(job, JobState::Failed { error: e.to_string() }),
+        }
+    }
+}
+
+/// Fit a [`FitSpec`] against its on-disk dataset — the one fit path
+/// both the daemon's worker and the `repro fit` CLI command go through,
+/// so a served fit and a local fit of the same spec produce the same
+/// model bit-for-bit.
+pub fn fit_model(spec: &FitSpec) -> Result<Model> {
+    spec.validate()?;
+    let src = BinDataset::open(Path::new(&spec.data))?;
+    match spec.method.as_str() {
+        "u-spec" => {
+            let params = UspecParams {
+                k: spec.k,
+                p: spec.p,
+                k_nn: spec.k_nn,
+                ..UspecParams::default()
+            };
+            let pipe = Pipeline::new(&NativeBackend);
+            Ok(Model::Uspec(pipe.fit(&src, &params, spec.seed)?.model))
+        }
+        "u-senc" => {
+            let params = UsencParams {
+                k: spec.k,
+                m: spec.m,
+                k_min: spec.k_min,
+                k_max: spec.k_max,
+                base: UspecParams { p: spec.p, k_nn: spec.k_nn, ..UspecParams::default() },
+            };
+            Ok(Model::Usenc(
+                usenc_fit(&src, &params, spec.seed, &NativeBackend, Default::default())?.model,
+            ))
+        }
+        other => Err(Error::Config(format!("unknown method '{other}'"))),
+    }
+}
+
+/// Execute one fit job: fit, persist, register.
+fn run_fit(state: &ServeState, job: u64, spec: &FitSpec) -> Result<String> {
+    let model = fit_model(spec)?;
+    let model_id = format!("model-{job:06}");
+    let path = state.models_dir.join(format!("{model_id}.{MODEL_EXT}"));
+    save_model(&path, &model)?;
+    state.lock_registry().insert(model_id.clone(), Arc::new(model));
+    Ok(model_id)
+}
+
+/// One JSON job-report payload (`OP_JOB_RESP`).
+fn job_json(job: u64, state: &JobState) -> Vec<u8> {
+    let mut fields = vec![
+        ("job", Json::Num(job as f64)),
+        ("status", Json::Str(state.status().into())),
+    ];
+    match state {
+        JobState::Done { model } => fields.push(("model", Json::Str(model.clone()))),
+        JobState::Failed { error } => fields.push(("error", Json::Str(error.clone()))),
+        _ => {}
+    }
+    Json::obj(fields).to_string().into_bytes()
+}
+
+/// Serve one connection until EOF, an I/O error, the idle timeout, or
+/// shutdown. Every response is a [`PROTO_V2`]-stamped frame.
+fn handle(mut conn: TcpStream, state: &ServeState) {
+    let idle = Duration::from_millis(net_idle_ms().max(1));
+    let _ = conn.set_nodelay(true);
+    let _ = conn.set_read_timeout(Some(idle));
+    let _ = conn.set_write_timeout(Some(idle));
+    loop {
+        let Ok((op, payload)) = read_frame(&mut conn, MAX_SERVE_PAYLOAD) else { return };
+        let reply = dispatch(state, op, &payload);
+        let ok = match reply {
+            Ok((rop, rpayload)) => write_frame_v(&mut conn, PROTO_V2, rop, &rpayload).is_ok(),
+            Err(e) => {
+                write_frame_v(&mut conn, PROTO_V2, OP_ERR, e.to_string().as_bytes()).is_ok()
+            }
+        };
+        // In-flight requests were answered above; once shutdown is on,
+        // end the connection instead of waiting for the next request —
+        // that is the drain the Drop impl observes.
+        if !ok || state.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+    }
+}
+
+/// Route one request to its handler; `Err` becomes an `OP_ERR` frame.
+fn dispatch(state: &ServeState, op: u8, payload: &[u8]) -> Result<(u8, Vec<u8>)> {
+    match op {
+        OP_SUBMIT_FIT => {
+            let text = std::str::from_utf8(payload)
+                .map_err(|_| Error::Net("SubmitFit payload is not UTF-8".into()))?;
+            let spec = FitSpec::parse(text)?;
+            let job = state.next_job.fetch_add(1, Ordering::SeqCst);
+            state.set_job(job, JobState::Queued);
+            if let Err(e) = state.queue.push(job, spec) {
+                state.lock_jobs().remove(&job);
+                return Err(e);
+            }
+            Ok((OP_JOB_RESP, job_json(job, &JobState::Queued)))
+        }
+        OP_JOB_STATUS => {
+            ensure_arg!(payload.len() == 8, "JobStatus payload: want u64 job id");
+            let job = u64::from_le_bytes(payload.try_into().unwrap());
+            let jstate = state
+                .lock_jobs()
+                .get(&job)
+                .cloned()
+                .ok_or_else(|| Error::InvalidArg(format!("unknown job {job}")))?;
+            Ok((OP_JOB_RESP, job_json(job, &jstate)))
+        }
+        OP_ASSIGN => {
+            let (id, rows) = decode_assign(payload)?;
+            let model = state
+                .lock_registry()
+                .get(&id)
+                .cloned()
+                .ok_or_else(|| Error::InvalidArg(format!("unknown model '{id}'")))?;
+            let pipe = Pipeline::new(&NativeBackend);
+            let labels = match &*model {
+                Model::Uspec(m) => pipe.assign(m, &rows)?,
+                Model::Usenc(m) => pipe.assign_consensus(m, &rows)?,
+            };
+            Ok((OP_ASSIGN_RESP, encode_labels(&labels)))
+        }
+        OP_LIST_MODELS => {
+            let list: Vec<Json> = state
+                .lock_registry()
+                .iter()
+                .map(|(id, m)| {
+                    Json::obj(vec![
+                        ("id", Json::Str(id.clone())),
+                        ("kind", Json::Str(m.kind().into())),
+                        ("k", Json::Num(m.k() as f64)),
+                        ("d", Json::Num(m.d() as f64)),
+                    ])
+                })
+                .collect();
+            Ok((OP_MODELS_RESP, Json::Arr(list).to_string().into_bytes()))
+        }
+        other => Err(Error::Net(format!("unknown serve opcode {other:#04x}"))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// A reported job status (the decoded `OP_JOB_RESP`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobReport {
+    pub job: u64,
+    /// "queued" | "running" | "done" | "failed".
+    pub status: String,
+    /// Registered model id once done.
+    pub model: Option<String>,
+    /// Failure message once failed.
+    pub error: Option<String>,
+}
+
+impl JobReport {
+    fn parse(payload: &[u8]) -> Result<JobReport> {
+        let text = std::str::from_utf8(payload)
+            .map_err(|_| Error::Net("JobResp payload is not UTF-8".into()))?;
+        let v = Json::parse(text).map_err(Error::Net)?;
+        Ok(JobReport {
+            job: v.get("job").and_then(|j| j.as_f64()).unwrap_or(0.0) as u64,
+            status: v
+                .get("status")
+                .and_then(|s| s.as_str())
+                .ok_or_else(|| Error::Net("JobResp: missing status".into()))?
+                .to_string(),
+            model: v.get("model").and_then(|s| s.as_str()).map(str::to_string),
+            error: v.get("error").and_then(|s| s.as_str()).map(str::to_string),
+        })
+    }
+}
+
+/// A registry entry (the decoded `OP_MODELS_RESP` element).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelInfo {
+    pub id: String,
+    pub kind: String,
+    pub k: usize,
+    pub d: usize,
+}
+
+/// Rows per `Assign` request: bounds the frame payload well under
+/// [`MAX_SERVE_PAYLOAD`] for any d the header admits, and chunking is
+/// invisible — rows are labeled independently, so the concatenated
+/// responses equal one giant query bit-for-bit.
+const ASSIGN_CHUNK_BYTES: usize = 4 << 20;
+
+/// A blocking client for a [`ServeRuntime`] — one pooled connection,
+/// timeouts from the `USPEC_NET_*` knobs. Used by the `submit-fit`,
+/// `job-status`, and `assign --addr` CLI commands and the e2e tests.
+pub struct ServeClient {
+    conn: TcpStream,
+}
+
+impl ServeClient {
+    /// Connect to a `repro serve` daemon at `host:port`.
+    pub fn connect(addr: &str) -> Result<ServeClient> {
+        super::validate_host_port(addr)?;
+        use std::net::ToSocketAddrs;
+        let resolved = addr
+            .to_socket_addrs()
+            .map_err(|e| Error::Net(format!("{addr}: resolve failed: {e}")))?
+            .next()
+            .ok_or_else(|| Error::Net(format!("{addr}: resolved to no address")))?;
+        let timeout = Duration::from_millis(net_timeout_ms());
+        let conn = TcpStream::connect_timeout(&resolved, timeout)
+            .map_err(|e| Error::Net(format!("{addr}: connect failed: {e}")))?;
+        conn.set_read_timeout(Some(timeout))?;
+        conn.set_write_timeout(Some(timeout))?;
+        let _ = conn.set_nodelay(true);
+        Ok(ServeClient { conn })
+    }
+
+    fn exchange(&mut self, op: u8, payload: &[u8], want: u8) -> Result<Vec<u8>> {
+        write_frame_v(&mut self.conn, PROTO_V2, op, payload)?;
+        let (rop, rpayload) = read_frame(&mut self.conn, MAX_SERVE_PAYLOAD)?;
+        match rop {
+            x if x == want => Ok(rpayload),
+            OP_ERR => Err(Error::InvalidArg(format!(
+                "serve: {}",
+                String::from_utf8_lossy(&rpayload)
+            ))),
+            other => Err(Error::Net(format!("unexpected serve opcode {other:#04x}"))),
+        }
+    }
+
+    /// Enqueue a fit; returns the job id.
+    pub fn submit_fit(&mut self, spec: &FitSpec) -> Result<u64> {
+        let payload = spec.to_json().to_string().into_bytes();
+        let resp = self.exchange(OP_SUBMIT_FIT, &payload, OP_JOB_RESP)?;
+        Ok(JobReport::parse(&resp)?.job)
+    }
+
+    /// Poll one job's lifecycle.
+    pub fn job_status(&mut self, job: u64) -> Result<JobReport> {
+        let resp = self.exchange(OP_JOB_STATUS, &job.to_le_bytes(), OP_JOB_RESP)?;
+        JobReport::parse(&resp)
+    }
+
+    /// Poll until the job leaves `queued`/`running` or the deadline
+    /// passes. `Done` returns the model id; `Failed` is a typed error.
+    pub fn wait_for(&mut self, job: u64, deadline: Duration) -> Result<String> {
+        let until = std::time::Instant::now() + deadline;
+        loop {
+            let report = self.job_status(job)?;
+            match report.status.as_str() {
+                "done" => {
+                    return report
+                        .model
+                        .ok_or_else(|| Error::Net("done without a model id".into()))
+                }
+                "failed" => {
+                    return Err(Error::Runtime(format!(
+                        "job {job} failed: {}",
+                        report.error.unwrap_or_else(|| "unknown error".into())
+                    )))
+                }
+                _ if std::time::Instant::now() >= until => {
+                    return Err(Error::Net(format!(
+                        "job {job} still {} after {deadline:?}",
+                        report.status
+                    )))
+                }
+                _ => std::thread::sleep(Duration::from_millis(50)),
+            }
+        }
+    }
+
+    /// Label `rows` with a registered model. Requests are chunked under
+    /// the frame cap; responses concatenate to exactly the labels one
+    /// in-process `assign` would produce.
+    pub fn assign(&mut self, model_id: &str, rows: &Mat) -> Result<Vec<u32>> {
+        ensure_arg!(rows.rows >= 1 && rows.cols >= 1, "assign: empty query");
+        let per = (ASSIGN_CHUNK_BYTES / (rows.cols * 4)).max(1);
+        let mut labels = Vec::with_capacity(rows.rows);
+        let mut start = 0;
+        while start < rows.rows {
+            let len = per.min(rows.rows - start);
+            let chunk = Mat {
+                rows: len,
+                cols: rows.cols,
+                data: rows.data[start * rows.cols..(start + len) * rows.cols].to_vec(),
+            };
+            let payload = encode_assign(model_id, &chunk)?;
+            let resp = self.exchange(OP_ASSIGN, &payload, OP_ASSIGN_RESP)?;
+            let part = decode_labels(&resp)?;
+            ensure_arg!(part.len() == len, "assign: server returned {} labels for {len} rows", part.len());
+            labels.extend_from_slice(&part);
+            start += len;
+        }
+        Ok(labels)
+    }
+
+    /// Enumerate the server's registered models (sorted by id).
+    pub fn list_models(&mut self) -> Result<Vec<ModelInfo>> {
+        let resp = self.exchange(OP_LIST_MODELS, &[], OP_MODELS_RESP)?;
+        let text = std::str::from_utf8(&resp)
+            .map_err(|_| Error::Net("ModelsResp payload is not UTF-8".into()))?;
+        let v = Json::parse(text).map_err(Error::Net)?;
+        let arr = v.as_arr().ok_or_else(|| Error::Net("ModelsResp: want an array".into()))?;
+        arr.iter()
+            .map(|e| {
+                Ok(ModelInfo {
+                    id: e
+                        .get("id")
+                        .and_then(|s| s.as_str())
+                        .ok_or_else(|| Error::Net("ModelsResp: missing id".into()))?
+                        .to_string(),
+                    kind: e
+                        .get("kind")
+                        .and_then(|s| s.as_str())
+                        .unwrap_or("uspec")
+                        .to_string(),
+                    k: e.get("k").and_then(|n| n.as_usize()).unwrap_or(0),
+                    d: e.get("d").and_then(|n| n.as_usize()).unwrap_or(0),
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::model::UspecModel;
+
+    fn spec(data: &str) -> FitSpec {
+        FitSpec {
+            method: "u-spec".into(),
+            data: data.into(),
+            k: 2,
+            p: 40,
+            k_nn: 3,
+            m: 3,
+            k_min: 2,
+            k_max: 4,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn fit_queue_is_bounded_blocking_and_closeable() {
+        let q = FitQueue::new(2);
+        q.push(1, spec("a.bin")).unwrap();
+        q.push(2, spec("b.bin")).unwrap();
+        let err = q.push(3, spec("c.bin")).unwrap_err();
+        assert!(err.to_string().contains("queue full"), "{err}");
+        assert_eq!(q.pop().unwrap().0, 1, "FIFO order");
+        q.push(3, spec("c.bin")).unwrap();
+        assert_eq!(q.pop().unwrap().0, 2);
+        q.close();
+        // closed: queued items are abandoned, pushes rejected, pop wakes
+        assert!(q.pop().is_none());
+        assert!(q.push(4, spec("d.bin")).is_err());
+    }
+
+    #[test]
+    fn job_reports_roundtrip_through_the_wire_json() {
+        for state in [
+            JobState::Queued,
+            JobState::Running,
+            JobState::Done { model: "model-000007".into() },
+            JobState::Failed { error: "no such file".into() },
+        ] {
+            let r = JobReport::parse(&job_json(42, &state)).unwrap();
+            assert_eq!(r.job, 42);
+            assert_eq!(r.status, state.status());
+            match state {
+                JobState::Done { model } => assert_eq!(r.model.as_deref(), Some(&model[..])),
+                JobState::Failed { error } => assert_eq!(r.error.as_deref(), Some(&error[..])),
+                _ => assert!(r.model.is_none() && r.error.is_none()),
+            }
+        }
+        assert!(JobReport::parse(b"\xff\xfe").is_err(), "non-UTF-8 rejected");
+        assert!(JobReport::parse(b"{}").is_err(), "missing status rejected");
+    }
+
+    #[test]
+    fn registry_seeding_loads_good_artifacts_and_skips_bad_ones() {
+        let dir = std::env::temp_dir().join(format!("uspec_serve_reg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let model = Model::Uspec(UspecModel {
+            k: 2,
+            k_nn: 2,
+            seed: 1,
+            sigma: 0.5,
+            reps: Mat::from_vec(2, 2, vec![0.0, 0.0, 1.0, 1.0]),
+            rep_labels: vec![0, 1],
+            provenance: String::new(),
+        });
+        save_model(&dir.join(format!("good.{MODEL_EXT}")), &model).unwrap();
+        std::fs::write(dir.join(format!("corrupt.{MODEL_EXT}")), b"not a model").unwrap();
+        std::fs::write(dir.join("ignored.txt"), b"unrelated").unwrap();
+        let reg = load_registry(&dir);
+        assert_eq!(reg.keys().cloned().collect::<Vec<_>>(), vec!["good".to_string()]);
+        assert_eq!(reg["good"].kind(), "uspec");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bind_rejects_bad_config_before_listening() {
+        let cfg = ServeConfig { models_dir: std::env::temp_dir(), queue_depth: 0 };
+        assert!(ServeRuntime::bind("127.0.0.1:0", cfg).is_err(), "zero queue depth");
+        let cfg = ServeConfig::default();
+        assert!(ServeRuntime::bind("no-port-here", cfg).is_err(), "malformed addr");
+    }
+}

@@ -58,13 +58,15 @@ pub use source::{
 };
 
 use crate::affinity::{
-    build_affinity, knr::KnrIndex, knr::KnrResult, select, Affinity, DistanceBackend,
-    SelectStrategy,
+    build_affinity, knr::exact_knr, knr::KnrIndex, knr::KnrResult, select, Affinity,
+    DistanceBackend, SelectStrategy,
 };
 use crate::bipartite::{row_normalize, row_normalize_norms, row_scale, transfer_cut, EigSolver};
 use crate::kmeans::{kmeans, Init, KmeansParams};
 use crate::linalg::{Csr, Mat};
+use crate::runtime::model::{UsencModel, UspecModel};
 use crate::uspec::{KnrMode, UspecParams, UspecResult};
+use crate::util::json::Json;
 use crate::util::par;
 use crate::util::rng::Rng;
 use crate::util::timer::PhaseTimer;
@@ -389,13 +391,27 @@ impl<'a> Pipeline<'a> {
         params: &UspecParams,
         seed: u64,
     ) -> Result<UspecResult> {
+        self.fit(src, params, seed).map(|f| f.result)
+    }
+
+    /// [`Pipeline::run`] that additionally captures a persistable
+    /// [`UspecModel`] for out-of-sample assignment ([`Pipeline::assign`]).
+    /// The result is byte-identical to what [`Pipeline::run`] returns for
+    /// the same `(params, seed)` — the capture only reads state the run
+    /// produces anyway (representatives, top-1 KNR anchors, σ, labels).
+    pub fn fit(
+        &self,
+        src: &dyn DataSource,
+        params: &UspecParams,
+        seed: u64,
+    ) -> Result<FitOutput> {
         let params = self.validate(src, params)?;
         let mut rng = Rng::new(seed);
         let mut timer = PhaseTimer::new();
         let sel_seed = rng.next_u64();
         let stage = SelectStage::from_params(&params);
         let reps = timer.time("select", || stage.run(src, self.chunk, sel_seed))?;
-        self.finish(src, &params, rng, timer, reps)
+        self.finish(src, &params, rng, timer, reps, seed)
     }
 
     /// One shared pass over the data filling the candidate reservoirs of
@@ -429,6 +445,18 @@ impl<'a> Pipeline<'a> {
         seed: u64,
         cand: &CandidateSet,
     ) -> Result<UspecResult> {
+        self.fit_from_candidates(src, params, seed, cand).map(|f| f.result)
+    }
+
+    /// [`Pipeline::run_from_candidates`] with model capture — see
+    /// [`Pipeline::fit`].
+    pub fn fit_from_candidates(
+        &self,
+        src: &dyn DataSource,
+        params: &UspecParams,
+        seed: u64,
+        cand: &CandidateSet,
+    ) -> Result<FitOutput> {
         let params = self.validate(src, params)?;
         let mut rng = Rng::new(seed);
         let mut timer = PhaseTimer::new();
@@ -438,7 +466,7 @@ impl<'a> Pipeline<'a> {
             let mut sel_rng = cand.rng.clone();
             stage.refine(&cand.candidates, &mut sel_rng)
         })?;
-        self.finish(src, &params, rng, timer, reps)
+        self.finish(src, &params, rng, timer, reps, seed)
     }
 
     fn validate_opts(&self) -> Result<()> {
@@ -457,7 +485,11 @@ impl<'a> Pipeline<'a> {
         Ok(params)
     }
 
-    /// Stages 2–4, shared by every entry point.
+    /// Stages 2–4, shared by every entry point, plus the model capture:
+    /// a cluster label per representative (majority vote of the fit
+    /// points anchored on it — top-1 KNR; vote-less representatives
+    /// inherit the label of their nearest voted representative) alongside
+    /// the representatives and σ the assignment path replays.
     fn finish(
         &self,
         src: &dyn DataSource,
@@ -465,7 +497,8 @@ impl<'a> Pipeline<'a> {
         mut rng: Rng,
         mut timer: PhaseTimer,
         reps: Mat,
-    ) -> Result<UspecResult> {
+        seed: u64,
+    ) -> Result<FitOutput> {
         let n = src.n();
         let k_prime = (params.k_nn * params.k_prime_factor).max(params.k_nn + 1);
         let index = timer.time("knr_index", || {
@@ -492,8 +525,254 @@ impl<'a> Pipeline<'a> {
         };
         let (labels, embedding) =
             stage.run(&aff.b, params.k.min(index.p()), tc_seed, km_seed, &mut timer)?;
-        Ok(UspecResult { labels, embedding, timer, sigma: aff.sigma })
+        let rep_labels = derive_rep_labels(&index.reps, &knr, &labels, params.k);
+        let provenance = Json::obj(vec![
+            ("algo", Json::Str("uspec".into())),
+            ("k", Json::Num(params.k as f64)),
+            ("p", Json::Num(index.p() as f64)),
+            ("k_nn", Json::Num(knr.k as f64)),
+            ("seed", Json::Str(seed.to_string())),
+        ])
+        .to_string();
+        let model = UspecModel {
+            k: params.k as u32,
+            k_nn: knr.k as u32,
+            seed,
+            sigma: aff.sigma,
+            reps: index.reps,
+            rep_labels,
+            provenance,
+        };
+        let result = UspecResult { labels, embedding, timer, sigma: aff.sigma };
+        Ok(FitOutput { result, model })
     }
+
+    /// Label out-of-sample rows with a fitted model: exact KNR of every
+    /// row against the stored representatives (packed-panel kernels, like
+    /// the fit's query pass) followed by a Gaussian affinity vote with the
+    /// stored σ over the representatives' cluster labels. The walk is
+    /// chunked and shard-parallel exactly like [`KnrStage::query`], and
+    /// rows are labeled independently — labels are bit-identical across
+    /// `{chunk, shards, threads, SIMD dispatch}` like every other path.
+    pub fn assign(&self, model: &UspecModel, src: &dyn DataSource) -> Result<Vec<u32>> {
+        self.validate_opts()?;
+        model.validate()?;
+        ensure_arg!(
+            src.d() == model.reps.cols,
+            "assign: source dimension {} != model dimension {}",
+            src.d(),
+            model.reps.cols
+        );
+        let n = src.n();
+        let mut labels = vec![0u32; n];
+        let ptr = par::SendPtr(labels.as_mut_ptr());
+        let plan = match src.segments() {
+            Some(segs) => ShardPlan::aligned(n, self.shards, &segs)?,
+            None => ShardPlan::new(n, self.shards)?,
+        }
+        .with_storage(self.storage);
+        for_each_chunk_sharded(src, &plan, self.chunk, |start, m| {
+            let out = assign_rows(
+                m,
+                model.k as usize,
+                model.k_nn as usize,
+                model.sigma,
+                &model.reps,
+                &model.rep_labels,
+                self.backend,
+            );
+            assert!(start + m.rows <= n, "chunk [{start}, {}) > n={n}", start + m.rows);
+            assert_eq!(out.len(), m.rows, "assign result shape");
+            // SAFETY: shards are disjoint row ranges and chunks within a
+            // shard are disjoint too, so rows [start, start + m.rows) are
+            // written exactly once; `labels` outlives the blocking walk.
+            unsafe {
+                std::ptr::copy_nonoverlapping(out.as_ptr(), ptr.0.add(start), out.len());
+            }
+            Ok(())
+        })?;
+        Ok(labels)
+    }
+
+    /// Consensus assignment for a fitted U-SENC ensemble: every base model
+    /// labels the row ([`assign_rows`] semantics per base), then the bases
+    /// vote with their fit-time (base label → consensus label) co-label
+    /// fractions; the consensus cluster with the highest summed vote wins
+    /// (ties break to the smallest cluster id). Same chunk/shard/thread
+    /// bit-identity contract as [`Pipeline::assign`].
+    pub fn assign_consensus(&self, model: &UsencModel, src: &dyn DataSource) -> Result<Vec<u32>> {
+        self.validate_opts()?;
+        model.validate()?;
+        ensure_arg!(
+            src.d() == model.bases[0].reps.cols,
+            "assign: source dimension {} != model dimension {}",
+            src.d(),
+            model.bases[0].reps.cols
+        );
+        let n = src.n();
+        let kc = model.k as usize;
+        // Row-normalize every base's vote table once (empty base-cluster
+        // rows contribute nothing).
+        let frac: Vec<Vec<f64>> = model
+            .bases
+            .iter()
+            .map(|b| {
+                let mut f = vec![0f64; b.votes.len()];
+                for bl in 0..b.k as usize {
+                    let row = &b.votes[bl * kc..(bl + 1) * kc];
+                    let tot: u64 = row.iter().sum();
+                    if tot > 0 {
+                        for (fc, &v) in f[bl * kc..(bl + 1) * kc].iter_mut().zip(row) {
+                            *fc = v as f64 / tot as f64;
+                        }
+                    }
+                }
+                f
+            })
+            .collect();
+        let mut labels = vec![0u32; n];
+        let ptr = par::SendPtr(labels.as_mut_ptr());
+        let plan = match src.segments() {
+            Some(segs) => ShardPlan::aligned(n, self.shards, &segs)?,
+            None => ShardPlan::new(n, self.shards)?,
+        }
+        .with_storage(self.storage);
+        for_each_chunk_sharded(src, &plan, self.chunk, |start, m| {
+            let mut scores = vec![0f64; m.rows * kc];
+            for (bi, b) in model.bases.iter().enumerate() {
+                let base_labels = assign_rows(
+                    m,
+                    b.k as usize,
+                    b.k_nn as usize,
+                    b.sigma,
+                    &b.reps,
+                    &b.rep_labels,
+                    self.backend,
+                );
+                for (ri, &bl) in base_labels.iter().enumerate() {
+                    let f = &frac[bi][bl as usize * kc..(bl as usize + 1) * kc];
+                    for (s, &v) in scores[ri * kc..(ri + 1) * kc].iter_mut().zip(f) {
+                        *s += v;
+                    }
+                }
+            }
+            let out: Vec<u32> = (0..m.rows)
+                .map(|ri| {
+                    let row = &scores[ri * kc..(ri + 1) * kc];
+                    let mut best = 0usize;
+                    for (c, &s) in row.iter().enumerate().skip(1) {
+                        if s > row[best] {
+                            best = c;
+                        }
+                    }
+                    best as u32
+                })
+                .collect();
+            assert!(start + m.rows <= n, "chunk [{start}, {}) > n={n}", start + m.rows);
+            // SAFETY: disjoint row ranges, exactly as in `assign`.
+            unsafe {
+                std::ptr::copy_nonoverlapping(out.as_ptr(), ptr.0.add(start), out.len());
+            }
+            Ok(())
+        })?;
+        Ok(labels)
+    }
+}
+
+/// A fitted run: the usual result plus the persistable model
+/// ([`crate::runtime::model`]) for out-of-sample assignment.
+#[derive(Debug, Clone)]
+pub struct FitOutput {
+    pub result: UspecResult,
+    pub model: UspecModel,
+}
+
+/// Majority-vote cluster label per representative: each fit point votes
+/// for its top-1 KNR anchor; vote-less representatives inherit the label
+/// of their nearest voted representative (scalar distances, tie to the
+/// lower representative id). Sequential and thread-count independent.
+fn derive_rep_labels(reps: &Mat, knr: &KnrResult, labels: &[u32], k: usize) -> Vec<u32> {
+    let p = reps.rows;
+    let mut counts = vec![0u64; p * k];
+    for (i, &l) in labels.iter().enumerate() {
+        let rep = knr.idx[i * knr.k] as usize;
+        counts[rep * k + l as usize] += 1;
+    }
+    let mut rep_labels = vec![u32::MAX; p];
+    for j in 0..p {
+        let row = &counts[j * k..(j + 1) * k];
+        let mut best = 0usize;
+        for (c, &v) in row.iter().enumerate().skip(1) {
+            if v > row[best] {
+                best = c;
+            }
+        }
+        if row[best] > 0 {
+            rep_labels[j] = best as u32;
+        }
+    }
+    let voted: Vec<usize> = (0..p).filter(|&j| rep_labels[j] != u32::MAX).collect();
+    for j in 0..p {
+        if rep_labels[j] != u32::MAX {
+            continue;
+        }
+        let (mut best, mut best_d2) = (voted[0], f32::INFINITY);
+        for &j2 in &voted {
+            let mut d2 = 0.0f32;
+            for (a, b) in reps.row(j).iter().zip(reps.row(j2)) {
+                let diff = a - b;
+                d2 += diff * diff;
+            }
+            if d2 < best_d2 {
+                best = j2;
+                best_d2 = d2;
+            }
+        }
+        rep_labels[j] = rep_labels[best];
+    }
+    rep_labels
+}
+
+/// The assignment kernel shared by [`Pipeline::assign`] and every base of
+/// [`Pipeline::assign_consensus`]: exact KNR of `x` against `reps`
+/// (packed-panel fast path on the native backend), then per row a
+/// Gaussian vote `exp(−d²/2σ²)` — the fit's affinity weights (Eq. 5–6)
+/// with the *stored* σ — summed per representative label in
+/// nearest-first order. The nearest representative's label seeds the
+/// argmax, so far-from-everything rows (all weights underflow to 0) still
+/// take their nearest representative's cluster and ties favor it. Rows
+/// are independent: results are bit-identical for any chunking/threading
+/// of the caller.
+fn assign_rows(
+    x: &Mat,
+    k: usize,
+    k_nn: usize,
+    sigma: f64,
+    reps: &Mat,
+    rep_labels: &[u32],
+    backend: &dyn DistanceBackend,
+) -> Vec<u32> {
+    let kq = k_nn.min(reps.rows).max(1);
+    let r = exact_knr(x, reps, kq, backend);
+    let denom = 2.0 * sigma * sigma;
+    let mut scores = vec![0f64; k];
+    let mut out = Vec::with_capacity(x.rows);
+    for bi in 0..x.rows {
+        scores.iter_mut().for_each(|s| *s = 0.0);
+        for t in 0..r.k {
+            let rep = r.idx[bi * r.k + t] as usize;
+            let w = (-(r.d2[bi * r.k + t].max(0.0) as f64) / denom).exp();
+            scores[rep_labels[rep] as usize] += w;
+        }
+        let mut best = rep_labels[r.idx[bi * r.k] as usize] as usize;
+        for (c, &s) in scores.iter().enumerate() {
+            if s > scores[best] {
+                best = c;
+            }
+        }
+        out.push(best as u32);
+    }
+    out
 }
 
 #[cfg(test)]

@@ -3,6 +3,10 @@
 //! `xla` crate. Python never runs here — the artifacts are self-contained.
 //!
 //! * [`manifest`] — the artifact inventory (static shapes per variant).
+//! * [`model`] — persisted fitted-model artifacts (versioned, checksummed
+//!   binary format for U-SPEC/U-SENC models; [`save_model`]/[`load_model`]
+//!   round-trip bit-exactly) backing out-of-sample assignment and the
+//!   `repro serve` runtime.
 //! * [`Runtime`] — compile-on-first-use executable cache + the padding
 //!   machinery that maps arbitrary (rows, centers, d) requests onto the
 //!   fixed-shape variants (rows → B-chunks, d → zero-padded columns,
@@ -11,9 +15,13 @@
 //!   [`crate::affinity::DistanceBackend`] the coordinator hands to U-SPEC.
 
 pub mod manifest;
+pub mod model;
 pub mod pool;
 
 pub use manifest::{ArtifactMeta, Manifest};
+pub use model::{
+    load_model, save_model, Model, UsencBase, UsencModel, UspecModel, MODEL_MAGIC, MODEL_VERSION,
+};
 pub use pool::{KernelPool, PjrtBackend};
 
 use crate::linalg::Mat;

@@ -1,0 +1,501 @@
+//! Persisted fitted-model artifacts — fit once, assign forever.
+//!
+//! A fitted U-SPEC run contains everything needed to label a *new* point
+//! cheaply: the p representatives, a cluster label per representative,
+//! and the Gaussian bandwidth σ (paper §4 — one packed-panel KNR query +
+//! affinity vote per out-of-sample row). This module persists that state
+//! as a versioned, checksummed binary artifact so a long-running service
+//! ([`crate::net::serve`]) can load models fitted by earlier jobs and
+//! answer assignment queries without refitting.
+//!
+//! # On-disk layout (little-endian throughout)
+//!
+//! ```text
+//! magic    8 B   "USPECMDL"
+//! version  1 B   MODEL_VERSION (currently 1)
+//! kind     1 B   0 = U-SPEC, 1 = U-SENC ensemble
+//! body     ...   kind-specific payload (below)
+//! checksum 4 B   FNV-1a over everything before it (magic included)
+//! ```
+//!
+//! U-SPEC body: `k u32 · k_nn u32 · seed u64 · sigma f64 · p u64 · d u64
+//! · reps p×d f32 · rep_labels p×u32 · prov_len u32 · provenance JSON`.
+//!
+//! U-SENC body: `k u32 · seed u64 · m u32 · m× base · prov_len u32 ·
+//! provenance JSON` where each base is a U-SPEC-shaped block (its own
+//! `k`, `k_nn`, `sigma`, reps, rep_labels) followed by a `k × consensus_k`
+//! u64 vote table counting fit-time (base label, consensus label)
+//! co-occurrences — the consensus [`crate::pipeline::Pipeline::assign_consensus`]
+//! vote weights.
+//!
+//! [`save_model`]/[`load_model`] round-trip bit-exactly (f32/f64 payloads
+//! are stored as raw bit patterns). Loads reject corrupt, truncated, and
+//! version-skewed files with typed [`crate::Error`]s before any field is
+//! interpreted: magic and version first, then the trailing checksum over
+//! the whole file, then structural validation of every length and label
+//! range.
+
+use crate::linalg::Mat;
+use crate::net::proto::Fnv32;
+use crate::{ensure_arg, Error, Result};
+use std::path::Path;
+
+/// Artifact file magic.
+pub const MODEL_MAGIC: &[u8; 8] = b"USPECMDL";
+/// Current artifact format version (the byte after the magic).
+pub const MODEL_VERSION: u8 = 1;
+
+const KIND_USPEC: u8 = 0;
+const KIND_USENC: u8 = 1;
+
+/// A fitted U-SPEC model: everything [`crate::pipeline::Pipeline::assign`]
+/// needs to label out-of-sample rows bit-identically to the fit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UspecModel {
+    /// Output cluster count (labels are in `0..k`).
+    pub k: u32,
+    /// Nearest representatives per assignment query.
+    pub k_nn: u32,
+    /// Pipeline seed the model was fitted with (provenance).
+    pub seed: u64,
+    /// Gaussian bandwidth σ from the fit's affinity stage.
+    pub sigma: f64,
+    /// The p×d representatives.
+    pub reps: Mat,
+    /// Cluster label per representative (majority vote of the fit points
+    /// anchored on it; vote-less representatives inherit their nearest
+    /// voted representative's label).
+    pub rep_labels: Vec<u32>,
+    /// Fit configuration provenance (compact JSON, informational).
+    pub provenance: String,
+}
+
+/// One base clusterer of a fitted U-SENC ensemble.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UsencBase {
+    /// Base cluster count (rows of `votes`; base labels are in `0..k`).
+    pub k: u32,
+    pub k_nn: u32,
+    pub sigma: f64,
+    pub reps: Mat,
+    pub rep_labels: Vec<u32>,
+    /// `k × consensus_k` co-label counts from the fit: `votes[b*kc + c]`
+    /// is how many fit points got base label `b` and consensus label `c`.
+    pub votes: Vec<u64>,
+}
+
+/// A fitted U-SENC ensemble model for consensus assignment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UsencModel {
+    /// Consensus cluster count.
+    pub k: u32,
+    pub seed: u64,
+    pub bases: Vec<UsencBase>,
+    pub provenance: String,
+}
+
+/// A loaded model artifact of either kind.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Model {
+    Uspec(UspecModel),
+    Usenc(UsencModel),
+}
+
+impl Model {
+    /// Artifact kind name ("uspec" / "usenc").
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Model::Uspec(_) => "uspec",
+            Model::Usenc(_) => "usenc",
+        }
+    }
+
+    /// Output cluster count (consensus k for ensembles).
+    pub fn k(&self) -> u32 {
+        match self {
+            Model::Uspec(m) => m.k,
+            Model::Usenc(m) => m.k,
+        }
+    }
+
+    /// Feature dimension assignment inputs must have.
+    pub fn d(&self) -> usize {
+        match self {
+            Model::Uspec(m) => m.reps.cols,
+            Model::Usenc(m) => m.bases.first().map(|b| b.reps.cols).unwrap_or(0),
+        }
+    }
+}
+
+impl UspecModel {
+    /// Structural validity: non-degenerate shapes and in-range labels.
+    pub fn validate(&self) -> Result<()> {
+        ensure_arg!(self.k >= 1, "model: k must be >= 1");
+        ensure_arg!(self.k_nn >= 1, "model: k_nn must be >= 1");
+        ensure_arg!(self.reps.rows >= 1, "model: empty representative set");
+        ensure_arg!(
+            self.rep_labels.len() == self.reps.rows,
+            "model: {} rep labels for {} representatives",
+            self.rep_labels.len(),
+            self.reps.rows
+        );
+        ensure_arg!(
+            self.rep_labels.iter().all(|&l| l < self.k),
+            "model: representative label out of range (k={})",
+            self.k
+        );
+        ensure_arg!(self.sigma > 0.0 && self.sigma.is_finite(), "model: bad sigma");
+        Ok(())
+    }
+}
+
+impl UsencModel {
+    /// Structural validity of the ensemble: every base is a valid U-SPEC
+    /// block with a `base.k × self.k` vote table, all on one dimension.
+    pub fn validate(&self) -> Result<()> {
+        ensure_arg!(self.k >= 1, "model: consensus k must be >= 1");
+        ensure_arg!(!self.bases.is_empty(), "model: empty ensemble");
+        let d = self.bases[0].reps.cols;
+        for (i, b) in self.bases.iter().enumerate() {
+            let as_uspec = UspecModel {
+                k: b.k,
+                k_nn: b.k_nn,
+                seed: self.seed,
+                sigma: b.sigma,
+                reps: b.reps.clone(),
+                rep_labels: b.rep_labels.clone(),
+                provenance: String::new(),
+            };
+            as_uspec.validate().map_err(|e| Error::InvalidArg(format!("base {i}: {e}")))?;
+            ensure_arg!(b.reps.cols == d, "model: base {i} dimension mismatch");
+            ensure_arg!(
+                b.votes.len() == b.k as usize * self.k as usize,
+                "model: base {i} vote table is {} entries, want {}",
+                b.votes.len(),
+                b.k as usize * self.k as usize
+            );
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------------
+
+fn put_mat(out: &mut Vec<u8>, m: &Mat) {
+    out.extend_from_slice(&(m.rows as u64).to_le_bytes());
+    out.extend_from_slice(&(m.cols as u64).to_le_bytes());
+    for v in &m.data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_uspec_block(out: &mut Vec<u8>, k: u32, k_nn: u32, seed: u64, sigma: f64, reps: &Mat, rep_labels: &[u32]) {
+    out.extend_from_slice(&k.to_le_bytes());
+    out.extend_from_slice(&k_nn.to_le_bytes());
+    out.extend_from_slice(&seed.to_le_bytes());
+    out.extend_from_slice(&sigma.to_bits().to_le_bytes());
+    put_mat(out, reps);
+    for l in rep_labels {
+        out.extend_from_slice(&l.to_le_bytes());
+    }
+}
+
+/// Serialize a model to the versioned, checksummed artifact byte layout.
+pub fn encode_model(model: &Model) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MODEL_MAGIC);
+    out.push(MODEL_VERSION);
+    match model {
+        Model::Uspec(m) => {
+            m.validate()?;
+            out.push(KIND_USPEC);
+            put_uspec_block(&mut out, m.k, m.k_nn, m.seed, m.sigma, &m.reps, &m.rep_labels);
+            put_str(&mut out, &m.provenance);
+        }
+        Model::Usenc(m) => {
+            m.validate()?;
+            out.push(KIND_USENC);
+            out.extend_from_slice(&m.k.to_le_bytes());
+            out.extend_from_slice(&m.seed.to_le_bytes());
+            out.extend_from_slice(&(m.bases.len() as u32).to_le_bytes());
+            for b in &m.bases {
+                put_uspec_block(&mut out, b.k, b.k_nn, m.seed, b.sigma, &b.reps, &b.rep_labels);
+                for v in &b.votes {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            put_str(&mut out, &m.provenance);
+        }
+    }
+    let mut fnv = Fnv32::new();
+    fnv.update(&out);
+    out.extend_from_slice(&fnv.finish().to_le_bytes());
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------------
+
+/// Byte cursor with typed truncation errors.
+struct Dec<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            return Err(Error::InvalidArg(format!(
+                "model artifact truncated reading {what} (need {n} bytes at offset {}, have {})",
+                self.i,
+                self.b.len() - self.i
+            )));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    fn mat(&mut self, what: &str) -> Result<Mat> {
+        let rows = self.u64(what)? as usize;
+        let cols = self.u64(what)? as usize;
+        let count = rows
+            .checked_mul(cols)
+            .filter(|&c| c <= u32::MAX as usize)
+            .ok_or_else(|| Error::InvalidArg(format!("model artifact: absurd {what} shape {rows}x{cols}")))?;
+        let raw = self.take(count * 4, what)?;
+        let mut data = Vec::with_capacity(count);
+        for c in raw.chunks_exact(4) {
+            data.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(Mat { rows, cols, data })
+    }
+
+    fn labels(&mut self, n: usize, what: &str) -> Result<Vec<u32>> {
+        let raw = self.take(n * 4, what)?;
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn string(&mut self, what: &str) -> Result<String> {
+        let len = self.u32(what)? as usize;
+        let raw = self.take(len, what)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| Error::InvalidArg(format!("model artifact: {what} is not UTF-8")))
+    }
+}
+
+fn uspec_block(d: &mut Dec, seed_override: Option<u64>) -> Result<(u32, u32, u64, f64, Mat, Vec<u32>)> {
+    let k = d.u32("k")?;
+    let k_nn = d.u32("k_nn")?;
+    let seed = d.u64("seed")?;
+    let sigma = d.f64("sigma")?;
+    let reps = d.mat("representatives")?;
+    let rep_labels = d.labels(reps.rows, "representative labels")?;
+    Ok((k, k_nn, seed_override.unwrap_or(seed), sigma, reps, rep_labels))
+}
+
+/// Deserialize a model artifact, rejecting corrupt/truncated/version-skewed
+/// bytes with typed errors. The checksum is verified before any field is
+/// interpreted.
+pub fn decode_model(bytes: &[u8]) -> Result<Model> {
+    ensure_arg!(
+        bytes.len() >= MODEL_MAGIC.len() + 2 + 4,
+        "model artifact truncated ({} bytes, header alone is {})",
+        bytes.len(),
+        MODEL_MAGIC.len() + 2 + 4
+    );
+    ensure_arg!(
+        &bytes[..MODEL_MAGIC.len()] == MODEL_MAGIC,
+        "model artifact: bad magic (not a USPECMDL file)"
+    );
+    let version = bytes[MODEL_MAGIC.len()];
+    ensure_arg!(
+        version == MODEL_VERSION,
+        "model artifact: unsupported version {version} (this build reads version {MODEL_VERSION})"
+    );
+    let (body, tail) = bytes.split_at(bytes.len() - 4);
+    let stored = u32::from_le_bytes(tail.try_into().unwrap());
+    let mut fnv = Fnv32::new();
+    fnv.update(body);
+    let computed = fnv.finish();
+    ensure_arg!(
+        stored == computed,
+        "model artifact: checksum mismatch (stored {stored:#010x}, computed {computed:#010x}) — corrupt file"
+    );
+    let kind = bytes[MODEL_MAGIC.len() + 1];
+    let mut d = Dec { b: body, i: MODEL_MAGIC.len() + 2 };
+    let model = match kind {
+        KIND_USPEC => {
+            let (k, k_nn, seed, sigma, reps, rep_labels) = uspec_block(&mut d, None)?;
+            let provenance = d.string("provenance")?;
+            Model::Uspec(UspecModel { k, k_nn, seed, sigma, reps, rep_labels, provenance })
+        }
+        KIND_USENC => {
+            let k = d.u32("consensus k")?;
+            let seed = d.u64("seed")?;
+            let m = d.u32("ensemble size")? as usize;
+            ensure_arg!(m >= 1 && m <= 1 << 20, "model artifact: absurd ensemble size {m}");
+            let mut bases = Vec::with_capacity(m);
+            for _ in 0..m {
+                let (bk, k_nn, _seed, sigma, reps, rep_labels) = uspec_block(&mut d, Some(seed))?;
+                let nv = (bk as usize)
+                    .checked_mul(k as usize)
+                    .filter(|&c| c <= u32::MAX as usize)
+                    .ok_or_else(|| {
+                        Error::InvalidArg("model artifact: absurd vote table shape".into())
+                    })?;
+                let raw = d.take(nv * 8, "vote table")?;
+                let votes = raw
+                    .chunks_exact(8)
+                    .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                bases.push(UsencBase { k: bk, k_nn, sigma, reps, rep_labels, votes });
+            }
+            let provenance = d.string("provenance")?;
+            Model::Usenc(UsencModel { k, seed, bases, provenance })
+        }
+        other => {
+            return Err(Error::InvalidArg(format!("model artifact: unknown kind byte {other}")))
+        }
+    };
+    ensure_arg!(d.i == body.len(), "model artifact: {} trailing bytes", body.len() - d.i);
+    match &model {
+        Model::Uspec(m) => m.validate()?,
+        Model::Usenc(m) => m.validate()?,
+    }
+    Ok(model)
+}
+
+/// Persist a model artifact. The write goes through a same-directory temp
+/// file + rename so a concurrent [`load_model`] never observes a torn file.
+pub fn save_model(path: impl AsRef<Path>, model: &Model) -> Result<()> {
+    let path = path.as_ref();
+    let bytes = encode_model(model)?;
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, &bytes)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Load a model artifact saved by [`save_model`].
+pub fn load_model(path: impl AsRef<Path>) -> Result<Model> {
+    let bytes = std::fs::read(path.as_ref())?;
+    decode_model(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_uspec() -> UspecModel {
+        UspecModel {
+            k: 2,
+            k_nn: 3,
+            seed: 42,
+            sigma: 0.731,
+            reps: Mat::from_vec(4, 2, vec![0.0, 1.0, 2.0, 3.0, -4.0, 5.5, 6.0, 7.25]),
+            rep_labels: vec![0, 1, 1, 0],
+            provenance: r#"{"algo":"uspec","k":2}"#.into(),
+        }
+    }
+
+    fn sample_usenc() -> UsencModel {
+        let b0 = UsencBase {
+            k: 3,
+            k_nn: 2,
+            sigma: 1.5,
+            reps: Mat::from_vec(3, 2, vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0]),
+            rep_labels: vec![0, 1, 2],
+            votes: vec![5, 0, 1, 6, 0, 7],
+        };
+        let b1 = UsencBase {
+            k: 2,
+            k_nn: 2,
+            sigma: 0.25,
+            reps: Mat::from_vec(2, 2, vec![0.5, 0.5, 1.5, 1.5]),
+            rep_labels: vec![1, 0],
+            votes: vec![3, 4, 9, 0],
+        };
+        UsencModel { k: 2, seed: 7, bases: vec![b0, b1], provenance: "{}".into() }
+    }
+
+    #[test]
+    fn uspec_roundtrip_is_bit_exact() {
+        let m = sample_uspec();
+        let bytes = encode_model(&Model::Uspec(m.clone())).unwrap();
+        let Model::Uspec(back) = decode_model(&bytes).unwrap() else { panic!("kind") };
+        assert_eq!(back.sigma.to_bits(), m.sigma.to_bits());
+        for (a, b) in back.reps.data.iter().zip(&m.reps.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn usenc_roundtrip_is_bit_exact() {
+        let m = sample_usenc();
+        let bytes = encode_model(&Model::Usenc(m.clone())).unwrap();
+        let Model::Usenc(back) = decode_model(&bytes).unwrap() else { panic!("kind") };
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn rejects_corruption_truncation_and_skew() {
+        let bytes = encode_model(&Model::Uspec(sample_uspec())).unwrap();
+        // flip one payload byte → checksum mismatch
+        let mut bad = bytes.clone();
+        bad[20] ^= 0x01;
+        let err = decode_model(&bad).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+        // truncated file
+        let err = decode_model(&bytes[..bytes.len() - 9]).unwrap_err().to_string();
+        assert!(err.contains("checksum") || err.contains("truncated"), "{err}");
+        assert!(decode_model(&bytes[..4]).is_err());
+        // version skew (checksum recomputed so the version check itself fires)
+        let mut skew = bytes[..bytes.len() - 4].to_vec();
+        skew[MODEL_MAGIC.len()] = MODEL_VERSION + 1;
+        let mut fnv = Fnv32::new();
+        fnv.update(&skew);
+        skew.extend_from_slice(&fnv.finish().to_le_bytes());
+        let err = decode_model(&skew).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+        // wrong magic
+        let mut not_ours = bytes.clone();
+        not_ours[0] = b'X';
+        assert!(decode_model(&not_ours).unwrap_err().to_string().contains("magic"));
+    }
+
+    #[test]
+    fn file_roundtrip_and_validation() {
+        let dir = std::env::temp_dir().join("uspec_model_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.uspecmdl");
+        let m = Model::Usenc(sample_usenc());
+        save_model(&path, &m).unwrap();
+        assert_eq!(load_model(&path).unwrap(), m);
+        // structurally invalid models are rejected at save time
+        let mut bad = sample_uspec();
+        bad.rep_labels[0] = 99;
+        assert!(save_model(dir.join("bad.uspecmdl"), &Model::Uspec(bad)).is_err());
+    }
+}

@@ -27,7 +27,9 @@ use crate::affinity::DistanceBackend;
 use crate::bipartite::EigSolver;
 use crate::linalg::Csr;
 use crate::pipeline::{CandidateSet, DataSource, ExecOpts, Pipeline, SelectStage};
+use crate::runtime::model::{UsencBase, UsencModel};
 use crate::uspec::UspecParams;
+use crate::util::json::Json;
 use crate::util::par;
 use crate::util::rng::Rng;
 use crate::util::timer::PhaseTimer;
@@ -345,6 +347,84 @@ pub fn usenc_opts(
     Ok(UsencResult { labels, ensemble, timer })
 }
 
+/// A fitted ensemble: the usual result plus the persistable consensus
+/// model ([`crate::runtime::model::UsencModel`]) for out-of-sample
+/// assignment ([`crate::pipeline::Pipeline::assign_consensus`]).
+#[derive(Debug, Clone)]
+pub struct UsencFitOutput {
+    pub result: UsencResult,
+    pub model: UsencModel,
+}
+
+/// [`usenc_opts`] that additionally captures a persistable [`UsencModel`]:
+/// every base clusterer's U-SPEC model (representatives, σ, per-rep
+/// labels) plus a `kⁱ × k` vote table counting the fit-time (base label,
+/// consensus label) co-occurrences that weight the consensus assignment
+/// vote. The labels are byte-identical to [`usenc_opts`] for the same
+/// `(params, seed, opts)` — the base runs go through
+/// [`Pipeline::fit`]/[`Pipeline::fit_from_candidates`], which share the
+/// exact stage code and seed schedule with the plain runs.
+pub fn usenc_fit(
+    source: &dyn DataSource,
+    params: &UsencParams,
+    seed: u64,
+    backend: &dyn DistanceBackend,
+    opts: ExecOpts,
+) -> Result<UsencFitOutput> {
+    let mut timer = PhaseTimer::new();
+    let pipe = Pipeline::new(backend).with_opts(opts);
+    let jobs = derive_jobs(params, source.n(), seed);
+    let group = sweep_group_size(params, source.n(), source.d());
+    let mut ensemble = Ensemble::default();
+    let mut base_models = Vec::with_capacity(jobs.len());
+    timer.time("generation", || -> Result<()> {
+        for group_jobs in jobs.chunks(group.max(1)) {
+            let cands = sweep_job_candidates(&pipe, source, params, group_jobs)?;
+            for (i, job) in group_jobs.iter().enumerate() {
+                let base = job_params(params, job);
+                let fit = match cands.as_ref().map(|c| &c[i]) {
+                    Some(c) => pipe.fit_from_candidates(source, &base, job.seed, c)?,
+                    None => pipe.fit(source, &base, job.seed)?,
+                };
+                ensemble.push(fit.result.labels);
+                base_models.push(fit.model);
+            }
+        }
+        Ok(())
+    })?;
+    let labels = timer.time("consensus", || {
+        consensus_bipartite(&ensemble, params.k, params.base.solver, seed ^ 0xC075)
+    })?;
+    let kc = params.k;
+    let bases: Vec<UsencBase> = base_models
+        .into_iter()
+        .zip(&ensemble.labelings)
+        .map(|(bm, bl)| {
+            let mut votes = vec![0u64; bm.k as usize * kc];
+            for (i, &b) in bl.iter().enumerate() {
+                votes[b as usize * kc + labels[i] as usize] += 1;
+            }
+            UsencBase {
+                k: bm.k,
+                k_nn: bm.k_nn,
+                sigma: bm.sigma,
+                reps: bm.reps,
+                rep_labels: bm.rep_labels,
+                votes,
+            }
+        })
+        .collect();
+    let provenance = Json::obj(vec![
+        ("algo", Json::Str("usenc".into())),
+        ("k", Json::Num(kc as f64)),
+        ("m", Json::Num(bases.len() as f64)),
+        ("seed", Json::Str(seed.to_string())),
+    ])
+    .to_string();
+    let model = UsencModel { k: kc as u32, seed, bases, provenance };
+    Ok(UsencFitOutput { result: UsencResult { labels, ensemble, timer }, model })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -456,6 +536,22 @@ mod tests {
         let opts = ExecOpts { chunk: 128, shards: 3, ..ExecOpts::default() };
         let c = generate_ensemble_opts(&ds.x, &params, 5, &NativeBackend, opts).unwrap();
         assert_eq!(a.labelings, c.labelings);
+    }
+
+    #[test]
+    fn fit_matches_plain_usenc_and_captures_a_valid_model() {
+        let ds = two_moons(500, 0.06, 8);
+        let params = small_params(2, 3, 60);
+        let plain = usenc(&ds.x, &params, 5, &NativeBackend).unwrap();
+        let fit = usenc_fit(&ds.x, &params, 5, &NativeBackend, ExecOpts::default()).unwrap();
+        assert_eq!(plain.labels, fit.result.labels);
+        assert_eq!(plain.ensemble.labelings, fit.result.ensemble.labelings);
+        fit.model.validate().unwrap();
+        assert_eq!(fit.model.bases.len(), 3);
+        // every vote table counts exactly n fit points
+        for b in &fit.model.bases {
+            assert_eq!(b.votes.iter().sum::<u64>(), 500);
+        }
     }
 
     #[test]

@@ -1,0 +1,288 @@
+//! Clustering-as-a-service acceptance suite: the fit → save → load →
+//! assign path is **bit-identical** to in-memory assignment across
+//! thread counts {1, 8} × SIMD dispatch {default, forced-scalar} ×
+//! chunk sizes {64, 8192} × {in-memory model, artifact roundtrip} for
+//! U-SPEC and U-SENC, and the same holds over a loopback `repro serve`
+//! daemon (SubmitFit → JobStatus → Assign on the `USPEC/2` framing).
+//! The CI determinism matrix re-runs this suite under `USPEC_THREADS` ∈
+//! {1, 2, 8} and `USPEC_SIMD` ∈ {0, 1}; the `serve-e2e` job proves the
+//! same contract against the release binary over a real socket.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use uspec::affinity::NativeBackend;
+use uspec::config::FitSpec;
+use uspec::data::synthetic::two_moons;
+use uspec::linalg::set_simd_override;
+use uspec::net::serve::{fit_model, MODEL_EXT};
+use uspec::net::{ServeClient, ServeConfig, ServeRuntime};
+use uspec::pipeline::{ExecOpts, Pipeline};
+use uspec::runtime::{load_model, save_model, Model};
+use uspec::streaming::BinDataset;
+use uspec::usenc::{usenc_fit, UsencParams};
+use uspec::uspec::UspecParams;
+use uspec::util::par;
+
+/// Serializes tests that flip the global thread/SIMD overrides.
+static OVERRIDE_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Restores default dispatch even when an assertion unwinds.
+struct Restore;
+
+impl Drop for Restore {
+    fn drop(&mut self) {
+        par::set_thread_override(0);
+        set_simd_override(0);
+    }
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("uspec_serve_rt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn uspec_fit_save_load_assign_bit_identical_across_threads_simd_chunks() {
+    let _g = lock();
+    let _restore = Restore;
+    let train = two_moons(1500, 0.06, 17);
+    let query = two_moons(400, 0.06, 99);
+    let params = UspecParams { k: 2, p: 150, ..Default::default() };
+
+    // baseline: single-threaded, default chunk, in-memory model
+    par::set_thread_override(1);
+    let pipe = Pipeline::new(&NativeBackend);
+    let fit = pipe.fit(&train.x, &params, 77).unwrap();
+    assert_eq!(
+        fit.result.labels,
+        pipe.run(&train.x, &params, 77).unwrap().labels,
+        "fit must produce exactly run's labels"
+    );
+    let baseline = pipe.assign(&fit.model, &query.x).unwrap();
+    assert_eq!(baseline.len(), query.x.rows);
+    assert!(baseline.iter().all(|&l| l < 2), "labels in 0..k");
+
+    // the artifact roundtrip is bit-exact
+    let path = tmp(&format!("uspec.{MODEL_EXT}"));
+    save_model(&path, &Model::Uspec(fit.model.clone())).unwrap();
+    let loaded = match load_model(&path).unwrap() {
+        Model::Uspec(m) => m,
+        other => panic!("loaded wrong kind: {}", other.kind()),
+    };
+    assert_eq!(loaded, fit.model, "save/load must roundtrip bit-exactly");
+
+    for nt in [1usize, 8] {
+        par::set_thread_override(nt);
+        for simd in [0usize, 1] {
+            set_simd_override(simd);
+            for chunk in [64usize, 8192] {
+                let pipe = Pipeline::new(&NativeBackend)
+                    .with_opts(ExecOpts { chunk, ..ExecOpts::default() });
+                let tag = format!("nt={nt} simd={simd} chunk={chunk}");
+                let mem = pipe.assign(&fit.model, &query.x).unwrap();
+                assert_eq!(mem, baseline, "in-memory assign diverged at {tag}");
+                let disk = pipe.assign(&loaded, &query.x).unwrap();
+                assert_eq!(disk, baseline, "loaded-model assign diverged at {tag}");
+            }
+        }
+    }
+}
+
+#[test]
+fn usenc_fit_save_load_consensus_assign_bit_identical() {
+    let _g = lock();
+    let _restore = Restore;
+    let train = two_moons(900, 0.06, 23);
+    let query = two_moons(300, 0.06, 5);
+    let params = UsencParams {
+        k: 2,
+        m: 3,
+        k_min: 2,
+        k_max: 4,
+        base: UspecParams { p: 120, ..Default::default() },
+    };
+
+    par::set_thread_override(1);
+    let fit = usenc_fit(&train.x, &params, 31, &NativeBackend, ExecOpts::default()).unwrap();
+    let pipe = Pipeline::new(&NativeBackend);
+    let baseline = pipe.assign_consensus(&fit.model, &query.x).unwrap();
+    assert_eq!(baseline.len(), query.x.rows);
+
+    let path = tmp(&format!("usenc.{MODEL_EXT}"));
+    save_model(&path, &Model::Usenc(fit.model.clone())).unwrap();
+    let loaded = match load_model(&path).unwrap() {
+        Model::Usenc(m) => m,
+        other => panic!("loaded wrong kind: {}", other.kind()),
+    };
+    assert_eq!(loaded, fit.model, "U-SENC artifact must roundtrip bit-exactly");
+
+    for nt in [1usize, 8] {
+        par::set_thread_override(nt);
+        for simd in [0usize, 1] {
+            set_simd_override(simd);
+            for chunk in [64usize, 8192] {
+                let pipe = Pipeline::new(&NativeBackend)
+                    .with_opts(ExecOpts { chunk, ..ExecOpts::default() });
+                let tag = format!("nt={nt} simd={simd} chunk={chunk}");
+                let got = pipe.assign_consensus(&loaded, &query.x).unwrap();
+                assert_eq!(got, baseline, "consensus assign diverged at {tag}");
+            }
+        }
+    }
+}
+
+#[test]
+fn corrupted_and_truncated_artifacts_are_rejected_typed() {
+    let train = two_moons(400, 0.06, 9);
+    let params = UspecParams { k: 2, p: 60, ..Default::default() };
+    let fit = Pipeline::new(&NativeBackend).fit(&train.x, &params, 3).unwrap();
+    let path = tmp(&format!("corrupt.{MODEL_EXT}"));
+    save_model(&path, &Model::Uspec(fit.model)).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // flip one payload byte → checksum mismatch
+    let mut bad = good.clone();
+    let mid = bad.len() / 2;
+    bad[mid] ^= 0x40;
+    std::fs::write(&path, &bad).unwrap();
+    let err = load_model(&path).unwrap_err();
+    assert!(err.to_string().contains("checksum"), "want checksum error, got {err}");
+
+    // truncate → typed truncation error, not a panic
+    std::fs::write(&path, &good[..good.len() / 3]).unwrap();
+    assert!(load_model(&path).is_err());
+
+    // restore → loads again
+    std::fs::write(&path, &good).unwrap();
+    assert!(load_model(&path).is_ok());
+}
+
+/// The tentpole e2e: a loopback daemon fits a submitted job, persists
+/// the artifact, and serves assignments that are bit-for-bit the
+/// in-process result; dropping it drains gracefully and a successor
+/// reloads the registry from disk.
+#[test]
+fn serve_daemon_fits_persists_and_assigns_bit_identically_over_loopback() {
+    let train = two_moons(800, 0.06, 41);
+    let query = two_moons(250, 0.06, 77);
+    let data_path = tmp("serve_train.bin");
+    BinDataset::write_mat(&data_path, &train.x).unwrap();
+    let models_dir = tmp("serve_models");
+
+    let spec = FitSpec {
+        method: "u-spec".into(),
+        data: data_path.display().to_string(),
+        k: 2,
+        p: 100,
+        k_nn: 5,
+        m: 3,
+        k_min: 2,
+        k_max: 4,
+        seed: 7,
+    };
+
+    let rt = ServeRuntime::bind(
+        "127.0.0.1:0",
+        ServeConfig { models_dir: models_dir.clone(), queue_depth: 4 },
+    )
+    .unwrap();
+    let addr = rt.addr().to_string();
+
+    let mut client = ServeClient::connect(&addr).unwrap();
+    let job = client.submit_fit(&spec).unwrap();
+    let model_id = client.wait_for(job, Duration::from_secs(120)).unwrap();
+    assert_eq!(model_id, format!("model-{job:06}"));
+
+    // the daemon's registry and the on-disk artifact both exist
+    let listed = client.list_models().unwrap();
+    assert!(listed.iter().any(|m| m.id == model_id && m.kind == "uspec"), "{listed:?}");
+    let artifact = models_dir.join(format!("{model_id}.{MODEL_EXT}"));
+    assert!(artifact.exists(), "fit must persist its artifact");
+
+    // served assignment == in-process assignment, bit-for-bit
+    let local_model = match fit_model(&spec).unwrap() {
+        Model::Uspec(m) => m,
+        other => panic!("wrong kind {}", other.kind()),
+    };
+    let expect = Pipeline::new(&NativeBackend).assign(&local_model, &query.x).unwrap();
+    let served = client.assign(&model_id, &query.x).unwrap();
+    assert_eq!(served, expect, "wire assignment must match the in-process path");
+
+    // a second concurrent client sees the same state
+    let mut second = ServeClient::connect(&addr).unwrap();
+    assert_eq!(second.assign(&model_id, &query.x).unwrap(), expect);
+
+    // typed errors over the wire: unknown model, unknown job, bad data
+    let err = client.assign("no-such-model", &query.x).unwrap_err();
+    assert!(err.to_string().contains("unknown model"), "{err}");
+    let err = client.job_status(9999).unwrap_err();
+    assert!(err.to_string().contains("unknown job"), "{err}");
+    let bad = FitSpec { data: tmp("missing.bin").display().to_string(), ..spec.clone() };
+    let bad_job = client.submit_fit(&bad).unwrap();
+    let err = client.wait_for(bad_job, Duration::from_secs(30)).unwrap_err();
+    assert!(err.to_string().contains("failed"), "{err}");
+
+    // graceful shutdown, then a successor reloads the registry from disk
+    drop(client);
+    drop(second);
+    drop(rt);
+    let rt2 = ServeRuntime::bind(
+        "127.0.0.1:0",
+        ServeConfig { models_dir: models_dir.clone(), queue_depth: 4 },
+    )
+    .unwrap();
+    assert_eq!(rt2.model_ids(), vec![model_id.clone()]);
+    let mut client = ServeClient::connect(&rt2.addr().to_string()).unwrap();
+    assert_eq!(
+        client.assign(&model_id, &query.x).unwrap(),
+        expect,
+        "a restarted daemon serves the persisted model identically"
+    );
+}
+
+#[test]
+fn serve_daemon_fits_and_assigns_usenc_consensus_over_loopback() {
+    let train = two_moons(600, 0.06, 13);
+    let query = two_moons(200, 0.06, 3);
+    let data_path = tmp("serve_usenc.bin");
+    BinDataset::write_mat(&data_path, &train.x).unwrap();
+
+    let spec = FitSpec {
+        method: "u-senc".into(),
+        data: data_path.display().to_string(),
+        k: 2,
+        p: 80,
+        k_nn: 5,
+        m: 3,
+        k_min: 2,
+        k_max: 4,
+        seed: 19,
+    };
+
+    let rt = ServeRuntime::bind(
+        "127.0.0.1:0",
+        ServeConfig { models_dir: tmp("serve_usenc_models"), queue_depth: 2 },
+    )
+    .unwrap();
+    let mut client = ServeClient::connect(&rt.addr().to_string()).unwrap();
+    let job = client.submit_fit(&spec).unwrap();
+    let model_id = client.wait_for(job, Duration::from_secs(120)).unwrap();
+
+    let local_model = match fit_model(&spec).unwrap() {
+        Model::Usenc(m) => m,
+        other => panic!("wrong kind {}", other.kind()),
+    };
+    let expect =
+        Pipeline::new(&NativeBackend).assign_consensus(&local_model, &query.x).unwrap();
+    assert_eq!(
+        client.assign(&model_id, &query.x).unwrap(),
+        expect,
+        "served consensus assignment must match the in-process path"
+    );
+}
